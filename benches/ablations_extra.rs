@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's ablation_dirty_threshold,ablation_buffer_size (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("ablations_extra", &["ablation_dirty_threshold","ablation_buffer_size"]);
+}

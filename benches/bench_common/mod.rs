@@ -1,0 +1,40 @@
+//! Shared bench plumbing (no criterion offline): each bench binary runs a
+//! set of paper experiments at the configured effort, printing the same
+//! rows/series the paper's figures plot, plus wall-time per experiment.
+//!
+//! Effort: `DAEMON_BENCH_FULL=1` runs the full 2M-access paper traces;
+//! the default uses 600K-access truncations so a complete `cargo bench`
+//! finishes in minutes while preserving every trend.
+
+use daemon_sim::experiments::{run_experiment, Runner};
+use daemon_sim::workloads::Scale;
+
+pub fn bench_runner() -> Runner {
+    if std::env::var("DAEMON_BENCH_FULL").is_ok() {
+        Runner::paper()
+    } else {
+        Runner {
+            scale: Scale::Paper,
+            max_accesses: 600_000,
+            threads: daemon_sim::experiments::common::default_threads(),
+        }
+    }
+}
+
+pub fn run_ids(title: &str, ids: &[&str]) {
+    // `cargo bench` passes --bench; ignore unknown args.
+    println!("==== bench: {title} ====");
+    let r = bench_runner();
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        match run_experiment(id, &r) {
+            Some(tables) => {
+                for t in tables {
+                    println!("{}", t.render());
+                }
+                println!("[{id}: {:.1}s]\n", t0.elapsed().as_secs_f64());
+            }
+            None => println!("unknown experiment id {id}"),
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's fig3 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("fig03_motivation", &["fig3"]);
+}

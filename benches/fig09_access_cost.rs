@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's fig9 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("fig09_access_cost", &["fig9"]);
+}

@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's fig11 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("fig11_partition_ratio", &["fig11"]);
+}

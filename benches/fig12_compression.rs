@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's fig12 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("fig12_compression", &["fig12"]);
+}

@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's fig15 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("fig15_multithreaded", &["fig15"]);
+}

@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's fig17 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("fig17_multi_memory", &["fig17"]);
+}

@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's fig22 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("fig22_memory_scaling", &["fig22"]);
+}

@@ -1,0 +1,51 @@
+//! §Perf microbenchmark: raw simulator throughput (accesses/second) per
+//! scheme on a fixed pr trace — the number the performance pass optimizes.
+mod bench_common;
+
+use daemon_sim::config::SimConfig;
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::Machine;
+use daemon_sim::workloads::{by_name, Scale};
+
+fn main() {
+    let w = by_name("pr").unwrap();
+    let cfg = SimConfig::default().with_seed(1);
+    let trace = w.generate(cfg.seed, Scale::Paper).truncated(2_000_000);
+    println!("==== bench: perf_hot_path ({} accesses) ====", trace.accesses.len());
+    for kind in [
+        SchemeKind::Local,
+        SchemeKind::Remote,
+        SchemeKind::CacheLine,
+        SchemeKind::Lc,
+        SchemeKind::Pq,
+        SchemeKind::Daemon,
+    ] {
+        // Warmup + 3 measured iterations.
+        let mut rates = Vec::new();
+        for i in 0..4 {
+            let mut m = Machine::new(
+                cfg.clone(),
+                kind,
+                trace.footprint_pages,
+                vec![w.profile()],
+                None,
+            );
+            let t0 = std::time::Instant::now();
+            m.run(std::slice::from_ref(&trace));
+            let dt = t0.elapsed().as_secs_f64();
+            if i > 0 {
+                rates.push(trace.accesses.len() as f64 / dt / 1e6);
+            }
+        }
+        let mean = rates.iter().sum::<f64>() / rates.len() as f64;
+        let min = rates.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = rates.iter().cloned().fold(0.0f64, f64::max);
+        println!(
+            "{:<18} {:6.2} M acc/s  (min {:.2}, max {:.2})",
+            kind.name(),
+            mean,
+            min,
+            max
+        );
+    }
+}

@@ -1,0 +1,6 @@
+//! Bench target regenerating the paper's table1 (see DESIGN.md index).
+mod bench_common;
+
+fn main() {
+    bench_common::run_ids("table1_hw_cost", &["table1"]);
+}

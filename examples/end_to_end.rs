@@ -1,0 +1,126 @@
+//! End-to-end driver: the full system on the full workload suite.
+//!
+//! Runs all 13 Table 3 workloads at paper scale through the complete
+//! stack — rust simulator (L3), with the link-compression oracle either
+//! native (`exact`) or the AOT-compiled pallas/JAX model executed through
+//! PJRT (`pjrt`, requires `make artifacts`) — under Remote, PQ and DaeMon,
+//! and reports the paper's headline metrics:
+//!
+//!   paper: DaeMon improves performance 2.39x and access cost 3.06x over
+//!          page-granularity movement (Remote).
+//!
+//! Results are appended to EXPERIMENTS.md by the maintainer; the run also
+//! writes results/end_to_end.json.
+//!
+//!     cargo run --release --example end_to_end [-- --estimator pjrt]
+
+use daemon_sim::config::SimConfig;
+use daemon_sim::experiments::common::{speedup, Runner};
+use daemon_sim::runtime::{ModelRunner, NetParams, PjrtOracle};
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::Machine;
+use daemon_sim::util::json::Json;
+use daemon_sim::util::stats::geomean;
+use daemon_sim::util::table::Table;
+use daemon_sim::workloads::{by_name, ALL};
+
+fn main() {
+    let use_pjrt = std::env::args().any(|a| a == "pjrt" || a == "--estimator=pjrt")
+        || std::env::args()
+            .collect::<Vec<_>>()
+            .windows(2)
+            .any(|w| w[0] == "--estimator" && w[1] == "pjrt");
+    let r = Runner::paper();
+    let cfg = SimConfig::default();
+    let t_start = std::time::Instant::now();
+
+    let mut table = Table::new(
+        &format!(
+            "End-to-end: all workloads, paper config ({} oracle)",
+            if use_pjrt { "PJRT" } else { "exact" }
+        ),
+        &["workload", "Remote-IPC", "PQ-x", "DaeMon-x", "cost-gain-x", "hit-Remote", "hit-DaeMon", "ratio"],
+    );
+    let mut daemon_speedups = Vec::new();
+    let mut pq_speedups = Vec::new();
+    let mut cost_gains = Vec::new();
+    let mut results = Vec::new();
+
+    for wl in ALL {
+        let w = by_name(wl).unwrap();
+        let (trace, profile) = r.gen_trace(wl, cfg.seed);
+        let mut metrics = Vec::new();
+        for kind in [SchemeKind::Remote, SchemeKind::Pq, SchemeKind::Daemon] {
+            let oracle: Option<Box<dyn daemon_sim::system::SizeOracle>> = if use_pjrt
+                && kind == SchemeKind::Daemon
+            {
+                let runner = ModelRunner::load_default()
+                    .expect("run `make artifacts` for the PJRT estimator");
+                Some(Box::new(PjrtOracle::new(
+                    runner,
+                    NetParams::paper_default(),
+                    cfg.seed,
+                    vec![w.profile()],
+                )))
+            } else {
+                None
+            };
+            let mut m = Machine::new(
+                cfg.clone(),
+                kind,
+                trace.footprint_pages,
+                vec![profile],
+                oracle,
+            );
+            m.run(std::slice::from_ref(&trace));
+            metrics.push(m.metrics.clone());
+        }
+        let dm = speedup(&metrics[2], &metrics[0]);
+        let pq = speedup(&metrics[1], &metrics[0]);
+        let cg = metrics[0].mean_access_cost() / metrics[2].mean_access_cost().max(1e-9);
+        daemon_speedups.push(dm);
+        pq_speedups.push(pq);
+        cost_gains.push(cg);
+        table.row_f(
+            wl,
+            &[
+                metrics[0].ipc(),
+                pq,
+                dm,
+                cg,
+                metrics[0].local_hit_ratio(),
+                metrics[2].local_hit_ratio(),
+                metrics[2].compression_ratio,
+            ],
+        );
+        results.push(Json::obj(vec![
+            ("workload", Json::str(wl)),
+            ("daemon_speedup", Json::num(dm)),
+            ("pq_speedup", Json::num(pq)),
+            ("cost_gain", Json::num(cg)),
+        ]));
+    }
+    let gm_d = geomean(&daemon_speedups);
+    let gm_p = geomean(&pq_speedups);
+    let gm_c = geomean(&cost_gains);
+    table.row_f("geomean", &[0.0, gm_p, gm_d, gm_c, 0.0, 0.0, 0.0]);
+    println!("{}", table.render());
+    println!(
+        "HEADLINE  DaeMon vs Remote: {:.2}x speedup (paper 2.39x), {:.2}x \
+         access-cost gain (paper 3.06x)  [{:.0}s wall]",
+        gm_d,
+        gm_c,
+        t_start.elapsed().as_secs_f64()
+    );
+
+    let _ = std::fs::create_dir_all("results");
+    let out = Json::obj(vec![
+        ("estimator", Json::str(if use_pjrt { "pjrt" } else { "exact" })),
+        ("daemon_speedup_geomean", Json::num(gm_d)),
+        ("pq_speedup_geomean", Json::num(gm_p)),
+        ("cost_gain_geomean", Json::num(gm_c)),
+        ("per_workload", Json::Arr(results)),
+    ]);
+    let _ = std::fs::write("results/end_to_end.json", out.to_string());
+    eprintln!("wrote results/end_to_end.json");
+}

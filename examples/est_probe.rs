@@ -1,0 +1,17 @@
+use daemon_sim::compress::{est, lz, synth};
+use daemon_sim::util::prng::Rng;
+fn main() {
+    for (name, p) in [("high", synth::Profile::high()), ("med", synth::Profile::medium()), ("low", synth::Profile::low())] {
+        let mut rng = Rng::new(9);
+        let (mut e_sum, mut r_sum) = (0f64, 0f64);
+        let n = 40;
+        for _ in 0..n {
+            let words = synth::gen_page_words(&mut rng, p);
+            let mut bytes = Vec::new();
+            for w in &words { bytes.extend_from_slice(&w.to_le_bytes()); }
+            e_sum += est::estimate_page(&words)[0] as f64;
+            r_sum += lz::compressed_size(&bytes) as f64;
+        }
+        println!("{name}: est_mean={:.0} real_mean={:.0}", e_sum/n as f64, r_sum/n as f64);
+    }
+}

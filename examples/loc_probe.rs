@@ -1,0 +1,12 @@
+// Probe: print locality scores of all workloads at Test scale.
+use daemon_sim::workloads::{by_name, Scale, ALL};
+use daemon_sim::workloads::trace::{locality_score, page_locality, lines_per_episode};
+fn main() {
+    for name in ALL {
+        let w = by_name(name).unwrap();
+        let t = w.generate(13, Scale::Test);
+        println!("{name}: score={:.3} pl={:.3} lpe={:.2} pages={} accs={}",
+            locality_score(&t), page_locality(&t), lines_per_episode(&t),
+            t.footprint_pages, t.accesses.len());
+    }
+}

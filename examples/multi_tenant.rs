@@ -1,0 +1,33 @@
+//! Multi-tenant scenario (Fig. 18): four heterogeneous jobs share one
+//! 4-core compute component and one memory component; DaeMon's engines
+//! adapt the movement granularity per-page across the mixed traffic.
+//!
+//!     cargo run --release --example multi_tenant
+
+use daemon_sim::config::SimConfig;
+use daemon_sim::experiments::common::Runner;
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::util::table::Table;
+
+fn main() {
+    let r = Runner::quick();
+    let mixes: [(&str, [&str; 4]); 3] = [
+        ("graph+bio+sparse+dnn", ["pr", "nw", "sp", "dr"]),
+        ("frontier+series+hpc+dnn", ["bf", "ts", "hp", "rs"]),
+        ("peel+embed+filter+tri", ["kc", "sl", "pf", "tr"]),
+    ];
+    let mut table = Table::new(
+        "4 concurrent heterogeneous jobs on a 4-core compute component",
+        &["mix", "Remote-IPC", "DaeMon-IPC", "speedup"],
+    );
+    for (label, mix) in &mixes {
+        let cfg = SimConfig::default().with_cores(4);
+        let remote = r.run_mix(&mix[..], SchemeKind::Remote, &cfg);
+        let daemon = r.run_mix(&mix[..], SchemeKind::Daemon, &cfg);
+        table.row_f(
+            label,
+            &[remote.ipc(), daemon.ipc(), daemon.ipc() / remote.ipc()],
+        );
+    }
+    println!("{}", table.render());
+}

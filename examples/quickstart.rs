@@ -1,0 +1,47 @@
+//! Quickstart: simulate PageRank on a disaggregated system under the
+//! baseline page-migration scheme (Remote) and under DaeMon, and compare.
+//!
+//!     cargo run --release --example quickstart
+
+use daemon_sim::config::SimConfig;
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::run_workload;
+use daemon_sim::workloads::{by_name, Scale};
+
+fn main() {
+    // The paper's default operating point: 100ns switch latency, network
+    // bandwidth = 1/4 of the DRAM bus, local memory = 20% of the working
+    // set (Table 2 cache hierarchy).
+    let cfg = SimConfig::default().with_seed(1);
+    let workload = by_name("pr").expect("pr is a Table 3 workload");
+
+    println!("simulating '{}' ({})...", workload.name(), workload.domain());
+    let remote = run_workload(&cfg, SchemeKind::Remote, workload.as_ref(), Scale::Paper);
+    let daemon = run_workload(&cfg, SchemeKind::Daemon, workload.as_ref(), Scale::Paper);
+
+    let r = &remote.metrics;
+    let d = &daemon.metrics;
+    println!("\n                      Remote      DaeMon");
+    println!("IPC               {:>10.4}  {:>10.4}", r.ipc(), d.ipc());
+    println!(
+        "access cost (cyc) {:>10.1}  {:>10.1}",
+        r.mean_access_cost(),
+        d.mean_access_cost()
+    );
+    println!(
+        "local hit ratio   {:>10.3}  {:>10.3}",
+        r.local_hit_ratio(),
+        d.local_hit_ratio()
+    );
+    println!("pages moved       {:>10}  {:>10}", r.pages_moved, d.pages_moved);
+    println!("lines moved       {:>10}  {:>10}", r.lines_moved, d.lines_moved);
+    println!(
+        "compression ratio {:>10.2}  {:>10.2}",
+        r.compression_ratio, d.compression_ratio
+    );
+    println!(
+        "\nDaeMon speedup over Remote: {:.2}x (access cost {:.2}x lower)",
+        d.ipc() / r.ipc(),
+        r.mean_access_cost() / d.mean_access_cost()
+    );
+}

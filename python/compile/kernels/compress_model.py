@@ -1,0 +1,159 @@
+"""L1 Pallas kernel: hardware link-compression unit model.
+
+DaeMon (§4.4) adds IBM-MXT-style compression units to every compute and
+memory component: 4 engines, each operating on a 256B sub-block of a 1KB
+chunk with a 256B shared dictionary, 64-cycle latency.  The *timing* lives in
+the rust simulator (L3); this kernel models the *data-dependent outcome* —
+the compressed size a page would reach under each of the paper's three
+algorithm families (Fig. 12):
+
+  - ``lz``     : ratio-optimized LZ77 / MXT        (DaeMon's default)
+  - ``fpcbdi`` : latency-optimized FPC + BDI hybrid
+  - ``fve``    : latency-optimized frequent-value encoding
+
+A 4KB page is viewed as 1024 little-endian i32 words = 16 blocks x 64 words
+(one block = 256B = one MXT engine granule).  Per block we extract the
+features each algorithm family exploits, then fold them into a byte estimate
+with fixed per-family coefficients.  The rust side implements the *same*
+formula natively (``compress/est.rs``) so the PJRT path is bit-comparable,
+and separately implements the real algorithms as ground truth.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's 4x256B
+engine structure becomes the kernel's tile shape — pages are gridded over the
+batch dimension with BlockSpec, each grid step holding a (PAGE_TILE, 1024)
+i32 tile in VMEM; the dictionary CAM becomes a vectorized broadcast compare
+(VPU integer ops; the MXU is not applicable and is deliberately not forced).
+
+All shapes are static; the kernel is lowered with ``interpret=True`` because
+the CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Page geometry: 4KB = 1024 i32 words = WORDS_PER_BLOCK x BLOCKS_PER_PAGE.
+WORDS_PER_PAGE = 1024
+BLOCKS_PER_PAGE = 16
+WORDS_PER_BLOCK = 64
+PAGE_BYTES = 4096
+BLOCK_BYTES = 256
+# Dictionary window for the FVE CAM proxy (first DICT_WORDS distinct-ish
+# words of each block act as the 256B shared dictionary of the MXT engine).
+DICT_WORDS = 8
+# Number of algorithm families estimated (lz, fpcbdi, fve).
+N_ALGOS = 3
+# Batch tile: pages per grid step.  (PAGE_TILE, 1024) i32 = 32KB in VMEM.
+PAGE_TILE = 8
+
+# Per-family linear coefficients folding block features into byte estimates.
+# Calibrated against the native rust implementations on the synthetic page
+# generator (see rust/tests/pjrt_estimator.rs); mirrored EXACTLY in
+# rust/src/compress/est.rs — keep the two in sync.
+LZ_RUN_GAIN = 3.5        # bytes saved per repeated word (run/match)
+LZ_DICT_GAIN = 2.5       # bytes saved per dictionary-window hit
+LZ_ZERO_GAIN = 3.8       # bytes saved per zero word
+FPC_ZERO_GAIN = 3.5      # FPC zero-word pattern: 4B -> ~3 bits + prefix
+FPC_NARROW_GAIN = 2.75   # FPC sign-extended narrow word
+BDI_DELTA_GAIN = 2.0     # BDI 4B->2B delta encoding
+FVE_HIT_GAIN = 3.0       # FVE dictionary hit: 4B -> ~1B index
+HEADER_BYTES = 8.0       # per-block metadata for any scheme
+CALIB_POW = 0.55         # saturating fit to the real LZ77 encoder
+
+
+def _block_features(words):
+    """Per-256B-block features over ``words[..., 16, 64] : i32``.
+
+    Returns a tuple of f32 arrays shaped ``[..., 16]``:
+      zeros   — words equal to 0                      (FPC/LZ)
+      narrow  — words representable in 8 bits         (FPC)
+      runs    — words equal to their predecessor      (LZ run-length proxy)
+      deltas  — words within 2^15 of the block base   (BDI)
+      dhits   — words matching the first-8-word dict  (FVE/LZ CAM proxy)
+    """
+    zeros = jnp.sum((words == 0), axis=-1).astype(jnp.float32)
+    narrow = jnp.sum((jnp.abs(words) < 128) & (words != 0), axis=-1).astype(
+        jnp.float32
+    )
+    runs = jnp.sum(words[..., 1:] == words[..., :-1], axis=-1).astype(jnp.float32)
+    base = words[..., 0:1]
+    deltas = jnp.sum(
+        (jnp.abs(words - base) < 32768) & (words != 0), axis=-1
+    ).astype(jnp.float32)
+    # Dictionary CAM: match each word against the block's first DICT_WORDS
+    # words, excluding trivial self-match of position j<DICT_WORDS against
+    # itself by only counting positions >= DICT_WORDS.
+    dict_win = words[..., :DICT_WORDS]
+    tail = words[..., DICT_WORDS:]
+    hit = jnp.any(tail[..., :, None] == dict_win[..., None, :], axis=-1)
+    dhits = jnp.sum(hit, axis=-1).astype(jnp.float32)
+    return zeros, narrow, runs, deltas, dhits
+
+
+def _estimate_sizes(zeros, narrow, runs, deltas, dhits):
+    """Fold block features into per-page byte estimates ``[..., 3] : f32``.
+
+    Order: ``[lz, fpcbdi, fve]``.  Estimates are clamped to
+    ``[BLOCKS_PER_PAGE * HEADER_BYTES, PAGE_BYTES]`` — compression never
+    produces more than the raw page (the hardware falls back to raw).
+    """
+    raw = jnp.float32(BLOCK_BYTES)
+    lz = raw + HEADER_BYTES - LZ_ZERO_GAIN * zeros - LZ_RUN_GAIN * runs
+    lz = lz - LZ_DICT_GAIN * dhits
+    fpcbdi = (
+        raw
+        + HEADER_BYTES
+        - FPC_ZERO_GAIN * zeros
+        - FPC_NARROW_GAIN * narrow
+        - BDI_DELTA_GAIN * jnp.maximum(deltas - narrow, 0.0) * 0.5
+    )
+    fve = raw + HEADER_BYTES - FVE_HIT_GAIN * dhits - FPC_ZERO_GAIN * zeros * 0.5
+    per_block = jnp.stack([lz, fpcbdi, fve], axis=-1)
+    # Saturating calibration against the real LZ77 implementation: linear
+    # feature gains over-credit structured blocks (real encoders pay
+    # per-token overheads), so the compressed fraction is raised to
+    # CALIB_POW — fit so profile means track rust compress::lz within ~25%
+    # (see rust/tests/pjrt_estimator.rs and examples/est_probe.rs).
+    frac = jnp.clip((per_block - HEADER_BYTES) / raw, 0.0, 1.0)
+    per_block = HEADER_BYTES + raw * jnp.power(frac, CALIB_POW)
+    return jnp.sum(per_block, axis=-2)  # sum over the 16 blocks
+
+
+def _compress_kernel(pages_ref, sizes_ref):
+    """Pallas kernel body: ``pages_ref[(PAGE_TILE, 1024) i32]`` ->
+    ``sizes_ref[(PAGE_TILE, 3) f32]``."""
+    words = pages_ref[...].reshape(PAGE_TILE, BLOCKS_PER_PAGE, WORDS_PER_BLOCK)
+    feats = _block_features(words)
+    sizes_ref[...] = _estimate_sizes(*feats)
+
+
+def compress_sizes(pages):
+    """Estimated compressed bytes per page per algorithm family.
+
+    Args:
+      pages: ``i32[B, 1024]`` with ``B % PAGE_TILE == 0`` — a batch of 4KB
+        pages as little-endian words.
+    Returns:
+      ``f32[B, 3]`` — estimated bytes under ``[lz, fpcbdi, fve]``.
+    """
+    b, w = pages.shape
+    if w != WORDS_PER_PAGE:
+        raise ValueError(f"pages must be [B, {WORDS_PER_PAGE}], got {pages.shape}")
+    if b % PAGE_TILE != 0:
+        raise ValueError(f"batch {b} must be a multiple of PAGE_TILE={PAGE_TILE}")
+    grid = (b // PAGE_TILE,)
+    return pl.pallas_call(
+        _compress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((PAGE_TILE, WORDS_PER_PAGE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((PAGE_TILE, N_ALGOS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, N_ALGOS), jnp.float32),
+        interpret=True,
+    )(pages)
+
+
+@partial(jax.jit, static_argnames=())
+def compress_sizes_jit(pages):
+    return compress_sizes(pages)

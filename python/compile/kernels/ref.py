@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the L1 compression-model kernel.
+
+No pallas: straight jnp over the full batch.  pytest asserts the pallas
+kernel (interpret mode) matches this to float tolerance across shapes and
+content distributions (hypothesis sweeps).
+"""
+
+import jax.numpy as jnp
+
+from .compress_model import (
+    BLOCKS_PER_PAGE,
+    WORDS_PER_BLOCK,
+    WORDS_PER_PAGE,
+    _block_features,
+    _estimate_sizes,
+)
+
+
+def compress_sizes_ref(pages):
+    """Reference implementation of ``compress_model.compress_sizes``.
+
+    Accepts any ``i32[B, 1024]`` (no PAGE_TILE divisibility requirement).
+    """
+    b, w = pages.shape
+    assert w == WORDS_PER_PAGE, pages.shape
+    words = pages.reshape(b, BLOCKS_PER_PAGE, WORDS_PER_BLOCK)
+    feats = _block_features(words)
+    return _estimate_sizes(*feats)

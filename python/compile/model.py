@@ -1,0 +1,82 @@
+"""L2 JAX model: batched compression + transfer cost model.
+
+This is the compute graph the rust coordinator executes through PJRT on its
+(build-time compiled, run-time loaded) artifact.  Given a batch of pages and
+the current network operating point it returns, per page:
+
+  est_bytes[B, 3]   — estimated compressed bytes under [lz, fpcbdi, fve]
+                      (from the L1 pallas kernel)
+  page_cycles[B]    — estimated cycles to migrate the page compressed with
+                      DaeMon's LZ scheme through the page-partition share of
+                      the link, including switch latency and (de)compression
+  line_cycles[B]    — estimated cycles for one 64B critical cache-line
+                      through the line-partition share
+  advantage[B]      — log-ratio line/page cost: >0 means the cache line is
+                      expected to arrive first (favor line movement)
+
+Network parameters arrive as a single f32[6] vector so the artifact stays
+shape-generic across operating points:
+
+  params = [ link_bytes_per_cycle,   # network bandwidth at core clock
+             switch_cycles,          # propagation+switching delay
+             partition_ratio,        # fraction reserved for cache lines
+             line_bytes,             # 64
+             decomp_cycles,          # 64 (MXT) per 1KB chunk x 4 chunks
+             mem_bytes_per_cycle ]   # DRAM bus bandwidth at core clock
+
+The whole function (pallas kernel included) lowers into ONE HLO module via
+``aot.py``; python never runs at simulation time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.compress_model import (
+    PAGE_BYTES,
+    compress_sizes,
+)
+
+# Fixed artifact batch size: the rust runtime pads partial batches.
+AOT_BATCH = 64
+
+
+def cost_model(pages, params):
+    """Forward model.  ``pages: i32[B, 1024]``, ``params: f32[6]``.
+
+    Returns ``(est_bytes[B,3], page_cycles[B], line_cycles[B], advantage[B])``.
+    """
+    est = compress_sizes(pages)  # [B, 3] via the L1 pallas kernel
+
+    link_bpc = params[0]
+    switch_cyc = params[1]
+    ratio = params[2]
+    line_bytes = params[3]
+    decomp_cyc = params[4]
+    mem_bpc = params[5]
+
+    # Bandwidth partitioning (§4.1): pages see (1-ratio) of the link, lines
+    # see ratio.  Both also cross the remote memory bus (full width).
+    page_share = jnp.maximum(link_bpc * (1.0 - ratio), 1e-6)
+    line_share = jnp.maximum(link_bpc * ratio, 1e-6)
+
+    lz_bytes = est[:, 0]
+    page_cycles = (
+        switch_cyc
+        + lz_bytes / page_share  # serialized over the page partition
+        + jnp.float32(PAGE_BYTES) / mem_bpc  # remote DRAM read (uncompressed)
+        + decomp_cyc  # MXT decompression at the compute side
+    )
+    line_cycles = jnp.full_like(
+        page_cycles, switch_cyc + line_bytes / line_share + line_bytes / mem_bpc
+    )
+
+    advantage = jnp.log(page_cycles) - jnp.log(line_cycles)
+    return est, page_cycles, line_cycles, advantage
+
+
+def example_args():
+    """Static example arguments used for AOT lowering."""
+    import jax
+
+    pages = jax.ShapeDtypeStruct((AOT_BATCH, 1024), jnp.int32)
+    params = jax.ShapeDtypeStruct((6,), jnp.float32)
+    return pages, params

@@ -1,0 +1,84 @@
+"""L2 cost-model shape/semantics tests + AOT lowering smoke test."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.model import AOT_BATCH, cost_model, example_args
+from compile.kernels.compress_model import PAGE_BYTES, WORDS_PER_PAGE
+
+
+def _params(link_bpc=4.7, switch_cyc=360.0, ratio=0.25, line_bytes=64.0,
+            decomp_cyc=256.0, mem_bpc=4.7):
+    return jnp.asarray(
+        [link_bpc, switch_cyc, ratio, line_bytes, decomp_cyc, mem_bpc],
+        dtype=jnp.float32,
+    )
+
+
+def _pages(seed=0, b=AOT_BATCH, kind="mixed"):
+    rng = np.random.default_rng(seed)
+    if kind == "zeros":
+        arr = np.zeros((b, WORDS_PER_PAGE), dtype=np.int32)
+    else:
+        vals = rng.integers(-5, 5, size=(b, WORDS_PER_PAGE // 8)).astype(np.int32)
+        runs = np.repeat(vals, 8, axis=1)
+        rand = rng.integers(-(2**31), 2**31 - 1, size=(b, WORDS_PER_PAGE)).astype(
+            np.int64
+        ).astype(np.int32)
+        mask = rng.random((b, WORDS_PER_PAGE)) < 0.6
+        arr = np.where(mask, runs, rand).astype(np.int32)
+    return jnp.asarray(arr)
+
+
+def test_shapes():
+    est, pc, lc, adv = cost_model(_pages(), _params())
+    assert est.shape == (AOT_BATCH, 3)
+    assert pc.shape == (AOT_BATCH,)
+    assert lc.shape == (AOT_BATCH,)
+    assert adv.shape == (AOT_BATCH,)
+
+
+def test_line_always_cheaper_than_page_on_fair_link():
+    """A 64B line through 25% of the link beats a 4KB page through 75%."""
+    _, pc, lc, _ = cost_model(_pages(kind="rand"), _params())
+    assert (lc < pc).all()
+
+
+def test_compression_shrinks_page_cost():
+    _, pc_zero, _, _ = cost_model(_pages(kind="zeros"), _params())
+    _, pc_rand, _, _ = cost_model(_pages(seed=3), _params())
+    assert pc_zero.mean() < pc_rand.mean()
+
+
+def test_advantage_sign_matches_costs():
+    _, pc, lc, adv = cost_model(_pages(), _params())
+    np.testing.assert_allclose(
+        np.asarray(adv), np.log(np.asarray(pc)) - np.log(np.asarray(lc)),
+        rtol=1e-5,
+    )
+
+
+def test_higher_ratio_speeds_lines_slows_pages():
+    _, pc25, lc25, _ = cost_model(_pages(), _params(ratio=0.25))
+    _, pc80, lc80, _ = cost_model(_pages(), _params(ratio=0.80))
+    assert lc80.mean() < lc25.mean()
+    assert pc80.mean() > pc25.mean()
+
+
+def test_aot_lowering_produces_hlo_text():
+    from compile.aot import lower_cost_model
+
+    text = lower_cost_model()
+    assert "HloModule" in text
+    assert len(text) > 1000
+
+
+def test_aot_example_args_match_model():
+    pages_spec, params_spec = example_args()
+    assert pages_spec.shape == (AOT_BATCH, 1024)
+    assert params_spec.shape == (6,)
+    # jit(lower) must accept the specs without tracing errors.
+    jax.jit(cost_model).lower(pages_spec, params_spec)

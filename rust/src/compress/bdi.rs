@@ -1,0 +1,138 @@
+//! Base-Delta-Immediate compression (Pekhimenko et al. [73]).
+//!
+//! Operates per 64B cache line: the line is encoded as a base value plus
+//! narrow deltas if all deltas fit a small width.  We implement the standard
+//! configuration set {(8,1),(8,2),(8,4),(4,1),(4,2),(2,1)} plus the
+//! zero-line and repeated-value special cases, picking the best per line.
+
+const LINE: usize = 64;
+
+fn all_zero(line: &[u8]) -> bool {
+    line.iter().all(|&b| b == 0)
+}
+
+fn repeated_u64(line: &[u8]) -> bool {
+    let first = &line[0..8];
+    line.chunks_exact(8).all(|c| c == first)
+}
+
+fn fits_deltas(line: &[u8], base_size: usize, delta_size: usize) -> bool {
+    let mut chunks = line.chunks_exact(base_size);
+    let base = read_int(chunks.next().unwrap());
+    let max: i128 = 1i128 << (8 * delta_size - 1);
+    // First chunk is the base; remaining must fit signed delta.
+    line.chunks_exact(base_size).all(|c| {
+        let v = read_int(c);
+        let d = v - base;
+        d >= -max && d < max
+    })
+}
+
+fn read_int(bytes: &[u8]) -> i128 {
+    let mut v: i128 = 0;
+    for (i, &b) in bytes.iter().enumerate() {
+        v |= (b as i128) << (8 * i);
+    }
+    // Sign-extend.
+    let bits = 8 * bytes.len();
+    let sign = 1i128 << (bits - 1);
+    if v & sign != 0 {
+        v - (1i128 << bits)
+    } else {
+        v
+    }
+}
+
+/// Compressed size of one 64B line under the best BDI configuration,
+/// including a 1B encoding tag.
+pub fn line_size(line: &[u8]) -> usize {
+    assert_eq!(line.len(), LINE);
+    if all_zero(line) {
+        return 1 + 1; // tag + 1B zero marker
+    }
+    if repeated_u64(line) {
+        return 1 + 8; // tag + the repeated value
+    }
+    let mut best = LINE + 1; // raw fallback + tag
+    for &(b, d) in &[(8usize, 1usize), (8, 2), (8, 4), (4, 1), (4, 2), (2, 1)] {
+        if fits_deltas(line, b, d) {
+            let n = LINE / b;
+            let sz = 1 + b + (n - 1) * d;
+            best = best.min(sz);
+        }
+    }
+    best
+}
+
+/// Compressed size of a page = sum over 64B lines.
+pub fn compressed_size(data: &[u8]) -> usize {
+    data.chunks(LINE)
+        .map(|c| {
+            if c.len() == LINE {
+                line_size(c)
+            } else {
+                c.len() + 1
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn zero_line_is_two_bytes() {
+        assert_eq!(line_size(&[0u8; 64]), 2);
+    }
+
+    #[test]
+    fn repeated_value_is_nine_bytes() {
+        let mut line = [0u8; 64];
+        for c in line.chunks_exact_mut(8) {
+            c.copy_from_slice(&0x0102_0304_0506_0708u64.to_le_bytes());
+        }
+        assert_eq!(line_size(&line), 9);
+    }
+
+    #[test]
+    fn small_deltas_compress() {
+        // 8B values near a large base: base 8 + deltas 1.
+        let mut line = [0u8; 64];
+        let base: u64 = 0x7FFF_FFFF_0000_0000;
+        for (i, c) in line.chunks_exact_mut(8).enumerate() {
+            c.copy_from_slice(&(base + i as u64).to_le_bytes());
+        }
+        let sz = line_size(&line);
+        assert_eq!(sz, 1 + 8 + 7); // tag + base + 7 x 1B deltas
+    }
+
+    #[test]
+    fn random_line_falls_back_to_raw() {
+        let mut rng = Rng::new(4);
+        let line: Vec<u8> = (0..64).map(|_| rng.next_u32() as u8).collect();
+        assert_eq!(line_size(&line), 65);
+    }
+
+    #[test]
+    fn page_size_is_sum_of_lines() {
+        let page = [0u8; 4096];
+        assert_eq!(compressed_size(&page), 64 * 2);
+    }
+
+    #[test]
+    fn read_int_sign_extension() {
+        assert_eq!(read_int(&[0xFF]), -1);
+        assert_eq!(read_int(&[0xFF, 0x00]), 255);
+        assert_eq!(read_int(&[0x00, 0x80]), -32768);
+    }
+
+    #[test]
+    fn size_never_exceeds_raw_plus_tag() {
+        crate::util::proptest::check(0xBD1, 50, |rng| {
+            let line: Vec<u8> = (0..64).map(|_| rng.next_u32() as u8).collect();
+            assert!(line_size(&line) <= 65);
+        });
+    }
+}

@@ -1,0 +1,154 @@
+//! Native mirror of the L1 pallas compression-size estimator.
+//!
+//! MUST stay formula-identical to
+//! `python/compile/kernels/compress_model.py` — the integration test
+//! `tests/pjrt_estimator.rs` asserts bit-comparable agreement between this
+//! implementation and the AOT artifact executed through PJRT, and a looser
+//! correlation bound against the real algorithms in this module's siblings.
+
+pub const WORDS_PER_PAGE: usize = 1024;
+pub const BLOCKS_PER_PAGE: usize = 16;
+pub const WORDS_PER_BLOCK: usize = 64;
+pub const DICT_WORDS: usize = 8;
+
+// Coefficients — keep in sync with compress_model.py.
+const LZ_RUN_GAIN: f32 = 3.5;
+const LZ_DICT_GAIN: f32 = 2.5;
+const LZ_ZERO_GAIN: f32 = 3.8;
+const FPC_ZERO_GAIN: f32 = 3.5;
+const FPC_NARROW_GAIN: f32 = 2.75;
+const BDI_DELTA_GAIN: f32 = 2.0;
+const FVE_HIT_GAIN: f32 = 3.0;
+const HEADER_BYTES: f32 = 8.0;
+const CALIB_POW: f32 = 0.55;
+const BLOCK_BYTES: f32 = 256.0;
+
+/// Per-page byte estimates under `[lz, fpcbdi, fve]`.
+pub fn estimate_page(words: &[i32]) -> [f32; 3] {
+    assert_eq!(words.len(), WORDS_PER_PAGE);
+    let mut total = [0f32; 3];
+    for blk in words.chunks_exact(WORDS_PER_BLOCK) {
+        let mut zeros = 0f32;
+        let mut narrow = 0f32;
+        let mut runs = 0f32;
+        let mut deltas = 0f32;
+        let mut dhits = 0f32;
+        let base = blk[0];
+        for (i, &w) in blk.iter().enumerate() {
+            if w == 0 {
+                zeros += 1.0;
+            } else {
+                if w.unsigned_abs() < 128 {
+                    narrow += 1.0;
+                }
+                if (w.wrapping_sub(base)).unsigned_abs() < 32768 {
+                    deltas += 1.0;
+                }
+            }
+            if i > 0 && w == blk[i - 1] {
+                runs += 1.0;
+            }
+            if i >= DICT_WORDS && blk[..DICT_WORDS].contains(&w) {
+                dhits += 1.0;
+            }
+        }
+        let lz = BLOCK_BYTES + HEADER_BYTES
+            - LZ_ZERO_GAIN * zeros
+            - LZ_RUN_GAIN * runs
+            - LZ_DICT_GAIN * dhits;
+        let fpcbdi = BLOCK_BYTES + HEADER_BYTES
+            - FPC_ZERO_GAIN * zeros
+            - FPC_NARROW_GAIN * narrow
+            - BDI_DELTA_GAIN * (deltas - narrow).max(0.0) * 0.5;
+        let fve = BLOCK_BYTES + HEADER_BYTES
+            - FVE_HIT_GAIN * dhits
+            - FPC_ZERO_GAIN * zeros * 0.5;
+        for (slot, est) in total.iter_mut().zip([lz, fpcbdi, fve]) {
+            // Saturating calibration — keep in sync with compress_model.py.
+            let frac = ((est - HEADER_BYTES) / BLOCK_BYTES).clamp(0.0, 1.0);
+            *slot += HEADER_BYTES + BLOCK_BYTES * frac.powf(CALIB_POW);
+        }
+    }
+    total
+}
+
+/// Byte-slice convenience: interpret `page` as little-endian i32 words.
+pub fn estimate_page_bytes(page: &[u8]) -> [f32; 3] {
+    assert_eq!(page.len(), 4 * WORDS_PER_PAGE);
+    let words: Vec<i32> = page
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    estimate_page(&words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn zero_page_hits_lz_floor() {
+        let est = estimate_page(&[0i32; WORDS_PER_PAGE]);
+        assert!((est[0] - 16.0 * 8.0).abs() < 1e-3, "{:?}", est);
+    }
+
+    #[test]
+    fn random_page_near_raw() {
+        let mut rng = Rng::new(5);
+        let words: Vec<i32> = (0..WORDS_PER_PAGE).map(|_| rng.next_u32() as i32).collect();
+        let est = estimate_page(&words);
+        for v in est {
+            assert!(v > 3200.0, "{est:?}");
+        }
+    }
+
+    #[test]
+    fn bytes_and_words_agree() {
+        let mut rng = Rng::new(6);
+        let words: Vec<i32> = (0..WORDS_PER_PAGE).map(|_| rng.next_u32() as i32).collect();
+        let mut bytes = Vec::with_capacity(4096);
+        for w in &words {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        assert_eq!(estimate_page(&words), estimate_page_bytes(&bytes));
+    }
+
+    #[test]
+    fn estimates_track_real_lz_ordering() {
+        // The estimator must rank pages the same way the real LZ77 does
+        // across compressibility extremes.
+        let zero = [0u8; 4096];
+        let periodic: Vec<u8> = (0..4096).map(|i| (i % 16) as u8).collect();
+        let mut rng = Rng::new(7);
+        let random: Vec<u8> = (0..4096).map(|_| rng.next_u32() as u8).collect();
+
+        let est_z = estimate_page_bytes(&zero)[0];
+        let est_p = estimate_page_bytes(&periodic)[0];
+        let est_r = estimate_page_bytes(&random)[0];
+        assert!(est_z < est_p && est_p < est_r, "{est_z} {est_p} {est_r}");
+
+        let real_z = crate::compress::lz::compressed_size(&zero) as f32;
+        let real_p = crate::compress::lz::compressed_size(&periodic) as f32;
+        let real_r = crate::compress::lz::compressed_size(&random) as f32;
+        assert!(real_z < real_p && real_p < real_r);
+    }
+
+    #[test]
+    fn estimator_correlates_with_real_lz() {
+        let mut rng = Rng::new(0xC0DE);
+        let mut est = Vec::new();
+        let mut real = Vec::new();
+        for _ in 0..60 {
+            let mix = rng.f64();
+            let page = crate::compress::synth::gen_page(
+                &mut rng,
+                crate::compress::synth::Profile::uniform_mix(mix),
+            );
+            est.push(estimate_page_bytes(&page)[0] as f64);
+            real.push(crate::compress::lz::compressed_size(&page) as f64);
+        }
+        let r = crate::util::stats::pearson(&est, &real);
+        assert!(r > 0.85, "estimator/LZ correlation too low: {r}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Frequent Pattern Compression (Alameldeen & Wood [8]).
+//!
+//! Encodes each 32-bit word with a 3-bit prefix selecting one of eight
+//! patterns; unmatched words are emitted raw.  Sizes follow the original
+//! paper's table (bits per pattern).
+
+/// Bits to encode one 32-bit word (excluding the 3-bit prefix).
+fn word_payload_bits(w: u32) -> u32 {
+    let v = w as i32;
+    if v == 0 {
+        return 3; // zero run marker payload (3-bit run length here)
+    }
+    // 4-bit sign-extended.
+    if (-8..8).contains(&v) {
+        return 4;
+    }
+    // 8-bit sign-extended.
+    if (-128..128).contains(&v) {
+        return 8;
+    }
+    // 16-bit sign-extended.
+    if (-32768..32768).contains(&v) {
+        return 16;
+    }
+    // Halfword padded with zeros (upper half zero).
+    if w & 0xFFFF_0000 == 0 {
+        return 16;
+    }
+    // Two halfwords, each byte sign-extended.
+    let lo = (w & 0xFFFF) as i16;
+    let hi = (w >> 16) as i16;
+    if (-128..128).contains(&(lo as i32)) && (-128..128).contains(&(hi as i32)) {
+        return 16;
+    }
+    // Repeated bytes.
+    let b = w & 0xFF;
+    if w == b * 0x0101_0101 {
+        return 8;
+    }
+    32 // uncompressed
+}
+
+/// Compressed size in bytes of a buffer treated as little-endian u32 words,
+/// with zero-run folding (up to 8 consecutive zero words share one token).
+pub fn compressed_size(data: &[u8]) -> usize {
+    let mut bits: u64 = 0;
+    let mut zero_run = 0u32;
+    for chunk in data.chunks(4) {
+        let mut w = [0u8; 4];
+        w[..chunk.len()].copy_from_slice(chunk);
+        let word = u32::from_le_bytes(w);
+        if word == 0 {
+            zero_run += 1;
+            if zero_run == 8 {
+                bits += 3 + 3;
+                zero_run = 0;
+            }
+        } else {
+            if zero_run > 0 {
+                bits += 3 + 3;
+                zero_run = 0;
+            }
+            bits += 3 + word_payload_bits(word) as u64;
+        }
+    }
+    if zero_run > 0 {
+        bits += 3 + 3;
+    }
+    (bits.div_ceil(8) as usize).min(data.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn zero_page_compresses_hard() {
+        let sz = compressed_size(&[0u8; 4096]);
+        // 1024 zero words = 128 run tokens x 6 bits = 96 bytes.
+        assert!(sz <= 100, "got {sz}");
+    }
+
+    #[test]
+    fn narrow_values_compress() {
+        let mut page = Vec::new();
+        for i in 0..1024u32 {
+            page.extend_from_slice(&((i % 7) as u32).to_le_bytes());
+        }
+        let sz = compressed_size(&page);
+        assert!(sz < 1400, "got {sz}");
+    }
+
+    #[test]
+    fn random_words_near_raw() {
+        let mut rng = Rng::new(8);
+        let page: Vec<u8> = (0..4096).map(|_| rng.next_u32() as u8).collect();
+        let sz = compressed_size(&page);
+        assert!(sz > 3500, "got {sz}");
+        assert!(sz <= 4096);
+    }
+
+    #[test]
+    fn pattern_bit_table() {
+        assert_eq!(word_payload_bits(0), 3);
+        assert_eq!(word_payload_bits(5), 4);
+        assert_eq!(word_payload_bits(0xFFFF_FFFF), 4); // -1
+        assert_eq!(word_payload_bits(100), 8);
+        assert_eq!(word_payload_bits(20_000), 16);
+        assert_eq!(word_payload_bits(0x0000_ABCD), 16);
+        assert_eq!(word_payload_bits(0x4141_4141), 8); // repeated byte
+        assert_eq!(word_payload_bits(0xDEAD_BEEF), 32);
+    }
+
+    #[test]
+    fn size_bounded_by_raw() {
+        crate::util::proptest::check(0xF9C, 30, |rng| {
+            let len = 4 * (1 + rng.index(1024));
+            let data: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            assert!(compressed_size(&data) <= len);
+        });
+    }
+}

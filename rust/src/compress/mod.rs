@@ -1,0 +1,235 @@
+//! Link compression substrate (§4.4, Fig. 12).
+//!
+//! Real implementations of the three algorithm families the paper
+//! evaluates, a native mirror of the L1 pallas estimator, the synthetic
+//! page-content generator, and a caching `Compressor` front-end the DaeMon
+//! memory engine uses on the page-migration path.
+
+pub mod bdi;
+pub mod est;
+pub mod fpc;
+pub mod fve;
+pub mod lz;
+pub mod synth;
+
+use crate::util::prng::Rng;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Process-global memo of compressed page sizes.  Page contents are
+/// deterministic in (seed, profile, page_id), so sizes are pure values —
+/// schemes and experiment cells re-compressing the same pages (LC,
+/// DaeMon, writeback paths, repeated sweep configs) share one computation.
+/// Keyed by a fingerprint of (seed, profile, algo, page).
+static GLOBAL_SIZES: Mutex<Option<HashMap<(u64, u64), u32>>> = Mutex::new(None);
+
+fn global_lookup(key: (u64, u64)) -> Option<u32> {
+    GLOBAL_SIZES.lock().unwrap().as_ref().and_then(|m| m.get(&key).copied())
+}
+
+fn global_insert(key: (u64, u64), size: u32) {
+    let mut g = GLOBAL_SIZES.lock().unwrap();
+    let m = g.get_or_insert_with(HashMap::new);
+    // Bound the memo (it is an optimization, not a correctness store).
+    if m.len() < 4_000_000 {
+        m.insert(key, size);
+    }
+}
+
+/// Compression algorithm families (Fig. 12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// Ratio-optimized LZ77 / IBM-MXT — DaeMon's default.
+    Lz,
+    /// Latency-optimized FPC+BDI hybrid (4-cycle per line).
+    FpcBdi,
+    /// Latency-optimized frequent-value encoding (6-cycle per line).
+    Fve,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Lz => "LZ",
+            Algo::FpcBdi => "fpcbdi",
+            Algo::Fve => "fve",
+        }
+    }
+
+    /// (De)compression latency per 4KB page, in core cycles.
+    /// LZ/MXT: 64 cycles per 1KB chunk x 4 chunks = 256.
+    /// fpcbdi: 4 cycles per 64B line x 64 = 256/… but lines are pipelined
+    /// 4-wide in the paper's estimate; we charge the serialized per-page
+    /// totals consistent with §4.4 and Fig. 12's setup.
+    pub fn latency_cycles(&self) -> f64 {
+        match self {
+            Algo::Lz => 256.0,
+            Algo::FpcBdi => 64.0,
+            Algo::Fve => 96.0,
+        }
+    }
+
+    /// Real compressed size of a page under this algorithm.
+    pub fn compressed_size(&self, page: &[u8]) -> usize {
+        match self {
+            Algo::Lz => lz::compressed_size(page),
+            Algo::FpcBdi => fpc::compressed_size(page).min(bdi::compressed_size(page)),
+            Algo::Fve => fve::compressed_size(page),
+        }
+    }
+}
+
+/// Caching compression front-end.
+///
+/// Page contents are deterministic in (seed, page_id, profile), so the
+/// compressed size of a page is computed once and memoized — re-migrations
+/// (evict + refault) reuse the entry.  This mirrors the hardware, where
+/// size is a property of the data, and keeps the simulator fast.
+pub struct Compressor {
+    seed: u64,
+    profile: synth::Profile,
+    cache: HashMap<u64, u32>,
+    algo: Algo,
+    fingerprint: u64,
+    /// Total (compressed, raw) bytes for ratio reporting.
+    pub compressed_bytes: u64,
+    pub raw_bytes: u64,
+}
+
+impl Compressor {
+    pub fn new(seed: u64, profile: synth::Profile, algo: Algo) -> Self {
+        let fp = Self::fingerprint(seed, &profile, algo);
+        Self {
+            seed,
+            profile,
+            cache: HashMap::new(),
+            algo,
+            fingerprint: fp,
+            compressed_bytes: 0,
+            raw_bytes: 0,
+        }
+    }
+
+    fn fingerprint(seed: u64, p: &synth::Profile, algo: Algo) -> u64 {
+        let mut h = seed ^ match algo {
+            Algo::Lz => 0x11,
+            Algo::FpcBdi => 0x22,
+            Algo::Fve => 0x33,
+        };
+        for v in [p.zero, p.runs, p.narrow, p.pool, p.random] {
+            h = h
+                .rotate_left(13)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ v.to_bits();
+        }
+        h ^ ((p.run_len as u64) << 32) ^ p.pool_size as u64
+    }
+
+    pub fn algo(&self) -> Algo {
+        self.algo
+    }
+
+    /// Generate the page contents for `page_id` (deterministic).
+    pub fn page_contents(&self, page_id: u64) -> Vec<u8> {
+        let mut rng = Rng::new(self.seed ^ page_id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        synth::gen_page(&mut rng, self.profile)
+    }
+
+    /// Compressed size of page `page_id` in bytes (memoized locally and
+    /// in the process-global store).
+    pub fn size_of(&mut self, page_id: u64) -> u32 {
+        if let Some(&sz) = self.cache.get(&page_id) {
+            self.note(sz);
+            return sz;
+        }
+        let key = (self.fingerprint, page_id);
+        let sz = match global_lookup(key) {
+            Some(sz) => sz,
+            None => {
+                let page = self.page_contents(page_id);
+                let sz = self.algo.compressed_size(&page) as u32;
+                global_insert(key, sz);
+                sz
+            }
+        };
+        self.cache.insert(page_id, sz);
+        self.note(sz);
+        sz
+    }
+
+    /// Install externally computed sizes (the PJRT estimator path batches
+    /// pages through the AOT artifact and backfills the cache).
+    pub fn install(&mut self, page_id: u64, size: u32) {
+        self.cache.insert(page_id, size);
+    }
+
+    pub fn cached(&self, page_id: u64) -> Option<u32> {
+        self.cache.get(&page_id).copied()
+    }
+
+    fn note(&mut self, sz: u32) {
+        self.compressed_bytes += sz as u64;
+        self.raw_bytes += synth::PAGE_BYTES as u64;
+    }
+
+    /// Achieved compression ratio so far.
+    pub fn ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.compressed_bytes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names_and_latencies() {
+        assert_eq!(Algo::Lz.name(), "LZ");
+        assert!(Algo::Lz.latency_cycles() > Algo::FpcBdi.latency_cycles());
+    }
+
+    #[test]
+    fn lz_beats_latency_optimized_on_structured_data() {
+        // Paper: LZ achieves ~2.9x/2.7x higher ratio than fpcbdi/fve.
+        let mut rng = Rng::new(100);
+        let mut lz_total = 0usize;
+        let mut fpc_total = 0usize;
+        let mut fve_total = 0usize;
+        for _ in 0..20 {
+            let p = synth::gen_page(&mut rng, synth::Profile::high());
+            lz_total += Algo::Lz.compressed_size(&p);
+            fpc_total += Algo::FpcBdi.compressed_size(&p);
+            fve_total += Algo::Fve.compressed_size(&p);
+        }
+        assert!(lz_total < fpc_total, "LZ {lz_total} vs fpcbdi {fpc_total}");
+        assert!(lz_total < fve_total, "LZ {lz_total} vs fve {fve_total}");
+    }
+
+    #[test]
+    fn compressor_memoizes_and_tracks_ratio() {
+        let mut c = Compressor::new(42, synth::Profile::high(), Algo::Lz);
+        let a = c.size_of(7);
+        let b = c.size_of(7);
+        assert_eq!(a, b);
+        assert_eq!(c.raw_bytes, 2 * 4096);
+        assert!(c.ratio() > 1.0);
+    }
+
+    #[test]
+    fn contents_deterministic_per_page_id() {
+        let c = Compressor::new(42, synth::Profile::medium(), Algo::Lz);
+        assert_eq!(c.page_contents(3), c.page_contents(3));
+        assert_ne!(c.page_contents(3), c.page_contents(4));
+    }
+
+    #[test]
+    fn install_overrides_computation() {
+        let mut c = Compressor::new(42, synth::Profile::high(), Algo::Lz);
+        c.install(9, 1234);
+        assert_eq!(c.size_of(9), 1234);
+    }
+}

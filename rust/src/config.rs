@@ -1,0 +1,326 @@
+//! Simulation configuration — Table 2 of the paper, plus DaeMon §4.5
+//! structure sizes and the experiment knobs (bandwidth factor, switch
+//! latency, partitioning ratio, replacement policy, topology).
+//!
+//! All times are kept in **core cycles** internally (3.6 GHz ⇒ 1 ns = 3.6
+//! cycles); helpers convert from ns.
+
+use crate::compress::Algo;
+
+/// Core clock in GHz (Table 2: 3.6 GHz x86 OoO).
+pub const CORE_GHZ: f64 = 3.6;
+
+/// Convert nanoseconds to core cycles.
+#[inline]
+pub fn ns_to_cycles(ns: f64) -> f64 {
+    ns * CORE_GHZ
+}
+
+/// Cache line and page geometry.
+pub const LINE_BYTES: u64 = 64;
+pub const PAGE_BYTES: u64 = 4096;
+pub const LINES_PER_PAGE: u64 = PAGE_BYTES / LINE_BYTES;
+
+/// Local-memory replacement policy (§6, Fig. 16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Replacement {
+    Lru,
+    Fifo,
+}
+
+/// Which compression-size oracle the link compression units use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CompressEstimator {
+    /// Native rust implementations of the real algorithms (ground truth).
+    Exact,
+    /// The AOT-compiled L1/L2 model executed through PJRT, batched.
+    Pjrt,
+}
+
+/// Per-level cache parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheParams {
+    pub size_bytes: u64,
+    pub ways: usize,
+    pub latency_cycles: f64,
+    pub mshrs: usize,
+}
+
+/// One network hop between a compute component and a memory component.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// Propagation + switching delay, ns (paper: 100–400 ns, up to 1 µs).
+    pub switch_latency_ns: f64,
+    /// Network bandwidth = DRAM bus bandwidth / bandwidth_factor
+    /// (paper: factor 2–16).
+    pub bandwidth_factor: f64,
+}
+
+impl NetConfig {
+    pub fn new(switch_latency_ns: f64, bandwidth_factor: f64) -> Self {
+        Self { switch_latency_ns, bandwidth_factor }
+    }
+
+    /// Link bandwidth in bytes per core cycle.
+    pub fn bytes_per_cycle(&self, dram_gbps: f64) -> f64 {
+        (dram_gbps / self.bandwidth_factor) / CORE_GHZ
+    }
+}
+
+/// DaeMon hardware structure sizes (§4.5, Table 1).
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonParams {
+    pub subblock_queue: usize,       // 128 (compute) — LLC MSHR bound
+    pub page_queue: usize,           // 256
+    pub inflight_subblock_buf: usize, // 128
+    pub inflight_page_buf: usize,    // 256
+    pub dirty_data_buf: usize,       // 256
+    /// Dirty-line flush threshold per page (§4.3, "e.g., 8 cache lines").
+    pub dirty_flush_threshold: usize,
+    /// Bandwidth partitioning ratio reserved for cache lines (§4.1, 25%).
+    pub partition_ratio: f64,
+    /// Compression algorithm for link compression (§4.4: LZ-MXT).
+    pub compress: Option<Algo>,
+    /// (De)compression latency in cycles per page.  MXT: 64 cycles per 1KB
+    /// chunk, 4 chunks pipelined across 4 engines ⇒ ~64 + pipeline fill;
+    /// we charge 64 cycles/KB serialized per direction = 256.
+    pub compress_cycles: f64,
+}
+
+impl Default for DaemonParams {
+    fn default() -> Self {
+        Self {
+            subblock_queue: 128,
+            page_queue: 256,
+            inflight_subblock_buf: 128,
+            inflight_page_buf: 256,
+            dirty_data_buf: 256,
+            dirty_flush_threshold: 8,
+            partition_ratio: 0.25,
+            compress: Some(Algo::Lz),
+            compress_cycles: 256.0,
+        }
+    }
+}
+
+/// Full system configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    // Cache hierarchy (Table 2).
+    pub l1d: CacheParams,
+    pub l2: CacheParams,
+    pub llc: CacheParams,
+    // Core.
+    pub rob_entries: usize,
+    pub issue_width: usize,
+    /// Base CPI of non-memory instructions (4-wide ⇒ 0.25).
+    pub base_cpi: f64,
+    // Memory (Table 2: DDR4-2400, 17 GB/s, 15 ns processing).
+    pub dram_gbps: f64,
+    pub dram_latency_ns: f64,
+    /// Local page-table / tag metadata lookup on a local-memory access.
+    pub local_meta_ns: f64,
+    /// Hardware address translation at the memory component = one DRAM
+    /// access per lookup (Clio-style, §5).
+    pub remote_translate_ns: f64,
+    // Local memory sizing: fraction of the working set (paper: ~20%).
+    pub local_mem_fraction: f64,
+    pub replacement: Replacement,
+    // Network to each memory component.
+    pub net: Vec<NetConfig>,
+    /// Page placement across memory components.
+    pub placement_round_robin: bool,
+    // DaeMon engine parameters.
+    pub daemon: DaemonParams,
+    pub estimator: CompressEstimator,
+    /// Cores per compute component (1 for Fig. 8, 8 for Fig. 15/21,
+    /// 4 for Fig. 18).
+    pub cores: usize,
+    /// Memory-level parallelism window per core: outstanding long-latency
+    /// misses the OoO core overlaps (bounded by ROB occupancy / LLC
+    /// MSHRs; Sniper-style interval modeling).
+    pub core_mlp: usize,
+    /// Concurrency window for page-fault-style blocking remote accesses
+    /// (Remote/LC): the kernel fault path serializes handling far more
+    /// than the hardware MSHR path (LegoOS-style remote paging).
+    pub fault_mlp: usize,
+    /// Software overhead per page fault, ns (kernel entry/exit, page-table
+    /// update, TLB shootdown — LegoOS-class remote paging; DaeMon's
+    /// hardware engines eliminate this, which is part of the paper's
+    /// baseline-vs-mechanism contrast).
+    pub fault_overhead_ns: f64,
+    /// Interval for bandwidth-utilization accounting, ns (paper: 100K ns).
+    pub interval_ns: f64,
+    /// Seed for all stochastic inputs (trace + content generation).
+    pub seed: u64,
+    /// §4.7 extension — next-page prefetcher: on a demand page migration,
+    /// also schedule this many sequential successor pages (0 = off,
+    /// the paper's default).  Prefetched pages go through the normal
+    /// selection-granularity path, so DaeMon can throttle them.
+    pub prefetch_pages: usize,
+    /// §4.6 failure handling — dirty-data replication factor: evicted
+    /// dirty data is written to this many memory components (1 = off).
+    /// Replicas consume writeback bandwidth on distinct components.
+    pub dirty_replicas: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            l1d: CacheParams { size_bytes: 32 << 10, ways: 8, latency_cycles: 4.0, mshrs: 16 },
+            l2: CacheParams { size_bytes: 256 << 10, ways: 8, latency_cycles: 8.0, mshrs: 32 },
+            llc: CacheParams { size_bytes: 4 << 20, ways: 16, latency_cycles: 30.0, mshrs: 128 },
+            rob_entries: 224,
+            issue_width: 4,
+            base_cpi: 0.75,
+            dram_gbps: 17.0,
+            dram_latency_ns: 15.0,
+            local_meta_ns: 15.0,
+            remote_translate_ns: 15.0,
+            local_mem_fraction: 0.20,
+            replacement: Replacement::Lru,
+            net: vec![NetConfig::new(100.0, 4.0)],
+            placement_round_robin: true,
+            daemon: DaemonParams::default(),
+            estimator: CompressEstimator::Exact,
+            cores: 1,
+            core_mlp: 16,
+            fault_mlp: 4,
+            fault_overhead_ns: 500.0,
+            interval_ns: 100_000.0,
+            seed: 0xDAE_0,
+            prefetch_pages: 0,
+            dirty_replicas: 1,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The paper's default single-component operating point.
+    pub fn paper_default() -> Self {
+        Self::default()
+    }
+
+    /// Proportionally shrunken cache hierarchy for `Scale::Test` traces
+    /// (whose working sets are ~0.5–10 MB): keeps footprint ≫ LLC, the
+    /// regime the paper evaluates, while unit tests stay fast.
+    pub fn test_scale() -> Self {
+        let mut c = Self::default();
+        c.l1d.size_bytes = 8 << 10;
+        c.l2.size_bytes = 32 << 10;
+        c.llc = CacheParams { size_bytes: 256 << 10, ways: 16, latency_cycles: 30.0, mshrs: 128 };
+        c
+    }
+
+    pub fn with_net(mut self, switch_ns: f64, bw_factor: f64) -> Self {
+        self.net = vec![NetConfig::new(switch_ns, bw_factor)];
+        self
+    }
+
+    pub fn with_memory_components(mut self, nets: Vec<NetConfig>) -> Self {
+        self.net = nets;
+        self
+    }
+
+    pub fn with_replacement(mut self, r: Replacement) -> Self {
+        self.replacement = r;
+        self
+    }
+
+    pub fn with_cores(mut self, cores: usize) -> Self {
+        self.cores = cores;
+        self
+    }
+
+    pub fn with_partition_ratio(mut self, ratio: f64) -> Self {
+        self.daemon.partition_ratio = ratio;
+        self
+    }
+
+    pub fn with_compress(mut self, algo: Option<Algo>) -> Self {
+        self.daemon.compress = algo;
+        self
+    }
+
+    pub fn with_local_fraction(mut self, f: f64) -> Self {
+        self.local_mem_fraction = f;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// §4.7: enable the next-page prefetcher.
+    pub fn with_prefetch(mut self, pages: usize) -> Self {
+        self.prefetch_pages = pages;
+        self
+    }
+
+    /// §4.6: replicate dirty data to `n` memory components.
+    pub fn with_dirty_replicas(mut self, n: usize) -> Self {
+        self.dirty_replicas = n.max(1);
+        self
+    }
+
+    /// DRAM bus bandwidth in bytes per core cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_gbps / CORE_GHZ
+    }
+
+    /// Cache-line service rate ratio implied by the bandwidth partitioning
+    /// (§4.1): lines per page slot, e.g. 25% ⇒ ~21.
+    pub fn lines_per_page_slot(&self) -> f64 {
+        let r = self.daemon.partition_ratio;
+        (PAGE_BYTES as f64 / LINE_BYTES as f64) * r / (1.0 - r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_partition_ratio_gives_21_lines_per_page() {
+        let c = SimConfig::default();
+        let lpp = c.lines_per_page_slot();
+        assert!((lpp - 21.333).abs() < 0.01, "{lpp}");
+    }
+
+    #[test]
+    fn ns_conversion() {
+        assert!((ns_to_cycles(100.0) - 360.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_bandwidth_quarter_factor() {
+        let n = NetConfig::new(100.0, 4.0);
+        // 17/4 GB/s at 3.6GHz = ~1.18 B/cycle.
+        let bpc = n.bytes_per_cycle(17.0);
+        assert!((bpc - 17.0 / 4.0 / 3.6).abs() < 1e-9, "{bpc}");
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = SimConfig::default()
+            .with_net(400.0, 8.0)
+            .with_cores(8)
+            .with_partition_ratio(0.5)
+            .with_replacement(Replacement::Fifo);
+        assert_eq!(c.net[0].switch_latency_ns, 400.0);
+        assert_eq!(c.cores, 8);
+        assert_eq!(c.replacement, Replacement::Fifo);
+        assert!((c.lines_per_page_slot() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn default_matches_table2() {
+        let c = SimConfig::default();
+        assert_eq!(c.l1d.size_bytes, 32 * 1024);
+        assert_eq!(c.llc.size_bytes, 4 * 1024 * 1024);
+        assert_eq!(c.llc.ways, 16);
+        assert_eq!(c.rob_entries, 224);
+        assert_eq!(c.dram_gbps, 17.0);
+    }
+}

@@ -1,0 +1,577 @@
+//! DaeMon compute-engine state machine (§4.2, §4.3; Figs. 6–7).
+//!
+//! Tracks inflight data migrations at both granularities and implements
+//! the selection-granularity unit and the dirty unit.  This is a pure
+//! state machine — all *timing* (queue controller service, link
+//! serialization) lives in the machine driver; the engine decides *what*
+//! to request and guarantees the coherence invariants of §4.3:
+//!
+//!   * a page and line for the same data may be inflight simultaneously;
+//!     when the page arrives first, stale line arrivals are ignored
+//!     (their inflight entries are removed on page arrival);
+//!   * dirty LLC evictions that miss local memory while their page is
+//!     inflight are parked in the dirty buffer and flushed to local
+//!     memory on page arrival;
+//!   * when parked dirty lines for a page exceed the flush threshold,
+//!     all are flushed to remote and the inflight page is marked
+//!     *throttled* — its arrival is ignored and the page re-requested.
+
+use crate::config::DaemonParams;
+use std::collections::HashMap;
+
+/// Inflight page buffer entry states (Fig. 7b).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageState {
+    /// In the page queue, transfer not yet started.
+    Scheduled,
+    /// Transfer issued (being migrated).
+    Moved,
+    /// Dirty-threshold exceeded: arrival must be ignored + re-requested.
+    Throttled,
+}
+
+#[derive(Clone, Debug)]
+pub struct PageEntry {
+    pub state: PageState,
+    /// Cycle at which the link transfer starts (enters service).
+    pub start: f64,
+    /// Cycle at which the page arrives at the compute component.
+    pub arrive: f64,
+    /// Offsets (64-bit bitmap) of dirty lines parked in the dirty buffer.
+    pub dirty_mask: u64,
+}
+
+/// Inflight sub-block buffer entry (Fig. 7a): page-indexed, 64-bit offset
+/// bitmap of inflight line requests, plus each line's arrival time.
+#[derive(Clone, Debug)]
+pub struct LineEntry {
+    pub mask: u64,
+    pub arrive: [f64; 64],
+}
+
+impl Default for LineEntry {
+    fn default() -> Self {
+        Self { mask: 0, arrive: [0.0; 64] }
+    }
+}
+
+/// What the selection unit decided for one demand miss (§4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Decision {
+    /// Issue a page-granularity migration.
+    pub send_page: bool,
+    /// Issue a cache-line-granularity movement.
+    pub send_line: bool,
+    /// The request can be served by an already-inflight page/line.
+    pub wait_inflight: bool,
+}
+
+pub struct ComputeEngine {
+    pub params: DaemonParams,
+    pages: HashMap<u64, PageEntry>,
+    lines: HashMap<u64, LineEntry>,
+    line_count: usize,
+    dirty_count: usize,
+    // Statistics for the experiment harness.
+    pub pages_requested: u64,
+    pub pages_throttled_by_full_buffer: u64,
+    pub pages_rerequested: u64,
+    pub lines_requested: u64,
+    pub lines_suppressed: u64,
+    pub dirty_parked: u64,
+    pub dirty_flushed_threshold: u64,
+}
+
+impl ComputeEngine {
+    pub fn new(params: DaemonParams) -> Self {
+        Self {
+            params,
+            pages: HashMap::new(),
+            lines: HashMap::new(),
+            line_count: 0,
+            dirty_count: 0,
+            pages_requested: 0,
+            pages_throttled_by_full_buffer: 0,
+            pages_rerequested: 0,
+            lines_requested: 0,
+            lines_suppressed: 0,
+            dirty_parked: 0,
+            dirty_flushed_threshold: 0,
+        }
+    }
+
+    pub fn page_util(&self) -> f64 {
+        self.pages.len() as f64 / self.params.inflight_page_buf as f64
+    }
+
+    pub fn line_util(&self) -> f64 {
+        self.line_count as f64 / self.params.inflight_subblock_buf as f64
+    }
+
+    pub fn inflight_page(&self, page: u64) -> Option<&PageEntry> {
+        self.pages.get(&page)
+    }
+
+    pub fn inflight_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    pub fn inflight_lines(&self) -> usize {
+        self.line_count
+    }
+
+    pub fn dirty_buffered(&self) -> usize {
+        self.dirty_count
+    }
+
+    /// Is this specific line already inflight? Returns its arrival time.
+    pub fn inflight_line(&self, page: u64, offset: u8) -> Option<f64> {
+        self.lines.get(&page).and_then(|e| {
+            if e.mask & (1u64 << offset) != 0 {
+                Some(e.arrive[offset as usize])
+            } else {
+                None
+            }
+        })
+    }
+
+    /// §4.2 selection logic for a demand miss at (`page`, `offset`),
+    /// issued at `now`.  `line_eta` is the estimated arrival time a line
+    /// request issued now would achieve (computed by the driver from the
+    /// sub-block queue backlog — the quantity the hardware's queue
+    /// occupancies proxy).  `selection_enabled=false` degrades to the BP
+    /// policy (always both, bounded only by dedup and buffer capacity).
+    ///
+    /// The paper's §4.2 rule for a miss whose page is already inflight —
+    /// "send the cache line only if the sub-block buffer has lower
+    /// utilization than the page buffer and the page is not already in
+    /// the process of migration … this avoids unnecessarily sending cache
+    /// lines when the corresponding page is likely to arrive faster and
+    /// when the sub-block queue is likely to be slow due to
+    /// oversaturation" — is implemented by its stated intent: the line is
+    /// sent iff it is expected to arrive *before* the inflight page.  The
+    /// two queue occupancies are the hardware's estimator of exactly this
+    /// comparison; the simulator computes it directly.
+    pub fn decide(
+        &self,
+        page: u64,
+        offset: u8,
+        now: f64,
+        selection_enabled: bool,
+        line_eta: f64,
+    ) -> Decision {
+        let _ = now;
+        let page_inflight = self.pages.get(&page);
+        let line_inflight = self.inflight_line(page, offset).is_some();
+
+        // Page side: request unless already inflight or buffer full.
+        let page_buf_full = self.pages.len() >= self.params.inflight_page_buf;
+        let send_page = page_inflight.is_none() && !page_buf_full;
+
+        // Line side.
+        let line_buf_full = self.line_count >= self.params.inflight_subblock_buf;
+        let send_line = if line_inflight || line_buf_full {
+            false
+        } else if !selection_enabled {
+            true
+        } else {
+            match page_inflight {
+                // Page not scheduled (and possibly not schedulable):
+                // always move the line.
+                None => true,
+                // Page inflight: send the line only if it beats the page.
+                Some(e) => line_eta < e.arrive,
+            }
+        };
+
+        Decision {
+            send_page,
+            send_line,
+            wait_inflight: page_inflight.is_some() || line_inflight,
+        }
+    }
+
+    /// Record an issued page migration (after the driver scheduled the
+    /// transfer on the page channel).
+    pub fn note_page_scheduled(&mut self, page: u64, start: f64, arrive: f64) {
+        debug_assert!(self.pages.len() < self.params.inflight_page_buf);
+        self.pages.insert(
+            page,
+            PageEntry { state: PageState::Scheduled, start, arrive, dirty_mask: 0 },
+        );
+        self.pages_requested += 1;
+    }
+
+    /// Record an issued line movement.
+    pub fn note_line_scheduled(&mut self, page: u64, offset: u8, arrive: f64) {
+        let e = self.lines.entry(page).or_default();
+        let bit = 1u64 << offset;
+        debug_assert_eq!(e.mask & bit, 0, "line double-scheduled");
+        e.mask |= bit;
+        e.arrive[offset as usize] = arrive;
+        self.line_count += 1;
+        self.lines_requested += 1;
+    }
+
+    /// Advance one page's state Scheduled -> Moved when its transfer has
+    /// entered service.  (Per-page, not a full-buffer scan: the full scan
+    /// was the top profile entry of the dirty-eviction path — see
+    /// EXPERIMENTS.md §Perf.)
+    #[inline]
+    fn promote_moved_one(&mut self, page: u64, now: f64) {
+        if let Some(e) = self.pages.get_mut(&page) {
+            if e.state == PageState::Scheduled && e.start <= now {
+                e.state = PageState::Moved;
+            }
+        }
+    }
+
+    /// Line arrival: release its inflight entry.  Returns false if the
+    /// line had already been superseded by its page's arrival (stale data
+    /// packet — ignored per §4.3 scenario (i)).
+    pub fn line_arrived(&mut self, page: u64, offset: u8) -> bool {
+        if let Some(e) = self.lines.get_mut(&page) {
+            let bit = 1u64 << offset;
+            if e.mask & bit != 0 {
+                e.mask &= !bit;
+                self.line_count -= 1;
+                if e.mask == 0 {
+                    self.lines.remove(&page);
+                }
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Outcome of a page arrival.
+    #[must_use]
+    pub fn page_arrived(&mut self, page: u64) -> PageArrival {
+        let Some(entry) = self.pages.remove(&page) else {
+            return PageArrival::Unknown;
+        };
+        // §4.3 scenario (i): drop inflight line entries for this page —
+        // any later line packets are stale and will be ignored.
+        if let Some(le) = self.lines.remove(&page) {
+            self.line_count -= le.mask.count_ones() as usize;
+        }
+        if entry.state == PageState::Throttled {
+            self.pages_rerequested += 1;
+            return PageArrival::ThrottledRerequest;
+        }
+        let parked = entry.dirty_mask.count_ones() as usize;
+        self.dirty_count -= parked;
+        PageArrival::Install { parked_dirty_lines: parked as u32 }
+    }
+
+    /// §4.3 scenario (ii): a dirty LLC line evicted, missing local memory.
+    /// Returns what the driver must do with it.
+    pub fn dirty_evict(&mut self, page: u64, offset: u8, now: f64) -> DirtyOutcome {
+        self.promote_moved_one(page, now);
+        let threshold = self.params.dirty_flush_threshold;
+        let buf_full = self.dirty_count >= self.params.dirty_data_buf;
+        match self.pages.get_mut(&page) {
+            None => DirtyOutcome::WriteRemote,
+            Some(e) if e.state == PageState::Throttled => DirtyOutcome::WriteRemote,
+            Some(e) => {
+                let bit = 1u64 << offset;
+                let newly = e.dirty_mask & bit == 0;
+                let would_have = e.dirty_mask.count_ones() as usize + usize::from(newly);
+                if buf_full || would_have > threshold {
+                    // Flush everything parked for this page + this line to
+                    // remote; mark throttled so the arriving page (with
+                    // stale data) is discarded and re-requested.
+                    let flushed = e.dirty_mask.count_ones() as usize;
+                    self.dirty_count -= flushed;
+                    e.dirty_mask = 0;
+                    e.state = PageState::Throttled;
+                    self.dirty_flushed_threshold += 1;
+                    DirtyOutcome::FlushAllAndThrottle { parked_flushed: flushed as u32 }
+                } else {
+                    if newly {
+                        e.dirty_mask |= bit;
+                        self.dirty_count += 1;
+                        self.dirty_parked += 1;
+                    }
+                    DirtyOutcome::Parked
+                }
+            }
+        }
+    }
+
+    /// Bookkeeping noted by the driver when selection suppressed a line.
+    pub fn note_line_suppressed(&mut self) {
+        self.lines_suppressed += 1;
+    }
+
+    pub fn note_page_buffer_full(&mut self) {
+        self.pages_throttled_by_full_buffer += 1;
+    }
+}
+
+/// Result of [`ComputeEngine::page_arrived`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageArrival {
+    /// Install in local memory; flush this many parked dirty lines into it.
+    Install { parked_dirty_lines: u32 },
+    /// Entry was throttled: discard the data and re-request the page.
+    ThrottledRerequest,
+    /// No inflight entry (e.g. duplicate arrival after throttle handling).
+    Unknown,
+}
+
+/// Result of [`ComputeEngine::dirty_evict`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DirtyOutcome {
+    /// No inflight page: write the line directly to remote memory.
+    WriteRemote,
+    /// Parked in the dirty buffer until the page arrives.
+    Parked,
+    /// Threshold exceeded: all parked lines (count returned) plus this one
+    /// go to remote now; page marked throttled.
+    FlushAllAndThrottle { parked_flushed: u32 },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DaemonParams;
+
+    fn engine() -> ComputeEngine {
+        ComputeEngine::new(DaemonParams::default())
+    }
+
+    fn small_engine() -> ComputeEngine {
+        ComputeEngine::new(DaemonParams {
+            inflight_page_buf: 4,
+            inflight_subblock_buf: 4,
+            dirty_data_buf: 8,
+            dirty_flush_threshold: 3,
+            ..DaemonParams::default()
+        })
+    }
+
+    #[test]
+    fn first_miss_requests_both() {
+        let e = engine();
+        let d = e.decide(7, 3, 0.0, true, 100.0);
+        assert!(d.send_page && d.send_line && !d.wait_inflight);
+    }
+
+    #[test]
+    fn duplicate_page_not_rerequested() {
+        let mut e = engine();
+        e.note_page_scheduled(7, 10.0, 100.0);
+        let d = e.decide(7, 4, 0.0, true, 50.0);
+        assert!(!d.send_page);
+        assert!(d.wait_inflight);
+    }
+
+    #[test]
+    fn line_sent_when_it_beats_the_inflight_page() {
+        let mut e = engine();
+        e.note_page_scheduled(7, 50.0, 1000.0); // page arrives late
+        let d = e.decide(7, 4, 0.0, true, 400.0); // line ETA beats it
+        assert!(d.send_line, "line should be sent when it arrives first");
+    }
+
+    #[test]
+    fn line_suppressed_when_page_arrives_first() {
+        let mut e = engine();
+        e.note_page_scheduled(7, 50.0, 100.0); // page arrives soon
+        let d = e.decide(7, 4, 60.0, true, 900.0); // line would be slower
+        assert!(!d.send_line, "line must not be sent when page wins");
+        assert!(d.wait_inflight);
+    }
+
+    #[test]
+    fn line_suppressed_when_subblock_buffer_full() {
+        let mut e = small_engine(); // 4-entry sub-block buffer
+        for p in 1..=4 {
+            e.note_line_scheduled(p, 0, 10.0);
+        }
+        let d = e.decide(9, 4, 0.0, true, 1.0);
+        assert!(!d.send_line, "sub-block buffer full");
+    }
+
+    #[test]
+    fn bp_mode_ignores_arrival_estimate() {
+        let mut e = small_engine();
+        e.note_page_scheduled(7, 50.0, 100.0);
+        let d = e.decide(7, 4, 60.0, false, 1e12);
+        assert!(d.send_line, "BP always sends the line (dedup aside)");
+    }
+
+    #[test]
+    fn page_buffer_full_throttles_page_requests() {
+        let mut e = small_engine();
+        for p in 0..4 {
+            e.note_page_scheduled(p, 0.0, 100.0);
+        }
+        let d = e.decide(99, 0, 0.0, true, 50.0);
+        assert!(!d.send_page, "page buffer full");
+        assert!(d.send_line, "line must still be movable");
+    }
+
+    #[test]
+    fn line_dedup_within_page_entry() {
+        let mut e = engine();
+        e.note_line_scheduled(7, 4, 100.0);
+        let d = e.decide(7, 4, 0.0, true, 50.0);
+        assert!(!d.send_line);
+        assert!(d.wait_inflight);
+        assert_eq!(e.inflight_line(7, 4), Some(100.0));
+        assert_eq!(e.inflight_line(7, 5), None);
+        // A different offset in the same page is a fresh line request.
+        let d2 = e.decide(7, 5, 0.0, true, 50.0);
+        assert!(d2.send_line);
+    }
+
+    #[test]
+    fn page_arrival_installs_and_clears_lines() {
+        let mut e = engine();
+        e.note_page_scheduled(7, 0.0, 100.0);
+        e.note_line_scheduled(7, 3, 120.0);
+        e.note_line_scheduled(7, 9, 130.0);
+        assert_eq!(e.inflight_lines(), 2);
+        let out = e.page_arrived(7);
+        assert_eq!(out, PageArrival::Install { parked_dirty_lines: 0 });
+        assert_eq!(e.inflight_lines(), 0, "line entries cleared on page arrival");
+        // Stale line packet later: ignored.
+        assert!(!e.line_arrived(7, 3));
+    }
+
+    #[test]
+    fn line_arrival_releases_entry() {
+        let mut e = engine();
+        e.note_line_scheduled(7, 3, 50.0);
+        assert!(e.line_arrived(7, 3));
+        assert_eq!(e.inflight_lines(), 0);
+        assert!(!e.line_arrived(7, 3), "double arrival ignored");
+    }
+
+    #[test]
+    fn dirty_without_inflight_page_goes_remote() {
+        let mut e = engine();
+        assert_eq!(e.dirty_evict(7, 0, 0.0), DirtyOutcome::WriteRemote);
+    }
+
+    #[test]
+    fn dirty_parks_then_flushes_on_arrival() {
+        let mut e = engine();
+        e.note_page_scheduled(7, 0.0, 100.0);
+        assert_eq!(e.dirty_evict(7, 1, 10.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_evict(7, 2, 11.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_buffered(), 2);
+        let out = e.page_arrived(7);
+        assert_eq!(out, PageArrival::Install { parked_dirty_lines: 2 });
+        assert_eq!(e.dirty_buffered(), 0);
+    }
+
+    #[test]
+    fn dirty_threshold_flushes_and_throttles() {
+        let mut e = small_engine(); // threshold 3
+        e.note_page_scheduled(7, 0.0, 100.0);
+        assert_eq!(e.dirty_evict(7, 1, 1.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_evict(7, 2, 2.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_evict(7, 3, 3.0), DirtyOutcome::Parked);
+        // Fourth distinct dirty line exceeds threshold 3.
+        let out = e.dirty_evict(7, 4, 4.0);
+        assert_eq!(out, DirtyOutcome::FlushAllAndThrottle { parked_flushed: 3 });
+        assert_eq!(e.dirty_buffered(), 0);
+        // Arrival of the (stale) page data must be discarded + re-request.
+        assert_eq!(e.page_arrived(7), PageArrival::ThrottledRerequest);
+        // Further dirty evictions while throttled go straight to remote.
+    }
+
+    #[test]
+    fn dirty_same_offset_rewrites_dont_double_count() {
+        let mut e = small_engine();
+        e.note_page_scheduled(7, 0.0, 100.0);
+        assert_eq!(e.dirty_evict(7, 1, 1.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_evict(7, 1, 2.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_buffered(), 1);
+    }
+
+    #[test]
+    fn throttled_page_dirty_goes_remote() {
+        let mut e = small_engine();
+        e.note_page_scheduled(7, 0.0, 100.0);
+        for o in 1..=4 {
+            let _ = e.dirty_evict(7, o, o as f64);
+        }
+        assert_eq!(e.dirty_evict(7, 9, 9.0), DirtyOutcome::WriteRemote);
+    }
+
+    #[test]
+    fn no_lost_dirty_lines_property() {
+        // Invariant: every dirty eviction is either written remote
+        // (immediately or via flush) or flushed to local on page arrival.
+        crate::util::proptest::check(0xD1271, 25, |rng| {
+            let mut e = ComputeEngine::new(DaemonParams {
+                inflight_page_buf: 8,
+                inflight_subblock_buf: 8,
+                dirty_data_buf: 16,
+                dirty_flush_threshold: 4,
+                ..DaemonParams::default()
+            });
+            let mut written_remote = 0u64;
+            let mut flushed_local = 0u64;
+            let mut evicted = 0u64;
+            let mut inflight: Vec<u64> = Vec::new();
+            for step in 0..300u64 {
+                let now = step as f64;
+                match rng.below(4) {
+                    0 => {
+                        let page = rng.below(16);
+                        if e.inflight_page(page).is_none()
+                            && e.inflight_pages() < 8
+                        {
+                            e.note_page_scheduled(page, now, now + 50.0);
+                            inflight.push(page);
+                        }
+                    }
+                    1 => {
+                        let page = rng.below(16);
+                        evicted += 1;
+                        match e.dirty_evict(page, (rng.below(64)) as u8, now) {
+                            DirtyOutcome::WriteRemote => written_remote += 1,
+                            DirtyOutcome::Parked => {}
+                            DirtyOutcome::FlushAllAndThrottle { parked_flushed } => {
+                                written_remote += parked_flushed as u64 + 1;
+                            }
+                        }
+                    }
+                    _ => {
+                        if let Some(i) = (!inflight.is_empty())
+                            .then(|| rng.index(inflight.len()))
+                        {
+                            let page = inflight.swap_remove(i);
+                            match e.page_arrived(page) {
+                                PageArrival::Install { parked_dirty_lines } => {
+                                    flushed_local += parked_dirty_lines as u64;
+                                }
+                                PageArrival::ThrottledRerequest => {
+                                    // Re-request immediately.
+                                    e.note_page_scheduled(page, now, now + 50.0);
+                                    inflight.push(page);
+                                }
+                                PageArrival::Unknown => panic!("unknown arrival"),
+                            }
+                        }
+                    }
+                }
+            }
+            // Drain: all remaining inflight pages arrive.
+            for page in inflight {
+                if let PageArrival::Install { parked_dirty_lines } = e.page_arrived(page) {
+                    flushed_local += parked_dirty_lines as u64;
+                }
+            }
+            assert_eq!(e.dirty_buffered(), 0, "dirty lines left parked");
+            // Parked duplicates collapse (same offset), so accounted
+            // lines never exceed evictions but all parked were resolved.
+            assert!(written_remote + flushed_local <= evicted);
+        });
+    }
+}

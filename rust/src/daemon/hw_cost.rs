@@ -1,0 +1,154 @@
+//! Hardware cost model for DaeMon's structures (§4.5, Table 1).
+//!
+//! The paper sizes each SRAM/CAM with CACTI 6.0 on a 64-core-class node.
+//! CACTI itself is not available offline, so we reproduce Table 1 with a
+//! calibrated analytic model of the same form CACTI uses: access time,
+//! area and energy scale with capacity and port structure; CAMs pay a
+//! match-line overhead.  The constants are fit to the paper's own Table 1
+//! values (this is the paper's *reported estimate*, which is the artifact
+//! being reproduced — see DESIGN.md substitutions).
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemKind {
+    Sram,
+    Cam,
+}
+
+#[derive(Clone, Debug)]
+pub struct Structure {
+    pub name: &'static str,
+    /// C = compute engine, M = memory engine.
+    pub engine: char,
+    pub kind: MemKind,
+    pub entries: Option<u32>,
+    pub size_kb: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CostRow {
+    pub structure: Structure,
+    pub access_ns: f64,
+    pub area_mm2: f64,
+    pub energy_nj: f64,
+}
+
+/// Analytic CACTI-like model: t = a + b*sqrt(KB), area = c*KB^0.9 + d,
+/// energy = e + f*KB; CAM multipliers on time/energy.
+fn model(kind: MemKind, size_kb: f64) -> (f64, f64, f64) {
+    let (t, a, e) = match kind {
+        MemKind::Sram => (
+            0.30 + 0.115 * size_kb.sqrt(),
+            0.080 + 0.0105 * size_kb.powf(0.9),
+            0.037 + 0.0006 * size_kb,
+        ),
+        MemKind::Cam => (
+            0.25 + 0.26 * size_kb.sqrt(),
+            0.015 * size_kb.powf(1.25),
+            0.018 + 0.024 * size_kb,
+        ),
+    };
+    (t, a, e)
+}
+
+/// DaeMon's hardware structures (Table 1 rows).
+pub fn structures() -> Vec<Structure> {
+    use MemKind::*;
+    vec![
+        Structure { name: "Sub-block Queue (C)", engine: 'C', kind: Sram, entries: Some(128), size_kb: 0.5 },
+        Structure { name: "Sub-block Queue (M)", engine: 'M', kind: Sram, entries: Some(512), size_kb: 2.0 },
+        Structure { name: "Page Queue (C)", engine: 'C', kind: Sram, entries: Some(256), size_kb: 1.0 },
+        Structure { name: "Page Queue (M)", engine: 'M', kind: Sram, entries: Some(1024), size_kb: 4.0 },
+        Structure { name: "Inflight Sub-block Buffer (C)", engine: 'C', kind: Cam, entries: Some(128), size_kb: 1.625 },
+        Structure { name: "Inflight Page Buffer (C)", engine: 'C', kind: Cam, entries: Some(256), size_kb: 3.25 },
+        Structure { name: "Dirty Data Buffer (C)", engine: 'C', kind: Sram, entries: Some(256), size_kb: 17.0 },
+        Structure { name: "Packet Buffer (C)", engine: 'C', kind: Sram, entries: None, size_kb: 8.0 },
+        Structure { name: "Packet Buffer (M)", engine: 'M', kind: Sram, entries: None, size_kb: 32.0 },
+        Structure { name: "2 x Dictionary Table (C,M)", engine: 'B', kind: Cam, entries: Some(1024), size_kb: 1.0 },
+    ]
+}
+
+/// Paper Table 1 reference values (access ns, area mm², energy nJ) in the
+/// same row order — used by tests to bound the model error.
+pub const PAPER_TABLE1: [(f64, f64, f64); 10] = [
+    (0.34, 0.084, 0.038),
+    (0.38, 0.093, 0.039),
+    (0.35, 0.087, 0.038),
+    (0.40, 0.105, 0.041),
+    (0.56, 0.041, 0.046),
+    (0.77, 0.089, 0.096),
+    (0.62, 0.168, 0.046),
+    (0.538, 0.137, 0.044),
+    (1.032, 0.263, 0.047),
+    (0.28, 0.015, 0.020),
+];
+
+pub fn table1() -> Vec<CostRow> {
+    structures()
+        .into_iter()
+        .map(|s| {
+            let (access_ns, area_mm2, energy_nj) = model(s.kind, s.size_kb);
+            CostRow { structure: s, access_ns, area_mm2, energy_nj }
+        })
+        .collect()
+}
+
+/// Total SRAM+CAM capacity of the compute / memory engine in KB
+/// (paper: ~34KB compute, ~40KB memory — "similar to a small L1").
+pub fn total_kb(engine: char) -> f64 {
+    structures()
+        .iter()
+        .filter(|s| s.engine == engine || s.engine == 'B')
+        .map(|s| s.size_kb)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_count_matches_paper() {
+        assert_eq!(structures().len(), 10);
+        assert_eq!(PAPER_TABLE1.len(), 10);
+    }
+
+    #[test]
+    fn model_tracks_paper_values() {
+        // The analytic fit must stay within 2x of every Table 1 value and
+        // within 35% on average — it is an estimate of an estimate.
+        let rows = table1();
+        let mut rel_sum = 0.0;
+        let mut n = 0.0;
+        for (row, &(t, a, e)) in rows.iter().zip(PAPER_TABLE1.iter()) {
+            for (got, want) in [(row.access_ns, t), (row.area_mm2, a), (row.energy_nj, e)] {
+                let rel = (got - want).abs() / want;
+                assert!(rel < 1.2, "{}: got {got}, paper {want}", row.structure.name);
+                rel_sum += rel;
+                n += 1.0;
+            }
+        }
+        assert!(rel_sum / n < 0.35, "mean relative error {}", rel_sum / n);
+    }
+
+    #[test]
+    fn totals_match_paper_claim() {
+        let c = total_kb('C');
+        let m = total_kb('M');
+        assert!((30.0..40.0).contains(&c), "compute engine {c} KB");
+        assert!((35.0..45.0).contains(&m), "memory engine {m} KB");
+    }
+
+    #[test]
+    fn bigger_is_slower_and_larger() {
+        let (t1, a1, _) = model(MemKind::Sram, 1.0);
+        let (t2, a2, _) = model(MemKind::Sram, 32.0);
+        assert!(t2 > t1 && a2 > a1);
+    }
+
+    #[test]
+    fn cam_costs_more_energy_than_sram() {
+        let (_, _, es) = model(MemKind::Sram, 2.0);
+        let (_, _, ec) = model(MemKind::Cam, 2.0);
+        assert!(ec > es);
+    }
+}

@@ -1,0 +1,11 @@
+//! The DaeMon engines (§3–§4): the paper's architectural contribution.
+//!
+//! `engine` is the compute-engine state machine (inflight buffers,
+//! selection granularity unit, dirty unit); the memory-engine's queues and
+//! bandwidth partitioning are realized by the partitioned link/bus
+//! timelines in `net`/`mem`; `hw_cost` reproduces Table 1.
+
+pub mod engine;
+pub mod hw_cost;
+
+pub use engine::{ComputeEngine, Decision, DirtyOutcome, PageArrival, PageState};

@@ -1,0 +1,238 @@
+//! Figs. 11, 12, 16, 20, 21 — the paper's ablations and sensitivity
+//! studies, plus our own ablations called out in DESIGN.md.
+
+use super::common::{speedup, Runner};
+use crate::compress::Algo;
+use crate::config::{Replacement, SimConfig};
+use crate::schemes::SchemeKind;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::workloads::SUBSET;
+
+/// Fig. 11 — bandwidth partitioning ratio sweep for PQ and DaeMon.
+pub fn fig11(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let ratios = [0.10, 0.25, 0.50, 0.80];
+    let mut tables = Vec::new();
+    for &sw in &[100.0, 400.0] {
+        for kind in [SchemeKind::Pq, SchemeKind::Daemon] {
+            let mut table = Table::new(
+                &format!(
+                    "Fig 11: {} speedup over Remote vs partition ratio ({}ns)",
+                    kind.name(),
+                    sw as u32
+                ),
+                &["workload", "10%", "25%", "50%", "80%"],
+            );
+            let mut per: Vec<Vec<f64>> = vec![Vec::new(); ratios.len()];
+            for wl in workloads {
+                let base_cfg = SimConfig::default().with_net(sw, 4.0);
+                let (trace, profile) = r.gen_trace(wl, base_cfg.seed);
+                let mut cells = vec![(SchemeKind::Remote, base_cfg.clone())];
+                for &ratio in &ratios {
+                    cells.push((kind, base_cfg.clone().with_partition_ratio(ratio)));
+                }
+                let ms = r.run_cells(&trace, profile, &cells);
+                let vals: Vec<f64> =
+                    ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
+                for (i, v) in vals.iter().enumerate() {
+                    per[i].push(*v);
+                }
+                table.row_f(wl, &vals);
+            }
+            table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
+            tables.push(table);
+        }
+    }
+    tables
+}
+
+/// Fig. 12 — LC with the three compression schemes.
+pub fn fig12(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let algos = [Algo::FpcBdi, Algo::Fve, Algo::Lz];
+    let cfg0 = SimConfig::default();
+    let mut table = Table::new(
+        "Fig 12: LC speedup over Remote by compression scheme",
+        &["workload", "fpcbdi", "fve", "LZ", "ratio-fpcbdi", "ratio-fve", "ratio-LZ"],
+    );
+    let mut per: Vec<Vec<f64>> = vec![Vec::new(); 3];
+    for wl in workloads {
+        let (trace, profile) = r.gen_trace(wl, cfg0.seed);
+        let mut cells = vec![(SchemeKind::Remote, cfg0.clone())];
+        for &a in &algos {
+            let mut c = cfg0.clone().with_compress(Some(a));
+            c.daemon.compress_cycles = a.latency_cycles();
+            cells.push((SchemeKind::Lc, c));
+        }
+        let ms = r.run_cells(&trace, profile, &cells);
+        let mut vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
+        for (i, v) in vals.iter().enumerate() {
+            per[i].push(*v);
+        }
+        vals.extend(ms[1..].iter().map(|m| m.compression_ratio));
+        table.row_f(wl, &vals);
+    }
+    let mut gm: Vec<f64> = per.iter().map(|v| geomean(v)).collect();
+    gm.extend([0.0, 0.0, 0.0]);
+    table.row_f("geomean", &gm);
+    vec![table]
+}
+
+/// Fig. 16 — FIFO replacement in local memory.
+pub fn fig16(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let cfg = SimConfig::default().with_replacement(Replacement::Fifo);
+    let mut table = Table::new(
+        "Fig 16: Local and DaeMon over Remote with FIFO local memory",
+        &["workload", "Local", "DaeMon"],
+    );
+    let mut per: Vec<Vec<f64>> = vec![Vec::new(); 2];
+    for wl in workloads {
+        let (trace, profile) = r.gen_trace(wl, cfg.seed);
+        let cells = vec![
+            (SchemeKind::Remote, cfg.clone()),
+            (SchemeKind::Local, cfg.clone()),
+            (SchemeKind::Daemon, cfg.clone()),
+        ];
+        let ms = r.run_cells(&trace, profile, &cells);
+        let vals = [speedup(&ms[1], &ms[0]), speedup(&ms[2], &ms[0])];
+        per[0].push(vals[0]);
+        per[1].push(vals[1]);
+        table.row_f(wl, &vals);
+    }
+    table.row_f("geomean", &[geomean(&per[0]), geomean(&per[1])]);
+    vec![table]
+}
+
+/// Fig. 20 — switch latency sweep (appendix A.2).
+pub fn fig20(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let latencies = [100.0, 200.0, 400.0, 700.0, 1000.0];
+    let mut table = Table::new(
+        "Fig 20: DaeMon speedup over Remote vs switch latency (geomean)",
+        &["switch-ns", "speedup"],
+    );
+    for &sw in &latencies {
+        let cfg = SimConfig::default().with_net(sw, 4.0);
+        let mut sp = Vec::new();
+        for wl in workloads {
+            let (trace, profile) = r.gen_trace(wl, cfg.seed);
+            let cells = vec![
+                (SchemeKind::Remote, cfg.clone()),
+                (SchemeKind::Daemon, cfg.clone()),
+            ];
+            let ms = r.run_cells(&trace, profile, &cells);
+            sp.push(speedup(&ms[1], &ms[0]));
+        }
+        table.row_f(&format!("{}", sw as u32), &[geomean(&sp)]);
+    }
+    vec![table]
+}
+
+/// Fig. 21 — bandwidth factor sweep with 8-core multithreaded runs
+/// (appendix A.3).
+pub fn fig21(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let factors = [2.0, 4.0, 8.0, 16.0];
+    let mut table = Table::new(
+        "Fig 21: DaeMon speedup over Remote vs bandwidth factor (8 cores)",
+        &["bw-factor", "speedup"],
+    );
+    for &bw in &factors {
+        let cfg = SimConfig::default().with_net(100.0, bw).with_cores(8);
+        let mut sp = Vec::new();
+        for wl in workloads {
+            let (trace, profile) = r.gen_trace(wl, cfg.seed);
+            let cells = vec![
+                (SchemeKind::Remote, cfg.clone()),
+                (SchemeKind::Daemon, cfg.clone()),
+            ];
+            let ms = r.run_cells(&trace, profile, &cells);
+            sp.push(speedup(&ms[1], &ms[0]));
+        }
+        table.row_f(&format!("1/{}", bw as u32), &[geomean(&sp)]);
+    }
+    vec![table]
+}
+
+/// Our ablation: dirty-buffer flush threshold (DESIGN.md).
+pub fn ablation_dirty_threshold(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let thresholds = [2usize, 8, 32];
+    let mut table = Table::new(
+        "Ablation: DaeMon speedup over Remote vs dirty flush threshold",
+        &["workload", "2", "8", "32"],
+    );
+    for wl in workloads {
+        let cfg0 = SimConfig::default();
+        let (trace, profile) = r.gen_trace(wl, cfg0.seed);
+        let mut cells = vec![(SchemeKind::Remote, cfg0.clone())];
+        for &t in &thresholds {
+            let mut c = cfg0.clone();
+            c.daemon.dirty_flush_threshold = t;
+            cells.push((SchemeKind::Daemon, c));
+        }
+        let ms = r.run_cells(&trace, profile, &cells);
+        let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
+        table.row_f(wl, &vals);
+    }
+    vec![table]
+}
+
+/// Our ablation: inflight buffer sizing.
+pub fn ablation_buffer_size(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let sizes = [(32usize, 64usize), (128, 256), (512, 1024)];
+    let mut table = Table::new(
+        "Ablation: DaeMon speedup over Remote vs inflight buffer sizes",
+        &["workload", "32/64", "128/256", "512/1024"],
+    );
+    for wl in workloads {
+        let cfg0 = SimConfig::default();
+        let (trace, profile) = r.gen_trace(wl, cfg0.seed);
+        let mut cells = vec![(SchemeKind::Remote, cfg0.clone())];
+        for &(l, p) in &sizes {
+            let mut c = cfg0.clone();
+            c.daemon.inflight_subblock_buf = l;
+            c.daemon.inflight_page_buf = p;
+            cells.push((SchemeKind::Daemon, c));
+        }
+        let ms = r.run_cells(&trace, profile, &cells);
+        let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
+        table.row_f(wl, &vals);
+    }
+    vec![table]
+}
+
+pub fn fig11_default(r: &Runner) -> Vec<Table> {
+    fig11(r, &SUBSET)
+}
+pub fn fig12_default(r: &Runner) -> Vec<Table> {
+    fig12(r, &SUBSET)
+}
+pub fn fig16_default(r: &Runner) -> Vec<Table> {
+    fig16(r, &SUBSET)
+}
+pub fn fig20_default(r: &Runner) -> Vec<Table> {
+    fig20(r, &SUBSET)
+}
+pub fn fig21_default(r: &Runner) -> Vec<Table> {
+    fig21(r, &SUBSET)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_orders_lz_best_on_compressible() {
+        let r = Runner::test();
+        let t = fig12(&r, &["sp"]);
+        let row = &t[0].rows[0];
+        let lz_ratio: f64 = row[6].parse().unwrap();
+        let fpc_ratio: f64 = row[4].parse().unwrap();
+        assert!(lz_ratio > fpc_ratio, "LZ {lz_ratio} vs fpcbdi {fpc_ratio}");
+    }
+
+    #[test]
+    fn fig16_runs_fifo() {
+        let r = Runner::test();
+        let t = fig16(&r, &["bf"]);
+        let local: f64 = t[0].rows[0][1].parse().unwrap();
+        assert!(local > 1.0, "Local must beat Remote under FIFO: {local}");
+    }
+}

@@ -1,0 +1,186 @@
+//! Shared experiment machinery: trace-cached grid runner + speedup math.
+//!
+//! Experiments iterate workload-major: each workload's trace is generated
+//! once, then all (scheme, config) cells run against it in parallel with
+//! `std::thread::scope` (traces are read-only).
+
+use crate::compress::synth::Profile;
+use crate::config::SimConfig;
+use crate::metrics::Metrics;
+use crate::schemes::SchemeKind;
+use crate::system::Machine;
+use crate::workloads::{by_name, Scale, Trace};
+
+/// Experiment effort level.
+#[derive(Clone, Copy, Debug)]
+pub struct Runner {
+    pub scale: Scale,
+    /// Trace cap (simulation time bound); 0 = unlimited.
+    pub max_accesses: usize,
+    pub threads: usize,
+}
+
+impl Runner {
+    /// Full paper-scale experiments (the bench harness default).
+    pub fn paper() -> Runner {
+        Runner { scale: Scale::Paper, max_accesses: 2_000_000, threads: default_threads() }
+    }
+
+    /// Quick mode for smoke runs and CI.
+    pub fn quick() -> Runner {
+        Runner { scale: Scale::Paper, max_accesses: 400_000, threads: default_threads() }
+    }
+
+    /// Tiny mode for unit tests.
+    pub fn test() -> Runner {
+        Runner { scale: Scale::Test, max_accesses: 150_000, threads: 2 }
+    }
+
+    pub fn gen_trace(&self, workload: &str, seed: u64) -> (Trace, Profile) {
+        let w = by_name(workload).unwrap_or_else(|| panic!("unknown workload {workload}"));
+        let mut t = w.generate(seed, self.scale);
+        if self.max_accesses > 0 {
+            t = t.truncated(self.max_accesses);
+        }
+        (t, w.profile())
+    }
+
+    /// Run one (scheme, config) cell against a pre-generated trace.
+    pub fn run_cell(
+        &self,
+        trace: &Trace,
+        profile: Profile,
+        kind: SchemeKind,
+        cfg: &SimConfig,
+    ) -> Metrics {
+        let mut m = Machine::new(
+            cfg.clone(),
+            kind,
+            trace.footprint_pages,
+            vec![profile; cfg.cores.max(1)],
+            None,
+        );
+        m.run(std::slice::from_ref(trace));
+        m.metrics.clone()
+    }
+
+    /// Run many cells against one trace, fanned out over threads.
+    pub fn run_cells(
+        &self,
+        trace: &Trace,
+        profile: Profile,
+        cells: &[(SchemeKind, SimConfig)],
+    ) -> Vec<Metrics> {
+        let n = cells.len();
+        let mut out: Vec<Option<Metrics>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let slots = std::sync::Mutex::new(&mut out);
+        std::thread::scope(|s| {
+            for _ in 0..self.threads.min(n.max(1)) {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let (kind, cfg) = &cells[i];
+                    let m = self.run_cell(trace, profile, *kind, cfg);
+                    slots.lock().unwrap()[i] = Some(m);
+                });
+            }
+        });
+        out.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Run a heterogeneous multi-workload mix (Fig. 18): one trace per
+    /// core.
+    pub fn run_mix(&self, workloads: &[&str], kind: SchemeKind, cfg: &SimConfig) -> Metrics {
+        assert_eq!(workloads.len(), cfg.cores);
+        let pairs: Vec<(Trace, Profile)> = workloads
+            .iter()
+            .map(|w| self.gen_trace(w, cfg.seed))
+            .collect();
+        let footprint: usize = pairs.iter().map(|(t, _)| t.footprint_pages).sum();
+        let profiles: Vec<Profile> = pairs.iter().map(|(_, p)| *p).collect();
+        let traces: Vec<Trace> = pairs.into_iter().map(|(t, _)| t).collect();
+        let mut m = Machine::new(cfg.clone(), kind, footprint, profiles, None);
+        m.run(&traces);
+        m.metrics.clone()
+    }
+}
+
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+/// Speedup of `m` over baseline `base` by IPC.
+pub fn speedup(m: &Metrics, base: &Metrics) -> f64 {
+    if base.ipc() <= 0.0 {
+        0.0
+    } else {
+        m.ipc() / base.ipc()
+    }
+}
+
+/// Paper network grid (Fig. 8): switch {100,400} x bandwidth factor
+/// {2,4,8}.
+pub fn net_grid() -> Vec<(String, f64, f64)> {
+    let mut out = Vec::new();
+    for &sw in &[100.0, 400.0] {
+        for &bw in &[2.0, 4.0, 8.0] {
+            out.push((format!("{}ns,1/{}", sw as u32, bw as u32), sw, bw));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runner_generates_and_truncates() {
+        let r = Runner::test();
+        let (t, _) = r.gen_trace("pr", 1);
+        assert!(t.accesses.len() <= 150_000);
+        assert!(t.footprint_pages > 0);
+    }
+
+    #[test]
+    fn parallel_cells_match_serial() {
+        let r = Runner::test();
+        let (t, p) = r.gen_trace("bf", 1);
+        let cfg = SimConfig::test_scale();
+        let cells = vec![
+            (SchemeKind::Remote, cfg.clone()),
+            (SchemeKind::Daemon, cfg.clone()),
+        ];
+        let par = r.run_cells(&t, p, &cells);
+        let ser: Vec<Metrics> = cells
+            .iter()
+            .map(|(k, c)| r.run_cell(&t, p, *k, c))
+            .collect();
+        for (a, b) in par.iter().zip(ser.iter()) {
+            assert_eq!(a.instructions, b.instructions);
+            assert!((a.cycles - b.cycles).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn mix_runs_heterogeneous_jobs() {
+        let r = Runner::test();
+        let cfg = SimConfig::test_scale().with_cores(2);
+        let m = r.run_mix(&["pr", "sp"], SchemeKind::Daemon, &cfg);
+        assert!(m.instructions > 0);
+        assert!(m.ipc() > 0.0);
+    }
+
+    #[test]
+    fn net_grid_is_paper_shape() {
+        let g = net_grid();
+        assert_eq!(g.len(), 6);
+        assert_eq!(g[0].0, "100ns,1/2");
+    }
+}

@@ -1,0 +1,225 @@
+//! Figs. 8, 9, 10 and 19 — the paper's core evaluation.
+//!
+//! Fig. 8: speedup of LC/BP/PQ/DaeMon/Local over Remote across the
+//!         {100,400ns} x {1/2,1/4,1/8} network grid, all workloads.
+//! Fig. 9: average data access cost normalized to Remote.
+//! Fig.10: local-memory hit ratio (+ extra pages DaeMon moves over PQ).
+//! Fig.19: network bandwidth utilization.
+
+use super::common::{net_grid, speedup, Runner};
+use crate::config::SimConfig;
+use crate::schemes::SchemeKind;
+use crate::util::stats::geomean;
+use crate::util::table::{fmt_num, Table};
+use crate::workloads::{ALL, SUBSET};
+
+/// All-scheme grid used by several figures: per workload, per net config,
+/// run Remote + the eval set.
+fn schemes() -> Vec<SchemeKind> {
+    vec![
+        SchemeKind::Remote,
+        SchemeKind::Lc,
+        SchemeKind::Bp,
+        SchemeKind::Pq,
+        SchemeKind::Daemon,
+        SchemeKind::Local,
+    ]
+}
+
+pub fn fig8(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let mut tables = Vec::new();
+    let schemes = schemes();
+    for (label, sw, bw) in net_grid() {
+        let cfg = SimConfig::default().with_net(sw, bw);
+        let mut table = Table::new(
+            &format!("Fig 8: speedup over Remote ({label})"),
+            &{
+                let mut h = vec!["workload"];
+                h.extend(schemes.iter().skip(1).map(|s| s.name()));
+                h
+            },
+        );
+        let mut per: Vec<Vec<f64>> = vec![Vec::new(); schemes.len() - 1];
+        for wl in workloads {
+            let (trace, profile) = r.gen_trace(wl, cfg.seed);
+            let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
+            let ms = r.run_cells(&trace, profile, &cells);
+            let base = &ms[0];
+            let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, base)).collect();
+            for (i, v) in vals.iter().enumerate() {
+                per[i].push(*v);
+            }
+            table.row_f(wl, &vals);
+        }
+        table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
+        tables.push(table);
+    }
+    tables
+}
+
+pub fn fig9(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let cfg = SimConfig::default();
+    let schemes = schemes();
+    let mut table = Table::new(
+        "Fig 9: data access cost normalized to Remote (lower is better)",
+        &{
+            let mut h = vec!["workload"];
+            h.extend(schemes.iter().skip(1).map(|s| s.name()));
+            h
+        },
+    );
+    let mut per: Vec<Vec<f64>> = vec![Vec::new(); schemes.len() - 1];
+    for wl in workloads {
+        let (trace, profile) = r.gen_trace(wl, cfg.seed);
+        let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
+        let ms = r.run_cells(&trace, profile, &cells);
+        let base = ms[0].mean_access_cost().max(1e-9);
+        let vals: Vec<f64> = ms[1..]
+            .iter()
+            .map(|m| m.mean_access_cost() / base)
+            .collect();
+        for (i, v) in vals.iter().enumerate() {
+            per[i].push(*v);
+        }
+        table.row_f(wl, &vals);
+    }
+    table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
+    vec![table]
+}
+
+pub fn fig10(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let cfg = SimConfig::default();
+    let mut table = Table::new(
+        "Fig 10: local memory hit ratio (+DaeMon extra pages over PQ, %)",
+        &["workload", "Remote", "PQ", "DaeMon", "extra-pages-%"],
+    );
+    let kinds = [SchemeKind::Remote, SchemeKind::Pq, SchemeKind::Daemon];
+    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
+    for wl in workloads {
+        let (trace, profile) = r.gen_trace(wl, cfg.seed);
+        let cells: Vec<_> = kinds.iter().map(|&k| (k, cfg.clone())).collect();
+        let ms = r.run_cells(&trace, profile, &cells);
+        let extra = if ms[1].pages_moved == 0 {
+            0.0
+        } else {
+            100.0 * (ms[2].pages_moved as f64 - ms[1].pages_moved as f64)
+                / ms[1].pages_moved as f64
+        };
+        let vals = [
+            ms[0].local_hit_ratio(),
+            ms[1].local_hit_ratio(),
+            ms[2].local_hit_ratio(),
+            extra,
+        ];
+        for (i, v) in vals.iter().enumerate() {
+            cols[i].push(*v);
+        }
+        table.row_f(wl, &vals);
+    }
+    table.row(vec![
+        "mean".into(),
+        fmt_num(crate::util::stats::mean(&cols[0])),
+        fmt_num(crate::util::stats::mean(&cols[1])),
+        fmt_num(crate::util::stats::mean(&cols[2])),
+        fmt_num(crate::util::stats::mean(&cols[3])),
+    ]);
+    vec![table]
+}
+
+pub fn fig19(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let cfg = SimConfig::default();
+    let schemes = schemes();
+    let mut table = Table::new(
+        "Fig 19: network bandwidth utilization (%)",
+        &{
+            let mut h = vec!["workload"];
+            h.extend(schemes.iter().map(|s| s.name()));
+            h
+        },
+    );
+    for wl in workloads {
+        let (trace, profile) = r.gen_trace(wl, cfg.seed);
+        let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
+        let ms = r.run_cells(&trace, profile, &cells);
+        let vals: Vec<f64> = ms.iter().map(|m| 100.0 * m.net_utilization).collect();
+        table.row_f(wl, &vals);
+    }
+    vec![table]
+}
+
+/// Headline numbers (abstract): DaeMon vs Remote geomean speedup and
+/// access-cost improvement across all workloads at the default config.
+pub fn headline(r: &Runner) -> (f64, f64, Table) {
+    let cfg = SimConfig::default();
+    let mut speedups = Vec::new();
+    let mut cost_gains = Vec::new();
+    let mut table = Table::new(
+        "Headline: DaeMon vs Remote (paper: 2.39x speedup, 3.06x access cost)",
+        &["workload", "speedup", "access-cost-gain", "hit-Remote", "hit-DaeMon"],
+    );
+    for wl in ALL {
+        let (trace, profile) = r.gen_trace(wl, cfg.seed);
+        let cells = vec![
+            (SchemeKind::Remote, cfg.clone()),
+            (SchemeKind::Daemon, cfg.clone()),
+        ];
+        let ms = r.run_cells(&trace, profile, &cells);
+        let sp = speedup(&ms[1], &ms[0]);
+        let cg = ms[0].mean_access_cost() / ms[1].mean_access_cost().max(1e-9);
+        speedups.push(sp);
+        cost_gains.push(cg);
+        table.row_f(
+            wl,
+            &[sp, cg, ms[0].local_hit_ratio(), ms[1].local_hit_ratio()],
+        );
+    }
+    let (s, c) = (geomean(&speedups), geomean(&cost_gains));
+    table.row_f("geomean", &[s, c, 0.0, 0.0]);
+    (s, c, table)
+}
+
+pub fn fig8_default(r: &Runner) -> Vec<Table> {
+    fig8(r, &ALL)
+}
+
+pub fn fig9_default(r: &Runner) -> Vec<Table> {
+    fig9(r, &SUBSET)
+}
+
+pub fn fig10_default(r: &Runner) -> Vec<Table> {
+    fig10(r, &SUBSET)
+}
+
+pub fn fig19_default(r: &Runner) -> Vec<Table> {
+    fig19(r, &SUBSET)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_and_10_shapes() {
+        let r = Runner::test();
+        let t9 = fig9(&r, &["pr"]);
+        assert_eq!(t9[0].rows.len(), 2);
+        let t10 = fig10(&r, &["pr"]);
+        // Hit ratios are probabilities.
+        let hit: f64 = t10[0].rows[0][1].parse().unwrap();
+        assert!((0.0..=1.0).contains(&hit));
+    }
+
+    #[test]
+    fn headline_runs_on_two_workloads() {
+        // Shrunken sanity: DaeMon >= Remote on a low-locality workload.
+        let r = Runner::test();
+        let cfg = crate::config::SimConfig::test_scale();
+        let (trace, profile) = r.gen_trace("pr", cfg.seed);
+        let cells = vec![
+            (SchemeKind::Remote, cfg.clone()),
+            (SchemeKind::Daemon, cfg.clone()),
+        ];
+        let ms = r.run_cells(&trace, profile, &cells);
+        assert!(speedup(&ms[1], &ms[0]) > 0.9);
+    }
+}

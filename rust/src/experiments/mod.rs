@@ -1,0 +1,68 @@
+//! Experiment drivers — one entry per figure/table in the paper's
+//! evaluation (§2.2, §6, Appendix A).  Each returns rendered tables with
+//! the same rows/series the paper plots.  See DESIGN.md for the index.
+
+pub mod ablations;
+pub mod common;
+pub mod disturbance;
+pub mod main_results;
+pub mod motivation;
+pub mod scaling;
+pub mod table1;
+
+pub use common::Runner;
+
+use crate::util::table::Table;
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 17] = [
+    "fig3", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
+    "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "table1",
+    "headline",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, r: &Runner) -> Option<Vec<Table>> {
+    Some(match id {
+        "fig3" => motivation::run_default(r),
+        "fig8" => main_results::fig8_default(r),
+        "fig9" => main_results::fig9_default(r),
+        "fig10" => main_results::fig10_default(r),
+        "fig11" => ablations::fig11_default(r),
+        "fig12" => ablations::fig12_default(r),
+        "fig13" | "fig14" => disturbance::fig13_14_default(r),
+        "fig15" => scaling::fig15_default(r),
+        "fig16" => ablations::fig16_default(r),
+        "fig17" => scaling::fig17_default(r),
+        "fig18" => scaling::fig18(r),
+        "fig19" => main_results::fig19_default(r),
+        "fig20" => ablations::fig20_default(r),
+        "fig21" => ablations::fig21_default(r),
+        "fig22" => scaling::fig22_default(r),
+        "table1" => table1::run(),
+        "headline" => {
+            let (_, _, t) = main_results::headline(r);
+            vec![t]
+        }
+        "ablation_dirty_threshold" => {
+            ablations::ablation_dirty_threshold(r, &crate::workloads::SUBSET)
+        }
+        "ablation_buffer_size" => {
+            ablations::ablation_buffer_size(r, &crate::workloads::SUBSET)
+        }
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_ids_resolve() {
+        let r = Runner::test();
+        // table1 is cheap enough to actually run here.
+        assert!(run_experiment("table1", &r).is_some());
+        assert!(run_experiment("nope", &r).is_none());
+    }
+}

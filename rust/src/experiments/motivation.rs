@@ -1,0 +1,70 @@
+//! Fig. 3 — data-movement overheads in fully disaggregated systems.
+//!
+//! Six configurations (Local / cache-line / Remote / page-free /
+//! cache-line+page / DaeMon) across all workloads, at 100ns and 400ns
+//! switch latency with a 1/4 bandwidth factor; reported as slowdown
+//! relative to Local (the paper plots speedup normalized to Local).
+
+use super::common::Runner;
+use crate::config::SimConfig;
+use crate::schemes::SchemeKind;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::workloads::ALL;
+
+pub fn run(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let mut tables = Vec::new();
+    for &sw in &[100.0, 400.0] {
+        let cfg = SimConfig::default().with_net(sw, 4.0);
+        let schemes = SchemeKind::motivation_set();
+        let mut table = Table::new(
+            &format!("Fig 3: IPC normalized to Local ({}ns switch, 1/4 bw)", sw as u32),
+            &{
+                let mut h = vec!["workload"];
+                h.extend(schemes.iter().map(|s| s.name()));
+                h
+            },
+        );
+        let mut per_scheme: Vec<Vec<f64>> = vec![Vec::new(); schemes.len()];
+        for wl in workloads {
+            let (trace, profile) = r.gen_trace(wl, cfg.seed);
+            let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
+            let ms = r.run_cells(&trace, profile, &cells);
+            let local_ipc = ms[0].ipc(); // Local is first in the set
+            let vals: Vec<f64> = ms.iter().map(|m| m.ipc() / local_ipc.max(1e-12)).collect();
+            for (i, v) in vals.iter().enumerate() {
+                per_scheme[i].push(*v);
+            }
+            table.row_f(wl, &vals);
+        }
+        let gm: Vec<f64> = per_scheme.iter().map(|v| geomean(v)).collect();
+        table.row_f("geomean", &gm);
+        tables.push(table);
+    }
+    tables
+}
+
+/// Full paper workload set.
+pub fn run_default(r: &Runner) -> Vec<Table> {
+    run(r, &ALL)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn motivation_shape_holds() {
+        let r = Runner::test();
+        let tables = run(&r, &["pr", "sp"]);
+        assert_eq!(tables.len(), 2);
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), 3); // 2 workloads + geomean
+        // Local column is exactly 1.0 and Remote is a real slowdown.
+        let gm = t.rows.last().unwrap();
+        let local: f64 = gm[1].parse().unwrap();
+        let remote: f64 = gm[3].parse().unwrap();
+        assert!((local - 1.0).abs() < 1e-6);
+        assert!(remote < 0.8, "Remote should be well below Local, got {remote}");
+    }
+}

@@ -1,0 +1,192 @@
+//! Figs. 15, 17, 18, 22 — multithreaded, multi-memory-component and
+//! multi-workload scaling.
+
+use super::common::{speedup, Runner};
+use crate::config::{NetConfig, SimConfig};
+use crate::schemes::SchemeKind;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::workloads::SUBSET;
+
+/// Fig. 15 — multithreaded (8 OoO cores) speedup over Remote.
+pub fn fig15(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let cfg = SimConfig::default().with_cores(8);
+    let kinds = [
+        SchemeKind::Lc,
+        SchemeKind::Bp,
+        SchemeKind::Pq,
+        SchemeKind::Daemon,
+        SchemeKind::Local,
+    ];
+    let mut table = Table::new(
+        "Fig 15: multithreaded (8 cores) speedup over Remote",
+        &["workload", "LC", "BP", "PQ", "DaeMon", "Local"],
+    );
+    let mut per: Vec<Vec<f64>> = vec![Vec::new(); kinds.len()];
+    for wl in workloads {
+        let (trace, profile) = r.gen_trace(wl, cfg.seed);
+        let mut cells = vec![(SchemeKind::Remote, cfg.clone())];
+        cells.extend(kinds.iter().map(|&k| (k, cfg.clone())));
+        let ms = r.run_cells(&trace, profile, &cells);
+        let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
+        for (i, v) in vals.iter().enumerate() {
+            per[i].push(*v);
+        }
+        table.row_f(wl, &vals);
+    }
+    table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
+    vec![table]
+}
+
+/// Fig. 17's memory-component configurations (table in the paper).
+pub fn mc_configs() -> Vec<(&'static str, Vec<NetConfig>)> {
+    vec![
+        ("MC1.1", vec![NetConfig::new(100.0, 4.0)]),
+        ("MC2.1", vec![NetConfig::new(100.0, 4.0); 2]),
+        (
+            "MC2.2",
+            vec![NetConfig::new(400.0, 4.0), NetConfig::new(400.0, 8.0)],
+        ),
+        ("MC2.3", vec![NetConfig::new(100.0, 8.0); 2]),
+        ("MC4.1", vec![NetConfig::new(100.0, 4.0); 4]),
+        (
+            "MC4.2",
+            vec![
+                NetConfig::new(100.0, 4.0),
+                NetConfig::new(400.0, 8.0),
+                NetConfig::new(100.0, 4.0),
+                NetConfig::new(400.0, 8.0),
+            ],
+        ),
+        ("MC4.3", vec![NetConfig::new(400.0, 8.0); 4]),
+        (
+            "MC4.4",
+            vec![
+                NetConfig::new(100.0, 8.0),
+                NetConfig::new(100.0, 16.0),
+                NetConfig::new(100.0, 8.0),
+                NetConfig::new(100.0, 16.0),
+            ],
+        ),
+    ]
+}
+
+/// Fig. 17 — Remote and DaeMon normalized to Local across memory-component
+/// configurations.
+pub fn fig17(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let mut table = Table::new(
+        "Fig 17: IPC normalized to Local across memory-component configs (geomean)",
+        &["config", "Remote", "DaeMon"],
+    );
+    for (label, nets) in mc_configs() {
+        let cfg = SimConfig::default().with_memory_components(nets);
+        let mut remote = Vec::new();
+        let mut daemon = Vec::new();
+        for wl in workloads {
+            let (trace, profile) = r.gen_trace(wl, cfg.seed);
+            let cells = vec![
+                (SchemeKind::Local, cfg.clone()),
+                (SchemeKind::Remote, cfg.clone()),
+                (SchemeKind::Daemon, cfg.clone()),
+            ];
+            let ms = r.run_cells(&trace, profile, &cells);
+            remote.push(speedup(&ms[1], &ms[0]));
+            daemon.push(speedup(&ms[2], &ms[0]));
+        }
+        table.row_f(label, &[geomean(&remote), geomean(&daemon)]);
+    }
+    vec![table]
+}
+
+/// Fig. 18 — multiple concurrent heterogeneous workloads on a 4-core
+/// compute component; per-mix DaeMon speedup over Remote.
+pub fn fig18(r: &Runner) -> Vec<Table> {
+    let mixes: Vec<(&str, Vec<&str>)> = vec![
+        ("pr+nw+sp+dr", vec!["pr", "nw", "sp", "dr"]),
+        ("bf+ts+hp+rs", vec!["bf", "ts", "hp", "rs"]),
+        ("kc+sl+pf+tr", vec!["kc", "sl", "pf", "tr"]),
+        ("pr+pr+sp+sp", vec!["pr", "pr", "sp", "sp"]),
+    ];
+    let mut table = Table::new(
+        "Fig 18: DaeMon over Remote, 4 concurrent workloads on 4 cores",
+        &["mix", "speedup"],
+    );
+    let mut all = Vec::new();
+    for (label, mix) in &mixes {
+        // Local memory shrinks per job (~9% each with 4 jobs, per paper).
+        let cfg = SimConfig::default()
+            .with_cores(4)
+            .with_local_fraction(0.09 * 4.0 / 4.0 + 0.11); // ~20% of combined
+        let remote = r.run_mix(mix, SchemeKind::Remote, &cfg);
+        let daemon = r.run_mix(mix, SchemeKind::Daemon, &cfg);
+        let sp = speedup(&daemon, &remote);
+        all.push(sp);
+        table.row_f(label, &[sp]);
+    }
+    table.row_f("geomean", &[geomean(&all)]);
+    vec![table]
+}
+
+/// Fig. 22 — 1/2/4 memory components at identical per-component config.
+pub fn fig22(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    let mut table = Table::new(
+        "Fig 22: DaeMon speedup over Remote vs #memory components (geomean)",
+        &["components", "speedup", "Remote-IPC-gain", "DaeMon-IPC-gain"],
+    );
+    let mut base: Option<(f64, f64)> = None;
+    for n in [1usize, 2, 4] {
+        let cfg = SimConfig::default()
+            .with_memory_components(vec![NetConfig::new(100.0, 4.0); n]);
+        let mut sp = Vec::new();
+        let mut r_ipc = Vec::new();
+        let mut d_ipc = Vec::new();
+        for wl in workloads {
+            let (trace, profile) = r.gen_trace(wl, cfg.seed);
+            let cells = vec![
+                (SchemeKind::Remote, cfg.clone()),
+                (SchemeKind::Daemon, cfg.clone()),
+            ];
+            let ms = r.run_cells(&trace, profile, &cells);
+            sp.push(speedup(&ms[1], &ms[0]));
+            r_ipc.push(ms[0].ipc());
+            d_ipc.push(ms[1].ipc());
+        }
+        let (rg, dg) = (geomean(&r_ipc), geomean(&d_ipc));
+        let (rb, db) = *base.get_or_insert((rg, dg));
+        table.row_f(&format!("{n}"), &[geomean(&sp), rg / rb, dg / db]);
+    }
+    vec![table]
+}
+
+pub fn fig15_default(r: &Runner) -> Vec<Table> {
+    fig15(r, &SUBSET)
+}
+pub fn fig17_default(r: &Runner) -> Vec<Table> {
+    fig17(r, &SUBSET)
+}
+pub fn fig22_default(r: &Runner) -> Vec<Table> {
+    fig22(r, &SUBSET)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mc_configs_match_paper_table() {
+        let cfgs = mc_configs();
+        assert_eq!(cfgs.len(), 8);
+        assert_eq!(cfgs[0].1.len(), 1);
+        assert_eq!(cfgs[7].1.len(), 4);
+        assert_eq!(cfgs[7].1[1].bandwidth_factor, 16.0);
+    }
+
+    #[test]
+    fn fig22_more_components_help_remote() {
+        let r = Runner::test();
+        let t = fig22(&r, &["pr"]);
+        let one: f64 = t[0].rows[0][2].parse().unwrap();
+        let four: f64 = t[0].rows[2][2].parse().unwrap();
+        assert!(four >= one, "Remote IPC gain 4-comp {four} vs 1-comp {one}");
+    }
+}

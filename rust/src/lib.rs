@@ -1,0 +1,33 @@
+//! # daemon-sim
+//!
+//! A from-scratch reproduction of **DaeMon: Architectural Support for
+//! Efficient Data Movement in Disaggregated Systems** (Giannoula et al.,
+//! SIGMETRICS 2022/2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — a cycle-approximate simulator of a fully
+//!   disaggregated system: compute components (OoO cores, cache hierarchy,
+//!   local memory), memory components (DRAM + hardware address
+//!   translation), the interconnect, the DaeMon compute/memory engines, all
+//!   baseline data-movement schemes, 13 instrumented workloads, and the
+//!   experiment harness that regenerates every figure and table of the
+//!   paper's evaluation.
+//! - **L2/L1 (python, build-time only)** — the hardware link-compression
+//!   unit model as a JAX cost model around a Pallas kernel, AOT-lowered to
+//!   HLO text and executed from rust through PJRT (`runtime`).
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod compress;
+pub mod daemon;
+pub mod experiments;
+pub mod config;
+pub mod mem;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod schemes;
+pub mod sim;
+pub mod system;
+pub mod util;
+pub mod workloads;

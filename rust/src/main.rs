@@ -1,0 +1,232 @@
+//! daemon-sim — CLI for the DaeMon disaggregated-system simulator.
+//!
+//! ```text
+//! daemon-sim run --workload pr --scheme daemon [--switch-ns 100]
+//!            [--bw-factor 4] [--cores 1] [--ratio 0.25] [--fifo]
+//!            [--max-accesses N] [--estimator exact|pjrt] [--json]
+//! daemon-sim experiment fig8 [fig9 ...] [--quick] [--out results/]
+//! daemon-sim experiment all [--quick]
+//! daemon-sim list
+//! ```
+
+use daemon_sim::config::{Replacement, SimConfig};
+use daemon_sim::experiments::{run_experiment, Runner, ALL_EXPERIMENTS};
+use daemon_sim::runtime::{ModelRunner, NetParams, PjrtOracle};
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::Machine;
+use daemon_sim::util::cli::Args;
+use daemon_sim::util::json::Json;
+use daemon_sim::workloads::{by_name, Scale, ALL};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            eprintln!("{}", USAGE);
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "\
+daemon-sim — DaeMon (SIGMETRICS'23) disaggregated-system simulator
+
+USAGE:
+  daemon-sim run --workload <wl> --scheme <s> [options]
+  daemon-sim experiment <id>... | all [--quick] [--out DIR]
+  daemon-sim list
+
+RUN OPTIONS:
+  --workload    one of kc tr pr nw bf bc ts sp sl hp pf dr rs
+  --scheme      local | cache-line | remote | page-free |
+                cache-line+page | lc | bp | pq | daemon
+  --switch-ns   network switch latency, ns        [100]
+  --bw-factor   DRAM-bandwidth / link-bandwidth   [4]
+  --cores       cores in the compute component    [1]
+  --ratio       line bandwidth partition ratio    [0.25]
+  --memcomps    number of memory components       [1]
+  --fifo        FIFO local-memory replacement (default LRU)
+  --scale       test | paper                      [paper]
+  --max-accesses trace cap                        [2000000]
+  --estimator   exact | pjrt (AOT artifact)       [exact]
+  --seed        RNG seed                          [3565]
+  --json        machine-readable output
+";
+
+fn cmd_list() -> i32 {
+    println!("workloads: {}", ALL.join(" "));
+    println!(
+        "schemes:   local cache-line remote page-free cache-line+page lc bp pq daemon"
+    );
+    println!("experiments: {}", ALL_EXPERIMENTS.join(" "));
+    0
+}
+
+fn build_cfg(args: &Args) -> Result<SimConfig, String> {
+    let mut cfg = SimConfig::default()
+        .with_net(
+            args.get_f64("switch-ns", 100.0)?,
+            args.get_f64("bw-factor", 4.0)?,
+        )
+        .with_cores(args.get_usize("cores", 1)?)
+        .with_partition_ratio(args.get_f64("ratio", 0.25)?)
+        .with_seed(args.get_u64("seed", 3565)?);
+    let n = args.get_usize("memcomps", 1)?;
+    if n > 1 {
+        let net0 = cfg.net[0];
+        cfg = cfg.with_memory_components(vec![net0; n]);
+    }
+    if args.flag("fifo") {
+        cfg = cfg.with_replacement(Replacement::Fifo);
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let run_inner = || -> Result<i32, String> {
+        let wl_name = args.get("workload").ok_or("missing --workload")?;
+        let scheme_name = args.get("scheme").ok_or("missing --scheme")?;
+        let kind = SchemeKind::by_name(scheme_name)
+            .ok_or_else(|| format!("unknown scheme '{scheme_name}'"))?;
+        let workload =
+            by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
+        let cfg = build_cfg(args)?;
+        let scale = match args.get_or("scale", "paper") {
+            "test" => Scale::Test,
+            "paper" => Scale::Paper,
+            other => return Err(format!("bad --scale '{other}'")),
+        };
+        let max = args.get_usize("max-accesses", 2_000_000)?;
+        let trace = workload.generate(cfg.seed, scale).truncated(max);
+
+        let oracle: Option<Box<dyn daemon_sim::system::SizeOracle>> =
+            match args.get_or("estimator", "exact") {
+                "exact" => None,
+                "pjrt" => {
+                    let runner =
+                        ModelRunner::load_default().map_err(|e| format!("{e:#}"))?;
+                    let mut params = NetParams::paper_default();
+                    params.switch_cycles = (cfg.net[0].switch_latency_ns * 3.6) as f32;
+                    params.partition_ratio = cfg.daemon.partition_ratio as f32;
+                    Some(Box::new(PjrtOracle::new(
+                        runner,
+                        params,
+                        cfg.seed,
+                        vec![workload.profile(); cfg.cores],
+                    )))
+                }
+                other => return Err(format!("bad --estimator '{other}'")),
+            };
+
+        let mut m = Machine::new(
+            cfg.clone(),
+            kind,
+            trace.footprint_pages,
+            vec![workload.profile(); cfg.cores],
+            oracle,
+        );
+        let t0 = std::time::Instant::now();
+        m.run(std::slice::from_ref(&trace));
+        let wall = t0.elapsed().as_secs_f64();
+        let metrics = &m.metrics;
+
+        if args.flag("json") {
+            let j = Json::obj(vec![
+                ("workload", Json::str(wl_name)),
+                ("scheme", Json::str(kind.name())),
+                ("ipc", Json::num(metrics.ipc())),
+                ("cycles", Json::num(metrics.cycles)),
+                ("instructions", Json::num(metrics.instructions as f64)),
+                ("access_cost_cycles", Json::num(metrics.mean_access_cost())),
+                ("local_hit_ratio", Json::num(metrics.local_hit_ratio())),
+                ("pages_moved", Json::num(metrics.pages_moved as f64)),
+                ("lines_moved", Json::num(metrics.lines_moved as f64)),
+                ("net_utilization", Json::num(metrics.net_utilization)),
+                ("compression_ratio", Json::num(metrics.compression_ratio)),
+                ("wall_seconds", Json::num(wall)),
+            ]);
+            println!("{j}");
+        } else {
+            println!("workload={wl_name} scheme={}", kind.name());
+            println!("  IPC               {:.4}", metrics.ipc());
+            println!("  cycles            {:.0}", metrics.cycles);
+            println!("  instructions      {}", metrics.instructions);
+            println!("  access cost       {:.1} cycles", metrics.mean_access_cost());
+            println!("  local hit ratio   {:.3}", metrics.local_hit_ratio());
+            println!("  pages moved       {}", metrics.pages_moved);
+            println!("  lines moved       {}", metrics.lines_moved);
+            println!("  net utilization   {:.2}", metrics.net_utilization);
+            println!("  compression ratio {:.2}", metrics.compression_ratio);
+            println!(
+                "  simulated {:.2}M accesses in {:.2}s ({:.2}M acc/s)",
+                trace.accesses.len() as f64 / 1e6,
+                wall,
+                trace.accesses.len() as f64 / 1e6 / wall
+            );
+        }
+        Ok(0)
+    };
+    match run_inner() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            1
+        }
+    }
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let runner = if args.flag("quick") {
+        Runner::quick()
+    } else {
+        Runner::paper()
+    };
+    let ids: Vec<String> = if args.positional.iter().any(|p| p == "all") {
+        ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+    } else if args.positional.is_empty() {
+        eprintln!("no experiment id given; try `daemon-sim list`");
+        return 2;
+    } else {
+        args.positional.clone()
+    };
+    let out_dir = args.get("out").map(std::path::PathBuf::from);
+    if let Some(d) = &out_dir {
+        let _ = std::fs::create_dir_all(d);
+    }
+    for id in &ids {
+        let t0 = std::time::Instant::now();
+        match run_experiment(id, &runner) {
+            None => {
+                eprintln!("unknown experiment '{id}' — see `daemon-sim list`");
+                return 1;
+            }
+            Some(tables) => {
+                for t in &tables {
+                    println!("{}", t.render());
+                    if let Some(d) = &out_dir {
+                        let fname = t
+                            .title
+                            .chars()
+                            .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                            .collect::<String>();
+                        let _ =
+                            std::fs::write(d.join(format!("{fname}.csv")), t.to_csv());
+                    }
+                }
+                eprintln!("[{id}: {:.1}s]", t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+    0
+}

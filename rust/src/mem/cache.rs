@@ -1,0 +1,223 @@
+//! Set-associative cache model (L1D / L2 / LLC of Table 2).
+//!
+//! Functional contents with LRU stamps + dirty bits; latency is charged by
+//! the core model.  Ways are scanned linearly (8–16 ways ⇒ cheap).
+
+use crate::config::CacheParams;
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Way {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    stamp: u64,
+}
+
+/// Result of a cache access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    /// Miss; the evicted victim, if dirty, is carried out for writeback.
+    Miss { dirty_victim: Option<u64> },
+}
+
+pub struct Cache {
+    /// Flat `sets * ways` array (single allocation — the nested
+    /// Vec-of-Vecs layout cost one pointer chase per L1 access; see
+    /// EXPERIMENTS.md §Perf).
+    ways_flat: Vec<Way>,
+    set_count: usize,
+    set_mask: u64,
+    line_shift: u32,
+    ways: usize,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(params: &CacheParams, line_bytes: u64) -> Self {
+        let lines = params.size_bytes / line_bytes;
+        let sets = (lines as usize / params.ways).max(1);
+        assert!(sets.is_power_of_two(), "sets must be a power of two: {sets}");
+        Self {
+            ways_flat: vec![Way::default(); sets * params.ways],
+            set_count: sets,
+            set_mask: sets as u64 - 1,
+            line_shift: line_bytes.trailing_zeros(),
+            ways: params.ways,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    #[inline]
+    fn index(&self, addr: u64) -> (usize, u64) {
+        let line = addr >> self.line_shift;
+        ((line & self.set_mask) as usize, line >> self.set_mask.count_ones())
+    }
+
+    /// Access `addr`; on a miss the line is installed and the LRU victim's
+    /// full line address is returned if it was dirty.
+    pub fn access(&mut self, addr: u64, write: bool) -> Access {
+        self.tick += 1;
+        let (set_idx, tag) = self.index(addr);
+        let shift = self.line_shift;
+        let bits = self.set_mask.count_ones();
+        let base = set_idx * self.ways;
+        let set = &mut self.ways_flat[base..base + self.ways];
+        for w in set.iter_mut() {
+            if w.valid && w.tag == tag {
+                w.stamp = self.tick;
+                w.dirty |= write;
+                self.hits += 1;
+                return Access::Hit;
+            }
+        }
+        self.misses += 1;
+        // Victim: invalid way first, else LRU.
+        let victim = (0..self.ways)
+            .find(|&i| !set[i].valid)
+            .unwrap_or_else(|| {
+                (0..self.ways)
+                    .min_by_key(|&i| set[i].stamp)
+                    .unwrap()
+            });
+        let dirty_victim = if set[victim].valid && set[victim].dirty {
+            let line = (set[victim].tag << bits) | set_idx as u64;
+            Some(line << shift)
+        } else {
+            None
+        };
+        set[victim] = Way { tag, valid: true, dirty: write, stamp: self.tick };
+        Access::Miss { dirty_victim }
+    }
+
+    /// Probe without updating state.
+    pub fn contains(&self, addr: u64) -> bool {
+        let (set_idx, tag) = self.index(addr);
+        let base = set_idx * self.ways;
+        self.ways_flat[base..base + self.ways]
+            .iter()
+            .any(|w| w.valid && w.tag == tag)
+    }
+
+    /// Install a line without it being demanded (e.g. critical line pushed
+    /// straight into the LLC by the DaeMon engine).  Returns dirty victim.
+    pub fn install(&mut self, addr: u64) -> Option<u64> {
+        match self.access(addr, false) {
+            Access::Hit => None,
+            Access::Miss { dirty_victim } => dirty_victim,
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CacheParams;
+
+    fn tiny() -> Cache {
+        // 4 sets x 2 ways x 64B = 512B.
+        Cache::new(
+            &CacheParams { size_bytes: 512, ways: 2, latency_cycles: 1.0, mshrs: 4 },
+            64,
+        )
+    }
+
+    #[test]
+    fn hit_after_miss() {
+        let mut c = tiny();
+        assert!(matches!(c.access(0x1000, false), Access::Miss { .. }));
+        assert_eq!(c.access(0x1000, false), Access::Hit);
+        assert_eq!(c.access(0x1038, false), Access::Hit); // same line
+        assert!(matches!(c.access(0x1040, false), Access::Miss { .. })); // next line
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = tiny();
+        // Three lines mapping to the same set (stride = sets*line = 256B).
+        c.access(0x0000, false);
+        c.access(0x0100, false);
+        c.access(0x0000, false); // refresh 0x0000
+        c.access(0x0200, false); // evicts 0x0100
+        assert!(c.contains(0x0000));
+        assert!(!c.contains(0x0100));
+        assert!(c.contains(0x0200));
+    }
+
+    #[test]
+    fn dirty_victim_writeback() {
+        let mut c = tiny();
+        c.access(0x0000, true);
+        c.access(0x0100, false);
+        let r = c.access(0x0200, false); // evicts dirty 0x0000
+        assert_eq!(r, Access::Miss { dirty_victim: Some(0x0000) });
+    }
+
+    #[test]
+    fn write_hit_marks_dirty() {
+        let mut c = tiny();
+        c.access(0x0000, false);
+        c.access(0x0000, true); // now dirty via hit
+        c.access(0x0100, false);
+        let r = c.access(0x0200, false);
+        assert_eq!(r, Access::Miss { dirty_victim: Some(0x0000) });
+    }
+
+    #[test]
+    fn hit_rate_counting() {
+        let mut c = tiny();
+        c.access(0x0000, false);
+        c.access(0x0000, false);
+        c.access(0x0000, false);
+        assert_eq!(c.hits, 2);
+        assert_eq!(c.misses, 1);
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table2_geometry() {
+        let llc = Cache::new(
+            &CacheParams { size_bytes: 4 << 20, ways: 16, latency_cycles: 30.0, mshrs: 128 },
+            64,
+        );
+        assert_eq!(llc.set_count, 4096);
+    }
+
+    #[test]
+    fn victim_address_reconstruction_property() {
+        crate::util::proptest::check(0xCAC4E, 30, |rng| {
+            let mut c = tiny();
+            let mut resident: std::collections::HashSet<u64> =
+                std::collections::HashSet::new();
+            for _ in 0..200 {
+                let addr = (rng.below(64) * 64) & !63;
+                match c.access(addr, rng.chance(0.5)) {
+                    Access::Hit => assert!(resident.contains(&(addr & !63))),
+                    Access::Miss { dirty_victim } => {
+                        if let Some(v) = dirty_victim {
+                            assert!(
+                                resident.contains(&v),
+                                "victim {v:#x} never inserted"
+                            );
+                            resident.remove(&v);
+                        }
+                        resident.insert(addr & !63);
+                    }
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,93 @@
+//! DRAM bus model (Table 2: DDR4-2400, 17 GB/s, 15 ns processing).
+//!
+//! Both local memory and each remote memory component own one bus.  The
+//! remote bus can be §4.1-partitioned by the DaeMon memory engine (the
+//! paper partitions "both in the network … and when accessing data from
+//! remote memory modules").  Remote accesses additionally pay one DRAM
+//! access of hardware address translation (Clio-style, §5).
+
+use crate::net::link::{Class, Link};
+
+pub struct DramBus {
+    link: Link,
+    /// Fixed processing latency per access, cycles.
+    pub latency_cycles: f64,
+}
+
+impl DramBus {
+    /// Unpartitioned bus.
+    pub fn shared(bytes_per_cycle: f64, latency_cycles: f64, interval: f64) -> Self {
+        Self { link: Link::shared(0.0, bytes_per_cycle, interval), latency_cycles }
+    }
+
+    /// Partitioned bus (DaeMon memory engine).
+    pub fn partitioned(
+        bytes_per_cycle: f64,
+        latency_cycles: f64,
+        ratio: f64,
+        interval: f64,
+    ) -> Self {
+        Self {
+            link: Link::partitioned(0.0, bytes_per_cycle, ratio, interval),
+            latency_cycles,
+        }
+    }
+
+    /// Read/write `bytes` at `now`; returns completion time.
+    pub fn access(&mut self, now: f64, bytes: u64, class: Class) -> f64 {
+        self.link.send(now, bytes, class) + self.latency_cycles
+    }
+
+    /// Queue backlog for `class` at `now` (cycles).
+    pub fn backlog(&self, now: f64, class: Class) -> f64 {
+        self.link.backlog(now, class)
+    }
+
+    /// One-lookup hardware address translation (a dependent DRAM access).
+    pub fn translate(&mut self, now: f64, class: Class) -> f64 {
+        self.access(now, 8, class)
+    }
+
+    pub fn utilization(&self, horizon: f64) -> f64 {
+        self.link.utilization(horizon)
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        self.link.bytes_moved()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn access_pays_latency_and_serialization() {
+        let mut d = DramBus::shared(4.0, 54.0, 1000.0);
+        let t = d.access(0.0, 64, Class::Line);
+        assert!((t - (16.0 + 54.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consecutive_accesses_queue() {
+        let mut d = DramBus::shared(1.0, 10.0, 1000.0);
+        let a = d.access(0.0, 100, Class::Line);
+        let b = d.access(0.0, 100, Class::Line);
+        assert!((b - a - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partitioned_bus_isolates_page_floods() {
+        let mut d = DramBus::partitioned(4.0, 0.0, 0.25, 1000.0);
+        d.access(0.0, 30_000, Class::Page);
+        let line = d.access(0.0, 64, Class::Line);
+        assert!(line < 100.0, "line delayed by page flood: {line}");
+    }
+
+    #[test]
+    fn translate_is_small_access() {
+        let mut d = DramBus::shared(4.0, 54.0, 1000.0);
+        let t = d.translate(0.0, Class::Line);
+        assert!((t - (2.0 + 54.0)).abs() < 1e-9);
+    }
+}

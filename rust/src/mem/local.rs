@@ -1,0 +1,259 @@
+//! Local memory of a compute component (§2.1).
+//!
+//! A page-granularity store sized to ~20% of the working set, treated as an
+//! inclusive cache of remote memory with a local virtual→physical mapping
+//! (MIND-style, the paper's assumed option).  Supports approximate-LRU and
+//! FIFO replacement (Fig. 16), dirty bits, and "installed_at" times so a
+//! page scheduled by DaeMon only serves requests after it arrives.
+
+use crate::config::Replacement;
+use std::collections::{HashMap, VecDeque};
+
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    stamp: u64,
+    dirty: bool,
+    /// Simulation time at which the page's data is resident.
+    installed_at: f64,
+}
+
+pub struct LocalMemory {
+    capacity_pages: usize,
+    entries: HashMap<u64, Entry>,
+    /// Lazy-deleted recency queue: (stamp, page).
+    queue: VecDeque<(u64, u64)>,
+    policy: Replacement,
+    tick: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Result of an eviction: the victim page and whether it was dirty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Evicted {
+    pub page: u64,
+    pub dirty: bool,
+}
+
+impl LocalMemory {
+    pub fn new(capacity_pages: usize, policy: Replacement) -> Self {
+        Self {
+            capacity_pages: capacity_pages.max(1),
+            entries: HashMap::new(),
+            queue: VecDeque::new(),
+            policy,
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_pages
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Is `page` resident (data arrived) at time `now`?
+    pub fn present(&self, page: u64, now: f64) -> bool {
+        self.entries
+            .get(&page)
+            .map(|e| e.installed_at <= now)
+            .unwrap_or(false)
+    }
+
+    /// Access `page` at `now`; returns true on hit.  Touches recency under
+    /// LRU (FIFO order is insertion-only).
+    pub fn access(&mut self, page: u64, write: bool, now: f64) -> bool {
+        self.tick += 1;
+        let tick = self.tick;
+        let policy = self.policy;
+        if let Some(e) = self.entries.get_mut(&page) {
+            if e.installed_at <= now {
+                e.dirty |= write;
+                if policy == Replacement::Lru {
+                    e.stamp = tick;
+                    self.queue.push_back((tick, page));
+                }
+                self.hits += 1;
+                return true;
+            }
+        }
+        self.misses += 1;
+        false
+    }
+
+    /// Install `page` arriving at time `installed_at`.  Returns the evicted
+    /// victim if capacity was exceeded.  Installing an already-present page
+    /// refreshes its arrival time only if earlier data was still in flight.
+    pub fn install(&mut self, page: u64, installed_at: f64) -> Option<Evicted> {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.entries.get_mut(&page) {
+            e.installed_at = e.installed_at.min(installed_at);
+            return None;
+        }
+        let mut victim = None;
+        if self.entries.len() >= self.capacity_pages {
+            victim = self.evict();
+        }
+        self.entries.insert(
+            page,
+            Entry { stamp: tick, dirty: false, installed_at },
+        );
+        self.queue.push_back((tick, page));
+        victim
+    }
+
+    /// Mark a page dirty (e.g. dirty-line flush from the DaeMon dirty
+    /// buffer after the page arrives).
+    pub fn mark_dirty(&mut self, page: u64) {
+        if let Some(e) = self.entries.get_mut(&page) {
+            e.dirty = true;
+        }
+    }
+
+    /// Remove a specific page (invalidate).
+    pub fn remove(&mut self, page: u64) -> Option<Evicted> {
+        self.entries
+            .remove(&page)
+            .map(|e| Evicted { page, dirty: e.dirty })
+    }
+
+    fn evict(&mut self) -> Option<Evicted> {
+        // Pop lazily-deleted queue entries until one matches live state.
+        while let Some((stamp, page)) = self.queue.pop_front() {
+            if let Some(e) = self.entries.get(&page) {
+                let current = match self.policy {
+                    Replacement::Lru => e.stamp == stamp,
+                    // FIFO: evict on first (oldest) queue entry for a live
+                    // page — insertion order.
+                    Replacement::Fifo => true,
+                };
+                if current {
+                    let e = self.entries.remove(&page).unwrap();
+                    self.evictions += 1;
+                    return Some(Evicted { page, dirty: e.dirty });
+                }
+            }
+        }
+        None
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_hit_after_install() {
+        let mut m = LocalMemory::new(4, Replacement::Lru);
+        assert!(!m.access(1, false, 0.0));
+        m.install(1, 10.0);
+        assert!(!m.present(1, 5.0), "not arrived yet");
+        assert!(m.present(1, 10.0));
+        assert!(m.access(1, false, 11.0));
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut m = LocalMemory::new(2, Replacement::Lru);
+        m.install(1, 0.0);
+        m.install(2, 0.0);
+        m.access(1, false, 1.0); // 1 is now MRU
+        let ev = m.install(3, 2.0).unwrap();
+        assert_eq!(ev.page, 2);
+        assert!(m.present(1, 2.0) && m.present(3, 2.0));
+    }
+
+    #[test]
+    fn fifo_evicts_first_installed_regardless_of_touches() {
+        let mut m = LocalMemory::new(2, Replacement::Fifo);
+        m.install(1, 0.0);
+        m.install(2, 0.0);
+        m.access(1, false, 1.0); // touching must not save page 1 under FIFO
+        let ev = m.install(3, 2.0).unwrap();
+        assert_eq!(ev.page, 1);
+    }
+
+    #[test]
+    fn dirty_propagates_to_eviction() {
+        let mut m = LocalMemory::new(1, Replacement::Lru);
+        m.install(1, 0.0);
+        m.access(1, true, 1.0);
+        let ev = m.install(2, 2.0).unwrap();
+        assert_eq!(ev, Evicted { page: 1, dirty: true });
+    }
+
+    #[test]
+    fn mark_dirty_externally() {
+        let mut m = LocalMemory::new(1, Replacement::Lru);
+        m.install(1, 0.0);
+        m.mark_dirty(1);
+        let ev = m.install(2, 1.0).unwrap();
+        assert!(ev.dirty);
+    }
+
+    #[test]
+    fn reinstall_keeps_earliest_arrival() {
+        let mut m = LocalMemory::new(2, Replacement::Lru);
+        m.install(1, 10.0);
+        m.install(1, 5.0);
+        assert!(m.present(1, 6.0));
+    }
+
+    #[test]
+    fn capacity_never_exceeded_property() {
+        crate::util::proptest::check(0x10CA1, 30, |rng| {
+            let cap = 1 + rng.index(8);
+            let policy = if rng.chance(0.5) {
+                Replacement::Lru
+            } else {
+                Replacement::Fifo
+            };
+            let mut m = LocalMemory::new(cap, policy);
+            for t in 0..300u64 {
+                let page = rng.below(32);
+                if rng.chance(0.5) {
+                    m.access(page, rng.chance(0.3), t as f64);
+                } else {
+                    m.install(page, t as f64);
+                }
+                assert!(m.len() <= cap, "len {} > cap {cap}", m.len());
+            }
+        });
+    }
+
+    #[test]
+    fn eviction_victims_were_resident_property() {
+        crate::util::proptest::check(0x10CA2, 20, |rng| {
+            let mut m = LocalMemory::new(4, Replacement::Lru);
+            let mut resident: std::collections::HashSet<u64> =
+                std::collections::HashSet::new();
+            for t in 0..200u64 {
+                let page = rng.below(16);
+                if let Some(ev) = m.install(page, t as f64) {
+                    assert!(resident.remove(&ev.page), "phantom victim {}", ev.page);
+                }
+                resident.insert(page);
+            }
+        });
+    }
+}

@@ -1,0 +1,10 @@
+//! Memory substrate: on-chip cache hierarchy, local memory page store, and
+//! DRAM bus models for local and remote memory components.
+
+pub mod cache;
+pub mod dram;
+pub mod local;
+
+pub use cache::{Access, Cache};
+pub use dram::DramBus;
+pub use local::{Evicted, LocalMemory};

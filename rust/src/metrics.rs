@@ -1,0 +1,155 @@
+//! Simulation metrics: everything the paper's figures plot.
+
+use crate::util::stats::Running;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Total committed instructions (memory + gap).
+    pub instructions: u64,
+    /// Final core time in cycles (max over cores).
+    pub cycles: f64,
+    /// Raw latency (issue -> data arrival) of LLC-miss accesses.
+    pub access_cost: Running,
+    /// Memory stall cycles the core actually suffered (MLP-window blocking
+    /// + final drain).  `mean_access_cost` = stalls per LLC miss — the
+    /// quantity the paper's "data access cost" figure tracks (a scheme
+    /// that overlaps transfers with execution has low cost even if
+    /// individual transfers queue).
+    pub stall_cycles: f64,
+    /// Local memory hits/misses (LLC-miss accesses only).
+    pub local_hits: u64,
+    pub local_misses: u64,
+    /// Pages migrated to local memory.
+    pub pages_moved: u64,
+    /// Page migrations suppressed by the selection unit / buffer limits.
+    pub pages_throttled: u64,
+    /// Cache-line movements to LLC.
+    pub lines_moved: u64,
+    /// Dirty traffic written back to remote (lines + pages), bytes.
+    pub writeback_bytes: u64,
+    /// Bytes moved over the network, compute-bound direction.
+    pub net_bytes_in: u64,
+    /// Mean network utilization over the run, [0,1].
+    pub net_utilization: f64,
+    /// Compression ratio achieved on migrated pages (1.0 if off).
+    pub compression_ratio: f64,
+    /// Per-interval instruction counts (Fig. 13 time series).
+    pub interval_instructions: Vec<u64>,
+    /// Per-interval local-memory hit counts / totals (Fig. 14).
+    pub interval_local_hits: Vec<u64>,
+    pub interval_local_total: Vec<u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { compression_ratio: 1.0, access_cost: Running::new(), ..Default::default() }
+    }
+
+    pub fn ipc(&self) -> f64 {
+        if self.cycles <= 0.0 {
+            0.0
+        } else {
+            self.instructions as f64 / self.cycles
+        }
+    }
+
+    pub fn local_hit_ratio(&self) -> f64 {
+        let total = self.local_hits + self.local_misses;
+        if total == 0 {
+            // Schemes that never consult local memory (pure cache-line).
+            0.0
+        } else {
+            self.local_hits as f64 / total as f64
+        }
+    }
+
+    /// Stall-based data access cost: memory stall cycles per LLC-miss
+    /// access (see `stall_cycles`).
+    pub fn mean_access_cost(&self) -> f64 {
+        if self.access_cost.n == 0 {
+            0.0
+        } else {
+            self.stall_cycles / self.access_cost.n as f64
+        }
+    }
+
+    /// Raw mean latency from issue to data arrival.
+    pub fn mean_access_latency(&self) -> f64 {
+        self.access_cost.mean()
+    }
+
+    /// Record an instruction count into the interval series.
+    pub fn bump_interval(&mut self, interval: usize, instrs: u64) {
+        if self.interval_instructions.len() <= interval {
+            self.interval_instructions.resize(interval + 1, 0);
+            self.interval_local_hits.resize(interval + 1, 0);
+            self.interval_local_total.resize(interval + 1, 0);
+        }
+        self.interval_instructions[interval] += instrs;
+    }
+
+    pub fn bump_interval_local(&mut self, interval: usize, hit: bool) {
+        if self.interval_local_total.len() <= interval {
+            self.interval_instructions.resize(interval + 1, 0);
+            self.interval_local_hits.resize(interval + 1, 0);
+            self.interval_local_total.resize(interval + 1, 0);
+        }
+        self.interval_local_total[interval] += 1;
+        if hit {
+            self.interval_local_hits[interval] += 1;
+        }
+    }
+
+    /// Per-interval IPC series (interval length in cycles supplied).
+    pub fn ipc_series(&self, interval_cycles: f64) -> Vec<f64> {
+        self.interval_instructions
+            .iter()
+            .map(|&i| i as f64 / interval_cycles)
+            .collect()
+    }
+
+    /// Per-interval local hit-ratio series.
+    pub fn hit_ratio_series(&self) -> Vec<f64> {
+        self.interval_local_total
+            .iter()
+            .zip(&self.interval_local_hits)
+            .map(|(&t, &h)| if t == 0 { 0.0 } else { h as f64 / t as f64 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ipc_and_hit_ratio() {
+        let mut m = Metrics::new();
+        m.instructions = 1000;
+        m.cycles = 2000.0;
+        assert!((m.ipc() - 0.5).abs() < 1e-12);
+        m.local_hits = 9;
+        m.local_misses = 1;
+        assert!((m.local_hit_ratio() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_safe() {
+        let m = Metrics::new();
+        assert_eq!(m.ipc(), 0.0);
+        assert_eq!(m.local_hit_ratio(), 0.0);
+        assert_eq!(m.mean_access_cost(), 0.0);
+        assert_eq!(m.compression_ratio, 1.0);
+    }
+
+    #[test]
+    fn interval_series() {
+        let mut m = Metrics::new();
+        m.bump_interval(0, 100);
+        m.bump_interval(2, 300);
+        m.bump_interval_local(2, true);
+        m.bump_interval_local(2, false);
+        assert_eq!(m.ipc_series(100.0), vec![1.0, 0.0, 3.0]);
+        assert_eq!(m.hit_ratio_series()[2], 0.5);
+    }
+}

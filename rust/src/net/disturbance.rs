@@ -1,0 +1,132 @@
+//! Artificial network disturbance (§6 "Network Disturbance", Fig. 13/14).
+//!
+//! The paper simulates contention from other compute components by
+//! injecting packets into the network during runtime.  We model phases of
+//! load: within an active phase, a fraction of the link capacity is
+//! consumed by injected packets, applied per accounting interval as the
+//! simulation clock advances.
+
+use crate::net::link::Link;
+
+/// One disturbance phase: during `[from_cycle, to_cycle)`, inject traffic
+/// equal to `load` x link capacity.
+#[derive(Clone, Copy, Debug)]
+pub struct Phase {
+    pub from_cycle: f64,
+    pub to_cycle: f64,
+    pub load: f64,
+}
+
+pub struct Disturbance {
+    phases: Vec<Phase>,
+    /// Injection granularity in cycles.
+    step: f64,
+    /// Next cycle at which injection is due.
+    cursor: f64,
+    /// Link capacity in bytes/cycle (sum over channels).
+    capacity: f64,
+}
+
+impl Disturbance {
+    pub fn new(phases: Vec<Phase>, step_cycles: f64, capacity_bytes_per_cycle: f64) -> Self {
+        Self { phases, step: step_cycles.max(1.0), cursor: 0.0, capacity: capacity_bytes_per_cycle }
+    }
+
+    /// No disturbance.
+    pub fn none() -> Self {
+        Self { phases: Vec::new(), step: f64::INFINITY, cursor: f64::INFINITY, capacity: 0.0 }
+    }
+
+    /// Periodic square-wave load: alternating `busy_load` / 0 with the
+    /// given period (used by Fig. 13/14's runtime variation).
+    pub fn square_wave(period_cycles: f64, busy_load: f64, horizon_cycles: f64,
+                       step_cycles: f64, capacity: f64) -> Self {
+        let mut phases = Vec::new();
+        let mut t = 0.0;
+        let mut on = true;
+        while t < horizon_cycles {
+            if on {
+                phases.push(Phase { from_cycle: t, to_cycle: t + period_cycles, load: busy_load });
+            }
+            t += period_cycles;
+            on = !on;
+        }
+        Self::new(phases, step_cycles, capacity)
+    }
+
+    fn load_at(&self, cycle: f64) -> f64 {
+        for p in &self.phases {
+            if cycle >= p.from_cycle && cycle < p.to_cycle {
+                return p.load;
+            }
+        }
+        0.0
+    }
+
+    /// Advance to `now`, injecting the due traffic into `link`.
+    pub fn advance(&mut self, now: f64, link: &mut Link) {
+        while self.cursor <= now {
+            let load = self.load_at(self.cursor);
+            if load > 0.0 {
+                let bytes = (load * self.capacity * self.step) as u64;
+                if bytes > 0 {
+                    link.inject(self.cursor, bytes);
+                }
+            }
+            self.cursor += self.step;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::link::{Class, Link};
+
+    #[test]
+    fn none_never_injects() {
+        let mut d = Disturbance::none();
+        let mut l = Link::shared(0.0, 1.0, 1000.0);
+        d.advance(1e9, &mut l);
+        let t = l.send(0.0, 10, Class::Line);
+        assert!((t - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_phase_slows_traffic() {
+        let mut d = Disturbance::new(
+            vec![Phase { from_cycle: 0.0, to_cycle: 1000.0, load: 0.5 }],
+            100.0,
+            1.0,
+        );
+        let mut l = Link::shared(0.0, 1.0, 1000.0);
+        d.advance(999.0, &mut l);
+        // 10 steps x 50 bytes injected = 500 cycles of occupancy.
+        let t = l.send(0.0, 10, Class::Line);
+        assert!(t >= 500.0, "expected queueing behind injected load, got {t}");
+    }
+
+    #[test]
+    fn square_wave_alternates() {
+        let d = Disturbance::square_wave(100.0, 0.8, 400.0, 10.0, 1.0);
+        assert!(d.load_at(50.0) > 0.0);
+        assert_eq!(d.load_at(150.0), 0.0);
+        assert!(d.load_at(250.0) > 0.0);
+        assert_eq!(d.load_at(350.0), 0.0);
+    }
+
+    #[test]
+    fn advance_is_incremental() {
+        let mut d = Disturbance::new(
+            vec![Phase { from_cycle: 0.0, to_cycle: 200.0, load: 1.0 }],
+            100.0,
+            1.0,
+        );
+        let mut l = Link::shared(0.0, 1.0, 1000.0);
+        d.advance(50.0, &mut l);
+        let backlog_1 = l.backlog(0.0, Class::Line);
+        d.advance(150.0, &mut l);
+        let backlog_2 = l.backlog(0.0, Class::Line);
+        assert!(backlog_2 > backlog_1);
+    }
+}

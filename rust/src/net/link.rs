@@ -1,0 +1,329 @@
+//! Bandwidth-serialized channel — the core timing resource of the
+//! simulator.
+//!
+//! A `BwChannel` serializes transfers at a fixed bytes/cycle rate and
+//! tracks per-interval busy time for utilization reporting (Fig. 19).  A
+//! `Link` composes switch latency with either one shared channel or two
+//! partitioned sub-channels (DaeMon's §4.1 approximate bandwidth
+//! partitioning: the queue controller's alternate serving reserves a fixed
+//! fraction for each class *even when the other queue is empty*, so the
+//! partitions are strict).
+
+/// A transfer scheduled on a channel.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Transfer {
+    pub start: f64,
+    pub end: f64,
+}
+
+pub struct BwChannel {
+    bytes_per_cycle: f64,
+    next_free: f64,
+    /// Interval length (cycles) for utilization accounting.
+    interval: f64,
+    /// Busy cycles accumulated per interval index.
+    busy: Vec<f64>,
+    pub bytes_moved: u64,
+}
+
+impl BwChannel {
+    pub fn new(bytes_per_cycle: f64, interval_cycles: f64) -> Self {
+        assert!(bytes_per_cycle > 0.0);
+        Self {
+            bytes_per_cycle,
+            next_free: 0.0,
+            interval: interval_cycles.max(1.0),
+            busy: Vec::new(),
+            bytes_moved: 0,
+        }
+    }
+
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bytes_per_cycle
+    }
+
+    pub fn next_free(&self) -> f64 {
+        self.next_free
+    }
+
+    /// Queue occupancy ahead of a request issued at `now`, in cycles.
+    pub fn backlog(&self, now: f64) -> f64 {
+        (self.next_free - now).max(0.0)
+    }
+
+    /// Schedule `bytes` at time `now`; FIFO behind earlier transfers.
+    pub fn transfer(&mut self, now: f64, bytes: u64) -> Transfer {
+        let start = self.next_free.max(now);
+        let dur = bytes as f64 / self.bytes_per_cycle;
+        let end = start + dur;
+        self.next_free = end;
+        self.bytes_moved += bytes;
+        self.account(start, end);
+        Transfer { start, end }
+    }
+
+    /// Inject external occupancy (network disturbance, Fig. 13/14): other
+    /// tenants' packets consume the link without producing a result.
+    pub fn inject(&mut self, now: f64, bytes: u64) {
+        self.transfer(now, bytes);
+        self.bytes_moved -= bytes; // injected traffic is not ours
+    }
+
+    fn account(&mut self, start: f64, end: f64) {
+        let mut t = start;
+        while t < end {
+            let idx = (t / self.interval) as usize;
+            if self.busy.len() <= idx {
+                self.busy.resize(idx + 1, 0.0);
+            }
+            let bound = (idx as f64 + 1.0) * self.interval;
+            let slice = end.min(bound) - t;
+            self.busy[idx] += slice;
+            t = bound;
+        }
+    }
+
+    /// Mean utilization in [0,1] over intervals `[0, horizon_cycles)`.
+    pub fn utilization(&self, horizon_cycles: f64) -> f64 {
+        if horizon_cycles <= 0.0 {
+            return 0.0;
+        }
+        let total_busy: f64 = self.busy.iter().sum();
+        (total_busy / horizon_cycles).min(1.0)
+    }
+
+    /// Per-interval utilization series (for the disturbance time plots).
+    pub fn utilization_series(&self) -> Vec<f64> {
+        self.busy.iter().map(|b| (b / self.interval).min(1.0)).collect()
+    }
+}
+
+/// Traffic class on a partitioned link.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    Line,
+    Page,
+}
+
+/// A network hop: switch latency + bandwidth, optionally partitioned.
+pub struct Link {
+    pub switch_cycles: f64,
+    /// `None` partition ⇒ single shared FIFO channel.
+    shared: Option<BwChannel>,
+    line_chan: Option<BwChannel>,
+    page_chan: Option<BwChannel>,
+}
+
+impl Link {
+    /// Unpartitioned link (Remote, cache-line, LC, cache-line+page).
+    pub fn shared(switch_cycles: f64, bytes_per_cycle: f64, interval: f64) -> Self {
+        Self {
+            switch_cycles,
+            shared: Some(BwChannel::new(bytes_per_cycle, interval)),
+            line_chan: None,
+            page_chan: None,
+        }
+    }
+
+    /// Partitioned link (§4.1): `ratio` of bandwidth reserved for lines.
+    pub fn partitioned(
+        switch_cycles: f64,
+        bytes_per_cycle: f64,
+        ratio: f64,
+        interval: f64,
+    ) -> Self {
+        assert!((0.0..1.0).contains(&ratio) && ratio > 0.0);
+        Self {
+            switch_cycles,
+            shared: None,
+            line_chan: Some(BwChannel::new(bytes_per_cycle * ratio, interval)),
+            page_chan: Some(BwChannel::new(bytes_per_cycle * (1.0 - ratio), interval)),
+        }
+    }
+
+    pub fn is_partitioned(&self) -> bool {
+        self.shared.is_none()
+    }
+
+    fn chan_mut(&mut self, class: Class) -> &mut BwChannel {
+        if let Some(c) = self.shared.as_mut() {
+            return c;
+        }
+        match class {
+            Class::Line => self.line_chan.as_mut().unwrap(),
+            Class::Page => self.page_chan.as_mut().unwrap(),
+        }
+    }
+
+    fn chan(&self, class: Class) -> &BwChannel {
+        if let Some(c) = self.shared.as_ref() {
+            return c;
+        }
+        match class {
+            Class::Line => self.line_chan.as_ref().unwrap(),
+            Class::Page => self.page_chan.as_ref().unwrap(),
+        }
+    }
+
+    /// Send `bytes` of `class` at `now`; returns arrival time at the far
+    /// end (serialization + switch latency).
+    pub fn send(&mut self, now: f64, bytes: u64, class: Class) -> f64 {
+        let sw = self.switch_cycles;
+        let t = self.chan_mut(class).transfer(now, bytes);
+        t.end + sw
+    }
+
+    /// Queue backlog for `class` at `now` (cycles).
+    pub fn backlog(&self, now: f64, class: Class) -> f64 {
+        self.chan(class).backlog(now)
+    }
+
+    /// Disturbance injection on all channels proportionally.
+    pub fn inject(&mut self, now: f64, bytes: u64) {
+        if let Some(c) = self.shared.as_mut() {
+            c.inject(now, bytes);
+        } else {
+            // Split by capacity share.
+            let lc = self.line_chan.as_mut().unwrap();
+            let lshare = lc.bytes_per_cycle();
+            let pc_rate = self.page_chan.as_ref().unwrap().bytes_per_cycle();
+            let lb = (bytes as f64 * lshare / (lshare + pc_rate)) as u64;
+            self.line_chan.as_mut().unwrap().inject(now, lb);
+            self.page_chan.as_mut().unwrap().inject(now, bytes - lb);
+        }
+    }
+
+    pub fn bytes_moved(&self) -> u64 {
+        match &self.shared {
+            Some(c) => c.bytes_moved,
+            None => {
+                self.line_chan.as_ref().unwrap().bytes_moved
+                    + self.page_chan.as_ref().unwrap().bytes_moved
+            }
+        }
+    }
+
+    /// Utilization over `[0, horizon)` — capacity-weighted across channels.
+    pub fn utilization(&self, horizon: f64) -> f64 {
+        match &self.shared {
+            Some(c) => c.utilization(horizon),
+            None => {
+                let lc = self.line_chan.as_ref().unwrap();
+                let pc = self.page_chan.as_ref().unwrap();
+                let wl = lc.bytes_per_cycle();
+                let wp = pc.bytes_per_cycle();
+                (lc.utilization(horizon) * wl + pc.utilization(horizon) * wp)
+                    / (wl + wp)
+            }
+        }
+    }
+
+    pub fn utilization_series(&self) -> Vec<f64> {
+        match &self.shared {
+            Some(c) => c.utilization_series(),
+            None => {
+                let a = self.line_chan.as_ref().unwrap().utilization_series();
+                let b = self.page_chan.as_ref().unwrap().utilization_series();
+                let n = a.len().max(b.len());
+                let wl = self.line_chan.as_ref().unwrap().bytes_per_cycle();
+                let wp = self.page_chan.as_ref().unwrap().bytes_per_cycle();
+                (0..n)
+                    .map(|i| {
+                        let x = a.get(i).copied().unwrap_or(0.0);
+                        let y = b.get(i).copied().unwrap_or(0.0);
+                        (x * wl + y * wp) / (wl + wp)
+                    })
+                    .collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_back_to_back() {
+        let mut c = BwChannel::new(2.0, 1000.0);
+        let a = c.transfer(0.0, 100); // 50 cycles
+        assert_eq!(a, Transfer { start: 0.0, end: 50.0 });
+        let b = c.transfer(10.0, 100); // queued behind a
+        assert_eq!(b, Transfer { start: 50.0, end: 100.0 });
+        let d = c.transfer(200.0, 100); // idle gap
+        assert_eq!(d, Transfer { start: 200.0, end: 250.0 });
+    }
+
+    #[test]
+    fn backlog_reflects_queue() {
+        let mut c = BwChannel::new(1.0, 1000.0);
+        c.transfer(0.0, 100);
+        assert_eq!(c.backlog(20.0), 80.0);
+        assert_eq!(c.backlog(150.0), 0.0);
+    }
+
+    #[test]
+    fn utilization_accounting_spans_intervals() {
+        let mut c = BwChannel::new(1.0, 100.0);
+        c.transfer(50.0, 100); // busy 50..150: half of interval 0 and 1
+        let series = c.utilization_series();
+        assert!((series[0] - 0.5).abs() < 1e-9);
+        assert!((series[1] - 0.5).abs() < 1e-9);
+        assert!((c.utilization(200.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partitioned_link_isolates_classes() {
+        let mut l = Link::partitioned(10.0, 4.0, 0.25, 1000.0);
+        // Saturate the page channel (3 B/cyc).
+        let page_arr = l.send(0.0, 3000, Class::Page); // 1000 cyc + 10
+        assert!((page_arr - 1010.0).abs() < 1e-9);
+        // Line goes through its own 1 B/cyc partition without queueing.
+        let line_arr = l.send(0.0, 64, Class::Line);
+        assert!((line_arr - 74.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_link_queues_lines_behind_pages() {
+        let mut l = Link::shared(10.0, 4.0, 1000.0);
+        let page_arr = l.send(0.0, 4096, Class::Page); // 1024 cyc
+        let line_arr = l.send(0.0, 64, Class::Line); // queued behind
+        assert!(line_arr > page_arr - 10.0, "{line_arr} vs {page_arr}");
+    }
+
+    #[test]
+    fn injection_consumes_bandwidth_but_not_bytes_moved() {
+        let mut l = Link::shared(0.0, 1.0, 1000.0);
+        l.inject(0.0, 500);
+        let a = l.send(0.0, 100, Class::Line);
+        assert!((a - 600.0).abs() < 1e-9);
+        assert_eq!(l.bytes_moved(), 100);
+    }
+
+    #[test]
+    fn partitioned_utilization_is_weighted() {
+        let mut l = Link::partitioned(0.0, 4.0, 0.25, 100.0);
+        // Fill line channel (1 B/c) for 100 cycles; page idle.
+        l.send(0.0, 100, Class::Line);
+        let u = l.utilization(100.0);
+        assert!((u - 0.25).abs() < 1e-9, "{u}");
+    }
+
+    #[test]
+    fn fifo_order_property() {
+        crate::util::proptest::check(0x71F0, 30, |rng| {
+            let mut c = BwChannel::new(1.0 + rng.f64() * 4.0, 1000.0);
+            let mut last_end: f64 = 0.0;
+            let mut now: f64 = 0.0;
+            for _ in 0..50 {
+                now += rng.f64() * 20.0;
+                let t = c.transfer(now, 1 + rng.below(500));
+                // FIFO: starts no earlier than request time or prior end.
+                assert!(t.start + 1e-9 >= now);
+                assert!(t.start + 1e-9 >= last_end);
+                assert!(t.end > t.start);
+                last_end = t.end;
+            }
+        });
+    }
+}

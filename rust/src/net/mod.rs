@@ -1,0 +1,9 @@
+//! Network substrate: bandwidth-serialized links with switch latency,
+//! per-interval utilization accounting, optional §4.1 bandwidth
+//! partitioning, and the Fig. 13/14 disturbance injector.
+
+pub mod disturbance;
+pub mod link;
+
+pub use disturbance::{Disturbance, Phase};
+pub use link::{BwChannel, Class, Link, Transfer};

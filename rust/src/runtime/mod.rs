@@ -1,0 +1,225 @@
+//! PJRT runtime: load the AOT-compiled L2/L1 compression cost model
+//! (`artifacts/compress_model.hlo.txt`, produced once by
+//! `python/compile/aot.py`) and execute it from the rust hot path.
+//!
+//! Python never runs at simulation time: the HLO text is parsed and
+//! compiled by the `xla` crate's PJRT CPU client at startup, then executed
+//! as a native function.  The model batches `AOT_BATCH` pages per call —
+//! the [`PjrtOracle`] fills batches with neighbouring page ids so one
+//! dispatch covers a whole miss neighbourhood.
+
+use crate::compress::synth::{gen_page_words, Profile};
+use crate::system::SizeOracle;
+use crate::util::prng::Rng;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Must match `python/compile/model.py::AOT_BATCH`.
+pub const AOT_BATCH: usize = 64;
+/// Words per 4KB page (i32 view) — matches the L1 kernel.
+pub const WORDS_PER_PAGE: usize = 1024;
+
+/// Default artifact location relative to the repo root.
+pub const DEFAULT_ARTIFACT: &str = "artifacts/compress_model.hlo.txt";
+
+/// Network operating point handed to the cost model (params vector —
+/// see model.py for the layout).
+#[derive(Clone, Copy, Debug)]
+pub struct NetParams {
+    pub link_bytes_per_cycle: f32,
+    pub switch_cycles: f32,
+    pub partition_ratio: f32,
+    pub line_bytes: f32,
+    pub decomp_cycles: f32,
+    pub mem_bytes_per_cycle: f32,
+}
+
+impl NetParams {
+    fn to_vec(self) -> Vec<f32> {
+        vec![
+            self.link_bytes_per_cycle,
+            self.switch_cycles,
+            self.partition_ratio,
+            self.line_bytes,
+            self.decomp_cycles,
+            self.mem_bytes_per_cycle,
+        ]
+    }
+
+    /// The paper's default operating point (1/4 bandwidth, 100ns switch,
+    /// 25% partitioning).
+    pub fn paper_default() -> Self {
+        Self {
+            link_bytes_per_cycle: (17.0 / 4.0 / 3.6) as f32,
+            switch_cycles: 360.0,
+            partition_ratio: 0.25,
+            line_bytes: 64.0,
+            decomp_cycles: 256.0,
+            mem_bytes_per_cycle: (17.0 / 3.6) as f32,
+        }
+    }
+}
+
+/// One batch of model outputs.
+#[derive(Clone, Debug)]
+pub struct CostBatch {
+    /// `[batch][algo]` estimated compressed bytes, algo = [lz, fpcbdi, fve].
+    pub est_bytes: Vec<[f32; 3]>,
+    pub page_cycles: Vec<f32>,
+    pub line_cycles: Vec<f32>,
+    /// log(page/line) cost — >0 means the line arrives first.
+    pub advantage: Vec<f32>,
+}
+
+/// Compiled cost model on the PJRT CPU client.
+pub struct ModelRunner {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRunner {
+    /// Load + compile the HLO artifact.  Fails with a helpful message if
+    /// `make artifacts` has not produced it.
+    pub fn load(path: &Path) -> Result<ModelRunner> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| {
+            format!(
+                "load HLO artifact {path:?} — run `make artifacts` to build it"
+            )
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(ModelRunner { exe })
+    }
+
+    /// Locate the artifact relative to the crate root or cwd.
+    pub fn load_default() -> Result<ModelRunner> {
+        let candidates = [
+            Path::new(DEFAULT_ARTIFACT).to_path_buf(),
+            Path::new(env!("CARGO_MANIFEST_DIR")).join(DEFAULT_ARTIFACT),
+        ];
+        for c in &candidates {
+            if c.exists() {
+                return Self::load(c);
+            }
+        }
+        anyhow::bail!(
+            "artifact {DEFAULT_ARTIFACT} not found — run `make artifacts`"
+        )
+    }
+
+    /// Execute the model on one batch of exactly `AOT_BATCH` pages.
+    pub fn run_batch(&self, pages: &[i32], params: NetParams) -> Result<CostBatch> {
+        anyhow::ensure!(
+            pages.len() == AOT_BATCH * WORDS_PER_PAGE,
+            "expected {} words, got {}",
+            AOT_BATCH * WORDS_PER_PAGE,
+            pages.len()
+        );
+        let pages_lit = xla::Literal::vec1(pages)
+            .reshape(&[AOT_BATCH as i64, WORDS_PER_PAGE as i64])?;
+        let params_lit = xla::Literal::vec1(&params.to_vec()[..]);
+        let result = self.exe.execute::<xla::Literal>(&[pages_lit, params_lit])?[0][0]
+            .to_literal_sync()?;
+        let (est, page_c, line_c, adv) = result.to_tuple4()?;
+        let est_flat: Vec<f32> = est.to_vec()?;
+        let est_bytes = est_flat
+            .chunks_exact(3)
+            .map(|c| [c[0], c[1], c[2]])
+            .collect();
+        Ok(CostBatch {
+            est_bytes,
+            page_cycles: page_c.to_vec()?,
+            line_cycles: line_c.to_vec()?,
+            advantage: adv.to_vec()?,
+        })
+    }
+}
+
+/// [`SizeOracle`] backed by the PJRT cost model: compressed sizes come
+/// from the AOT-compiled estimator instead of the native algorithms.
+/// Misses are batched with neighbouring page ids so one PJRT dispatch
+/// covers `AOT_BATCH` pages.
+pub struct PjrtOracle {
+    runner: ModelRunner,
+    params: NetParams,
+    seed: u64,
+    profiles: Vec<Profile>,
+    cache: HashMap<(usize, u64), u32>,
+    raw_bytes: u64,
+    compressed_bytes: u64,
+    pub batches_run: u64,
+}
+
+impl PjrtOracle {
+    pub fn new(runner: ModelRunner, params: NetParams, seed: u64, profiles: Vec<Profile>) -> Self {
+        Self {
+            runner,
+            params,
+            seed,
+            profiles,
+            cache: HashMap::new(),
+            raw_bytes: 0,
+            compressed_bytes: 0,
+            batches_run: 0,
+        }
+    }
+
+    fn page_words(&self, core: usize, page: u64) -> Vec<i32> {
+        // Must match ExactOracle's per-core seeding + Compressor contents.
+        let core = core.min(self.profiles.len() - 1);
+        let seed = self.seed ^ (core as u64) << 32;
+        let mut rng = Rng::new(seed ^ page.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        gen_page_words(&mut rng, self.profiles[core])
+    }
+
+    fn fill_batch(&mut self, core: usize, page: u64) {
+        // The demanded page plus its neighbours (spatially adjacent pages
+        // are the likeliest next migrations).
+        let ids: Vec<u64> = (0..AOT_BATCH as u64).map(|i| page + i).collect();
+        let mut words = Vec::with_capacity(AOT_BATCH * WORDS_PER_PAGE);
+        for &id in &ids {
+            words.extend_from_slice(&self.page_words(core, id));
+        }
+        let batch = self
+            .runner
+            .run_batch(&words, self.params)
+            .expect("PJRT batch execution failed");
+        self.batches_run += 1;
+        for (i, &id) in ids.iter().enumerate() {
+            // MXT transfers compressed data in 256B sectors (minimum one
+            // sector); the hardware falls back to raw pages when
+            // compression does not pay.
+            let est = (batch.est_bytes[i][0].clamp(1.0, 4096.0) / 256.0).ceil() * 256.0;
+            let est = est as u32;
+            self.cache.insert((core, id), est);
+        }
+    }
+}
+
+impl SizeOracle for PjrtOracle {
+    fn page_size(&mut self, core: usize, page: u64) -> u32 {
+        let core = core.min(self.profiles.len() - 1);
+        if let Some(&sz) = self.cache.get(&(core, page)) {
+            self.raw_bytes += 4096;
+            self.compressed_bytes += sz as u64;
+            return sz;
+        }
+        self.fill_batch(core, page);
+        let sz = self.cache[&(core, page)];
+        self.raw_bytes += 4096;
+        self.compressed_bytes += sz as u64;
+        sz
+    }
+
+    fn ratio(&self) -> f64 {
+        if self.compressed_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.compressed_bytes as f64
+        }
+    }
+}

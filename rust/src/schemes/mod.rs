@@ -1,0 +1,205 @@
+//! Data-movement schemes (§2.2 motivation set + §6 evaluation set).
+//!
+//! Every scheme is a policy over the same machine: which granularities
+//! move, whether the link/remote bus are partitioned (§4.1), whether the
+//! selection-granularity unit throttles requests (§4.2), and whether pages
+//! are link-compressed (§4.4).
+
+/// The nine schemes evaluated across Figs. 3 and 8–22.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// Monolithic upper bound: all data fits in local memory.
+    Local,
+    /// Cache-line-granularity remote access only (no local memory use).
+    CacheLine,
+    /// The widely-adopted baseline: page-granularity migration.
+    Remote,
+    /// Idealized: line-latency access + free page migration (Fig. 3).
+    PageFree,
+    /// Naive both-granularities on a shared FIFO link (Fig. 3).
+    CacheLinePage,
+    /// Link compression on page movement only (§6 "LC").
+    Lc,
+    /// Decoupled dual-granularity with bandwidth partitioning only ("BP").
+    Bp,
+    /// BP + selection granularity unit ("PQ").
+    Pq,
+    /// Full DaeMon: PQ + link compression.
+    Daemon,
+}
+
+impl SchemeKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchemeKind::Local => "Local",
+            SchemeKind::CacheLine => "cache-line",
+            SchemeKind::Remote => "Remote",
+            SchemeKind::PageFree => "page-free",
+            SchemeKind::CacheLinePage => "cache-line+page",
+            SchemeKind::Lc => "LC",
+            SchemeKind::Bp => "BP",
+            SchemeKind::Pq => "PQ",
+            SchemeKind::Daemon => "DaeMon",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SchemeKind> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "local" => SchemeKind::Local,
+            "cache-line" | "cacheline" | "cl" => SchemeKind::CacheLine,
+            "remote" => SchemeKind::Remote,
+            "page-free" | "pagefree" => SchemeKind::PageFree,
+            "cache-line+page" | "clp" | "naive" => SchemeKind::CacheLinePage,
+            "lc" => SchemeKind::Lc,
+            "bp" => SchemeKind::Bp,
+            "pq" => SchemeKind::Pq,
+            "daemon" => SchemeKind::Daemon,
+            _ => return None,
+        })
+    }
+
+    /// Policy flags the machine driver consumes.
+    pub fn policy(&self) -> Policy {
+        use SchemeKind::*;
+        match self {
+            Local => Policy { local_only: true, ..Policy::none() },
+            CacheLine => Policy { move_lines: true, install_pages: false, ..Policy::none() },
+            Remote => Policy { move_pages: true, blocking_pages: true, ..Policy::none() },
+            PageFree => Policy { move_pages: true, free_pages: true, move_lines: true, ..Policy::none() },
+            CacheLinePage => Policy { move_pages: true, move_lines: true, ..Policy::none() },
+            Lc => Policy { move_pages: true, blocking_pages: true, compress: true, ..Policy::none() },
+            Bp => Policy { move_pages: true, move_lines: true, partitioned: true, ..Policy::none() },
+            Pq => Policy {
+                move_pages: true,
+                move_lines: true,
+                partitioned: true,
+                selection: true,
+                ..Policy::none()
+            },
+            Daemon => Policy {
+                move_pages: true,
+                move_lines: true,
+                partitioned: true,
+                selection: true,
+                compress: true,
+                ..Policy::none()
+            },
+        }
+    }
+
+    /// The §6 evaluation set (Fig. 8) in plot order.
+    pub fn eval_set() -> [SchemeKind; 5] {
+        [SchemeKind::Lc, SchemeKind::Bp, SchemeKind::Pq, SchemeKind::Daemon, SchemeKind::Local]
+    }
+
+    /// The §2.2 motivation set (Fig. 3) in plot order.
+    pub fn motivation_set() -> [SchemeKind; 6] {
+        [
+            SchemeKind::Local,
+            SchemeKind::CacheLine,
+            SchemeKind::Remote,
+            SchemeKind::PageFree,
+            SchemeKind::CacheLinePage,
+            SchemeKind::Daemon,
+        ]
+    }
+}
+
+/// Decomposed policy flags.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Policy {
+    /// All accesses hit local memory (monolithic).
+    pub local_only: bool,
+    /// Page migrations to local memory are performed.
+    pub move_pages: bool,
+    /// Cache-line movements straight to LLC are performed.
+    pub move_lines: bool,
+    /// The requesting access stalls until the page arrives (page-fault
+    /// semantics); otherwise the access can be served by a line.
+    pub blocking_pages: bool,
+    /// Pages arrive instantly and free (the Fig. 3 idealization).
+    pub free_pages: bool,
+    /// §4.1 bandwidth partitioning (separate line/page channels).
+    pub partitioned: bool,
+    /// §4.2 selection granularity unit (inflight-buffer driven).
+    pub selection: bool,
+    /// §4.4 link compression on page movement.
+    pub compress: bool,
+    /// Lines are installed via page in local memory (false only for the
+    /// pure cache-line scheme, which bypasses local memory).
+    pub install_pages: bool,
+}
+
+impl Policy {
+    fn none() -> Policy {
+        Policy {
+            local_only: false,
+            move_pages: false,
+            move_lines: false,
+            blocking_pages: false,
+            free_pages: false,
+            partitioned: false,
+            selection: false,
+            compress: false,
+            install_pages: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for k in [
+            SchemeKind::Local,
+            SchemeKind::CacheLine,
+            SchemeKind::Remote,
+            SchemeKind::PageFree,
+            SchemeKind::CacheLinePage,
+            SchemeKind::Lc,
+            SchemeKind::Bp,
+            SchemeKind::Pq,
+            SchemeKind::Daemon,
+        ] {
+            assert_eq!(SchemeKind::by_name(k.name()), Some(k), "{k:?}");
+        }
+        assert_eq!(SchemeKind::by_name("nope"), None);
+    }
+
+    #[test]
+    fn daemon_enables_all_three_techniques() {
+        let p = SchemeKind::Daemon.policy();
+        assert!(p.partitioned && p.selection && p.compress);
+        assert!(p.move_pages && p.move_lines);
+        assert!(!p.blocking_pages);
+    }
+
+    #[test]
+    fn remote_is_blocking_page_only() {
+        let p = SchemeKind::Remote.policy();
+        assert!(p.move_pages && p.blocking_pages);
+        assert!(!p.move_lines && !p.compress && !p.partitioned);
+    }
+
+    #[test]
+    fn pq_is_daemon_without_compression() {
+        let pq = SchemeKind::Pq.policy();
+        let dm = SchemeKind::Daemon.policy();
+        assert_eq!(Policy { compress: true, ..pq }, dm);
+    }
+
+    #[test]
+    fn cache_line_bypasses_local_memory() {
+        let p = SchemeKind::CacheLine.policy();
+        assert!(p.move_lines && !p.move_pages && !p.install_pages);
+    }
+
+    #[test]
+    fn eval_and_motivation_sets_match_paper() {
+        assert_eq!(SchemeKind::eval_set().len(), 5);
+        assert_eq!(SchemeKind::motivation_set().len(), 6);
+        assert_eq!(SchemeKind::motivation_set()[0], SchemeKind::Local);
+    }
+}

@@ -1,0 +1,144 @@
+//! Discrete-event plumbing: a time-ordered event queue.
+//!
+//! The simulator is hybrid: bandwidth resources are *timelines*
+//! (`net::BwChannel` reserves intervals analytically), while asynchronous
+//! completions — page/line arrivals, dirty-ack timeouts — are events popped
+//! from this queue as each core's clock advances past them.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Clone, Debug)]
+struct Scheduled<T> {
+    at: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: invert; ties broken by insertion order for determinism.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Scheduled<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn push(&mut self, at: f64, payload: T) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Scheduled { at, seq, payload });
+    }
+
+    /// Earliest pending timestamp.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    /// Pop the next event if it is due at or before `now`.
+    pub fn pop_due(&mut self, now: f64) -> Option<(f64, T)> {
+        if self.heap.peek().map(|s| s.at <= now).unwrap_or(false) {
+            let s = self.heap.pop().unwrap();
+            Some((s.at, s.payload))
+        } else {
+            None
+        }
+    }
+
+    /// Pop unconditionally (drain at end of simulation).
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|s| (s.at, s.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(5.0, "c");
+        q.push(1.0, "a");
+        q.push(3.0, "b");
+        assert_eq!(q.pop().unwrap(), (1.0, "a"));
+        assert_eq!(q.pop().unwrap(), (3.0, "b"));
+        assert_eq!(q.pop().unwrap(), (5.0, "c"));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, 1);
+        q.push(1.0, 2);
+        q.push(1.0, 3);
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert_eq!(q.pop().unwrap().1, 3);
+    }
+
+    #[test]
+    fn pop_due_respects_now() {
+        let mut q = EventQueue::new();
+        q.push(10.0, "later");
+        q.push(2.0, "soon");
+        assert_eq!(q.pop_due(5.0).unwrap().1, "soon");
+        assert!(q.pop_due(5.0).is_none());
+        assert_eq!(q.peek_time(), Some(10.0));
+        assert_eq!(q.pop_due(10.0).unwrap().1, "later");
+    }
+
+    #[test]
+    fn time_order_property() {
+        crate::util::proptest::check(0xE7E47, 30, |rng| {
+            let mut q = EventQueue::new();
+            for _ in 0..100 {
+                q.push(rng.f64() * 1000.0, ());
+            }
+            let mut last = f64::NEG_INFINITY;
+            while let Some((t, ())) = q.pop() {
+                assert!(t >= last);
+                last = t;
+            }
+        });
+    }
+}

@@ -1,0 +1,7 @@
+//! System coordinator: the disaggregated machine driver, multi-workload
+//! execution, and parallel experiment sweeps.
+
+pub mod machine;
+pub mod sweep;
+
+pub use machine::{run_workload, ExactOracle, Machine, RunResult, SizeOracle};

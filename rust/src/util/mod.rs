@@ -1,0 +1,10 @@
+//! Shared infrastructure: PRNGs, statistics, tables, JSON, CLI parsing and
+//! a property-test harness — all in-repo because the offline registry
+//! carries no rand/serde/clap/proptest.
+
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;

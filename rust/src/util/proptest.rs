@@ -1,0 +1,86 @@
+//! Minimal property-testing harness (no proptest crate offline).
+//!
+//! `check(seed, cases, |rng| { ... })` runs the closure `cases` times with
+//! independent RNG streams; a panic inside the closure is reported with the
+//! exact stream seed so the failing case replays deterministically:
+//!
+//! ```text
+//! property failed at case 17 (replay seed 0xDEADBEEF)
+//! ```
+//!
+//! There is no shrinking — cases are kept small instead.
+
+use super::prng::Rng;
+
+/// Run `f` for `cases` deterministic cases derived from `seed`.
+pub fn check<F: FnMut(&mut Rng)>(seed: u64, cases: usize, mut f: F) {
+    for i in 0..cases {
+        let case_seed = seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(i as u64);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i} (replay seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Generate a vector of length in `[min_len, max_len]` using `gen`.
+pub fn vec_of<T>(
+    rng: &mut Rng,
+    min_len: usize,
+    max_len: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+) -> Vec<T> {
+    let len = min_len + rng.index(max_len - min_len + 1);
+    (0..len).map(|_| gen(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 50, |rng| {
+            let v = rng.below(100);
+            assert!(v < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case_with_seed() {
+        check(2, 50, |rng| {
+            // Fails for roughly half the cases.
+            assert!(rng.f64() < 0.5, "value too large");
+        });
+    }
+
+    #[test]
+    fn vec_of_respects_bounds() {
+        check(3, 50, |rng| {
+            let v = vec_of(rng, 2, 9, |r| r.below(10));
+            assert!((2..=9).contains(&v.len()));
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check(4, 10, |rng| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        check(4, 10, |rng| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

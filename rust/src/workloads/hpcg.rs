@@ -1,0 +1,124 @@
+//! High Performance Conjugate Gradient (Table 3: hp — HPCG [39]).
+//!
+//! CG iterations over a 27-point stencil on a 3D grid: SpMV with
+//! structured neighbours (z/y/x plane offsets), dot products, and AXPYs —
+//! streaming-dominated, high locality, highly compressible.
+
+use super::trace::{Locality, Recorder, Scale, Trace, Workload};
+use crate::compress::synth::Profile;
+
+pub struct Hpcg;
+
+fn grid(scale: Scale) -> usize {
+    match scale {
+        Scale::Test => 24,
+        // Paper: 104^3.  Scaled to keep footprint tens of MB: 88^3 x 8B x
+        // several vectors ≈ 27MB.
+        Scale::Paper => 88,
+    }
+}
+
+impl Workload for Hpcg {
+    fn name(&self) -> &'static str {
+        "hp"
+    }
+    fn domain(&self) -> &'static str {
+        "HPC"
+    }
+    fn locality(&self) -> Locality {
+        Locality::High
+    }
+    fn profile(&self) -> Profile {
+        Profile::high()
+    }
+    fn generate(&self, _seed: u64, scale: Scale) -> Trace {
+        let n = grid(scale);
+        let nn = (n * n * n) as u64;
+        let mut r = Recorder::new();
+        let x = r.alloc(8 * nn);
+        let b = r.alloc(8 * nn);
+        let p = r.alloc(8 * nn);
+        let ap = r.alloc(8 * nn);
+        let resid = r.alloc(8 * nn);
+
+        let idx = |i: usize, j: usize, k: usize| ((i * n + j) * n + k) as u64;
+        let iters = if matches!(scale, Scale::Test) { 2 } else { 2 };
+        for _ in 0..iters {
+            // Ap = A*p  (27-point stencil; we touch the 7 axis neighbours
+            // plus the row's matrix coefficients streamingly).
+            for i in 1..n - 1 {
+                for j in 1..n - 1 {
+                    for k in 1..n - 1 {
+                        r.load(p + 8 * idx(i, j, k));
+                        r.load(p + 8 * idx(i, j, k.wrapping_sub(1)));
+                        r.load(p + 8 * idx(i, j, k + 1));
+                        r.load(p + 8 * idx(i, j - 1, k));
+                        r.load(p + 8 * idx(i, j + 1, k));
+                        r.load(p + 8 * idx(i - 1, j, k));
+                        r.load(p + 8 * idx(i + 1, j, k));
+                        r.compute(27 * 2); // stencil fma
+                        r.store(ap + 8 * idx(i, j, k));
+                    }
+                }
+            }
+            // alpha = (r,r)/(p,Ap): two streaming dots.
+            for v in 0..nn {
+                r.load(resid + 8 * v);
+                r.compute(2);
+            }
+            for v in 0..nn {
+                r.load(p + 8 * v);
+                r.load(ap + 8 * v);
+                r.compute(2);
+            }
+            // x += alpha p; r -= alpha Ap  (AXPYs).
+            for v in 0..nn {
+                r.load(x + 8 * v);
+                r.load(p + 8 * v);
+                r.compute(2);
+                r.store(x + 8 * v);
+            }
+            for v in 0..nn {
+                r.load(resid + 8 * v);
+                r.load(ap + 8 * v);
+                r.compute(2);
+                r.store(resid + 8 * v);
+            }
+            // One b read per iteration for the convergence check.
+            for v in (0..nn).step_by(8) {
+                r.load(b + 8 * v);
+                r.compute(1);
+            }
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::trace::locality_score;
+
+    #[test]
+    fn streaming_dominates() {
+        let t = Hpcg.generate(1, Scale::Test);
+        let s = locality_score(&t);
+        assert!(s > 30.0, "hp locality score {s}");
+    }
+
+    #[test]
+    fn footprint_is_vectors_times_grid() {
+        let t = Hpcg.generate(1, Scale::Test);
+        let n = grid(Scale::Test);
+        let expected = 5 * 8 * n * n * n / 4096;
+        assert!(t.footprint_pages >= expected, "{} < {expected}", t.footprint_pages);
+    }
+
+    #[test]
+    fn compute_intensity_is_high() {
+        // Stencil fma gaps: instructions per access should exceed 2.
+        let t = Hpcg.generate(1, Scale::Test);
+        let ipa = t.instructions() as f64 / t.accesses.len() as f64;
+        assert!(ipa > 2.0, "instructions/access {ipa}");
+    }
+}

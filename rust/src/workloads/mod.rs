@@ -1,0 +1,118 @@
+//! Workload suite (Table 3): 13 capacity-intensive workloads from graph
+//! processing, bioinformatics, data analytics, linear algebra, machine
+//! learning, and HPC — each the real algorithm, scaled down, instrumented
+//! to emit a virtual-address trace.
+
+pub mod dnn;
+pub mod graph;
+pub mod hpcg;
+pub mod nw;
+pub mod pf;
+pub mod sls;
+pub mod spmv;
+pub mod trace;
+pub mod ts;
+
+pub use trace::{Access, Locality, Recorder, Scale, Trace, Workload};
+
+/// The paper's workload order (Table 3 / Fig. 8).
+pub const ALL: [&str; 13] = [
+    "kc", "tr", "pr", "nw", "bf", "bc", "ts", "sp", "sl", "hp", "pf", "dr", "rs",
+];
+
+/// Representative subset used by the paper's space-limited plots
+/// (Figs. 9–12): one per locality/compressibility class.
+pub const SUBSET: [&str; 8] = ["pr", "nw", "bf", "ts", "sp", "hp", "dr", "rs"];
+
+/// Instantiate a workload by its Table 3 short name.
+pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    Some(match name {
+        "kc" => Box::new(graph::KCore),
+        "tr" => Box::new(graph::Triangles),
+        "pr" => Box::new(graph::PageRank::default()),
+        "nw" => Box::new(nw::NeedlemanWunsch),
+        "bf" => Box::new(graph::Bfs),
+        "bc" => Box::new(graph::Betweenness),
+        "ts" => Box::new(ts::Timeseries),
+        "sp" => Box::new(spmv::Spmv),
+        "sl" => Box::new(sls::SparseLengthsSum),
+        "hp" => Box::new(hpcg::Hpcg),
+        "pf" => Box::new(pf::ParticleFilter),
+        "dr" => Box::new(dnn::Darknet19),
+        "rs" => Box::new(dnn::Resnet50),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_names_resolve() {
+        for name in ALL {
+            let w = by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(w.name(), name);
+        }
+        assert!(by_name("zz").is_none());
+    }
+
+    #[test]
+    fn subset_is_within_all() {
+        for name in SUBSET {
+            assert!(ALL.contains(&name));
+        }
+    }
+
+    #[test]
+    fn locality_classes_match_paper() {
+        use Locality::*;
+        let expect = [
+            ("kc", Low), ("tr", Low), ("pr", Low), ("nw", Low),
+            ("bf", Medium), ("bc", Medium), ("ts", Medium),
+            ("sp", High), ("sl", High), ("hp", High), ("pf", High),
+            ("dr", High), ("rs", High),
+        ];
+        for (name, loc) in expect {
+            assert_eq!(by_name(name).unwrap().locality(), loc, "{name}");
+        }
+    }
+
+    #[test]
+    fn every_workload_generates_at_test_scale() {
+        for name in ALL {
+            let w = by_name(name).unwrap();
+            let t = w.generate(11, Scale::Test);
+            assert!(
+                t.accesses.len() > 5_000,
+                "{name}: only {} accesses",
+                t.accesses.len()
+            );
+            assert!(t.footprint_pages > 16, "{name}: {} pages", t.footprint_pages);
+            // Addresses must be above the heap base and line-addressable.
+            for a in t.accesses.iter().take(1000) {
+                assert!(a.addr >= 0x1000_0000);
+            }
+        }
+    }
+
+    #[test]
+    fn measured_locality_ordering_matches_classes() {
+        use crate::workloads::trace::locality_score;
+        let mut by_class: [Vec<f64>; 3] = [vec![], vec![], vec![]];
+        for name in ALL {
+            let w = by_name(name).unwrap();
+            let t = w.generate(13, Scale::Test);
+            let pl = locality_score(&t);
+            let idx = match w.locality() {
+                Locality::Low => 0,
+                Locality::Medium => 1,
+                Locality::High => 2,
+            };
+            by_class[idx].push(pl);
+        }
+        let avg = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len() as f64;
+        let (lo, med, hi) = (avg(&by_class[0]), avg(&by_class[1]), avg(&by_class[2]));
+        assert!(lo < med && med < hi, "locality ordering broken: {lo} {med} {hi}");
+    }
+}

@@ -1,0 +1,133 @@
+//! Needleman-Wunsch sequence alignment (Table 3: nw — Rodinia [20]).
+//!
+//! Global-alignment dynamic programming over an (n+1)x(n+1) score matrix.
+//! Like the Rodinia implementation, the matrix is processed in
+//! anti-diagonal wavefronts: consecutive cells of a diagonal are a full
+//! row apart in memory, so consecutive accesses stride by the row size —
+//! the access pattern that puts nw in the paper's poor-locality class
+//! despite the algorithm being "dense".
+
+use super::trace::{Locality, Recorder, Scale, Trace, Workload};
+use crate::compress::synth::Profile;
+use crate::util::prng::Rng;
+
+pub struct NeedlemanWunsch;
+
+fn seq_len(scale: Scale) -> usize {
+    match scale {
+        Scale::Test => 256,
+        // Paper: 4096 base pairs; 1025^2 x 4B ≈ 4.2MB per matrix block,
+        // processed over multiple sequence pairs for a larger footprint.
+        Scale::Paper => 1024,
+    }
+}
+
+fn pairs(scale: Scale) -> usize {
+    match scale {
+        Scale::Test => 1,
+        Scale::Paper => 6,
+    }
+}
+
+impl Workload for NeedlemanWunsch {
+    fn name(&self) -> &'static str {
+        "nw"
+    }
+    fn domain(&self) -> &'static str {
+        "Bioinformatics"
+    }
+    fn locality(&self) -> Locality {
+        Locality::Low
+    }
+    fn profile(&self) -> Profile {
+        Profile::medium()
+    }
+    fn generate(&self, seed: u64, scale: Scale) -> Trace {
+        let n = seq_len(scale);
+        let mut rng = Rng::new(seed);
+        let mut r = Recorder::new();
+        for _pair in 0..pairs(scale) {
+            let rows = n + 1;
+            let matrix = r.alloc((rows * rows * 4) as u64);
+            let seq_a = r.alloc(n as u64);
+            let seq_b = r.alloc(n as u64);
+            let reference = r.alloc((rows * rows * 4) as u64); // BLOSUM-ish
+            let at = |i: usize, j: usize| matrix + (i * rows + j) as u64 * 4;
+
+            // Initialize borders (sequential).
+            for i in 0..rows {
+                r.store(at(i, 0));
+                r.compute(1);
+            }
+            for j in 0..rows {
+                r.store(at(0, j));
+                r.compute(1);
+            }
+            // Anti-diagonal wavefront fill.
+            let mut score = 0i64;
+            for d in 2..(2 * rows - 1) {
+                let i_lo = d.saturating_sub(rows - 1).max(1);
+                let i_hi = (d - 1).min(rows - 1);
+                for i in i_lo..=i_hi {
+                    let j = d - i;
+                    // Sequence characters + reference matrix lookup.
+                    r.load(seq_a + (i - 1) as u64);
+                    r.load(seq_b + (j - 1) as u64);
+                    r.load(reference + ((i % rows) * rows + (j % rows)) as u64 * 4);
+                    // DP dependencies: NW, N, W neighbours.
+                    r.load(at(i - 1, j - 1));
+                    r.load(at(i - 1, j));
+                    r.load(at(i, j - 1));
+                    r.compute(6); // max of three + penalty adds
+                    r.store(at(i, j));
+                    score = score.wrapping_add(rng.below(3) as i64);
+                }
+            }
+            let _ = score;
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::trace::locality_score;
+
+    #[test]
+    fn trace_covers_whole_matrix() {
+        let t = NeedlemanWunsch.generate(1, Scale::Test);
+        let n = seq_len(Scale::Test) + 1;
+        // Matrix + two sequences + reference.
+        let expected_pages = (n * n * 4) / 4096;
+        assert!(
+            t.footprint_pages >= expected_pages,
+            "footprint {} < matrix pages {expected_pages}",
+            t.footprint_pages
+        );
+    }
+
+    #[test]
+    fn wavefront_has_poor_page_locality() {
+        let t = NeedlemanWunsch.generate(1, Scale::Test);
+        let s = locality_score(&t);
+        // Diagonal neighbours are a full matrix row apart.
+        assert!(s < 8.0, "nw locality score {s}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = NeedlemanWunsch.generate(2, Scale::Test);
+        let b = NeedlemanWunsch.generate(2, Scale::Test);
+        assert_eq!(a.accesses.len(), b.accesses.len());
+    }
+
+    #[test]
+    fn write_fraction_is_substantial() {
+        // One store per DP cell: nw exercises the dirty-data path (§4.3).
+        let t = NeedlemanWunsch.generate(3, Scale::Test);
+        let writes = t.accesses.iter().filter(|a| a.write).count();
+        let frac = writes as f64 / t.accesses.len() as f64;
+        assert!(frac > 0.10, "write fraction {frac}");
+    }
+}

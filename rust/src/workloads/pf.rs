@@ -1,0 +1,140 @@
+//! Particle Filter (Table 3: pf — Rodinia [20]).
+//!
+//! Sequential Monte-Carlo object tracking: per frame, update all particle
+//! positions (stream), compute likelihoods against an image region
+//! (strided window reads), normalize weights (stream), and resample
+//! (mostly-monotone gather).  Streaming phases dominate ⇒ high locality.
+
+use super::trace::{Locality, Recorder, Scale, Trace, Workload};
+use crate::compress::synth::Profile;
+use crate::util::prng::Rng;
+
+pub struct ParticleFilter;
+
+fn params(scale: Scale) -> (usize, usize, usize) {
+    // (particles, image_dim, frames)
+    match scale {
+        Scale::Test => (10_000, 512, 3),
+        // Paper: 4096x4096 image, 30000 particles.
+        Scale::Paper => (30_000, 2_048, 6),
+    }
+}
+
+impl Workload for ParticleFilter {
+    fn name(&self) -> &'static str {
+        "pf"
+    }
+    fn domain(&self) -> &'static str {
+        "HPC"
+    }
+    fn locality(&self) -> Locality {
+        Locality::High
+    }
+    fn profile(&self) -> Profile {
+        Profile::high()
+    }
+    fn generate(&self, seed: u64, scale: Scale) -> Trace {
+        let (np, dim, frames) = params(scale);
+        let mut rng = Rng::new(seed);
+        let mut r = Recorder::new();
+        let xs = r.alloc(8 * np as u64);
+        let ys = r.alloc(8 * np as u64);
+        let weights = r.alloc(8 * np as u64);
+        let cdf = r.alloc(8 * np as u64);
+        let image = r.alloc((dim * dim) as u64);
+
+        // Tracked-object position: particles concentrate around it (the
+        // defining behaviour of a particle filter), so likelihood reads
+        // cluster on a small image region per frame — pf's high-locality
+        // signature.
+        let mut obj_x = (dim / 2) as f64;
+        let mut obj_y = (dim / 2) as f64;
+        for _ in 0..frames {
+            obj_x = (obj_x + rng.gaussian() * 16.0).clamp(64.0, (dim - 64) as f64);
+            obj_y = (obj_y + rng.gaussian() * 16.0).clamp(64.0, (dim - 64) as f64);
+            // Frame ingestion: the new video frame is streamed in (this is
+            // the bulk of pf's footprint and gives it its high-locality
+            // class — Rodinia's videoSequence/setIf phase).
+            let px_per_line = 64u64;
+            let mut off = 0u64;
+            while off < (dim * dim) as u64 {
+                r.load(image + off);
+                r.compute(2); // threshold / dilate
+                if off % (px_per_line * 8) == 0 {
+                    r.store(image + off);
+                }
+                off += px_per_line;
+            }
+            // Motion update: stream particles.
+            for i in 0..np as u64 {
+                r.load(xs + 8 * i);
+                r.load(ys + 8 * i);
+                r.compute(6); // gaussian propagate
+                r.store(xs + 8 * i);
+                r.store(ys + 8 * i);
+            }
+            // Likelihood: read an 8x8 window around each particle.
+            for i in 0..np as u64 {
+                r.load(xs + 8 * i);
+                r.load(ys + 8 * i);
+                let px = ((obj_x + rng.gaussian() * 24.0) as usize).min(dim - 9);
+                let py = ((obj_y + rng.gaussian() * 24.0) as usize).min(dim - 9);
+                for wy in 0..8u64 {
+                    let rowbase = image + ((py as u64 + wy) * dim as u64 + px as u64);
+                    // Window row: one line's worth of pixels.
+                    r.load(rowbase);
+                    r.compute(8);
+                }
+                r.store(weights + 8 * i);
+            }
+            // Normalize + CDF: two streaming passes.
+            for i in 0..np as u64 {
+                r.load(weights + 8 * i);
+                r.compute(1);
+            }
+            for i in 0..np as u64 {
+                r.load(weights + 8 * i);
+                r.compute(2);
+                r.store(cdf + 8 * i);
+            }
+            // Systematic resampling: monotone scan of the CDF.
+            let mut pos = 0u64;
+            for _ in 0..np {
+                pos = (pos + rng.below(4)).min(np as u64 - 1);
+                r.load(cdf + 8 * pos);
+                r.compute(3);
+                r.load(xs + 8 * pos);
+                r.load(ys + 8 * pos);
+            }
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::trace::locality_score;
+
+    #[test]
+    fn streaming_gives_high_locality() {
+        let t = ParticleFilter.generate(13, Scale::Test);
+        let s = locality_score(&t);
+        assert!(s > 25.0, "pf locality score {s}");
+    }
+
+    #[test]
+    fn footprint_includes_image() {
+        let (_, dim, _) = params(Scale::Test);
+        let t = ParticleFilter.generate(2, Scale::Test);
+        // Image pages actually touched (likelihood windows).
+        assert!(t.footprint_pages > dim * dim / 4096 / 8);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = ParticleFilter.generate(3, Scale::Test);
+        let b = ParticleFilter.generate(3, Scale::Test);
+        assert_eq!(a.accesses.len(), b.accesses.len());
+    }
+}

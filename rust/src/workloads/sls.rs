@@ -1,0 +1,111 @@
+//! SparseLengthsSum (Table 3: sl — DLRM [67], Criteo).
+//!
+//! Embedding-bag lookup: gather rows from a large embedding table by
+//! Zipf-distributed ids and reduce per bag.  Row reads are sequential
+//! (256B rows ⇒ 4 consecutive lines), which is the paper's high-locality
+//! class even though rows themselves are randomly placed.
+
+use super::trace::{Locality, Recorder, Scale, Trace, Workload};
+use crate::compress::synth::Profile;
+use crate::util::prng::Rng;
+
+pub struct SparseLengthsSum;
+
+fn table_params(scale: Scale) -> (usize, usize, usize) {
+    // (rows, floats_per_row, lookups)
+    match scale {
+        Scale::Test => (20_000, 256, 30_000),
+        // Criteo-scale tables shrunk to tens of MB; 256-float rows (1KB)
+        // as in DLRM's larger embedding configurations.
+        Scale::Paper => (100_000, 256, 250_000),
+    }
+}
+
+impl Workload for SparseLengthsSum {
+    fn name(&self) -> &'static str {
+        "sl"
+    }
+    fn domain(&self) -> &'static str {
+        "Machine Learning"
+    }
+    fn locality(&self) -> Locality {
+        Locality::High
+    }
+    fn profile(&self) -> Profile {
+        Profile::high()
+    }
+    fn generate(&self, seed: u64, scale: Scale) -> Trace {
+        let (rows, dim, lookups) = table_params(scale);
+        let row_bytes = (dim * 4) as u64;
+        let mut rng = Rng::new(seed);
+        let mut r = Recorder::new();
+        let table = r.alloc(rows as u64 * row_bytes);
+        let indices = r.alloc(8 * lookups as u64);
+        let out = r.alloc(4 * dim as u64 * 1024);
+
+        let mut bag = 0usize;
+        let mut i = 0usize;
+        while i < lookups {
+            let bag_size = 4 + rng.index(28); // Criteo-ish multi-hot sizes
+            for _ in 0..bag_size.min(lookups - i) {
+                r.load(indices + 8 * i as u64);
+                let row = rng.zipf(rows, 1.05); // hot embedding rows
+                let base = table + row as u64 * row_bytes;
+                // Sequential read of the whole row (dim floats, stride 16B
+                // vector loads).
+                let mut off = 0;
+                while off < row_bytes {
+                    r.load(base + off);
+                    r.compute(1); // accumulate
+                    off += 16;
+                }
+                i += 1;
+            }
+            // Write the pooled bag output.
+            let out_base = out + ((bag % 1024) * dim * 4) as u64;
+            let mut off = 0;
+            while off < row_bytes {
+                r.store(out_base + off);
+                off += 16;
+            }
+            bag += 1;
+            r.compute(8);
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::trace::locality_score;
+
+    #[test]
+    fn row_reads_give_high_locality() {
+        let t = SparseLengthsSum.generate(13, Scale::Test);
+        let s = locality_score(&t);
+        // 1KB rows read whole: well above the medium class.
+        assert!(s > 15.0, "sl locality score {s}");
+    }
+
+    #[test]
+    fn zipf_reuse_creates_hot_pages() {
+        let t = SparseLengthsSum.generate(2, Scale::Test);
+        let mut counts = std::collections::HashMap::new();
+        for a in &t.accesses {
+            *counts.entry(a.addr >> 12).or_insert(0u64) += 1;
+        }
+        let mut v: Vec<u64> = counts.values().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = v.iter().sum();
+        let top10: u64 = v.iter().take(v.len() / 10).sum();
+        assert!(top10 as f64 / total as f64 > 0.3, "no hot pages");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SparseLengthsSum.generate(4, Scale::Test);
+        let b = SparseLengthsSum.generate(4, Scale::Test);
+        assert_eq!(a.accesses.len(), b.accesses.len());
+    }
+}

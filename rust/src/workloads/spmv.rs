@@ -1,0 +1,108 @@
+//! Sparse matrix-vector multiplication (Table 3: sp — TACO [51],
+//! pkustk14).
+//!
+//! y = A*x over a banded symmetric-structure CSR matrix shaped like
+//! pkustk14 (structural engineering: dense blocks along a band).  CSR
+//! values/colidx stream sequentially and x-gathers stay within the band —
+//! high spatial locality, highly compressible FEM data.
+
+use super::trace::{Locality, Recorder, Scale, Trace, Workload};
+use crate::compress::synth::Profile;
+use crate::util::prng::Rng;
+
+pub struct Spmv;
+
+fn matrix_params(scale: Scale) -> (usize, usize, usize) {
+    // (rows, nnz_per_row, half_bandwidth)
+    match scale {
+        Scale::Test => (8_192, 18, 600),
+        // pkustk14: n=151926, ~14.8M nnz (~97/row, block-banded).  We keep
+        // the shape (banded, blocked) at reduced size.
+        Scale::Paper => (131_072, 40, 2_000),
+    }
+}
+
+impl Workload for Spmv {
+    fn name(&self) -> &'static str {
+        "sp"
+    }
+    fn domain(&self) -> &'static str {
+        "Linear Algebra"
+    }
+    fn locality(&self) -> Locality {
+        Locality::High
+    }
+    fn profile(&self) -> Profile {
+        Profile::high()
+    }
+    fn generate(&self, seed: u64, scale: Scale) -> Trace {
+        let (n, nnz_row, half_bw) = matrix_params(scale);
+        let mut rng = Rng::new(seed);
+        let mut r = Recorder::new();
+        let values = r.alloc(8 * (n * nnz_row) as u64);
+        let colidx = r.alloc(4 * (n * nnz_row) as u64);
+        let rowptr = r.alloc(4 * (n + 1) as u64);
+        let x = r.alloc(8 * n as u64);
+        let y = r.alloc(8 * n as u64);
+
+        let iters = if matches!(scale, Scale::Test) { 2 } else { 1 };
+        for _ in 0..iters {
+            let mut nz = 0u64;
+            for row in 0..n {
+                r.load(rowptr + 4 * row as u64);
+                r.load(rowptr + 4 * (row as u64 + 1));
+                let mut acc = 0.0f64;
+                // Dense 6-blocks within the band (pkustk14 has 6-DOF
+                // blocks), so column indices come in consecutive runs.
+                let mut col = row.saturating_sub(rng.index(half_bw));
+                let mut k = 0;
+                while k < nnz_row {
+                    let block = 6.min(nnz_row - k);
+                    for b in 0..block {
+                        r.load(values + 8 * nz);
+                        r.load(colidx + 4 * nz);
+                        let c = (col + b).min(n - 1);
+                        r.load(x + 8 * c as u64);
+                        r.compute(2); // fma
+                        acc += c as f64;
+                        nz += 1;
+                    }
+                    col = (col + 6 + rng.index(half_bw / 4)).min(n - 1);
+                    k += block;
+                }
+                let _ = acc;
+                r.compute(2);
+                r.store(y + 8 * row as u64);
+            }
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::trace::locality_score;
+
+    #[test]
+    fn high_spatial_locality() {
+        let t = Spmv.generate(13, Scale::Test);
+        let s = locality_score(&t);
+        assert!(s > 30.0, "sp locality score {s}");
+    }
+
+    #[test]
+    fn footprint_matches_arrays() {
+        let (n, nnz, _) = matrix_params(Scale::Test);
+        let t = Spmv.generate(2, Scale::Test);
+        let bytes = 8 * n * nnz + 4 * n * nnz;
+        assert!(t.footprint_bytes() as usize > bytes / 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Spmv.generate(3, Scale::Test);
+        let b = Spmv.generate(3, Scale::Test);
+        assert_eq!(a.accesses.len(), b.accesses.len());
+    }
+}

@@ -1,0 +1,102 @@
+//! Timeseries analysis (Table 3: ts — Matrix Profile / SCRIMP [106]).
+//!
+//! All-pairs similarity join: for each diagonal of the distance matrix,
+//! stream the series computing running dot products and updating the
+//! profile.  Two interleaved streams (series[i], series[i+lag]) plus
+//! profile updates give medium spatial locality — sequential runs broken
+//! by the lag-offset stream and profile writes.
+
+use super::trace::{Locality, Recorder, Scale, Trace, Workload};
+use crate::compress::synth::Profile;
+use crate::util::prng::Rng;
+
+pub struct Timeseries;
+
+fn series_len(scale: Scale) -> usize {
+    match scale {
+        Scale::Test => 16_384,
+        // Paper: 262144 elements.
+        Scale::Paper => 262_144,
+    }
+}
+
+impl Workload for Timeseries {
+    fn name(&self) -> &'static str {
+        "ts"
+    }
+    fn domain(&self) -> &'static str {
+        "Data Analytics"
+    }
+    fn locality(&self) -> Locality {
+        Locality::Medium
+    }
+    fn profile(&self) -> Profile {
+        Profile::medium()
+    }
+    fn generate(&self, seed: u64, scale: Scale) -> Trace {
+        let n = series_len(scale);
+        let mut rng = Rng::new(seed);
+        let mut r = Recorder::new();
+        let series = r.alloc(8 * n as u64);
+        let profile = r.alloc(8 * n as u64);
+        let index = r.alloc(4 * n as u64);
+        let window = 64usize;
+        // SCRIMP-style: random diagonal order.
+        let diags: usize = match scale {
+            Scale::Test => 120,
+            Scale::Paper => 160,
+        };
+        for _ in 0..diags {
+            let lag = window + rng.index(n - 2 * window);
+            // PreSCRIMP-style sampled diagonal: stride `step` elements and
+            // interpolate between samples — every other cache line is
+            // touched, which is what lands ts in the medium class.
+            let len = n - lag - window;
+            let step = 32usize; // 256B: every fourth 64B line
+            let mut i = 0usize;
+            while i < len {
+                r.load(series + 8 * i as u64);
+                r.load(series + 8 * (i + lag) as u64);
+                r.compute(4 * step as u32); // dot across the sampled window
+                // Profile check/update at the diagonal's anchor.
+                r.load(profile + 8 * i as u64);
+                r.compute(2);
+                if rng.chance(0.2) {
+                    r.store(profile + 8 * i as u64);
+                    r.store(index + 4 * i as u64);
+                }
+                i += step;
+            }
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::trace::locality_score;
+
+    #[test]
+    fn trace_is_nonempty_and_deterministic() {
+        let a = Timeseries.generate(1, Scale::Test);
+        let b = Timeseries.generate(1, Scale::Test);
+        assert!(a.accesses.len() > 100_000);
+        assert_eq!(a.accesses.len(), b.accesses.len());
+    }
+
+    #[test]
+    fn locality_is_medium() {
+        let t = Timeseries.generate(13, Scale::Test);
+        let s = locality_score(&t);
+        // Sampled diagonals touch every fourth line: medium class.
+        assert!((6.0..30.0).contains(&s), "ts locality score {s}");
+    }
+
+    #[test]
+    fn footprint_scales_with_series() {
+        let t = Timeseries.generate(3, Scale::Test);
+        let expected = (8 * series_len(Scale::Test)) / 4096;
+        assert!(t.footprint_pages >= expected, "{} < {expected}", t.footprint_pages);
+    }
+}

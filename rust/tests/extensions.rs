@@ -1,0 +1,118 @@
+//! Tests for the paper's §4.6/§4.7 extension features: the next-page
+//! prefetcher (DaeMon "can flexibly support prefetchers" and throttle
+//! their page requests via the selection scheme) and dirty-data
+//! replication for memory-component failure handling.
+
+use daemon_sim::config::{NetConfig, SimConfig};
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::run_workload;
+use daemon_sim::workloads::{by_name, Scale};
+
+fn cfg() -> SimConfig {
+    SimConfig::test_scale().with_seed(5)
+}
+
+#[test]
+fn prefetching_helps_streaming_workloads() {
+    // hp streams vectors: sequential successor pages are exactly what the
+    // next-page prefetcher covers.
+    let w = by_name("hp").unwrap();
+    let base = run_workload(&cfg(), SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let pf = run_workload(
+        &cfg().with_prefetch(2),
+        SchemeKind::Daemon,
+        w.as_ref(),
+        Scale::Test,
+    );
+    assert!(
+        pf.metrics.ipc() > base.metrics.ipc() * 0.98,
+        "prefetch hurt streaming: {} vs {}",
+        pf.metrics.ipc(),
+        base.metrics.ipc()
+    );
+    assert!(
+        pf.metrics.pages_moved > base.metrics.pages_moved,
+        "prefetcher moved no extra pages"
+    );
+}
+
+#[test]
+fn prefetching_is_throttled_by_selection_not_harmful_on_random() {
+    // pr's gathers are random: prefetched successors are mostly useless,
+    // but the selection unit must keep the damage bounded.
+    let w = by_name("pr").unwrap();
+    let base = run_workload(&cfg(), SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let pf = run_workload(
+        &cfg().with_prefetch(4),
+        SchemeKind::Daemon,
+        w.as_ref(),
+        Scale::Test,
+    );
+    assert!(
+        pf.metrics.ipc() > base.metrics.ipc() * 0.7,
+        "prefetch catastrophically hurt pr: {} vs {}",
+        pf.metrics.ipc(),
+        base.metrics.ipc()
+    );
+}
+
+#[test]
+fn prefetch_improves_local_coverage_on_sequential() {
+    let w = by_name("sp").unwrap();
+    let base = run_workload(&cfg(), SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let pf = run_workload(
+        &cfg().with_prefetch(2),
+        SchemeKind::Daemon,
+        w.as_ref(),
+        Scale::Test,
+    );
+    assert!(
+        pf.metrics.local_hit_ratio() >= base.metrics.local_hit_ratio() - 0.02,
+        "prefetch reduced coverage: {} vs {}",
+        pf.metrics.local_hit_ratio(),
+        base.metrics.local_hit_ratio()
+    );
+}
+
+#[test]
+fn replication_multiplies_writeback_traffic() {
+    let w = by_name("nw").unwrap(); // write-heavy
+    let c2 = cfg()
+        .with_memory_components(vec![NetConfig::new(100.0, 4.0); 2])
+        .with_dirty_replicas(2);
+    let c1 = cfg().with_memory_components(vec![NetConfig::new(100.0, 4.0); 2]);
+    let base = run_workload(&c1, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let repl = run_workload(&c2, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    assert!(
+        repl.metrics.writeback_bytes > base.metrics.writeback_bytes,
+        "replication produced no extra writeback traffic: {} vs {}",
+        repl.metrics.writeback_bytes,
+        base.metrics.writeback_bytes
+    );
+    // Replication is off the critical path: bounded slowdown.
+    assert!(
+        repl.metrics.ipc() > base.metrics.ipc() * 0.8,
+        "replication on critical path: {} vs {}",
+        repl.metrics.ipc(),
+        base.metrics.ipc()
+    );
+}
+
+#[test]
+fn replication_caps_at_component_count() {
+    let w = by_name("nw").unwrap();
+    // Asking for 4 replicas with 2 components must not panic and must
+    // behave like 2 replicas.
+    let c = cfg()
+        .with_memory_components(vec![NetConfig::new(100.0, 4.0); 2])
+        .with_dirty_replicas(4);
+    let m = run_workload(&c, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    assert!(m.metrics.ipc() > 0.0);
+}
+
+#[test]
+fn defaults_disable_both_extensions() {
+    let c = SimConfig::default();
+    assert_eq!(c.prefetch_pages, 0);
+    assert_eq!(c.dirty_replicas, 1);
+}

@@ -1,0 +1,237 @@
+//! Cross-module integration tests: whole-machine invariants that hold for
+//! every scheme, workload class and configuration.
+
+use daemon_sim::config::{NetConfig, Replacement, SimConfig};
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::{run_workload, Machine};
+use daemon_sim::util::stats::geomean;
+use daemon_sim::workloads::{by_name, Scale};
+
+fn cfg() -> SimConfig {
+    SimConfig::test_scale().with_seed(99)
+}
+
+fn ipc(kind: SchemeKind, wl: &str, cfg: &SimConfig) -> f64 {
+    let w = by_name(wl).unwrap();
+    run_workload(cfg, kind, w.as_ref(), Scale::Test).metrics.ipc()
+}
+
+const ALL_SCHEMES: [SchemeKind; 9] = [
+    SchemeKind::Local,
+    SchemeKind::CacheLine,
+    SchemeKind::Remote,
+    SchemeKind::PageFree,
+    SchemeKind::CacheLinePage,
+    SchemeKind::Lc,
+    SchemeKind::Bp,
+    SchemeKind::Pq,
+    SchemeKind::Daemon,
+];
+
+#[test]
+fn every_scheme_completes_every_class() {
+    // One workload per locality class through all nine schemes.
+    for wl in ["pr", "bf", "sp"] {
+        for kind in ALL_SCHEMES {
+            let c = cfg();
+            let v = ipc(kind, wl, &c);
+            assert!(v > 0.0, "{wl}/{}: zero IPC", kind.name());
+            assert!(v < 4.1, "{wl}/{}: IPC {v} above issue width", kind.name());
+        }
+    }
+}
+
+#[test]
+fn instructions_are_scheme_invariant() {
+    // The committed instruction count is a property of the trace alone.
+    let w = by_name("ts").unwrap();
+    let c = cfg();
+    let counts: Vec<u64> = ALL_SCHEMES
+        .iter()
+        .map(|&k| run_workload(&c, k, w.as_ref(), Scale::Test).metrics.instructions)
+        .collect();
+    for v in &counts {
+        assert_eq!(*v, counts[0]);
+    }
+}
+
+#[test]
+fn local_dominates_all_remote_schemes() {
+    for wl in ["pr", "sp"] {
+        let c = cfg();
+        let local = ipc(SchemeKind::Local, wl, &c);
+        for kind in [SchemeKind::Remote, SchemeKind::Lc, SchemeKind::Pq, SchemeKind::Daemon] {
+            let v = ipc(kind, wl, &c);
+            assert!(
+                v <= local * 1.05,
+                "{wl}/{}: {v} exceeds Local {local}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn daemon_is_robust_across_network_grid() {
+    // DaeMon must never lose badly to Remote at any operating point —
+    // the paper's robustness claim.
+    let w = by_name("bf").unwrap();
+    let mut ratios = Vec::new();
+    for sw in [100.0, 400.0] {
+        for bw in [2.0, 8.0] {
+            let c = cfg().with_net(sw, bw);
+            let remote = run_workload(&c, SchemeKind::Remote, w.as_ref(), Scale::Test);
+            let daemon = run_workload(&c, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+            let ratio = daemon.metrics.ipc() / remote.metrics.ipc();
+            assert!(ratio > 0.8, "DaeMon lost at {sw}ns 1/{bw}: {ratio}");
+            ratios.push(ratio);
+        }
+    }
+    assert!(geomean(&ratios) > 1.0, "no net win across the grid");
+}
+
+#[test]
+fn tighter_bandwidth_hurts_remote_more_than_daemon() {
+    let w = by_name("sp").unwrap();
+    let wide = cfg().with_net(100.0, 2.0);
+    let narrow = cfg().with_net(100.0, 8.0);
+    let r_wide = run_workload(&wide, SchemeKind::Remote, w.as_ref(), Scale::Test).metrics.ipc();
+    let r_narrow = run_workload(&narrow, SchemeKind::Remote, w.as_ref(), Scale::Test).metrics.ipc();
+    let d_wide = run_workload(&wide, SchemeKind::Daemon, w.as_ref(), Scale::Test).metrics.ipc();
+    let d_narrow = run_workload(&narrow, SchemeKind::Daemon, w.as_ref(), Scale::Test).metrics.ipc();
+    let remote_drop = r_wide / r_narrow;
+    let daemon_drop = d_wide / d_narrow;
+    assert!(
+        remote_drop > daemon_drop * 0.95,
+        "Remote drop {remote_drop} vs DaeMon drop {daemon_drop}"
+    );
+}
+
+#[test]
+fn compression_moves_fewer_bytes() {
+    let w = by_name("sp").unwrap();
+    let c = cfg();
+    let pq = run_workload(&c, SchemeKind::Pq, w.as_ref(), Scale::Test);
+    let dm = run_workload(&c, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    // Comparable page counts, far fewer bytes on the wire.
+    assert!(
+        (dm.metrics.net_bytes_in as f64)
+            < pq.metrics.net_bytes_in as f64 * 0.8,
+        "DaeMon {} vs PQ {} bytes",
+        dm.metrics.net_bytes_in,
+        pq.metrics.net_bytes_in
+    );
+    assert!(dm.metrics.compression_ratio > 1.5);
+}
+
+#[test]
+fn fifo_and_lru_both_work_and_lru_wins_on_reuse() {
+    let w = by_name("sl").unwrap(); // Zipf reuse: LRU should help
+    let lru = cfg();
+    let fifo = cfg().with_replacement(Replacement::Fifo);
+    let m_lru = run_workload(&lru, SchemeKind::Remote, w.as_ref(), Scale::Test);
+    let m_fifo = run_workload(&fifo, SchemeKind::Remote, w.as_ref(), Scale::Test);
+    assert!(
+        m_lru.metrics.local_hit_ratio() >= m_fifo.metrics.local_hit_ratio() - 0.02,
+        "LRU {} vs FIFO {}",
+        m_lru.metrics.local_hit_ratio(),
+        m_fifo.metrics.local_hit_ratio()
+    );
+}
+
+#[test]
+fn multiple_memory_components_are_deterministic_and_faster() {
+    let w = by_name("pr").unwrap();
+    let c4 = cfg().with_memory_components(vec![NetConfig::new(100.0, 4.0); 4]);
+    let a = run_workload(&c4, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let b = run_workload(&c4, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    assert_eq!(a.metrics.instructions, b.metrics.instructions);
+    assert!((a.metrics.cycles - b.metrics.cycles).abs() < 1e-6, "nondeterminism");
+    let c1 = cfg();
+    let one = run_workload(&c1, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    assert!(a.metrics.ipc() >= one.metrics.ipc() * 0.95);
+}
+
+#[test]
+fn random_placement_matches_round_robin_in_shape() {
+    let w = by_name("pr").unwrap();
+    let mut rr = cfg().with_memory_components(vec![NetConfig::new(100.0, 4.0); 4]);
+    rr.placement_round_robin = true;
+    let mut rand = rr.clone();
+    rand.placement_round_robin = false;
+    let m_rr = run_workload(&rr, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let m_rand = run_workload(&rand, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let ratio = m_rr.metrics.ipc() / m_rand.metrics.ipc();
+    assert!((0.7..1.4).contains(&ratio), "placement sensitivity {ratio}");
+}
+
+#[test]
+fn partition_ratio_extremes_behave() {
+    let w = by_name("pr").unwrap();
+    for ratio in [0.05, 0.5, 0.9] {
+        let c = cfg().with_partition_ratio(ratio);
+        let m = run_workload(&c, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+        assert!(m.metrics.ipc() > 0.0, "ratio {ratio} wedged");
+    }
+}
+
+#[test]
+fn page_free_bounds_all_page_schemes() {
+    // The Fig. 3 idealization is an upper bound for every page-moving
+    // remote scheme.
+    let c = cfg();
+    for wl in ["pr", "sp"] {
+        let pf = ipc(SchemeKind::PageFree, wl, &c);
+        for kind in [SchemeKind::Remote, SchemeKind::Lc, SchemeKind::Daemon] {
+            let v = ipc(kind, wl, &c);
+            assert!(
+                v <= pf * 1.1,
+                "{wl}/{}: {v} above page-free bound {pf}",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn writebacks_happen_for_write_heavy_workloads() {
+    let w = by_name("nw").unwrap(); // store per DP cell
+    let c = cfg();
+    let m = run_workload(&c, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    assert!(m.metrics.writeback_bytes > 0, "no dirty data written back");
+}
+
+#[test]
+fn multicore_work_conservation() {
+    // 4 cores running the same trace commit 4x the instructions and lose
+    // per-core throughput to shared-resource contention.
+    let w = by_name("ts").unwrap();
+    let c1 = cfg();
+    let c4 = cfg().with_cores(4);
+    let one = run_workload(&c1, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    let four = run_workload(&c4, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+    assert_eq!(four.metrics.instructions, 4 * one.metrics.instructions);
+    let per_core = four.metrics.ipc() / 4.0;
+    assert!(per_core <= one.metrics.ipc() * 1.05);
+}
+
+#[test]
+fn interval_series_cover_the_run() {
+    let w = by_name("pr").unwrap();
+    let c = cfg();
+    let trace = w.generate(c.seed, Scale::Test);
+    let mut m = Machine::new(
+        c.clone(),
+        SchemeKind::Daemon,
+        trace.footprint_pages,
+        vec![w.profile()],
+        None,
+    );
+    m.run(std::slice::from_ref(&trace));
+    let series = m.metrics.ipc_series(daemon_sim::config::ns_to_cycles(c.interval_ns));
+    let total: f64 = series.iter().sum::<f64>()
+        * daemon_sim::config::ns_to_cycles(c.interval_ns);
+    let rel = (total - m.metrics.instructions as f64).abs()
+        / m.metrics.instructions as f64;
+    assert!(rel < 0.05, "interval series lose instructions: {rel}");
+}

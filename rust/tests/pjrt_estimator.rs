@@ -1,0 +1,169 @@
+//! Integration tests across the AOT boundary: the HLO artifact executed
+//! through PJRT must (a) agree bit-closely with the native rust mirror of
+//! the L1 kernel formula, (b) correlate with the real LZ77 compressor,
+//! and (c) drive the full simulator as a drop-in SizeOracle.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use daemon_sim::compress::{est, lz, synth};
+use daemon_sim::config::SimConfig;
+use daemon_sim::runtime::{ModelRunner, NetParams, PjrtOracle, AOT_BATCH, WORDS_PER_PAGE};
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::{Machine, SizeOracle};
+use daemon_sim::util::prng::Rng;
+use daemon_sim::util::stats::pearson;
+use daemon_sim::workloads::{by_name, Scale};
+
+fn runner_or_skip() -> Option<ModelRunner> {
+    match ModelRunner::load_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn batch_pages(seed: u64, profile: synth::Profile) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    let mut words = Vec::with_capacity(AOT_BATCH * WORDS_PER_PAGE);
+    for _ in 0..AOT_BATCH {
+        words.extend_from_slice(&synth::gen_page_words(&mut rng, profile));
+    }
+    words
+}
+
+#[test]
+fn pjrt_matches_native_estimator_mirror() {
+    let Some(runner) = runner_or_skip() else { return };
+    for (seed, profile) in [
+        (1u64, synth::Profile::high()),
+        (2, synth::Profile::medium()),
+        (3, synth::Profile::low()),
+    ] {
+        let words = batch_pages(seed, profile);
+        let out = runner.run_batch(&words, NetParams::paper_default()).unwrap();
+        for i in 0..AOT_BATCH {
+            let page = &words[i * WORDS_PER_PAGE..(i + 1) * WORDS_PER_PAGE];
+            let native = est::estimate_page(page);
+            for a in 0..3 {
+                let got = out.est_bytes[i][a];
+                let want = native[a];
+                assert!(
+                    (got - want).abs() <= 0.5 + want.abs() * 1e-5,
+                    "batch {i} algo {a}: pjrt {got} vs native {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_estimates_correlate_with_real_lz() {
+    let Some(runner) = runner_or_skip() else { return };
+    let mut est_sizes = Vec::new();
+    let mut real_sizes = Vec::new();
+    for (seed, mix) in [(10u64, 0.1), (11, 0.4), (12, 0.7), (13, 0.95)] {
+        let profile = synth::Profile::uniform_mix(mix);
+        let words = batch_pages(seed, profile);
+        let out = runner.run_batch(&words, NetParams::paper_default()).unwrap();
+        for i in 0..AOT_BATCH {
+            let page_words = &words[i * WORDS_PER_PAGE..(i + 1) * WORDS_PER_PAGE];
+            let mut bytes = Vec::with_capacity(4096);
+            for w in page_words {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+            est_sizes.push(out.est_bytes[i][0] as f64);
+            real_sizes.push(lz::compressed_size(&bytes) as f64);
+        }
+    }
+    let r = pearson(&est_sizes, &real_sizes);
+    assert!(r > 0.85, "PJRT estimator vs real LZ correlation {r}");
+}
+
+#[test]
+fn cost_model_semantics() {
+    let Some(runner) = runner_or_skip() else { return };
+    let words = batch_pages(20, synth::Profile::high());
+    let p = NetParams::paper_default();
+    let out = runner.run_batch(&words, p).unwrap();
+    // Lines beat pages at the default operating point.
+    for i in 0..AOT_BATCH {
+        assert!(out.line_cycles[i] < out.page_cycles[i]);
+        assert!(out.advantage[i] > 0.0);
+    }
+    // Raising the partition ratio speeds lines and slows pages.
+    let p80 = NetParams { partition_ratio: 0.8, ..p };
+    let out80 = runner.run_batch(&words, p80).unwrap();
+    assert!(out80.line_cycles[0] < out.line_cycles[0]);
+    assert!(out80.page_cycles[0] > out.page_cycles[0]);
+}
+
+#[test]
+fn pjrt_oracle_drives_full_simulation() {
+    let Some(runner) = runner_or_skip() else { return };
+    let w = by_name("sp").unwrap();
+    let cfg = SimConfig::test_scale().with_seed(7);
+    let trace = w.generate(cfg.seed, Scale::Test);
+
+    // PJRT-backed run.
+    let oracle = PjrtOracle::new(
+        runner,
+        NetParams::paper_default(),
+        cfg.seed,
+        vec![w.profile()],
+    );
+    let mut m = Machine::new(
+        cfg.clone(),
+        SchemeKind::Daemon,
+        trace.footprint_pages,
+        vec![w.profile()],
+        Some(Box::new(oracle)),
+    );
+    m.run(std::slice::from_ref(&trace));
+    let pjrt_ipc = m.metrics.ipc();
+    let pjrt_ratio = m.metrics.compression_ratio;
+
+    // Exact-oracle run.
+    let mut m2 = Machine::new(
+        cfg.clone(),
+        SchemeKind::Daemon,
+        trace.footprint_pages,
+        vec![w.profile()],
+        None,
+    );
+    m2.run(std::slice::from_ref(&trace));
+    let exact_ipc = m2.metrics.ipc();
+    let exact_ratio = m2.metrics.compression_ratio;
+
+    assert!(pjrt_ipc > 0.0 && exact_ipc > 0.0);
+    // The estimator tracks the real compressor closely enough that the
+    // end-to-end results agree within 25%.
+    let ipc_rel = (pjrt_ipc - exact_ipc).abs() / exact_ipc;
+    assert!(ipc_rel < 0.25, "IPC divergence {ipc_rel} (pjrt {pjrt_ipc} vs exact {exact_ipc})");
+    // The estimator over-credits extremely structured pages (its role is
+    // granularity adaptivity, not exact sizing — the exact oracle remains
+    // the default), so the achieved-ratio agreement bound is loose.
+    let ratio_rel = (pjrt_ratio - exact_ratio).abs() / exact_ratio;
+    assert!(
+        ratio_rel < 0.8,
+        "ratio divergence {ratio_rel} (pjrt {pjrt_ratio} vs exact {exact_ratio})"
+    );
+}
+
+#[test]
+fn oracle_batches_amortize_dispatches() {
+    let Some(runner) = runner_or_skip() else { return };
+    let mut oracle = PjrtOracle::new(
+        runner,
+        NetParams::paper_default(),
+        42,
+        vec![synth::Profile::medium()],
+    );
+    // 64 consecutive pages must be served by a single batch.
+    for p in 1000..1000 + AOT_BATCH as u64 {
+        let _ = oracle.page_size(0, p);
+    }
+    assert_eq!(oracle.batches_run, 1, "expected one batched dispatch");
+    assert!(oracle.ratio() > 1.0);
+}
