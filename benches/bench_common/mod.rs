@@ -1,14 +1,21 @@
 //! Shared bench plumbing (no criterion offline): each bench binary runs a
 //! set of paper experiments at the configured effort, printing the same
-//! rows/series the paper's figures plot, plus wall-time per experiment.
+//! rows/series the paper's figures plot, plus wall-time per run.
 //!
 //! Effort: `DAEMON_BENCH_FULL=1` runs the full 2M-access paper traces;
 //! the default uses 600K-access truncations so a complete `cargo bench`
 //! finishes in minutes while preserving every trend.
+//!
+//! All ids are batched into one flat cell list through the experiment
+//! orchestrator, so traces are generated once per key and every cell of
+//! every requested figure fans out across the worker pool together.
 
-use daemon_sim::experiments::{run_experiment, Runner};
+use daemon_sim::experiments::orchestrator::{self, Shard, SweepResult};
+use daemon_sim::experiments::Runner;
+use daemon_sim::workloads::cache::TraceCache;
 use daemon_sim::workloads::Scale;
 
+#[allow(dead_code)] // not every bench binary uses both helpers
 pub fn bench_runner() -> Runner {
     if std::env::var("DAEMON_BENCH_FULL").is_ok() {
         Runner::paper()
@@ -21,20 +28,31 @@ pub fn bench_runner() -> Runner {
     }
 }
 
+#[allow(dead_code)] // perf_hot_path uses only bench_runner
 pub fn run_ids(title: &str, ids: &[&str]) {
     // `cargo bench` passes --bench; ignore unknown args.
     println!("==== bench: {title} ====");
     let r = bench_runner();
-    for id in ids {
-        let t0 = std::time::Instant::now();
-        match run_experiment(id, &r) {
-            Some(tables) => {
+    let ids: Vec<String> = ids.iter().map(|s| s.to_string()).collect();
+    let t0 = std::time::Instant::now();
+    let cache = TraceCache::global();
+    match orchestrator::sweep(&ids, &r, cache, Shard::full(), r.threads) {
+        Ok(SweepResult::Tables(sets)) => {
+            for (id, tables) in sets {
                 for t in tables {
                     println!("{}", t.render());
                 }
-                println!("[{id}: {:.1}s]\n", t0.elapsed().as_secs_f64());
+                println!("[{id}]");
             }
-            None => println!("unknown experiment id {id}"),
+            let stats = cache.stats();
+            println!(
+                "[total: {:.1}s; traces {} generated / {} reused]\n",
+                t0.elapsed().as_secs_f64(),
+                stats.misses,
+                stats.hits
+            );
         }
+        Ok(SweepResult::Shard(_)) => unreachable!("bench runs are never sharded"),
+        Err(e) => println!("bench error: {e}"),
     }
 }

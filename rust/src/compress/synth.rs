@@ -17,7 +17,7 @@ pub const PAGE_BYTES: usize = 4096;
 const WORDS: usize = PAGE_BYTES / 4;
 
 /// Mixture weights (normalized internally).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Profile {
     pub zero: f64,
     pub runs: f64,

@@ -1,201 +1,299 @@
 //! Figs. 11, 12, 16, 20, 21 — the paper's ablations and sensitivity
 //! studies, plus our own ablations called out in DESIGN.md.
+//!
+//! Cells are declared as orchestrator [`Plan`]s (see `orchestrator.rs`);
+//! the figure entry points run their plan through the flat scheduler.
 
 use super::common::{speedup, Runner};
+use super::orchestrator::{self, CellSpec, Plan};
 use crate::compress::Algo;
 use crate::config::{Replacement, SimConfig};
+use crate::metrics::Metrics;
 use crate::schemes::SchemeKind;
 use crate::util::stats::geomean;
 use crate::util::table::Table;
 use crate::workloads::SUBSET;
 
+fn owned(workloads: &[&str]) -> Vec<String> {
+    workloads.iter().map(|s| s.to_string()).collect()
+}
+
 /// Fig. 11 — bandwidth partitioning ratio sweep for PQ and DaeMon.
-pub fn fig11(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let ratios = [0.10, 0.25, 0.50, 0.80];
-    let mut tables = Vec::new();
+pub fn fig11_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    const RATIOS: [f64; 4] = [0.10, 0.25, 0.50, 0.80];
+    let kinds = [SchemeKind::Pq, SchemeKind::Daemon];
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
     for &sw in &[100.0, 400.0] {
-        for kind in [SchemeKind::Pq, SchemeKind::Daemon] {
-            let mut table = Table::new(
-                &format!(
-                    "Fig 11: {} speedup over Remote vs partition ratio ({}ns)",
-                    kind.name(),
-                    sw as u32
-                ),
-                &["workload", "10%", "25%", "50%", "80%"],
-            );
-            let mut per: Vec<Vec<f64>> = vec![Vec::new(); ratios.len()];
-            for wl in workloads {
+        for &kind in &kinds {
+            for wl in &workloads {
                 let base_cfg = SimConfig::default().with_net(sw, 4.0);
-                let (trace, profile) = r.gen_trace(wl, base_cfg.seed);
-                let mut cells = vec![(SchemeKind::Remote, base_cfg.clone())];
-                for &ratio in &ratios {
-                    cells.push((kind, base_cfg.clone().with_partition_ratio(ratio)));
+                cells.push(CellSpec::new(wl, SchemeKind::Remote, base_cfg.clone()));
+                for &ratio in &RATIOS {
+                    cells.push(CellSpec::new(
+                        wl,
+                        kind,
+                        base_cfg.clone().with_partition_ratio(ratio),
+                    ));
                 }
-                let ms = r.run_cells(&trace, profile, &cells);
-                let vals: Vec<f64> =
-                    ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
-                for (i, v) in vals.iter().enumerate() {
-                    per[i].push(*v);
-                }
-                table.row_f(wl, &vals);
             }
-            table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
-            tables.push(table);
         }
     }
-    tables
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_wl = 1 + RATIOS.len();
+        let per_table = workloads.len() * per_wl;
+        let mut tables = Vec::new();
+        for (s, &sw) in [100.0f64, 400.0].iter().enumerate() {
+            for (k, kind) in kinds.iter().enumerate() {
+                let block_idx = s * kinds.len() + k;
+                let block = &ms[block_idx * per_table..(block_idx + 1) * per_table];
+                let mut table = Table::new(
+                    &format!(
+                        "Fig 11: {} speedup over Remote vs partition ratio ({}ns)",
+                        kind.name(),
+                        sw as u32
+                    ),
+                    &["workload", "10%", "25%", "50%", "80%"],
+                );
+                let mut per: Vec<Vec<f64>> = vec![Vec::new(); RATIOS.len()];
+                for (w, wl) in workloads.iter().enumerate() {
+                    let row = &block[w * per_wl..(w + 1) * per_wl];
+                    let vals: Vec<f64> =
+                        row[1..].iter().map(|m| speedup(m, &row[0])).collect();
+                    for (i, v) in vals.iter().enumerate() {
+                        per[i].push(*v);
+                    }
+                    table.row_f(wl, &vals);
+                }
+                table.row_f(
+                    "geomean",
+                    &per.iter().map(|v| geomean(v)).collect::<Vec<_>>(),
+                );
+                tables.push(table);
+            }
+        }
+        tables
+    });
+    Plan { id: "fig11".into(), cells, assemble }
+}
+
+pub fn fig11(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig11_plan(r, workloads))
 }
 
 /// Fig. 12 — LC with the three compression schemes.
-pub fn fig12(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let algos = [Algo::FpcBdi, Algo::Fve, Algo::Lz];
+pub fn fig12_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    const ALGOS: [Algo; 3] = [Algo::FpcBdi, Algo::Fve, Algo::Lz];
     let cfg0 = SimConfig::default();
-    let mut table = Table::new(
-        "Fig 12: LC speedup over Remote by compression scheme",
-        &["workload", "fpcbdi", "fve", "LZ", "ratio-fpcbdi", "ratio-fve", "ratio-LZ"],
-    );
-    let mut per: Vec<Vec<f64>> = vec![Vec::new(); 3];
-    for wl in workloads {
-        let (trace, profile) = r.gen_trace(wl, cfg0.seed);
-        let mut cells = vec![(SchemeKind::Remote, cfg0.clone())];
-        for &a in &algos {
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg0.clone()));
+        for &a in &ALGOS {
             let mut c = cfg0.clone().with_compress(Some(a));
             c.daemon.compress_cycles = a.latency_cycles();
-            cells.push((SchemeKind::Lc, c));
+            cells.push(CellSpec::new(wl, SchemeKind::Lc, c));
         }
-        let ms = r.run_cells(&trace, profile, &cells);
-        let mut vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
-        for (i, v) in vals.iter().enumerate() {
-            per[i].push(*v);
-        }
-        vals.extend(ms[1..].iter().map(|m| m.compression_ratio));
-        table.row_f(wl, &vals);
     }
-    let mut gm: Vec<f64> = per.iter().map(|v| geomean(v)).collect();
-    gm.extend([0.0, 0.0, 0.0]);
-    table.row_f("geomean", &gm);
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_wl = 1 + ALGOS.len();
+        let mut table = Table::new(
+            "Fig 12: LC speedup over Remote by compression scheme",
+            &["workload", "fpcbdi", "fve", "LZ", "ratio-fpcbdi", "ratio-fve", "ratio-LZ"],
+        );
+        let mut per: Vec<Vec<f64>> = vec![Vec::new(); 3];
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * per_wl..(w + 1) * per_wl];
+            let mut vals: Vec<f64> =
+                row[1..].iter().map(|m| speedup(m, &row[0])).collect();
+            for (i, v) in vals.iter().enumerate() {
+                per[i].push(*v);
+            }
+            vals.extend(row[1..].iter().map(|m| m.compression_ratio));
+            table.row_f(wl, &vals);
+        }
+        let mut gm: Vec<f64> = per.iter().map(|v| geomean(v)).collect();
+        gm.extend([0.0, 0.0, 0.0]);
+        table.row_f("geomean", &gm);
+        vec![table]
+    });
+    Plan { id: "fig12".into(), cells, assemble }
+}
+
+pub fn fig12(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig12_plan(r, workloads))
 }
 
 /// Fig. 16 — FIFO replacement in local memory.
-pub fn fig16(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+pub fn fig16_plan(_r: &Runner, workloads: &[&str]) -> Plan {
     let cfg = SimConfig::default().with_replacement(Replacement::Fifo);
-    let mut table = Table::new(
-        "Fig 16: Local and DaeMon over Remote with FIFO local memory",
-        &["workload", "Local", "DaeMon"],
-    );
-    let mut per: Vec<Vec<f64>> = vec![Vec::new(); 2];
-    for wl in workloads {
-        let (trace, profile) = r.gen_trace(wl, cfg.seed);
-        let cells = vec![
-            (SchemeKind::Remote, cfg.clone()),
-            (SchemeKind::Local, cfg.clone()),
-            (SchemeKind::Daemon, cfg.clone()),
-        ];
-        let ms = r.run_cells(&trace, profile, &cells);
-        let vals = [speedup(&ms[1], &ms[0]), speedup(&ms[2], &ms[0])];
-        per[0].push(vals[0]);
-        per[1].push(vals[1]);
-        table.row_f(wl, &vals);
+    let kinds = [SchemeKind::Remote, SchemeKind::Local, SchemeKind::Daemon];
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        for &k in &kinds {
+            cells.push(CellSpec::new(wl, k, cfg.clone()));
+        }
     }
-    table.row_f("geomean", &[geomean(&per[0]), geomean(&per[1])]);
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let mut table = Table::new(
+            "Fig 16: Local and DaeMon over Remote with FIFO local memory",
+            &["workload", "Local", "DaeMon"],
+        );
+        let mut per: Vec<Vec<f64>> = vec![Vec::new(); 2];
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * kinds.len()..(w + 1) * kinds.len()];
+            let vals = [speedup(&row[1], &row[0]), speedup(&row[2], &row[0])];
+            per[0].push(vals[0]);
+            per[1].push(vals[1]);
+            table.row_f(wl, &vals);
+        }
+        table.row_f("geomean", &[geomean(&per[0]), geomean(&per[1])]);
+        vec![table]
+    });
+    Plan { id: "fig16".into(), cells, assemble }
+}
+
+pub fn fig16(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig16_plan(r, workloads))
 }
 
 /// Fig. 20 — switch latency sweep (appendix A.2).
-pub fn fig20(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let latencies = [100.0, 200.0, 400.0, 700.0, 1000.0];
-    let mut table = Table::new(
-        "Fig 20: DaeMon speedup over Remote vs switch latency (geomean)",
-        &["switch-ns", "speedup"],
-    );
-    for &sw in &latencies {
+pub fn fig20_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    const LATENCIES: [f64; 5] = [100.0, 200.0, 400.0, 700.0, 1000.0];
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for &sw in &LATENCIES {
         let cfg = SimConfig::default().with_net(sw, 4.0);
-        let mut sp = Vec::new();
-        for wl in workloads {
-            let (trace, profile) = r.gen_trace(wl, cfg.seed);
-            let cells = vec![
-                (SchemeKind::Remote, cfg.clone()),
-                (SchemeKind::Daemon, cfg.clone()),
-            ];
-            let ms = r.run_cells(&trace, profile, &cells);
-            sp.push(speedup(&ms[1], &ms[0]));
+        for wl in &workloads {
+            cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg.clone()));
+            cells.push(CellSpec::new(wl, SchemeKind::Daemon, cfg.clone()));
         }
-        table.row_f(&format!("{}", sw as u32), &[geomean(&sp)]);
     }
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_lat = 2 * workloads.len();
+        let mut table = Table::new(
+            "Fig 20: DaeMon speedup over Remote vs switch latency (geomean)",
+            &["switch-ns", "speedup"],
+        );
+        for (l, &sw) in LATENCIES.iter().enumerate() {
+            let block = &ms[l * per_lat..(l + 1) * per_lat];
+            let sp: Vec<f64> = (0..workloads.len())
+                .map(|w| speedup(&block[2 * w + 1], &block[2 * w]))
+                .collect();
+            table.row_f(&format!("{}", sw as u32), &[geomean(&sp)]);
+        }
+        vec![table]
+    });
+    Plan { id: "fig20".into(), cells, assemble }
+}
+
+pub fn fig20(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig20_plan(r, workloads))
 }
 
 /// Fig. 21 — bandwidth factor sweep with 8-core multithreaded runs
 /// (appendix A.3).
-pub fn fig21(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let factors = [2.0, 4.0, 8.0, 16.0];
-    let mut table = Table::new(
-        "Fig 21: DaeMon speedup over Remote vs bandwidth factor (8 cores)",
-        &["bw-factor", "speedup"],
-    );
-    for &bw in &factors {
+pub fn fig21_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    const FACTORS: [f64; 4] = [2.0, 4.0, 8.0, 16.0];
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for &bw in &FACTORS {
         let cfg = SimConfig::default().with_net(100.0, bw).with_cores(8);
-        let mut sp = Vec::new();
-        for wl in workloads {
-            let (trace, profile) = r.gen_trace(wl, cfg.seed);
-            let cells = vec![
-                (SchemeKind::Remote, cfg.clone()),
-                (SchemeKind::Daemon, cfg.clone()),
-            ];
-            let ms = r.run_cells(&trace, profile, &cells);
-            sp.push(speedup(&ms[1], &ms[0]));
+        for wl in &workloads {
+            cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg.clone()));
+            cells.push(CellSpec::new(wl, SchemeKind::Daemon, cfg.clone()));
         }
-        table.row_f(&format!("1/{}", bw as u32), &[geomean(&sp)]);
     }
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_bw = 2 * workloads.len();
+        let mut table = Table::new(
+            "Fig 21: DaeMon speedup over Remote vs bandwidth factor (8 cores)",
+            &["bw-factor", "speedup"],
+        );
+        for (b, &bw) in FACTORS.iter().enumerate() {
+            let block = &ms[b * per_bw..(b + 1) * per_bw];
+            let sp: Vec<f64> = (0..workloads.len())
+                .map(|w| speedup(&block[2 * w + 1], &block[2 * w]))
+                .collect();
+            table.row_f(&format!("1/{}", bw as u32), &[geomean(&sp)]);
+        }
+        vec![table]
+    });
+    Plan { id: "fig21".into(), cells, assemble }
+}
+
+pub fn fig21(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig21_plan(r, workloads))
 }
 
 /// Our ablation: dirty-buffer flush threshold (DESIGN.md).
-pub fn ablation_dirty_threshold(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let thresholds = [2usize, 8, 32];
-    let mut table = Table::new(
-        "Ablation: DaeMon speedup over Remote vs dirty flush threshold",
-        &["workload", "2", "8", "32"],
-    );
-    for wl in workloads {
-        let cfg0 = SimConfig::default();
-        let (trace, profile) = r.gen_trace(wl, cfg0.seed);
-        let mut cells = vec![(SchemeKind::Remote, cfg0.clone())];
-        for &t in &thresholds {
+pub fn ablation_dirty_threshold_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    const THRESHOLDS: [usize; 3] = [2, 8, 32];
+    let workloads = owned(workloads);
+    let cfg0 = SimConfig::default();
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg0.clone()));
+        for &t in &THRESHOLDS {
             let mut c = cfg0.clone();
             c.daemon.dirty_flush_threshold = t;
-            cells.push((SchemeKind::Daemon, c));
+            cells.push(CellSpec::new(wl, SchemeKind::Daemon, c));
         }
-        let ms = r.run_cells(&trace, profile, &cells);
-        let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
-        table.row_f(wl, &vals);
     }
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_wl = 1 + THRESHOLDS.len();
+        let mut table = Table::new(
+            "Ablation: DaeMon speedup over Remote vs dirty flush threshold",
+            &["workload", "2", "8", "32"],
+        );
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * per_wl..(w + 1) * per_wl];
+            let vals: Vec<f64> = row[1..].iter().map(|m| speedup(m, &row[0])).collect();
+            table.row_f(wl, &vals);
+        }
+        vec![table]
+    });
+    Plan { id: "ablation_dirty_threshold".into(), cells, assemble }
+}
+
+pub fn ablation_dirty_threshold(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, ablation_dirty_threshold_plan(r, workloads))
 }
 
 /// Our ablation: inflight buffer sizing.
-pub fn ablation_buffer_size(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let sizes = [(32usize, 64usize), (128, 256), (512, 1024)];
-    let mut table = Table::new(
-        "Ablation: DaeMon speedup over Remote vs inflight buffer sizes",
-        &["workload", "32/64", "128/256", "512/1024"],
-    );
-    for wl in workloads {
-        let cfg0 = SimConfig::default();
-        let (trace, profile) = r.gen_trace(wl, cfg0.seed);
-        let mut cells = vec![(SchemeKind::Remote, cfg0.clone())];
-        for &(l, p) in &sizes {
+pub fn ablation_buffer_size_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    const SIZES: [(usize, usize); 3] = [(32, 64), (128, 256), (512, 1024)];
+    let workloads = owned(workloads);
+    let cfg0 = SimConfig::default();
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg0.clone()));
+        for &(l, p) in &SIZES {
             let mut c = cfg0.clone();
             c.daemon.inflight_subblock_buf = l;
             c.daemon.inflight_page_buf = p;
-            cells.push((SchemeKind::Daemon, c));
+            cells.push(CellSpec::new(wl, SchemeKind::Daemon, c));
         }
-        let ms = r.run_cells(&trace, profile, &cells);
-        let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
-        table.row_f(wl, &vals);
     }
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_wl = 1 + SIZES.len();
+        let mut table = Table::new(
+            "Ablation: DaeMon speedup over Remote vs inflight buffer sizes",
+            &["workload", "32/64", "128/256", "512/1024"],
+        );
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * per_wl..(w + 1) * per_wl];
+            let vals: Vec<f64> = row[1..].iter().map(|m| speedup(m, &row[0])).collect();
+            table.row_f(wl, &vals);
+        }
+        vec![table]
+    });
+    Plan { id: "ablation_buffer_size".into(), cells, assemble }
+}
+
+pub fn ablation_buffer_size(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, ablation_buffer_size_plan(r, workloads))
 }
 
 pub fn fig11_default(r: &Runner) -> Vec<Table> {
@@ -234,5 +332,18 @@ mod tests {
         let t = fig16(&r, &["bf"]);
         let local: f64 = t[0].rows[0][1].parse().unwrap();
         assert!(local > 1.0, "Local must beat Remote under FIFO: {local}");
+    }
+
+    #[test]
+    fn fig11_block_layout_matches_legacy_shape() {
+        let r = Runner::test();
+        let tables = fig11(&r, &["pr"]);
+        // 2 switch latencies x 2 schemes.
+        assert_eq!(tables.len(), 4);
+        assert!(tables[0].title.contains("PQ") && tables[0].title.contains("100ns"));
+        assert!(tables[3].title.contains("DaeMon") && tables[3].title.contains("400ns"));
+        // 1 workload + geomean rows, 4 ratio columns.
+        assert_eq!(tables[0].rows.len(), 2);
+        assert_eq!(tables[0].headers.len(), 5);
     }
 }

@@ -1,15 +1,23 @@
 //! Shared experiment machinery: trace-cached grid runner + speedup math.
 //!
-//! Experiments iterate workload-major: each workload's trace is generated
-//! once, then all (scheme, config) cells run against it in parallel with
-//! `std::thread::scope` (traces are read-only).
+//! Traces come from the global [`TraceCache`] — generated once per
+//! `(workload, scale, seed, cap)` key and shared read-only across every
+//! experiment.  Cell fan-out writes results into an index-addressed
+//! `OnceLock` slot table (each worker owns the slots it claims via an
+//! atomic cursor), so there is no shared `Mutex` over the output vector.
+//! The cross-figure flat scheduler lives in
+//! [`super::orchestrator`]; `run_cells` here is the single-trace inner
+//! loop it and the legacy per-figure entry points share.
 
 use crate::compress::synth::Profile;
 use crate::config::SimConfig;
 use crate::metrics::Metrics;
 use crate::schemes::SchemeKind;
 use crate::system::Machine;
-use crate::workloads::{by_name, Scale, Trace};
+use crate::workloads::cache::TraceCache;
+use crate::workloads::{Scale, Trace};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 /// Experiment effort level.
 #[derive(Clone, Copy, Debug)]
@@ -36,13 +44,10 @@ impl Runner {
         Runner { scale: Scale::Test, max_accesses: 150_000, threads: 2 }
     }
 
-    pub fn gen_trace(&self, workload: &str, seed: u64) -> (Trace, Profile) {
-        let w = by_name(workload).unwrap_or_else(|| panic!("unknown workload {workload}"));
-        let mut t = w.generate(seed, self.scale);
-        if self.max_accesses > 0 {
-            t = t.truncated(self.max_accesses);
-        }
-        (t, w.profile())
+    /// Fetch (or generate, once per key) the trace for `workload` from the
+    /// global trace cache.
+    pub fn gen_trace(&self, workload: &str, seed: u64) -> (Arc<Trace>, Profile) {
+        TraceCache::global().get(workload, self.scale, seed, self.max_accesses)
     }
 
     /// Run one (scheme, config) cell against a pre-generated trace.
@@ -64,7 +69,9 @@ impl Runner {
         m.metrics.clone()
     }
 
-    /// Run many cells against one trace, fanned out over threads.
+    /// Run many cells against one trace, fanned out over threads.  Each
+    /// worker claims the next cell index from an atomic cursor and fills
+    /// that cell's own `OnceLock` slot — no lock covers the result vector.
     pub fn run_cells(
         &self,
         trace: &Trace,
@@ -72,37 +79,38 @@ impl Runner {
         cells: &[(SchemeKind, SimConfig)],
     ) -> Vec<Metrics> {
         let n = cells.len();
-        let mut out: Vec<Option<Metrics>> = Vec::with_capacity(n);
-        out.resize_with(n, || None);
-        let next = std::sync::atomic::AtomicUsize::new(0);
-        let slots = std::sync::Mutex::new(&mut out);
+        let slots: Vec<OnceLock<Metrics>> = (0..n).map(|_| OnceLock::new()).collect();
+        let next = AtomicUsize::new(0);
         std::thread::scope(|s| {
-            for _ in 0..self.threads.min(n.max(1)) {
+            for _ in 0..self.threads.max(1).min(n.max(1)) {
                 s.spawn(|| loop {
-                    let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
                     let (kind, cfg) = &cells[i];
                     let m = self.run_cell(trace, profile, *kind, cfg);
-                    slots.lock().unwrap()[i] = Some(m);
+                    let _ = slots[i].set(m);
                 });
             }
         });
-        out.into_iter().map(Option::unwrap).collect()
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("cell slot left unfilled"))
+            .collect()
     }
 
     /// Run a heterogeneous multi-workload mix (Fig. 18): one trace per
-    /// core.
+    /// core, all shared from the trace cache.
     pub fn run_mix(&self, workloads: &[&str], kind: SchemeKind, cfg: &SimConfig) -> Metrics {
         assert_eq!(workloads.len(), cfg.cores);
-        let pairs: Vec<(Trace, Profile)> = workloads
+        let pairs: Vec<(Arc<Trace>, Profile)> = workloads
             .iter()
             .map(|w| self.gen_trace(w, cfg.seed))
             .collect();
         let footprint: usize = pairs.iter().map(|(t, _)| t.footprint_pages).sum();
         let profiles: Vec<Profile> = pairs.iter().map(|(_, p)| *p).collect();
-        let traces: Vec<Trace> = pairs.into_iter().map(|(t, _)| t).collect();
+        let traces: Vec<Arc<Trace>> = pairs.into_iter().map(|(t, _)| t).collect();
         let mut m = Machine::new(cfg.clone(), kind, footprint, profiles, None);
         m.run(&traces);
         m.metrics.clone()
@@ -149,6 +157,14 @@ mod tests {
     }
 
     #[test]
+    fn gen_trace_shares_one_copy_per_key() {
+        let r = Runner::test();
+        let (a, _) = r.gen_trace("ts", 21);
+        let (b, _) = r.gen_trace("ts", 21);
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
     fn parallel_cells_match_serial() {
         let r = Runner::test();
         let (t, p) = r.gen_trace("bf", 1);
@@ -165,6 +181,35 @@ mod tests {
         for (a, b) in par.iter().zip(ser.iter()) {
             assert_eq!(a.instructions, b.instructions);
             assert!((a.cycles - b.cycles).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn run_cells_is_thread_count_invariant() {
+        // Deterministic slot table: 1, 2 and 8 workers must produce
+        // byte-identical metrics in cell order.
+        let base = Runner::test();
+        let (t, p) = base.gen_trace("bf", 2);
+        let cfg = SimConfig::test_scale();
+        let cells = vec![
+            (SchemeKind::Remote, cfg.clone()),
+            (SchemeKind::Lc, cfg.clone()),
+            (SchemeKind::Pq, cfg.clone()),
+            (SchemeKind::Daemon, cfg.clone()),
+        ];
+        let reference: Vec<String> = Runner { threads: 1, ..base }
+            .run_cells(&t, p, &cells)
+            .iter()
+            .map(|m| m.to_json().to_string())
+            .collect();
+        for threads in [2, 8] {
+            let r = Runner { threads, ..base };
+            let got: Vec<String> = r
+                .run_cells(&t, p, &cells)
+                .iter()
+                .map(|m| m.to_json().to_string())
+                .collect();
+            assert_eq!(got, reference, "divergence at {threads} threads");
         }
     }
 

@@ -1,119 +1,111 @@
 //! Figs. 13 and 14 — performance and hit ratio under runtime network
 //! disturbance: artificial packets injected by other compute components
 //! sharing the network, as a square wave of load phases.
+//!
+//! Disturbed cells are ordinary orchestrator cells with a
+//! `(load, period)` disturbance attached; the interval series needed for
+//! the time plots ride along inside [`Metrics`], so sharded runs
+//! reassemble these figures like any other.
 
 use super::common::Runner;
+use super::orchestrator::{self, CellSpec, Plan};
 use crate::config::{ns_to_cycles, SimConfig};
-use crate::net::Disturbance;
+use crate::metrics::Metrics;
 use crate::schemes::SchemeKind;
-use crate::system::Machine;
 use crate::util::stats::geomean;
 use crate::util::table::Table;
 
-/// Run one workload under disturbance, returning per-interval IPC and
-/// hit-ratio series.
-fn run_disturbed(
-    r: &Runner,
-    wl: &str,
-    kind: SchemeKind,
-    cfg: &SimConfig,
-    load: f64,
-    period_cycles: f64,
-) -> (Vec<f64>, Vec<f64>, f64) {
-    let (trace, profile) = r.gen_trace(wl, cfg.seed);
-    let mut m = Machine::new(
-        cfg.clone(),
-        kind,
-        trace.footprint_pages,
-        vec![profile; cfg.cores.max(1)],
-        None,
-    );
-    m.set_disturbance(|capacity| {
-        Disturbance::square_wave(period_cycles, load, 1e12, 5_000.0, capacity)
-    });
-    m.run(std::slice::from_ref(&trace));
-    let interval = ns_to_cycles(cfg.interval_ns);
-    (
-        m.metrics.ipc_series(interval),
-        m.metrics.hit_ratio_series(),
-        m.metrics.ipc(),
-    )
-}
-
 /// Figs. 13/14 for `pr` and `nw` (the paper's two highest data-movement
 /// workloads): overall IPC + windowed series under a 60%-load square wave.
-pub fn fig13_14(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+pub fn fig13_14_plan(_r: &Runner, workloads: &[&str]) -> Plan {
     let cfg = SimConfig::default();
     let period = ns_to_cycles(2_000_000.0); // 2ms disturbance phases
     let kinds = [SchemeKind::Lc, SchemeKind::Pq, SchemeKind::Daemon];
-    let mut tables = Vec::new();
-
-    let mut summary = Table::new(
-        "Fig 13: IPC under runtime network disturbance (60% injected load)",
-        &["workload", "LC", "PQ", "DaeMon", "DaeMon/LC", "DaeMon/PQ"],
-    );
-    let mut dm_lc = Vec::new();
-    let mut dm_pq = Vec::new();
-    for wl in workloads {
-        let mut ipcs = Vec::new();
-        let mut series: Vec<Vec<f64>> = Vec::new();
-        let mut hits: Vec<Vec<f64>> = Vec::new();
+    let workloads: Vec<String> = workloads.iter().map(|s| s.to_string()).collect();
+    let mut cells = Vec::new();
+    for wl in &workloads {
         for &k in &kinds {
-            let (s, h, ipc) = run_disturbed(r, wl, k, &cfg, 0.6, period);
-            ipcs.push(ipc);
-            series.push(s);
-            hits.push(h);
+            cells.push(CellSpec::disturbed(wl, k, cfg.clone(), 0.6, period));
         }
-        dm_lc.push(ipcs[2] / ipcs[0].max(1e-12));
-        dm_pq.push(ipcs[2] / ipcs[1].max(1e-12));
-        summary.row_f(
-            wl,
-            &[
-                ipcs[0],
-                ipcs[1],
-                ipcs[2],
-                ipcs[2] / ipcs[0].max(1e-12),
-                ipcs[2] / ipcs[1].max(1e-12),
-            ],
-        );
-
-        // Time-series tables (coarsened to 10 buckets).
-        let mut ts = Table::new(
-            &format!("Fig 13 series: {wl} per-phase IPC"),
-            &["phase", "LC", "PQ", "DaeMon"],
-        );
-        let mut hr = Table::new(
-            &format!("Fig 14 series: {wl} per-phase local hit ratio"),
-            &["phase", "LC", "PQ", "DaeMon"],
-        );
-        let buckets = 10;
-        let len = series.iter().map(|s| s.len()).min().unwrap_or(0);
-        if len >= buckets {
-            let chunk = len / buckets;
-            for b in 0..buckets {
-                let avg = |v: &Vec<f64>| {
-                    let s = &v[b * chunk..(b + 1) * chunk];
-                    s.iter().sum::<f64>() / s.len() as f64
-                };
-                ts.row_f(&format!("{b}"), &[avg(&series[0]), avg(&series[1]), avg(&series[2])]);
-                let havg = |v: &Vec<f64>| {
-                    let s = &v[(b * chunk).min(v.len().saturating_sub(1))
-                        ..((b + 1) * chunk).min(v.len())];
-                    if s.is_empty() {
-                        0.0
-                    } else {
-                        s.iter().sum::<f64>() / s.len() as f64
-                    }
-                };
-                hr.row_f(&format!("{b}"), &[havg(&hits[0]), havg(&hits[1]), havg(&hits[2])]);
-            }
-        }
-        tables.push(ts);
-        tables.push(hr);
     }
-    summary.row_f("geomean", &[0.0, 0.0, 0.0, geomean(&dm_lc), geomean(&dm_pq)]);
-    tables.insert(0, summary);
-    tables
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let interval = ns_to_cycles(cfg.interval_ns);
+        let mut tables = Vec::new();
+        let mut summary = Table::new(
+            "Fig 13: IPC under runtime network disturbance (60% injected load)",
+            &["workload", "LC", "PQ", "DaeMon", "DaeMon/LC", "DaeMon/PQ"],
+        );
+        let mut dm_lc = Vec::new();
+        let mut dm_pq = Vec::new();
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * kinds.len()..(w + 1) * kinds.len()];
+            let ipcs: Vec<f64> = row.iter().map(|m| m.ipc()).collect();
+            let series: Vec<Vec<f64>> =
+                row.iter().map(|m| m.ipc_series(interval)).collect();
+            let hits: Vec<Vec<f64>> =
+                row.iter().map(|m| m.hit_ratio_series()).collect();
+            dm_lc.push(ipcs[2] / ipcs[0].max(1e-12));
+            dm_pq.push(ipcs[2] / ipcs[1].max(1e-12));
+            summary.row_f(
+                wl,
+                &[
+                    ipcs[0],
+                    ipcs[1],
+                    ipcs[2],
+                    ipcs[2] / ipcs[0].max(1e-12),
+                    ipcs[2] / ipcs[1].max(1e-12),
+                ],
+            );
+
+            // Time-series tables (coarsened to 10 buckets).
+            let mut ts = Table::new(
+                &format!("Fig 13 series: {wl} per-phase IPC"),
+                &["phase", "LC", "PQ", "DaeMon"],
+            );
+            let mut hr = Table::new(
+                &format!("Fig 14 series: {wl} per-phase local hit ratio"),
+                &["phase", "LC", "PQ", "DaeMon"],
+            );
+            let buckets = 10;
+            let len = series.iter().map(|s| s.len()).min().unwrap_or(0);
+            if len >= buckets {
+                let chunk = len / buckets;
+                for b in 0..buckets {
+                    let avg = |v: &Vec<f64>| {
+                        let s = &v[b * chunk..(b + 1) * chunk];
+                        s.iter().sum::<f64>() / s.len() as f64
+                    };
+                    ts.row_f(
+                        &format!("{b}"),
+                        &[avg(&series[0]), avg(&series[1]), avg(&series[2])],
+                    );
+                    let havg = |v: &Vec<f64>| {
+                        let s = &v[(b * chunk).min(v.len().saturating_sub(1))
+                            ..((b + 1) * chunk).min(v.len())];
+                        if s.is_empty() {
+                            0.0
+                        } else {
+                            s.iter().sum::<f64>() / s.len() as f64
+                        }
+                    };
+                    hr.row_f(
+                        &format!("{b}"),
+                        &[havg(&hits[0]), havg(&hits[1]), havg(&hits[2])],
+                    );
+                }
+            }
+            tables.push(ts);
+            tables.push(hr);
+        }
+        summary.row_f("geomean", &[0.0, 0.0, 0.0, geomean(&dm_lc), geomean(&dm_pq)]);
+        tables.insert(0, summary);
+        tables
+    });
+    Plan { id: "fig13".into(), cells, assemble }
+}
+
+pub fn fig13_14(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig13_14_plan(r, workloads))
 }
 
 pub fn fig13_14_default(r: &Runner) -> Vec<Table> {
@@ -123,6 +115,23 @@ pub fn fig13_14_default(r: &Runner) -> Vec<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::workloads::cache::TraceCache;
+
+    /// Run one workload under disturbance, returning per-interval IPC and
+    /// hit-ratio series (the same cell path fig13/14 declare).
+    fn run_disturbed(
+        r: &Runner,
+        wl: &str,
+        kind: SchemeKind,
+        cfg: &SimConfig,
+        load: f64,
+        period_cycles: f64,
+    ) -> (Vec<f64>, Vec<f64>, f64) {
+        let spec = CellSpec::disturbed(wl, kind, cfg.clone(), load, period_cycles);
+        let m = orchestrator::run_cell_spec(r, TraceCache::global(), &spec);
+        let interval = ns_to_cycles(cfg.interval_ns);
+        (m.ipc_series(interval), m.hit_ratio_series(), m.ipc())
+    }
 
     #[test]
     fn disturbance_slows_execution() {

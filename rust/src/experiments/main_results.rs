@@ -5,9 +5,15 @@
 //! Fig. 9: average data access cost normalized to Remote.
 //! Fig.10: local-memory hit ratio (+ extra pages DaeMon moves over PQ).
 //! Fig.19: network bandwidth utilization.
+//!
+//! Each figure declares its cells as a [`Plan`]; execution goes through
+//! the orchestrator's flat scheduler (see `orchestrator.rs`), so figure
+//! entry points here only enumerate cells and assemble tables.
 
 use super::common::{net_grid, speedup, Runner};
+use super::orchestrator::{self, CellSpec, Plan};
 use crate::config::SimConfig;
+use crate::metrics::Metrics;
 use crate::schemes::SchemeKind;
 use crate::util::stats::geomean;
 use crate::util::table::{fmt_num, Table};
@@ -26,13 +32,72 @@ fn schemes() -> Vec<SchemeKind> {
     ]
 }
 
-pub fn fig8(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let mut tables = Vec::new();
+fn owned(workloads: &[&str]) -> Vec<String> {
+    workloads.iter().map(|s| s.to_string()).collect()
+}
+
+pub fn fig8_plan(_r: &Runner, workloads: &[&str]) -> Plan {
     let schemes = schemes();
-    for (label, sw, bw) in net_grid() {
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for (_, sw, bw) in net_grid() {
         let cfg = SimConfig::default().with_net(sw, bw);
+        for wl in &workloads {
+            for &k in &schemes {
+                cells.push(CellSpec::new(wl, k, cfg.clone()));
+            }
+        }
+    }
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let schemes = schemes;
+        let per_net = workloads.len() * schemes.len();
+        let mut tables = Vec::new();
+        for (g, (label, _, _)) in net_grid().iter().enumerate() {
+            let block = &ms[g * per_net..(g + 1) * per_net];
+            let mut table = Table::new(
+                &format!("Fig 8: speedup over Remote ({label})"),
+                &{
+                    let mut h = vec!["workload"];
+                    h.extend(schemes.iter().skip(1).map(|s| s.name()));
+                    h
+                },
+            );
+            let mut per: Vec<Vec<f64>> = vec![Vec::new(); schemes.len() - 1];
+            for (w, wl) in workloads.iter().enumerate() {
+                let row = &block[w * schemes.len()..(w + 1) * schemes.len()];
+                let base = &row[0];
+                let vals: Vec<f64> = row[1..].iter().map(|m| speedup(m, base)).collect();
+                for (i, v) in vals.iter().enumerate() {
+                    per[i].push(*v);
+                }
+                table.row_f(wl, &vals);
+            }
+            table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
+            tables.push(table);
+        }
+        tables
+    });
+    Plan { id: "fig8".into(), cells, assemble }
+}
+
+pub fn fig8(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig8_plan(r, workloads))
+}
+
+pub fn fig9_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    let cfg = SimConfig::default();
+    let schemes = schemes();
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        for &k in &schemes {
+            cells.push(CellSpec::new(wl, k, cfg.clone()));
+        }
+    }
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let schemes = schemes;
         let mut table = Table::new(
-            &format!("Fig 8: speedup over Remote ({label})"),
+            "Fig 9: data access cost normalized to Remote (lower is better)",
             &{
                 let mut h = vec!["workload"];
                 h.extend(schemes.iter().skip(1).map(|s| s.name()));
@@ -40,142 +105,160 @@ pub fn fig8(r: &Runner, workloads: &[&str]) -> Vec<Table> {
             },
         );
         let mut per: Vec<Vec<f64>> = vec![Vec::new(); schemes.len() - 1];
-        for wl in workloads {
-            let (trace, profile) = r.gen_trace(wl, cfg.seed);
-            let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
-            let ms = r.run_cells(&trace, profile, &cells);
-            let base = &ms[0];
-            let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, base)).collect();
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * schemes.len()..(w + 1) * schemes.len()];
+            let base = row[0].mean_access_cost().max(1e-9);
+            let vals: Vec<f64> = row[1..]
+                .iter()
+                .map(|m| m.mean_access_cost() / base)
+                .collect();
             for (i, v) in vals.iter().enumerate() {
                 per[i].push(*v);
             }
             table.row_f(wl, &vals);
         }
         table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
-        tables.push(table);
-    }
-    tables
+        vec![table]
+    });
+    Plan { id: "fig9".into(), cells, assemble }
 }
 
 pub fn fig9(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig9_plan(r, workloads))
+}
+
+pub fn fig10_plan(_r: &Runner, workloads: &[&str]) -> Plan {
     let cfg = SimConfig::default();
-    let schemes = schemes();
-    let mut table = Table::new(
-        "Fig 9: data access cost normalized to Remote (lower is better)",
-        &{
-            let mut h = vec!["workload"];
-            h.extend(schemes.iter().skip(1).map(|s| s.name()));
-            h
-        },
-    );
-    let mut per: Vec<Vec<f64>> = vec![Vec::new(); schemes.len() - 1];
-    for wl in workloads {
-        let (trace, profile) = r.gen_trace(wl, cfg.seed);
-        let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
-        let ms = r.run_cells(&trace, profile, &cells);
-        let base = ms[0].mean_access_cost().max(1e-9);
-        let vals: Vec<f64> = ms[1..]
-            .iter()
-            .map(|m| m.mean_access_cost() / base)
-            .collect();
-        for (i, v) in vals.iter().enumerate() {
-            per[i].push(*v);
+    let kinds = [SchemeKind::Remote, SchemeKind::Pq, SchemeKind::Daemon];
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        for &k in &kinds {
+            cells.push(CellSpec::new(wl, k, cfg.clone()));
         }
-        table.row_f(wl, &vals);
     }
-    table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let mut table = Table::new(
+            "Fig 10: local memory hit ratio (+DaeMon extra pages over PQ, %)",
+            &["workload", "Remote", "PQ", "DaeMon", "extra-pages-%"],
+        );
+        let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * kinds.len()..(w + 1) * kinds.len()];
+            let extra = if row[1].pages_moved == 0 {
+                0.0
+            } else {
+                100.0 * (row[2].pages_moved as f64 - row[1].pages_moved as f64)
+                    / row[1].pages_moved as f64
+            };
+            let vals = [
+                row[0].local_hit_ratio(),
+                row[1].local_hit_ratio(),
+                row[2].local_hit_ratio(),
+                extra,
+            ];
+            for (i, v) in vals.iter().enumerate() {
+                cols[i].push(*v);
+            }
+            table.row_f(wl, &vals);
+        }
+        table.row(vec![
+            "mean".into(),
+            fmt_num(crate::util::stats::mean(&cols[0])),
+            fmt_num(crate::util::stats::mean(&cols[1])),
+            fmt_num(crate::util::stats::mean(&cols[2])),
+            fmt_num(crate::util::stats::mean(&cols[3])),
+        ]);
+        vec![table]
+    });
+    Plan { id: "fig10".into(), cells, assemble }
 }
 
 pub fn fig10(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig10_plan(r, workloads))
+}
+
+pub fn fig19_plan(_r: &Runner, workloads: &[&str]) -> Plan {
     let cfg = SimConfig::default();
-    let mut table = Table::new(
-        "Fig 10: local memory hit ratio (+DaeMon extra pages over PQ, %)",
-        &["workload", "Remote", "PQ", "DaeMon", "extra-pages-%"],
-    );
-    let kinds = [SchemeKind::Remote, SchemeKind::Pq, SchemeKind::Daemon];
-    let mut cols: Vec<Vec<f64>> = vec![Vec::new(); 4];
-    for wl in workloads {
-        let (trace, profile) = r.gen_trace(wl, cfg.seed);
-        let cells: Vec<_> = kinds.iter().map(|&k| (k, cfg.clone())).collect();
-        let ms = r.run_cells(&trace, profile, &cells);
-        let extra = if ms[1].pages_moved == 0 {
-            0.0
-        } else {
-            100.0 * (ms[2].pages_moved as f64 - ms[1].pages_moved as f64)
-                / ms[1].pages_moved as f64
-        };
-        let vals = [
-            ms[0].local_hit_ratio(),
-            ms[1].local_hit_ratio(),
-            ms[2].local_hit_ratio(),
-            extra,
-        ];
-        for (i, v) in vals.iter().enumerate() {
-            cols[i].push(*v);
+    let schemes = schemes();
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        for &k in &schemes {
+            cells.push(CellSpec::new(wl, k, cfg.clone()));
         }
-        table.row_f(wl, &vals);
     }
-    table.row(vec![
-        "mean".into(),
-        fmt_num(crate::util::stats::mean(&cols[0])),
-        fmt_num(crate::util::stats::mean(&cols[1])),
-        fmt_num(crate::util::stats::mean(&cols[2])),
-        fmt_num(crate::util::stats::mean(&cols[3])),
-    ]);
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let schemes = schemes;
+        let mut table = Table::new(
+            "Fig 19: network bandwidth utilization (%)",
+            &{
+                let mut h = vec!["workload"];
+                h.extend(schemes.iter().map(|s| s.name()));
+                h
+            },
+        );
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * schemes.len()..(w + 1) * schemes.len()];
+            let vals: Vec<f64> = row.iter().map(|m| 100.0 * m.net_utilization).collect();
+            table.row_f(wl, &vals);
+        }
+        vec![table]
+    });
+    Plan { id: "fig19".into(), cells, assemble }
 }
 
 pub fn fig19(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let cfg = SimConfig::default();
-    let schemes = schemes();
-    let mut table = Table::new(
-        "Fig 19: network bandwidth utilization (%)",
-        &{
-            let mut h = vec!["workload"];
-            h.extend(schemes.iter().map(|s| s.name()));
-            h
-        },
-    );
-    for wl in workloads {
-        let (trace, profile) = r.gen_trace(wl, cfg.seed);
-        let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
-        let ms = r.run_cells(&trace, profile, &cells);
-        let vals: Vec<f64> = ms.iter().map(|m| 100.0 * m.net_utilization).collect();
-        table.row_f(wl, &vals);
-    }
-    vec![table]
+    orchestrator::run_plan(r, fig19_plan(r, workloads))
 }
 
-/// Headline numbers (abstract): DaeMon vs Remote geomean speedup and
-/// access-cost improvement across all workloads at the default config.
-pub fn headline(r: &Runner) -> (f64, f64, Table) {
+/// Headline cells: `(Remote, DaeMon)` per workload at the default config.
+fn headline_cells() -> Vec<CellSpec> {
     let cfg = SimConfig::default();
+    let mut cells = Vec::new();
+    for wl in ALL {
+        cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg.clone()));
+        cells.push(CellSpec::new(wl, SchemeKind::Daemon, cfg.clone()));
+    }
+    cells
+}
+
+fn headline_assemble(ms: &[Metrics]) -> (f64, f64, Table) {
     let mut speedups = Vec::new();
     let mut cost_gains = Vec::new();
     let mut table = Table::new(
         "Headline: DaeMon vs Remote (paper: 2.39x speedup, 3.06x access cost)",
         &["workload", "speedup", "access-cost-gain", "hit-Remote", "hit-DaeMon"],
     );
-    for wl in ALL {
-        let (trace, profile) = r.gen_trace(wl, cfg.seed);
-        let cells = vec![
-            (SchemeKind::Remote, cfg.clone()),
-            (SchemeKind::Daemon, cfg.clone()),
-        ];
-        let ms = r.run_cells(&trace, profile, &cells);
-        let sp = speedup(&ms[1], &ms[0]);
-        let cg = ms[0].mean_access_cost() / ms[1].mean_access_cost().max(1e-9);
+    for (w, wl) in ALL.iter().enumerate() {
+        let (remote, daemon) = (&ms[2 * w], &ms[2 * w + 1]);
+        let sp = speedup(daemon, remote);
+        let cg = remote.mean_access_cost() / daemon.mean_access_cost().max(1e-9);
         speedups.push(sp);
         cost_gains.push(cg);
         table.row_f(
             wl,
-            &[sp, cg, ms[0].local_hit_ratio(), ms[1].local_hit_ratio()],
+            &[sp, cg, remote.local_hit_ratio(), daemon.local_hit_ratio()],
         );
     }
     let (s, c) = (geomean(&speedups), geomean(&cost_gains));
     table.row_f("geomean", &[s, c, 0.0, 0.0]);
     (s, c, table)
+}
+
+pub fn headline_plan(_r: &Runner) -> Plan {
+    Plan {
+        id: "headline".into(),
+        cells: headline_cells(),
+        assemble: Box::new(|ms| vec![headline_assemble(ms).2]),
+    }
+}
+
+/// Headline numbers (abstract): DaeMon vs Remote geomean speedup and
+/// access-cost improvement across all workloads at the default config.
+pub fn headline(r: &Runner) -> (f64, f64, Table) {
+    let ms = orchestrator::run_plan_metrics(r, &headline_cells());
+    headline_assemble(&ms)
 }
 
 pub fn fig8_default(r: &Runner) -> Vec<Table> {

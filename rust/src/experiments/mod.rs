@@ -1,18 +1,22 @@
 //! Experiment drivers — one entry per figure/table in the paper's
-//! evaluation (§2.2, §6, Appendix A).  Each returns rendered tables with
-//! the same rows/series the paper plots.  See DESIGN.md for the index.
+//! evaluation (§2.2, §6, Appendix A).  Each declares its simulation cells
+//! as an orchestrator [`orchestrator::Plan`] and assembles rendered tables
+//! with the same rows/series the paper plots.  See DESIGN.md for the
+//! index, and `orchestrator.rs` for the flat scheduler + sharding.
 
 pub mod ablations;
 pub mod common;
 pub mod disturbance;
 pub mod main_results;
 pub mod motivation;
+pub mod orchestrator;
 pub mod scaling;
 pub mod table1;
 
 pub use common::Runner;
 
 use crate::util::table::Table;
+use crate::workloads::{ALL, SUBSET};
 
 /// All experiment ids, in paper order.
 pub const ALL_EXPERIMENTS: [&str; 17] = [
@@ -21,37 +25,40 @@ pub const ALL_EXPERIMENTS: [&str; 17] = [
     "headline",
 ];
 
-/// Run one experiment by id.
-pub fn run_experiment(id: &str, r: &Runner) -> Option<Vec<Table>> {
-    Some(match id {
-        "fig3" => motivation::run_default(r),
-        "fig8" => main_results::fig8_default(r),
-        "fig9" => main_results::fig9_default(r),
-        "fig10" => main_results::fig10_default(r),
-        "fig11" => ablations::fig11_default(r),
-        "fig12" => ablations::fig12_default(r),
-        "fig13" | "fig14" => disturbance::fig13_14_default(r),
-        "fig15" => scaling::fig15_default(r),
-        "fig16" => ablations::fig16_default(r),
-        "fig17" => scaling::fig17_default(r),
-        "fig18" => scaling::fig18(r),
-        "fig19" => main_results::fig19_default(r),
-        "fig20" => ablations::fig20_default(r),
-        "fig21" => ablations::fig21_default(r),
-        "fig22" => scaling::fig22_default(r),
-        "table1" => table1::run(),
-        "headline" => {
-            let (_, _, t) = main_results::headline(r);
-            vec![t]
-        }
+/// Build the orchestrator plan for one experiment id (the default
+/// workload sets the paper uses).  `None` for unknown ids.
+pub fn plan_for(id: &str, r: &Runner) -> Option<orchestrator::Plan> {
+    let mut plan = match id {
+        "fig3" => motivation::plan(r, &ALL),
+        "fig8" => main_results::fig8_plan(r, &ALL),
+        "fig9" => main_results::fig9_plan(r, &SUBSET),
+        "fig10" => main_results::fig10_plan(r, &SUBSET),
+        "fig11" => ablations::fig11_plan(r, &SUBSET),
+        "fig12" => ablations::fig12_plan(r, &SUBSET),
+        "fig13" | "fig14" => disturbance::fig13_14_plan(r, &["pr", "nw"]),
+        "fig15" => scaling::fig15_plan(r, &SUBSET),
+        "fig16" => ablations::fig16_plan(r, &SUBSET),
+        "fig17" => scaling::fig17_plan(r, &SUBSET),
+        "fig18" => scaling::fig18_plan(r),
+        "fig19" => main_results::fig19_plan(r, &SUBSET),
+        "fig20" => ablations::fig20_plan(r, &SUBSET),
+        "fig21" => ablations::fig21_plan(r, &SUBSET),
+        "fig22" => scaling::fig22_plan(r, &SUBSET),
+        "table1" => table1::plan(),
+        "headline" => main_results::headline_plan(r),
         "ablation_dirty_threshold" => {
-            ablations::ablation_dirty_threshold(r, &crate::workloads::SUBSET)
+            ablations::ablation_dirty_threshold_plan(r, &SUBSET)
         }
-        "ablation_buffer_size" => {
-            ablations::ablation_buffer_size(r, &crate::workloads::SUBSET)
-        }
+        "ablation_buffer_size" => ablations::ablation_buffer_size_plan(r, &SUBSET),
         _ => return None,
-    })
+    };
+    plan.id = id.to_string();
+    Some(plan)
+}
+
+/// Run one experiment by id through the orchestrator.
+pub fn run_experiment(id: &str, r: &Runner) -> Option<Vec<Table>> {
+    Some(orchestrator::run_plan(r, plan_for(id, r)?))
 }
 
 #[cfg(test)]
@@ -64,5 +71,21 @@ mod tests {
         // table1 is cheap enough to actually run here.
         assert!(run_experiment("table1", &r).is_some());
         assert!(run_experiment("nope", &r).is_none());
+        for id in ALL_EXPERIMENTS {
+            assert!(plan_for(id, &r).is_some(), "no plan for {id}");
+        }
+        // fig14 aliases the fig13 plan but keeps its requested id.
+        assert_eq!(plan_for("fig14", &r).unwrap().id, "fig14");
+    }
+
+    #[test]
+    fn plans_declare_nonempty_grids() {
+        let r = Runner::test();
+        for id in ALL_EXPERIMENTS {
+            let p = plan_for(id, &r).unwrap();
+            if id != "table1" {
+                assert!(!p.cells.is_empty(), "{id} declared no cells");
+            }
+        }
     }
 }

@@ -6,42 +6,61 @@
 //! relative to Local (the paper plots speedup normalized to Local).
 
 use super::common::Runner;
+use super::orchestrator::{self, CellSpec, Plan};
 use crate::config::SimConfig;
+use crate::metrics::Metrics;
 use crate::schemes::SchemeKind;
 use crate::util::stats::geomean;
 use crate::util::table::Table;
 use crate::workloads::ALL;
 
-pub fn run(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let mut tables = Vec::new();
+pub fn plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    let schemes = SchemeKind::motivation_set();
+    let workloads: Vec<String> = workloads.iter().map(|s| s.to_string()).collect();
+    let mut cells = Vec::new();
     for &sw in &[100.0, 400.0] {
         let cfg = SimConfig::default().with_net(sw, 4.0);
-        let schemes = SchemeKind::motivation_set();
-        let mut table = Table::new(
-            &format!("Fig 3: IPC normalized to Local ({}ns switch, 1/4 bw)", sw as u32),
-            &{
-                let mut h = vec!["workload"];
-                h.extend(schemes.iter().map(|s| s.name()));
-                h
-            },
-        );
-        let mut per_scheme: Vec<Vec<f64>> = vec![Vec::new(); schemes.len()];
-        for wl in workloads {
-            let (trace, profile) = r.gen_trace(wl, cfg.seed);
-            let cells: Vec<_> = schemes.iter().map(|&k| (k, cfg.clone())).collect();
-            let ms = r.run_cells(&trace, profile, &cells);
-            let local_ipc = ms[0].ipc(); // Local is first in the set
-            let vals: Vec<f64> = ms.iter().map(|m| m.ipc() / local_ipc.max(1e-12)).collect();
-            for (i, v) in vals.iter().enumerate() {
-                per_scheme[i].push(*v);
+        for wl in &workloads {
+            for &k in &schemes {
+                cells.push(CellSpec::new(wl, k, cfg.clone()));
             }
-            table.row_f(wl, &vals);
         }
-        let gm: Vec<f64> = per_scheme.iter().map(|v| geomean(v)).collect();
-        table.row_f("geomean", &gm);
-        tables.push(table);
     }
-    tables
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_net = workloads.len() * schemes.len();
+        let mut tables = Vec::new();
+        for (g, &sw) in [100.0f64, 400.0].iter().enumerate() {
+            let block = &ms[g * per_net..(g + 1) * per_net];
+            let mut table = Table::new(
+                &format!("Fig 3: IPC normalized to Local ({}ns switch, 1/4 bw)", sw as u32),
+                &{
+                    let mut h = vec!["workload"];
+                    h.extend(schemes.iter().map(|s| s.name()));
+                    h
+                },
+            );
+            let mut per_scheme: Vec<Vec<f64>> = vec![Vec::new(); schemes.len()];
+            for (w, wl) in workloads.iter().enumerate() {
+                let row = &block[w * schemes.len()..(w + 1) * schemes.len()];
+                let local_ipc = row[0].ipc(); // Local is first in the set
+                let vals: Vec<f64> =
+                    row.iter().map(|m| m.ipc() / local_ipc.max(1e-12)).collect();
+                for (i, v) in vals.iter().enumerate() {
+                    per_scheme[i].push(*v);
+                }
+                table.row_f(wl, &vals);
+            }
+            let gm: Vec<f64> = per_scheme.iter().map(|v| geomean(v)).collect();
+            table.row_f("geomean", &gm);
+            tables.push(table);
+        }
+        tables
+    });
+    Plan { id: "fig3".into(), cells, assemble }
+}
+
+pub fn run(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, plan(r, workloads))
 }
 
 /// Full paper workload set.

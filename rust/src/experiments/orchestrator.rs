@@ -1,0 +1,645 @@
+//! Unified experiment orchestrator: every figure declares its simulation
+//! cells up front (a [`Plan`]); the orchestrator batches all requested
+//! figures' cells into **one flat job list**, runs them with a
+//! work-stealing scheduler over OS threads, and hands each figure its
+//! slice of results to assemble into tables.
+//!
+//! Three properties fall out of the design:
+//!
+//! * **Shared traces** — cells pull traces from a [`TraceCache`], so a
+//!   `(workload, scale, seed, cap)` trace is generated once per sweep no
+//!   matter how many figures touch it (the seed harness regenerated per
+//!   figure).
+//! * **Lock-free result collection** — workers claim cell indices from an
+//!   atomic cursor and fill per-cell `OnceLock` slots; no `Mutex` guards
+//!   the output vector, and results are deterministic in slot order
+//!   regardless of thread count.
+//! * **Sharding** — because the job list is flat and its order is a pure
+//!   function of the experiment ids, a [`Shard`] can deterministically
+//!   split it across CI jobs or machines (`slot % total == index`).  Each
+//!   shard emits its raw per-slot metrics as JSON; [`merge_shards`]
+//!   recombines them and re-runs the same deterministic assembly, so the
+//!   merged figure set is byte-identical to an unsharded run.
+
+use super::common::Runner;
+use super::plan_for;
+use crate::config::SimConfig;
+use crate::metrics::Metrics;
+use crate::net::Disturbance;
+use crate::schemes::SchemeKind;
+use crate::system::Machine;
+use crate::util::json::Json;
+use crate::util::table::Table;
+use crate::workloads::cache::TraceCache;
+use crate::workloads::{Scale, Trace};
+use crate::compress::synth::Profile;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
+
+/// One simulation cell in the flat job list.
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    /// One entry = single-trace cell; several = per-core mix (Fig. 18).
+    pub workloads: Vec<String>,
+    pub kind: SchemeKind,
+    pub cfg: SimConfig,
+    /// Square-wave network disturbance `(load, period_cycles)`
+    /// (Figs. 13/14); step and horizon match the legacy harness.
+    pub disturbance: Option<(f64, f64)>,
+}
+
+impl CellSpec {
+    pub fn new(workload: &str, kind: SchemeKind, cfg: SimConfig) -> CellSpec {
+        CellSpec { workloads: vec![workload.to_string()], kind, cfg, disturbance: None }
+    }
+
+    pub fn mix(workloads: &[&str], kind: SchemeKind, cfg: SimConfig) -> CellSpec {
+        CellSpec {
+            workloads: workloads.iter().map(|w| w.to_string()).collect(),
+            kind,
+            cfg,
+            disturbance: None,
+        }
+    }
+
+    pub fn disturbed(
+        workload: &str,
+        kind: SchemeKind,
+        cfg: SimConfig,
+        load: f64,
+        period_cycles: f64,
+    ) -> CellSpec {
+        CellSpec {
+            workloads: vec![workload.to_string()],
+            kind,
+            cfg,
+            disturbance: Some((load, period_cycles)),
+        }
+    }
+}
+
+/// Closure assembling a figure's tables from its cells' metrics (in cell
+/// declaration order).
+pub type Assemble = Box<dyn FnOnce(&[Metrics]) -> Vec<Table> + Send>;
+
+/// One experiment's declared cells + assembly step.
+pub struct Plan {
+    pub id: String,
+    pub cells: Vec<CellSpec>,
+    pub assemble: Assemble,
+}
+
+/// Deterministic slice of the flat job list: this process owns slot `i`
+/// iff `i % total == index`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub index: usize,
+    pub total: usize,
+}
+
+impl Shard {
+    /// The whole grid (unsharded run).
+    pub fn full() -> Shard {
+        Shard { index: 0, total: 1 }
+    }
+
+    pub fn owns(&self, slot: usize) -> bool {
+        slot % self.total.max(1) == self.index
+    }
+}
+
+/// Simulate one cell.  This is the single execution path all figures
+/// share; it reproduces the legacy `run_cell` / `run_mix` /
+/// `run_disturbed` semantics exactly.
+pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Metrics {
+    let cfg = &spec.cfg;
+    if let [workload] = spec.workloads.as_slice() {
+        let (trace, profile) = cache.get(workload, r.scale, cfg.seed, r.max_accesses);
+        let mut m = Machine::new(
+            cfg.clone(),
+            spec.kind,
+            trace.footprint_pages,
+            vec![profile; cfg.cores.max(1)],
+            None,
+        );
+        if let Some((load, period)) = spec.disturbance {
+            m.set_disturbance(|capacity| {
+                Disturbance::square_wave(period, load, 1e12, 5_000.0, capacity)
+            });
+        }
+        m.run(std::slice::from_ref(&*trace));
+        m.metrics.clone()
+    } else {
+        assert_eq!(spec.workloads.len(), cfg.cores, "one mix workload per core");
+        assert!(spec.disturbance.is_none(), "disturbed mix cells unsupported");
+        let pairs: Vec<(Arc<Trace>, Profile)> = spec
+            .workloads
+            .iter()
+            .map(|w| cache.get(w, r.scale, cfg.seed, r.max_accesses))
+            .collect();
+        let footprint: usize = pairs.iter().map(|(t, _)| t.footprint_pages).sum();
+        let profiles: Vec<Profile> = pairs.iter().map(|(_, p)| *p).collect();
+        let traces: Vec<Arc<Trace>> = pairs.into_iter().map(|(t, _)| t).collect();
+        let mut m = Machine::new(cfg.clone(), spec.kind, footprint, profiles, None);
+        m.run(&traces);
+        m.metrics.clone()
+    }
+}
+
+/// Work-stealing scheduler: run this shard's share of `cells` over `jobs`
+/// OS threads.  Returns one entry per global slot — `None` for slots
+/// outside the shard.
+pub fn run_cells_flat(
+    r: &Runner,
+    cache: &TraceCache,
+    cells: &[CellSpec],
+    shard: Shard,
+    jobs: usize,
+) -> Vec<Option<Metrics>> {
+    let n = cells.len();
+    let todo: Vec<usize> = (0..n).filter(|i| shard.owns(*i)).collect();
+    let slots: Vec<OnceLock<Metrics>> = (0..n).map(|_| OnceLock::new()).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs.max(1).min(todo.len().max(1)) {
+            s.spawn(|| loop {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= todo.len() {
+                    break;
+                }
+                let i = todo[k];
+                let m = run_cell_spec(r, cache, &cells[i]);
+                let _ = slots[i].set(m);
+            });
+        }
+    });
+    slots.into_iter().map(OnceLock::into_inner).collect()
+}
+
+/// Run one plan end-to-end on the global trace cache (the per-figure entry
+/// points and `run_experiment` route through here).
+pub fn run_plan(r: &Runner, plan: Plan) -> Vec<Table> {
+    let ms = run_plan_metrics(r, &plan.cells);
+    (plan.assemble)(&ms)
+}
+
+/// Run a cell list unsharded and return the metrics in slot order.
+pub fn run_plan_metrics(r: &Runner, cells: &[CellSpec]) -> Vec<Metrics> {
+    run_cells_flat(r, TraceCache::global(), cells, Shard::full(), r.threads)
+        .into_iter()
+        .map(|m| m.expect("unsharded run must fill every slot"))
+        .collect()
+}
+
+/// Resolve experiment ids into plans (same registry as `run_experiment`).
+pub fn plans_for(ids: &[String], r: &Runner) -> Result<Vec<Plan>, String> {
+    ids.iter()
+        .map(|id| {
+            plan_for(id, r)
+                .ok_or_else(|| format!("unknown experiment '{id}' — see `daemon-sim list`"))
+        })
+        .collect()
+}
+
+/// A sharded run's raw output: enough to recombine and re-assemble the
+/// full figure set without re-simulating.
+#[derive(Clone, Debug)]
+pub struct ShardData {
+    pub ids: Vec<String>,
+    pub scale: Scale,
+    pub max_accesses: usize,
+    pub shard: Shard,
+    pub total_slots: usize,
+    /// `(global slot, metrics)` for every slot this shard owns.
+    pub results: Vec<(usize, Metrics)>,
+}
+
+const SHARD_FORMAT: &str = "daemon-sim-shard-v1";
+
+fn scale_name(s: Scale) -> &'static str {
+    match s {
+        Scale::Test => "test",
+        Scale::Paper => "paper",
+    }
+}
+
+fn scale_by_name(s: &str) -> Result<Scale, String> {
+    match s {
+        "test" => Ok(Scale::Test),
+        "paper" => Ok(Scale::Paper),
+        other => Err(format!("shard json: unknown scale '{other}'")),
+    }
+}
+
+impl ShardData {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str(SHARD_FORMAT)),
+            ("ids", Json::Arr(self.ids.iter().map(|s| Json::str(s)).collect())),
+            ("scale", Json::str(scale_name(self.scale))),
+            ("max_accesses", Json::num(self.max_accesses as f64)),
+            ("shard_index", Json::num(self.shard.index as f64)),
+            ("shard_total", Json::num(self.shard.total as f64)),
+            ("total_slots", Json::num(self.total_slots as f64)),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|(slot, m)| {
+                            Json::obj(vec![
+                                ("slot", Json::num(*slot as f64)),
+                                ("metrics", m.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardData, String> {
+        let fmt = j.get_str("format").unwrap_or("");
+        if fmt != SHARD_FORMAT {
+            return Err(format!(
+                "not a daemon-sim shard file (format '{fmt}', want '{SHARD_FORMAT}')"
+            ));
+        }
+        let num = |k: &str| {
+            j.get_f64(k)
+                .ok_or_else(|| format!("shard json: missing '{k}'"))
+        };
+        let ids = j
+            .get_arr("ids")
+            .ok_or("shard json: missing 'ids'")?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| "shard json: non-string id".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        let scale = scale_by_name(j.get_str("scale").unwrap_or(""))?;
+        let shard = Shard { index: num("shard_index")? as usize, total: num("shard_total")? as usize };
+        if shard.total == 0 || shard.index >= shard.total {
+            return Err(format!("shard json: bad shard {}/{}", shard.index, shard.total));
+        }
+        let mut results = Vec::new();
+        for entry in j.get_arr("results").ok_or("shard json: missing 'results'")? {
+            let slot = entry
+                .get_f64("slot")
+                .ok_or("shard json: result missing 'slot'")? as usize;
+            let metrics = Metrics::from_json(
+                entry.get("metrics").ok_or("shard json: result missing 'metrics'")?,
+            )?;
+            results.push((slot, metrics));
+        }
+        Ok(ShardData {
+            ids,
+            scale,
+            max_accesses: num("max_accesses")? as usize,
+            shard,
+            total_slots: num("total_slots")? as usize,
+            results,
+        })
+    }
+}
+
+/// Outcome of a sweep: the full figure set, or this shard's raw metrics.
+pub enum SweepResult {
+    /// `(experiment id, its tables)`, in request order.
+    Tables(Vec<(String, Vec<Table>)>),
+    Shard(ShardData),
+}
+
+/// Batch every requested experiment's cells into one flat job list and run
+/// (this shard of) it.
+pub fn sweep(
+    ids: &[String],
+    r: &Runner,
+    cache: &TraceCache,
+    shard: Shard,
+    jobs: usize,
+) -> Result<SweepResult, String> {
+    let plans = plans_for(ids, r)?;
+    sweep_plans(plans, ids, r, cache, shard, jobs)
+}
+
+/// [`sweep`] over pre-built plans (tests hand in reduced workload sets).
+pub fn sweep_plans(
+    plans: Vec<Plan>,
+    ids: &[String],
+    r: &Runner,
+    cache: &TraceCache,
+    shard: Shard,
+    jobs: usize,
+) -> Result<SweepResult, String> {
+    if shard.total == 1 {
+        let cells: Vec<CellSpec> =
+            plans.iter().flat_map(|p| p.cells.iter().cloned()).collect();
+        let all: Vec<Metrics> = run_cells_flat(r, cache, &cells, shard, jobs)
+            .into_iter()
+            .map(|m| m.expect("unsharded run must fill every slot"))
+            .collect();
+        Ok(SweepResult::Tables(assemble_all(plans, &all)))
+    } else {
+        Ok(SweepResult::Shard(shard_plans(&plans, ids, r, cache, shard, jobs)))
+    }
+}
+
+/// Run (this shard of) the plans' cells and package the raw per-slot
+/// results.  Works for any `total >= 1` — an explicit `--shard 0/1` is a
+/// complete run that still emits a mergeable shard file.
+pub fn shard_plans(
+    plans: &[Plan],
+    ids: &[String],
+    r: &Runner,
+    cache: &TraceCache,
+    shard: Shard,
+    jobs: usize,
+) -> ShardData {
+    let cells: Vec<CellSpec> =
+        plans.iter().flat_map(|p| p.cells.iter().cloned()).collect();
+    let slots = run_cells_flat(r, cache, &cells, shard, jobs);
+    let results = slots
+        .into_iter()
+        .enumerate()
+        .filter_map(|(i, m)| m.map(|m| (i, m)))
+        .collect();
+    ShardData {
+        ids: ids.to_vec(),
+        scale: r.scale,
+        max_accesses: r.max_accesses,
+        shard,
+        total_slots: cells.len(),
+        results,
+    }
+}
+
+/// [`shard_plans`] from experiment ids — what `--shard I/N` runs.
+pub fn sweep_shard(
+    ids: &[String],
+    r: &Runner,
+    cache: &TraceCache,
+    shard: Shard,
+    jobs: usize,
+) -> Result<ShardData, String> {
+    let plans = plans_for(ids, r)?;
+    Ok(shard_plans(&plans, ids, r, cache, shard, jobs))
+}
+
+/// Hand each plan its slice of the flat result vector, in declaration
+/// order.
+fn assemble_all(plans: Vec<Plan>, all: &[Metrics]) -> Vec<(String, Vec<Table>)> {
+    let mut out = Vec::with_capacity(plans.len());
+    let mut off = 0;
+    for p in plans {
+        let n = p.cells.len();
+        let tables = (p.assemble)(&all[off..off + n]);
+        off += n;
+        out.push((p.id, tables));
+    }
+    debug_assert_eq!(off, all.len());
+    out
+}
+
+/// Recombine shard files: headers must agree, every slot must be covered
+/// exactly once, and assembly re-runs the same deterministic plans the
+/// sharded runs used — so the output is byte-identical to an unsharded
+/// sweep of the same ids.
+pub fn merge_shards(shards: &[ShardData]) -> Result<Vec<(String, Vec<Table>)>, String> {
+    let first = shards.first().ok_or("merge: no shard files given")?;
+    let r = Runner {
+        scale: first.scale,
+        max_accesses: first.max_accesses,
+        threads: 1,
+    };
+    let plans = plans_for(&first.ids, &r)?;
+    merge_with_plans(plans, shards)
+}
+
+/// [`merge_shards`] over pre-built plans (tests hand in reduced sets).
+pub fn merge_with_plans(
+    plans: Vec<Plan>,
+    shards: &[ShardData],
+) -> Result<Vec<(String, Vec<Table>)>, String> {
+    let first = shards.first().ok_or("merge: no shard files given")?;
+    for s in &shards[1..] {
+        if s.ids != first.ids
+            || s.scale != first.scale
+            || s.max_accesses != first.max_accesses
+            || s.total_slots != first.total_slots
+            || s.shard.total != first.shard.total
+        {
+            return Err(format!(
+                "merge: shard {}/{} disagrees with shard {}/{} on the sweep header",
+                s.shard.index, s.shard.total, first.shard.index, first.shard.total
+            ));
+        }
+    }
+    let planned: usize = plans.iter().map(|p| p.cells.len()).sum();
+    if planned != first.total_slots {
+        return Err(format!(
+            "merge: shard files carry {} slots but the current experiment \
+             definitions produce {planned} — regenerate the shards",
+            first.total_slots
+        ));
+    }
+    let mut all: Vec<Option<Metrics>> = vec![None; first.total_slots];
+    for s in shards {
+        for (slot, m) in &s.results {
+            let cell = all
+                .get_mut(*slot)
+                .ok_or_else(|| format!("merge: slot {slot} out of range"))?;
+            if cell.is_some() {
+                return Err(format!("merge: slot {slot} provided by two shards"));
+            }
+            *cell = Some(m.clone());
+        }
+    }
+    let missing = all.iter().filter(|m| m.is_none()).count();
+    if missing > 0 {
+        return Err(format!(
+            "merge: {missing} of {} slots missing — pass every shard 0..{}",
+            all.len(),
+            first.shard.total
+        ));
+    }
+    let all: Vec<Metrics> = all.into_iter().map(Option::unwrap).collect();
+    Ok(assemble_all(plans, &all))
+}
+
+/// Machine-readable figure set — the artifact the sharded-vs-unsharded
+/// byte-identity check compares (`figures.json`).
+pub fn figures_json(sets: &[(String, Vec<Table>)]) -> Json {
+    Json::obj(vec![(
+        "figures",
+        Json::Arr(
+            sets.iter()
+                .map(|(id, tables)| {
+                    Json::obj(vec![
+                        ("id", Json::str(id)),
+                        (
+                            "tables",
+                            Json::Arr(tables.iter().map(Table::to_json).collect()),
+                        ),
+                    ])
+                })
+                .collect(),
+        ),
+    )])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::main_results;
+
+    fn mini_plans(r: &Runner) -> Vec<Plan> {
+        vec![
+            main_results::fig9_plan(r, &["pr"]),
+            main_results::fig10_plan(r, &["pr"]),
+        ]
+    }
+
+    fn mini_ids() -> Vec<String> {
+        vec!["fig9".to_string(), "fig10".to_string()]
+    }
+
+    #[test]
+    fn flat_sweep_generates_each_trace_once() {
+        let r = Runner::test();
+        let cache = TraceCache::new();
+        let plans = mini_plans(&r);
+        let n_cells: usize = plans.iter().map(|p| p.cells.len()).sum();
+        let res = sweep_plans(plans, &mini_ids(), &r, &cache, Shard::full(), 4).unwrap();
+        let SweepResult::Tables(sets) = res else { panic!("expected tables") };
+        assert_eq!(sets.len(), 2);
+        assert_eq!(sets[0].0, "fig9");
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1, "one distinct (workload, scale, seed, cap) key");
+        assert_eq!(stats.hits as usize, n_cells - 1, "every other cell reuses it");
+    }
+
+    #[test]
+    fn sharded_merge_is_byte_identical_to_unsharded() {
+        let r = Runner::test();
+        let full = {
+            let cache = TraceCache::new();
+            match sweep_plans(mini_plans(&r), &mini_ids(), &r, &cache, Shard::full(), 2)
+                .unwrap()
+            {
+                SweepResult::Tables(sets) => sets,
+                SweepResult::Shard(_) => panic!("unsharded run produced a shard"),
+            }
+        };
+        let shards: Vec<ShardData> = (0..2)
+            .map(|index| {
+                let cache = TraceCache::new();
+                let shard = Shard { index, total: 2 };
+                match sweep_plans(mini_plans(&r), &mini_ids(), &r, &cache, shard, 2)
+                    .unwrap()
+                {
+                    SweepResult::Shard(d) => d,
+                    SweepResult::Tables(_) => panic!("sharded run produced tables"),
+                }
+            })
+            .collect();
+        // Round-trip each shard through the JSON wire format the CLI uses.
+        let shards: Vec<ShardData> = shards
+            .iter()
+            .map(|d| {
+                ShardData::from_json(&Json::parse(&d.to_json().to_string()).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        let merged = merge_with_plans(mini_plans(&r), &shards).unwrap();
+        assert_eq!(
+            figures_json(&full).to_string(),
+            figures_json(&merged).to_string(),
+            "sharded + merged figure JSON must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn scheduler_is_thread_count_invariant() {
+        let r = Runner::test();
+        let plan = main_results::fig10_plan(&r, &["bf"]);
+        let one = run_cells_flat(&r, &TraceCache::new(), &plan.cells, Shard::full(), 1);
+        let many = run_cells_flat(&r, &TraceCache::new(), &plan.cells, Shard::full(), 8);
+        assert_eq!(one.len(), many.len());
+        for (a, b) in one.iter().zip(many.iter()) {
+            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn shards_partition_the_slots() {
+        assert!(Shard::full().owns(0) && Shard::full().owns(17));
+        let s0 = Shard { index: 0, total: 2 };
+        let s1 = Shard { index: 1, total: 2 };
+        for slot in 0..10 {
+            assert_ne!(s0.owns(slot), s1.owns(slot));
+        }
+    }
+
+    #[test]
+    fn merge_rejects_incomplete_duplicate_and_mismatched_shards() {
+        let r = Runner::test();
+        let mk = |index| {
+            let cache = TraceCache::new();
+            match sweep_plans(
+                vec![main_results::fig10_plan(&r, &["pr"])],
+                &["fig10".to_string()],
+                &r,
+                &cache,
+                Shard { index, total: 2 },
+                2,
+            )
+            .unwrap()
+            {
+                SweepResult::Shard(d) => d,
+                SweepResult::Tables(_) => panic!(),
+            }
+        };
+        let d0 = mk(0);
+        let plans = || vec![main_results::fig10_plan(&r, &["pr"])];
+        let err = merge_with_plans(plans(), &[d0.clone()]).unwrap_err();
+        assert!(err.contains("missing"), "{err}");
+        let err = merge_with_plans(plans(), &[d0.clone(), d0.clone()]).unwrap_err();
+        assert!(err.contains("two shards"), "{err}");
+        let mut wrong = d0.clone();
+        wrong.total_slots += 1;
+        let err = merge_with_plans(plans(), &[d0.clone(), wrong]).unwrap_err();
+        assert!(err.contains("header"), "{err}");
+        assert!(merge_with_plans(plans(), &[d0, mk(1)]).is_ok());
+    }
+
+    #[test]
+    fn explicit_single_shard_still_merges_to_full_tables() {
+        // `--shard 0/1` must behave like any other shard matrix entry.
+        let r = Runner::test();
+        let plans = || vec![main_results::fig10_plan(&r, &["pr"])];
+        let ids = vec!["fig10".to_string()];
+        let full = match sweep_plans(plans(), &ids, &r, &TraceCache::new(), Shard::full(), 2)
+            .unwrap()
+        {
+            SweepResult::Tables(sets) => sets,
+            SweepResult::Shard(_) => panic!(),
+        };
+        let d = shard_plans(&plans(), &ids, &r, &TraceCache::new(), Shard::full(), 2);
+        assert_eq!(d.results.len(), d.total_slots, "0/1 shard covers every slot");
+        let merged = merge_with_plans(plans(), &[d]).unwrap();
+        assert_eq!(figures_json(&full).to_string(), figures_json(&merged).to_string());
+    }
+
+    #[test]
+    fn table1_plan_has_no_cells_and_still_assembles() {
+        let r = Runner::test();
+        let plan = plan_for("table1", &r).unwrap();
+        assert!(plan.cells.is_empty());
+        let tables = run_plan(&r, plan);
+        assert!(tables[0].render().contains("TOTAL compute engine"));
+    }
+}

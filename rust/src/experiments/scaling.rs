@@ -1,15 +1,21 @@
 //! Figs. 15, 17, 18, 22 — multithreaded, multi-memory-component and
-//! multi-workload scaling.
+//! multi-workload scaling, declared as orchestrator [`Plan`]s.
 
 use super::common::{speedup, Runner};
+use super::orchestrator::{self, CellSpec, Plan};
 use crate::config::{NetConfig, SimConfig};
+use crate::metrics::Metrics;
 use crate::schemes::SchemeKind;
 use crate::util::stats::geomean;
 use crate::util::table::Table;
 use crate::workloads::SUBSET;
 
+fn owned(workloads: &[&str]) -> Vec<String> {
+    workloads.iter().map(|s| s.to_string()).collect()
+}
+
 /// Fig. 15 — multithreaded (8 OoO cores) speedup over Remote.
-pub fn fig15(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+pub fn fig15_plan(_r: &Runner, workloads: &[&str]) -> Plan {
     let cfg = SimConfig::default().with_cores(8);
     let kinds = [
         SchemeKind::Lc,
@@ -18,24 +24,37 @@ pub fn fig15(r: &Runner, workloads: &[&str]) -> Vec<Table> {
         SchemeKind::Daemon,
         SchemeKind::Local,
     ];
-    let mut table = Table::new(
-        "Fig 15: multithreaded (8 cores) speedup over Remote",
-        &["workload", "LC", "BP", "PQ", "DaeMon", "Local"],
-    );
-    let mut per: Vec<Vec<f64>> = vec![Vec::new(); kinds.len()];
-    for wl in workloads {
-        let (trace, profile) = r.gen_trace(wl, cfg.seed);
-        let mut cells = vec![(SchemeKind::Remote, cfg.clone())];
-        cells.extend(kinds.iter().map(|&k| (k, cfg.clone())));
-        let ms = r.run_cells(&trace, profile, &cells);
-        let vals: Vec<f64> = ms[1..].iter().map(|m| speedup(m, &ms[0])).collect();
-        for (i, v) in vals.iter().enumerate() {
-            per[i].push(*v);
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for wl in &workloads {
+        cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg.clone()));
+        for &k in &kinds {
+            cells.push(CellSpec::new(wl, k, cfg.clone()));
         }
-        table.row_f(wl, &vals);
     }
-    table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_wl = 1 + kinds.len();
+        let mut table = Table::new(
+            "Fig 15: multithreaded (8 cores) speedup over Remote",
+            &["workload", "LC", "BP", "PQ", "DaeMon", "Local"],
+        );
+        let mut per: Vec<Vec<f64>> = vec![Vec::new(); kinds.len()];
+        for (w, wl) in workloads.iter().enumerate() {
+            let row = &ms[w * per_wl..(w + 1) * per_wl];
+            let vals: Vec<f64> = row[1..].iter().map(|m| speedup(m, &row[0])).collect();
+            for (i, v) in vals.iter().enumerate() {
+                per[i].push(*v);
+            }
+            table.row_f(wl, &vals);
+        }
+        table.row_f("geomean", &per.iter().map(|v| geomean(v)).collect::<Vec<_>>());
+        vec![table]
+    });
+    Plan { id: "fig15".into(), cells, assemble }
+}
+
+pub fn fig15(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig15_plan(r, workloads))
 }
 
 /// Fig. 17's memory-component configurations (table in the paper).
@@ -73,89 +92,128 @@ pub fn mc_configs() -> Vec<(&'static str, Vec<NetConfig>)> {
 
 /// Fig. 17 — Remote and DaeMon normalized to Local across memory-component
 /// configurations.
-pub fn fig17(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let mut table = Table::new(
-        "Fig 17: IPC normalized to Local across memory-component configs (geomean)",
-        &["config", "Remote", "DaeMon"],
-    );
-    for (label, nets) in mc_configs() {
+pub fn fig17_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    let kinds = [SchemeKind::Local, SchemeKind::Remote, SchemeKind::Daemon];
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for (_, nets) in mc_configs() {
         let cfg = SimConfig::default().with_memory_components(nets);
-        let mut remote = Vec::new();
-        let mut daemon = Vec::new();
-        for wl in workloads {
-            let (trace, profile) = r.gen_trace(wl, cfg.seed);
-            let cells = vec![
-                (SchemeKind::Local, cfg.clone()),
-                (SchemeKind::Remote, cfg.clone()),
-                (SchemeKind::Daemon, cfg.clone()),
-            ];
-            let ms = r.run_cells(&trace, profile, &cells);
-            remote.push(speedup(&ms[1], &ms[0]));
-            daemon.push(speedup(&ms[2], &ms[0]));
+        for wl in &workloads {
+            for &k in &kinds {
+                cells.push(CellSpec::new(wl, k, cfg.clone()));
+            }
         }
-        table.row_f(label, &[geomean(&remote), geomean(&daemon)]);
     }
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_cfg = workloads.len() * kinds.len();
+        let mut table = Table::new(
+            "Fig 17: IPC normalized to Local across memory-component configs (geomean)",
+            &["config", "Remote", "DaeMon"],
+        );
+        for (c, (label, _)) in mc_configs().iter().enumerate() {
+            let block = &ms[c * per_cfg..(c + 1) * per_cfg];
+            let mut remote = Vec::new();
+            let mut daemon = Vec::new();
+            for w in 0..workloads.len() {
+                let row = &block[w * kinds.len()..(w + 1) * kinds.len()];
+                remote.push(speedup(&row[1], &row[0]));
+                daemon.push(speedup(&row[2], &row[0]));
+            }
+            table.row_f(label, &[geomean(&remote), geomean(&daemon)]);
+        }
+        vec![table]
+    });
+    Plan { id: "fig17".into(), cells, assemble }
 }
 
-/// Fig. 18 — multiple concurrent heterogeneous workloads on a 4-core
-/// compute component; per-mix DaeMon speedup over Remote.
-pub fn fig18(r: &Runner) -> Vec<Table> {
-    let mixes: Vec<(&str, Vec<&str>)> = vec![
+pub fn fig17(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig17_plan(r, workloads))
+}
+
+/// Fig. 18's workload mixes.
+fn fig18_mixes() -> Vec<(&'static str, Vec<&'static str>)> {
+    vec![
         ("pr+nw+sp+dr", vec!["pr", "nw", "sp", "dr"]),
         ("bf+ts+hp+rs", vec!["bf", "ts", "hp", "rs"]),
         ("kc+sl+pf+tr", vec!["kc", "sl", "pf", "tr"]),
         ("pr+pr+sp+sp", vec!["pr", "pr", "sp", "sp"]),
-    ];
-    let mut table = Table::new(
-        "Fig 18: DaeMon over Remote, 4 concurrent workloads on 4 cores",
-        &["mix", "speedup"],
-    );
-    let mut all = Vec::new();
-    for (label, mix) in &mixes {
+    ]
+}
+
+/// Fig. 18 — multiple concurrent heterogeneous workloads on a 4-core
+/// compute component; per-mix DaeMon speedup over Remote.
+pub fn fig18_plan(_r: &Runner) -> Plan {
+    let mut cells = Vec::new();
+    for (_, mix) in fig18_mixes() {
         // Local memory shrinks per job (~9% each with 4 jobs, per paper).
         let cfg = SimConfig::default()
             .with_cores(4)
             .with_local_fraction(0.09 * 4.0 / 4.0 + 0.11); // ~20% of combined
-        let remote = r.run_mix(mix, SchemeKind::Remote, &cfg);
-        let daemon = r.run_mix(mix, SchemeKind::Daemon, &cfg);
-        let sp = speedup(&daemon, &remote);
-        all.push(sp);
-        table.row_f(label, &[sp]);
+        cells.push(CellSpec::mix(&mix, SchemeKind::Remote, cfg.clone()));
+        cells.push(CellSpec::mix(&mix, SchemeKind::Daemon, cfg));
     }
-    table.row_f("geomean", &[geomean(&all)]);
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let mut table = Table::new(
+            "Fig 18: DaeMon over Remote, 4 concurrent workloads on 4 cores",
+            &["mix", "speedup"],
+        );
+        let mut all = Vec::new();
+        for (i, (label, _)) in fig18_mixes().iter().enumerate() {
+            let sp = speedup(&ms[2 * i + 1], &ms[2 * i]);
+            all.push(sp);
+            table.row_f(label, &[sp]);
+        }
+        table.row_f("geomean", &[geomean(&all)]);
+        vec![table]
+    });
+    Plan { id: "fig18".into(), cells, assemble }
+}
+
+pub fn fig18(r: &Runner) -> Vec<Table> {
+    orchestrator::run_plan(r, fig18_plan(r))
 }
 
 /// Fig. 22 — 1/2/4 memory components at identical per-component config.
-pub fn fig22(r: &Runner, workloads: &[&str]) -> Vec<Table> {
-    let mut table = Table::new(
-        "Fig 22: DaeMon speedup over Remote vs #memory components (geomean)",
-        &["components", "speedup", "Remote-IPC-gain", "DaeMon-IPC-gain"],
-    );
-    let mut base: Option<(f64, f64)> = None;
-    for n in [1usize, 2, 4] {
+pub fn fig22_plan(_r: &Runner, workloads: &[&str]) -> Plan {
+    const COUNTS: [usize; 3] = [1, 2, 4];
+    let workloads = owned(workloads);
+    let mut cells = Vec::new();
+    for &n in &COUNTS {
         let cfg = SimConfig::default()
             .with_memory_components(vec![NetConfig::new(100.0, 4.0); n]);
-        let mut sp = Vec::new();
-        let mut r_ipc = Vec::new();
-        let mut d_ipc = Vec::new();
-        for wl in workloads {
-            let (trace, profile) = r.gen_trace(wl, cfg.seed);
-            let cells = vec![
-                (SchemeKind::Remote, cfg.clone()),
-                (SchemeKind::Daemon, cfg.clone()),
-            ];
-            let ms = r.run_cells(&trace, profile, &cells);
-            sp.push(speedup(&ms[1], &ms[0]));
-            r_ipc.push(ms[0].ipc());
-            d_ipc.push(ms[1].ipc());
+        for wl in &workloads {
+            cells.push(CellSpec::new(wl, SchemeKind::Remote, cfg.clone()));
+            cells.push(CellSpec::new(wl, SchemeKind::Daemon, cfg.clone()));
         }
-        let (rg, dg) = (geomean(&r_ipc), geomean(&d_ipc));
-        let (rb, db) = *base.get_or_insert((rg, dg));
-        table.row_f(&format!("{n}"), &[geomean(&sp), rg / rb, dg / db]);
     }
-    vec![table]
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let per_n = 2 * workloads.len();
+        let mut table = Table::new(
+            "Fig 22: DaeMon speedup over Remote vs #memory components (geomean)",
+            &["components", "speedup", "Remote-IPC-gain", "DaeMon-IPC-gain"],
+        );
+        let mut base: Option<(f64, f64)> = None;
+        for (i, &n) in COUNTS.iter().enumerate() {
+            let block = &ms[i * per_n..(i + 1) * per_n];
+            let mut sp = Vec::new();
+            let mut r_ipc = Vec::new();
+            let mut d_ipc = Vec::new();
+            for w in 0..workloads.len() {
+                sp.push(speedup(&block[2 * w + 1], &block[2 * w]));
+                r_ipc.push(block[2 * w].ipc());
+                d_ipc.push(block[2 * w + 1].ipc());
+            }
+            let (rg, dg) = (geomean(&r_ipc), geomean(&d_ipc));
+            let (rb, db) = *base.get_or_insert((rg, dg));
+            table.row_f(&format!("{n}"), &[geomean(&sp), rg / rb, dg / db]);
+        }
+        vec![table]
+    });
+    Plan { id: "fig22".into(), cells, assemble }
+}
+
+pub fn fig22(r: &Runner, workloads: &[&str]) -> Vec<Table> {
+    orchestrator::run_plan(r, fig22_plan(r, workloads))
 }
 
 pub fn fig15_default(r: &Runner) -> Vec<Table> {

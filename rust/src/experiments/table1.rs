@@ -1,7 +1,13 @@
 //! Table 1 — DaeMon's hardware structure overheads (CACTI-style model).
 
+use super::orchestrator::Plan;
 use crate::daemon::hw_cost::{table1, total_kb};
 use crate::util::table::Table;
+
+/// Orchestrator plan: no simulation cells, assembly is the analytic model.
+pub fn plan() -> Plan {
+    Plan { id: "table1".into(), cells: Vec::new(), assemble: Box::new(|_| run()) }
+}
 
 pub fn run() -> Vec<Table> {
     let mut t = Table::new(

@@ -4,19 +4,25 @@
 //! daemon-sim run --workload pr --scheme daemon [--switch-ns 100]
 //!            [--bw-factor 4] [--cores 1] [--ratio 0.25] [--fifo]
 //!            [--max-accesses N] [--estimator exact|pjrt] [--json]
-//! daemon-sim experiment fig8 [fig9 ...] [--quick] [--out results/]
+//! daemon-sim experiment fig8 [fig9 ...] [--quick] [--jobs K]
+//!            [--shard I/N] [--out results/]
 //! daemon-sim experiment all [--quick]
+//! daemon-sim merge shard-0-of-2.json shard-1-of-2.json [--out results/]
 //! daemon-sim list
 //! ```
 
 use daemon_sim::config::{Replacement, SimConfig};
-use daemon_sim::experiments::{run_experiment, Runner, ALL_EXPERIMENTS};
+use daemon_sim::experiments::orchestrator::{self, Shard, ShardData, SweepResult};
+use daemon_sim::experiments::{Runner, ALL_EXPERIMENTS};
 use daemon_sim::runtime::{ModelRunner, NetParams, PjrtOracle};
 use daemon_sim::schemes::SchemeKind;
 use daemon_sim::system::Machine;
 use daemon_sim::util::cli::Args;
 use daemon_sim::util::json::Json;
+use daemon_sim::util::table::Table;
+use daemon_sim::workloads::cache::TraceCache;
 use daemon_sim::workloads::{by_name, Scale, ALL};
+use std::path::PathBuf;
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -28,7 +34,10 @@ fn main() {
     };
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
-        Some("experiment") => cmd_experiment(&args),
+        // `sweep` is an alias: every experiment run goes through the
+        // orchestrator's flat scheduler.
+        Some("experiment") | Some("sweep") => cmd_experiment(&args),
+        Some("merge") => cmd_merge(&args),
         Some("list") => cmd_list(),
         _ => {
             eprintln!("{}", USAGE);
@@ -43,7 +52,9 @@ daemon-sim — DaeMon (SIGMETRICS'23) disaggregated-system simulator
 
 USAGE:
   daemon-sim run --workload <wl> --scheme <s> [options]
-  daemon-sim experiment <id>... | all [--quick] [--out DIR]
+  daemon-sim experiment <id>... | all [--quick] [--jobs K] [--shard I/N]
+             [--out DIR]
+  daemon-sim merge <shard.json>... [--out DIR]
   daemon-sim list
 
 RUN OPTIONS:
@@ -61,6 +72,13 @@ RUN OPTIONS:
   --estimator   exact | pjrt (AOT artifact)       [exact]
   --seed        RNG seed                          [3565]
   --json        machine-readable output
+
+EXPERIMENT OPTIONS:
+  --quick       400K-access traces (CI smoke) instead of 2M
+  --jobs K      worker threads for the cell scheduler  [cores-1]
+  --shard I/N   run only slots with slot%N==I and write a
+                shard-I-of-N.json for `merge` (CI grid splitting)
+  --out DIR     write per-table CSVs + figures.json (or the shard file)
 ";
 
 fn cmd_list() -> i32 {
@@ -186,47 +204,139 @@ fn cmd_run(args: &Args) -> i32 {
     }
 }
 
-fn cmd_experiment(args: &Args) -> i32 {
-    let runner = if args.flag("quick") {
-        Runner::quick()
-    } else {
-        Runner::paper()
-    };
-    let ids: Vec<String> = if args.positional.iter().any(|p| p == "all") {
-        ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
-    } else if args.positional.is_empty() {
-        eprintln!("no experiment id given; try `daemon-sim list`");
-        return 2;
-    } else {
-        args.positional.clone()
-    };
-    let out_dir = args.get("out").map(std::path::PathBuf::from);
-    if let Some(d) = &out_dir {
-        let _ = std::fs::create_dir_all(d);
-    }
-    for id in &ids {
-        let t0 = std::time::Instant::now();
-        match run_experiment(id, &runner) {
-            None => {
-                eprintln!("unknown experiment '{id}' — see `daemon-sim list`");
-                return 1;
-            }
-            Some(tables) => {
-                for t in &tables {
-                    println!("{}", t.render());
-                    if let Some(d) = &out_dir {
-                        let fname = t
-                            .title
-                            .chars()
-                            .map(|c| if c.is_alphanumeric() { c } else { '_' })
-                            .collect::<String>();
-                        let _ =
-                            std::fs::write(d.join(format!("{fname}.csv")), t.to_csv());
-                    }
-                }
-                eprintln!("[{id}: {:.1}s]", t0.elapsed().as_secs_f64());
+/// Print a figure set and write its CSVs + figures.json under `out_dir`.
+fn emit_sets(
+    sets: &[(String, Vec<Table>)],
+    out_dir: &Option<PathBuf>,
+) -> Result<(), String> {
+    for (id, tables) in sets {
+        for t in tables {
+            println!("{}", t.render());
+            if let Some(d) = out_dir {
+                let fname = t
+                    .title
+                    .chars()
+                    .map(|c| if c.is_alphanumeric() { c } else { '_' })
+                    .collect::<String>();
+                std::fs::write(d.join(format!("{fname}.csv")), t.to_csv())
+                    .map_err(|e| format!("write csv for {id}: {e}"))?;
             }
         }
     }
-    0
+    if let Some(d) = out_dir {
+        let path = d.join("figures.json");
+        std::fs::write(&path, orchestrator::figures_json(sets).to_string())
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+        eprintln!("[wrote {}]", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> i32 {
+    let inner = || -> Result<i32, String> {
+        let mut runner = if args.flag("quick") {
+            Runner::quick()
+        } else {
+            Runner::paper()
+        };
+        runner.threads = args.get_usize("jobs", runner.threads)?.max(1);
+        // An explicit --shard always produces a shard file, even 0/1, so
+        // scripted shard matrices work at N=1.
+        let shard = args
+            .get_shard("shard")?
+            .map(|(index, total)| Shard { index, total });
+        let ids: Vec<String> = if args.positional.iter().any(|p| p == "all") {
+            ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+        } else if args.positional.is_empty() {
+            return Err("no experiment id given; try `daemon-sim list`".into());
+        } else {
+            args.positional.clone()
+        };
+        let out_dir = args.get("out").map(PathBuf::from);
+        if let Some(d) = &out_dir {
+            std::fs::create_dir_all(d).map_err(|e| format!("{}: {e}", d.display()))?;
+        }
+
+        let t0 = std::time::Instant::now();
+        let cache = TraceCache::global();
+        match shard {
+            None => {
+                let sets = match orchestrator::sweep(
+                    &ids,
+                    &runner,
+                    cache,
+                    Shard::full(),
+                    runner.threads,
+                )? {
+                    SweepResult::Tables(sets) => sets,
+                    SweepResult::Shard(_) => unreachable!("full sweep yields tables"),
+                };
+                emit_sets(&sets, &out_dir)?;
+                let stats = cache.stats();
+                eprintln!(
+                    "[{} experiment(s), {:.1}s, {} jobs; traces: {} generated, {} reused]",
+                    sets.len(),
+                    t0.elapsed().as_secs_f64(),
+                    runner.threads,
+                    stats.misses,
+                    stats.hits
+                );
+            }
+            Some(shard) => {
+                let data =
+                    orchestrator::sweep_shard(&ids, &runner, cache, shard, runner.threads)?;
+                let fname = format!("shard-{}-of-{}.json", data.shard.index, data.shard.total);
+                let path = out_dir.unwrap_or_else(|| PathBuf::from(".")).join(fname);
+                std::fs::write(&path, data.to_json().to_string())
+                    .map_err(|e| format!("write {}: {e}", path.display()))?;
+                eprintln!(
+                    "[shard {}/{}: {} of {} cells in {:.1}s -> {}]",
+                    data.shard.index,
+                    data.shard.total,
+                    data.results.len(),
+                    data.total_slots,
+                    t0.elapsed().as_secs_f64(),
+                    path.display()
+                );
+            }
+        }
+        Ok(0)
+    };
+    match inner() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_merge(args: &Args) -> i32 {
+    let inner = || -> Result<i32, String> {
+        if args.positional.is_empty() {
+            return Err("merge: pass the shard JSON files to recombine".into());
+        }
+        let mut shards = Vec::new();
+        for p in &args.positional {
+            let text =
+                std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+            let j = Json::parse(&text).map_err(|e| format!("{p}: bad JSON: {e}"))?;
+            shards.push(ShardData::from_json(&j).map_err(|e| format!("{p}: {e}"))?);
+        }
+        let sets = orchestrator::merge_shards(&shards)?;
+        let out_dir = args.get("out").map(PathBuf::from);
+        if let Some(d) = &out_dir {
+            std::fs::create_dir_all(d).map_err(|e| format!("{}: {e}", d.display()))?;
+        }
+        emit_sets(&sets, &out_dir)?;
+        eprintln!("[merged {} shard file(s) into {} experiment(s)]", shards.len(), sets.len());
+        Ok(0)
+    };
+    match inner() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
 }

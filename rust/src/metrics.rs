@@ -1,5 +1,6 @@
 //! Simulation metrics: everything the paper's figures plot.
 
+use crate::util::json::Json;
 use crate::util::stats::Running;
 
 #[derive(Clone, Debug, Default)]
@@ -116,6 +117,98 @@ impl Metrics {
             .map(|(&t, &h)| if t == 0 { 0.0 } else { h as f64 / t as f64 })
             .collect()
     }
+
+    /// Serialize every field for the sharded-sweep wire format.  f64s
+    /// survive exactly (shortest-roundtrip printing); counters are well
+    /// below 2^53 so the f64 carrier is lossless.
+    pub fn to_json(&self) -> Json {
+        let u64s =
+            |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect());
+        Json::obj(vec![
+            ("instructions", Json::num(self.instructions as f64)),
+            ("cycles", Json::num(self.cycles)),
+            ("stall_cycles", Json::num(self.stall_cycles)),
+            ("access_cost_n", Json::num(self.access_cost.n as f64)),
+            ("access_cost_sum", Json::num(self.access_cost.sum)),
+            ("access_cost_min", finite_or_null(self.access_cost.min)),
+            ("access_cost_max", finite_or_null(self.access_cost.max)),
+            ("local_hits", Json::num(self.local_hits as f64)),
+            ("local_misses", Json::num(self.local_misses as f64)),
+            ("pages_moved", Json::num(self.pages_moved as f64)),
+            ("pages_throttled", Json::num(self.pages_throttled as f64)),
+            ("lines_moved", Json::num(self.lines_moved as f64)),
+            ("writeback_bytes", Json::num(self.writeback_bytes as f64)),
+            ("net_bytes_in", Json::num(self.net_bytes_in as f64)),
+            ("net_utilization", Json::num(self.net_utilization)),
+            ("compression_ratio", Json::num(self.compression_ratio)),
+            ("interval_instructions", u64s(&self.interval_instructions)),
+            ("interval_local_hits", u64s(&self.interval_local_hits)),
+            ("interval_local_total", u64s(&self.interval_local_total)),
+        ])
+    }
+
+    /// Inverse of [`Metrics::to_json`].
+    pub fn from_json(j: &Json) -> Result<Metrics, String> {
+        let mut m = Metrics::new();
+        m.instructions = jint(j, "instructions")?;
+        m.cycles = jnum(j, "cycles")?;
+        m.stall_cycles = jnum(j, "stall_cycles")?;
+        m.access_cost = Running {
+            n: jint(j, "access_cost_n")?,
+            sum: jnum(j, "access_cost_sum")?,
+            min: jedge(j, "access_cost_min", f64::INFINITY),
+            max: jedge(j, "access_cost_max", f64::NEG_INFINITY),
+        };
+        m.local_hits = jint(j, "local_hits")?;
+        m.local_misses = jint(j, "local_misses")?;
+        m.pages_moved = jint(j, "pages_moved")?;
+        m.pages_throttled = jint(j, "pages_throttled")?;
+        m.lines_moved = jint(j, "lines_moved")?;
+        m.writeback_bytes = jint(j, "writeback_bytes")?;
+        m.net_bytes_in = jint(j, "net_bytes_in")?;
+        m.net_utilization = jnum(j, "net_utilization")?;
+        m.compression_ratio = jnum(j, "compression_ratio")?;
+        m.interval_instructions = jvec(j, "interval_instructions")?;
+        m.interval_local_hits = jvec(j, "interval_local_hits")?;
+        m.interval_local_total = jvec(j, "interval_local_total")?;
+        Ok(m)
+    }
+}
+
+fn finite_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::num(v)
+    } else {
+        Json::Null
+    }
+}
+
+fn jnum(j: &Json, key: &str) -> Result<f64, String> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("metrics json: missing numeric field '{key}'"))
+}
+
+fn jint(j: &Json, key: &str) -> Result<u64, String> {
+    Ok(jnum(j, key)? as u64)
+}
+
+/// min/max edges: serialized as null when the counter is empty.
+fn jedge(j: &Json, key: &str, empty: f64) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(empty)
+}
+
+fn jvec(j: &Json, key: &str) -> Result<Vec<u64>, String> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("metrics json: missing array field '{key}'"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .map(|f| f as u64)
+                .ok_or_else(|| format!("metrics json: non-numeric entry in '{key}'"))
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -140,6 +233,48 @@ mod tests {
         assert_eq!(m.local_hit_ratio(), 0.0);
         assert_eq!(m.mean_access_cost(), 0.0);
         assert_eq!(m.compression_ratio, 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let mut m = Metrics::new();
+        m.instructions = 123_456_789;
+        m.cycles = 987_654.25;
+        m.stall_cycles = 0.1 + 0.2; // not exactly representable in decimal
+        m.access_cost.add(3.7);
+        m.access_cost.add(1.2);
+        m.local_hits = 10;
+        m.local_misses = 3;
+        m.pages_moved = 7;
+        m.pages_throttled = 1;
+        m.lines_moved = 9;
+        m.writeback_bytes = 4096;
+        m.net_bytes_in = 1 << 40;
+        m.net_utilization = 1.0 / 3.0;
+        m.compression_ratio = 2.39;
+        m.bump_interval(0, 5);
+        m.bump_interval_local(2, true);
+        let s = m.to_json().to_string();
+        let back = Metrics::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(s, back.to_json().to_string(), "round-trip must be stable");
+        assert_eq!(back.instructions, m.instructions);
+        assert_eq!(back.cycles.to_bits(), m.cycles.to_bits());
+        assert_eq!(back.stall_cycles.to_bits(), m.stall_cycles.to_bits());
+        assert_eq!(back.access_cost.n, 2);
+        assert_eq!(back.mean_access_cost(), m.mean_access_cost());
+        assert_eq!(back.interval_instructions, m.interval_instructions);
+        assert_eq!(back.hit_ratio_series(), m.hit_ratio_series());
+    }
+
+    #[test]
+    fn json_roundtrip_handles_empty_running_counter() {
+        let e = Metrics::new();
+        let back = Metrics::from_json(&Json::parse(&e.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back.access_cost.n, 0);
+        assert_eq!(back.access_cost.min, f64::INFINITY);
+        assert_eq!(back.access_cost.max, f64::NEG_INFINITY);
+        assert_eq!(back.mean_access_cost(), 0.0);
     }
 
     #[test]

@@ -35,6 +35,12 @@ pub struct ExactOracle {
 
 impl ExactOracle {
     pub fn new(seed: u64, profiles: &[Profile], algo: crate::compress::Algo) -> Self {
+        // Guard the `comps.len() - 1` in `page_size`: an empty profile
+        // list would underflow there with an opaque panic.
+        assert!(
+            !profiles.is_empty(),
+            "ExactOracle requires at least one content profile"
+        );
         Self {
             comps: profiles
                 .iter()
@@ -116,6 +122,10 @@ impl Machine {
         profiles: Vec<Profile>,
         oracle: Option<Box<dyn SizeOracle>>,
     ) -> Machine {
+        assert!(
+            !profiles.is_empty(),
+            "Machine::new requires at least one content profile (one per core)"
+        );
         let policy = kind.policy();
         let interval_cycles = ns_to_cycles(cfg.interval_ns);
         let local_pages = if policy.local_only {
@@ -611,12 +621,14 @@ impl Machine {
     }
 
     /// Run the traces to completion (one per core, cycled if fewer).
-    pub fn run(&mut self, traces: &[Trace]) -> &Metrics {
+    /// Generic over `Borrow<Trace>` so callers can hand in owned traces or
+    /// `Arc<Trace>`s shared from the trace cache without cloning.
+    pub fn run<T: std::borrow::Borrow<Trace>>(&mut self, traces: &[T]) -> &Metrics {
         assert!(!traces.is_empty());
         // Local-only: preinstall every page.
         if self.policy.local_only {
             for (ci, t) in traces.iter().enumerate().take(self.cores.len()) {
-                for a in &t.accesses {
+                for a in &t.borrow().accesses {
                     let page =
                         Self::page_of(a.addr | ((ci as u64) << self.core_tag_shift));
                     self.local.install(page, 0.0);
@@ -625,7 +637,7 @@ impl Machine {
             // Also cover cores cycling over the same trace.
             if self.cores.len() > traces.len() {
                 for ci in traces.len()..self.cores.len() {
-                    let t = &traces[ci % traces.len()];
+                    let t: &Trace = traces[ci % traces.len()].borrow();
                     for a in &t.accesses {
                         let page =
                             Self::page_of(a.addr | ((ci as u64) << self.core_tag_shift));
@@ -638,7 +650,7 @@ impl Machine {
             // Advance the core with the smallest time that still has work.
             let mut best: Option<(usize, f64)> = None;
             for ci in 0..self.cores.len() {
-                let t = &traces[ci % traces.len()];
+                let t: &Trace = traces[ci % traces.len()].borrow();
                 if self.cores[ci].pos < t.accesses.len() {
                     let time = self.cores[ci].time;
                     if best.map(|(_, bt)| time < bt).unwrap_or(true) {
@@ -647,7 +659,7 @@ impl Machine {
                 }
             }
             let Some((ci, _)) = best else { break };
-            let t = &traces[ci % traces.len()];
+            let t: &Trace = traces[ci % traces.len()].borrow();
             let a = t.accesses[self.cores[ci].pos];
             self.cores[ci].pos += 1;
             self.step(ci, a.addr, a.write, a.gap);
@@ -841,6 +853,37 @@ mod tests {
         assert!(eight.metrics.instructions > 3 * one.metrics.instructions);
         // Per-core progress is slower than the single-core run.
         assert!(eight.metrics.cycles > one.metrics.cycles);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one content profile")]
+    fn machine_rejects_empty_profiles() {
+        let _ = Machine::new(quick_cfg(), SchemeKind::Remote, 128, vec![], None);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one content profile")]
+    fn exact_oracle_rejects_empty_profiles() {
+        let _ = ExactOracle::new(1, &[], crate::compress::Algo::Lz);
+    }
+
+    #[test]
+    fn run_accepts_shared_arc_traces() {
+        use std::sync::Arc;
+        let w = by_name("pr").unwrap();
+        let cfg = quick_cfg();
+        let trace = Arc::new(w.generate(cfg.seed, Scale::Test));
+        let mut m = Machine::new(
+            cfg.clone(),
+            SchemeKind::Daemon,
+            trace.footprint_pages,
+            vec![w.profile()],
+            None,
+        );
+        m.run(std::slice::from_ref(&trace));
+        let owned = run(SchemeKind::Daemon, "pr");
+        assert_eq!(m.metrics.instructions, owned.instructions);
+        assert!((m.metrics.cycles - owned.cycles).abs() < 1e-6);
     }
 
     #[test]

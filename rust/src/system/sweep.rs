@@ -1,12 +1,22 @@
 //! Parallel experiment sweeps: run (workload x scheme x config) cells
 //! across OS threads with `std::thread::scope` (the offline registry has
 //! no rayon; a scoped fan-out is all a deterministic simulator needs).
+//!
+//! Traces come from the global [`TraceCache`] (generated once per key,
+//! shared read-only) and results land in per-cell `OnceLock` slots — no
+//! `Mutex` over the output vector.  For figure-grade sweeps with sharding
+//! and JSON shard files, use `experiments::orchestrator` instead; this is
+//! the lightweight ad-hoc grid API the examples use.
 
 use crate::config::SimConfig;
+use crate::experiments::orchestrator::{run_cell_spec, CellSpec};
+use crate::experiments::Runner;
 use crate::metrics::Metrics;
 use crate::schemes::SchemeKind;
-use crate::system::machine::run_workload;
-use crate::workloads::{by_name, Scale};
+use crate::workloads::cache::TraceCache;
+use crate::workloads::Scale;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 
 /// One sweep cell.
 #[derive(Clone, Debug)]
@@ -25,31 +35,37 @@ pub struct CellResult {
 
 /// Run all cells, fanning out over up to `threads` OS threads.
 pub fn run_cells(cells: Vec<Cell>, threads: usize) -> Vec<CellResult> {
-    let threads = threads.max(1);
     let n = cells.len();
-    let mut results: Vec<Option<CellResult>> = Vec::with_capacity(n);
-    results.resize_with(n, || None);
-    let next = std::sync::atomic::AtomicUsize::new(0);
+    let slots: Vec<OnceLock<Metrics>> = (0..n).map(|_| OnceLock::new()).collect();
+    let next = AtomicUsize::new(0);
     let cells_ref = &cells;
-    let results_mutex = std::sync::Mutex::new(&mut results);
 
     std::thread::scope(|s| {
-        for _ in 0..threads.min(n.max(1)) {
+        for _ in 0..threads.max(1).min(n.max(1)) {
             s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let cell = cells_ref[i].clone();
-                let w = by_name(&cell.workload)
-                    .unwrap_or_else(|| panic!("unknown workload {}", cell.workload));
-                let r = run_workload(&cell.cfg, cell.scheme, w.as_ref(), cell.scale);
-                let out = CellResult { cell, metrics: r.metrics };
-                results_mutex.lock().unwrap()[i] = Some(out);
+                let cell = &cells_ref[i];
+                // Scale is per-cell here, so wrap it in a per-cell Runner
+                // and reuse the orchestrator's single execution path.
+                // Ad-hoc sweeps run the full trace (cap 0).
+                let r = Runner { scale: cell.scale, max_accesses: 0, threads: 1 };
+                let spec = CellSpec::new(&cell.workload, cell.scheme, cell.cfg.clone());
+                let m = run_cell_spec(&r, TraceCache::global(), &spec);
+                let _ = slots[i].set(m);
             });
         }
     });
-    results.into_iter().map(|r| r.unwrap()).collect()
+    cells
+        .into_iter()
+        .zip(slots)
+        .map(|(cell, s)| CellResult {
+            cell,
+            metrics: s.into_inner().expect("sweep slot left unfilled"),
+        })
+        .collect()
 }
 
 /// Default thread pool: physical parallelism minus a little headroom.
@@ -96,5 +112,23 @@ mod tests {
         let rs = run_cells(cells, 4);
         assert_eq!(rs[0].cell.workload, "pr");
         assert_eq!(rs[1].cell.workload, "bf");
+    }
+
+    #[test]
+    fn sweep_matches_run_workload_path() {
+        use crate::system::machine::run_workload;
+        use crate::workloads::by_name;
+        let cfg = SimConfig::default().with_seed(11);
+        let cells = vec![Cell {
+            workload: "pr".to_string(),
+            scheme: SchemeKind::Daemon,
+            cfg: cfg.clone(),
+            scale: Scale::Test,
+        }];
+        let swept = run_cells(cells, 1);
+        let w = by_name("pr").unwrap();
+        let direct = run_workload(&cfg, SchemeKind::Daemon, w.as_ref(), Scale::Test);
+        assert_eq!(swept[0].metrics.instructions, direct.metrics.instructions);
+        assert!((swept[0].metrics.cycles - direct.metrics.cycles).abs() < 1e-6);
     }
 }

@@ -87,6 +87,22 @@ impl Args {
         self.get(name)
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
+
+    /// `--name I/N` shard option (CI grid splitting): returns
+    /// `(index, total)` with `index < total` and `total >= 1`.
+    pub fn get_shard(&self, name: &str) -> Result<Option<(usize, usize)>, String> {
+        let Some(v) = self.get(name) else { return Ok(None) };
+        let bad = || format!("--{name} expects I/N (e.g. 0/2), got '{v}'");
+        let (i, n) = v.split_once('/').ok_or_else(|| bad())?;
+        let i = i.trim().parse::<usize>().map_err(|_| bad())?;
+        let n = n.trim().parse::<usize>().map_err(|_| bad())?;
+        if n == 0 || i >= n {
+            return Err(format!(
+                "--{name}: shard index {i} out of range for {n} shard(s)"
+            ));
+        }
+        Ok(Some((i, n)))
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +146,17 @@ mod tests {
             a.get_list("workloads").unwrap(),
             vec!["pr", "nw", "bf"]
         );
+    }
+
+    #[test]
+    fn shard_option() {
+        let a = parse(&["sweep", "--shard", "1/4"]);
+        assert_eq!(a.get_shard("shard").unwrap(), Some((1, 4)));
+        assert_eq!(parse(&["sweep"]).get_shard("shard").unwrap(), None);
+        for bad in ["2/2", "3/2", "x/2", "1/x", "1", "1/0", "/"] {
+            let a = parse(&["sweep", &format!("--shard={bad}")]);
+            assert!(a.get_shard("shard").is_err(), "accepted '{bad}'");
+        }
     }
 
     #[test]

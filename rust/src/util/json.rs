@@ -60,6 +60,21 @@ impl Json {
         }
     }
 
+    /// Object field as a string, in one step.
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Json::as_str)
+    }
+
+    /// Object field as a number, in one step.
+    pub fn get_f64(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Json::as_f64)
+    }
+
+    /// Object field as an array, in one step.
+    pub fn get_arr(&self, key: &str) -> Option<&[Json]> {
+        self.get(key).and_then(Json::as_arr)
+    }
+
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.ws();
@@ -330,5 +345,19 @@ mod tests {
         let v = Json::str("a\"b\\c\nd");
         let s = v.to_string();
         assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn typed_field_accessors() {
+        let v = Json::obj(vec![
+            ("name", Json::str("shard")),
+            ("slots", Json::num(12.0)),
+            ("list", Json::arr([Json::num(1.0)])),
+        ]);
+        assert_eq!(v.get_str("name"), Some("shard"));
+        assert_eq!(v.get_f64("slots"), Some(12.0));
+        assert_eq!(v.get_arr("list").map(|a| a.len()), Some(1));
+        assert_eq!(v.get_str("slots"), None);
+        assert_eq!(v.get_f64("missing"), None);
     }
 }

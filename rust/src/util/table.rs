@@ -69,6 +69,29 @@ impl Table {
         out
     }
 
+    /// JSON form — the unit the sharded-vs-unsharded byte-identity check
+    /// compares (cells are already-formatted strings, so the comparison is
+    /// exact).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::str(c)).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
     /// CSV form for downstream plotting.
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
@@ -135,6 +158,17 @@ mod tests {
         let csv = t.to_csv();
         assert_eq!(csv.lines().count(), 2);
         assert_eq!(csv.lines().next().unwrap(), "a,b");
+    }
+
+    #[test]
+    fn json_form_keeps_shape() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row_f("r1", &[1.5]);
+        let j = t.to_json();
+        assert_eq!(j.get_str("title"), Some("x"));
+        assert_eq!(j.get_arr("headers").unwrap().len(), 2);
+        let rows = j.get_arr("rows").unwrap();
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_str(), Some("1.500"));
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Global trace cache — the orchestrator's first pillar.
+//!
+//! Traces are pure functions of `(workload, scale, seed, max_accesses)`,
+//! but the seed harness regenerated them once per experiment: a full
+//! figure sweep paid the (expensive) workload generation dozens of times
+//! per workload.  The cache memoizes generation behind an `Arc`, so every
+//! experiment that needs a trace shares one read-only copy, and concurrent
+//! requests for the same key block on a single in-flight generation
+//! instead of duplicating it.
+//!
+//! Hit/miss counters make the "generated at most once per key" invariant
+//! testable (see the orchestrator's `flat_sweep_generates_each_trace_once`).
+
+use super::{by_name, Scale, Trace};
+use crate::compress::synth::Profile;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Everything a trace is a function of.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct TraceKey {
+    pub workload: String,
+    pub scale: Scale,
+    pub seed: u64,
+    /// Trace cap; 0 = unlimited.
+    pub max_accesses: usize,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+type Slot = Arc<OnceLock<(Arc<Trace>, Profile)>>;
+
+pub struct TraceCache {
+    map: Mutex<HashMap<TraceKey, Slot>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TraceCache {
+    pub fn new() -> Self {
+        Self {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide cache every `Runner` and sweep shares by default.
+    pub fn global() -> &'static TraceCache {
+        static GLOBAL: OnceLock<TraceCache> = OnceLock::new();
+        GLOBAL.get_or_init(TraceCache::new)
+    }
+
+    /// Fetch the trace + content profile for a key, generating exactly once
+    /// per key even under concurrent callers.  The map lock is held only
+    /// for the slot lookup; generation runs outside it, so distinct keys
+    /// generate in parallel while same-key callers wait on the slot.
+    pub fn get(
+        &self,
+        workload: &str,
+        scale: Scale,
+        seed: u64,
+        max_accesses: usize,
+    ) -> (Arc<Trace>, Profile) {
+        let key = TraceKey { workload: workload.to_string(), scale, seed, max_accesses };
+        let slot: Slot = {
+            let mut map = self.map.lock().unwrap();
+            map.entry(key).or_insert_with(|| Arc::new(OnceLock::new())).clone()
+        };
+        let mut generated = false;
+        let (trace, profile) = slot.get_or_init(|| {
+            generated = true;
+            let w = by_name(workload)
+                .unwrap_or_else(|| panic!("unknown workload {workload}"));
+            let mut t = w.generate(seed, scale);
+            if max_accesses > 0 {
+                t = t.truncated(max_accesses);
+            }
+            (Arc::new(t), w.profile())
+        });
+        if generated {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        (trace.clone(), *profile)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Distinct keys currently cached.
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached trace and reset the counters (frees the memory of
+    /// a finished paper-scale sweep).
+    pub fn clear(&self) {
+        self.map.lock().unwrap().clear();
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for TraceCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_and_misses_are_counted() {
+        let c = TraceCache::new();
+        let (t1, _) = c.get("pr", Scale::Test, 1, 1000);
+        let (t2, _) = c.get("pr", Scale::Test, 1, 1000);
+        assert!(Arc::ptr_eq(&t1, &t2), "same key must share one trace");
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 1 });
+        let _ = c.get("pr", Scale::Test, 2, 1000); // different seed
+        let _ = c.get("pr", Scale::Test, 1, 2000); // different cap
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 3 });
+        assert_eq!(c.len(), 3);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn cached_trace_matches_fresh_generation() {
+        let c = TraceCache::new();
+        let (t, p) = c.get("bf", Scale::Test, 7, 500);
+        let w = by_name("bf").unwrap();
+        let fresh = w.generate(7, Scale::Test).truncated(500);
+        assert_eq!(t.accesses, fresh.accesses);
+        assert_eq!(t.footprint_pages, fresh.footprint_pages);
+        assert_eq!(p, w.profile());
+    }
+
+    #[test]
+    fn concurrent_same_key_generates_once() {
+        let c = TraceCache::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let _ = c.get("pr", Scale::Test, 3, 800);
+                });
+            }
+        });
+        let st = c.stats();
+        assert_eq!(st.misses, 1, "one generation for 4 concurrent gets");
+        assert_eq!(st.hits, 3);
+    }
+}

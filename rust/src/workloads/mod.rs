@@ -3,6 +3,7 @@
 //! learning, and HPC — each the real algorithm, scaled down, instrumented
 //! to emit a virtual-address trace.
 
+pub mod cache;
 pub mod dnn;
 pub mod graph;
 pub mod hpcg;

@@ -122,8 +122,9 @@ pub enum Locality {
 }
 
 /// Input scale: `Test` keeps unit tests fast; `Paper` is the experiment
-/// size (working sets tens of MB, ~1M+ accesses).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// size (working sets tens of MB, ~1M+ accesses).  `Hash` so the scale can
+/// be part of a [`crate::workloads::cache::TraceCache`] key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Scale {
     Test,
     Paper,
