@@ -103,6 +103,94 @@ impl Default for DaemonParams {
     }
 }
 
+/// One tenant's share of every shared memory-module resource (fabric port
+/// + DRAM bus): a bandwidth weight, plus that tenant's own §4.1 class
+/// partitioning applied *within* its share.  Shares are strict (reserved
+/// even while other tenants idle), mirroring how the paper's queue
+/// controllers reserve per-class bandwidth — this is what gives the
+/// cluster its QoS isolation.
+#[derive(Clone, Copy, Debug)]
+pub struct TenantShare {
+    /// Relative bandwidth weight (normalized over all tenants).
+    pub weight: f64,
+    /// Class-partition this tenant's share into line/page sub-channels.
+    pub partitioned: bool,
+    /// Fraction of the share reserved for cache lines when partitioned.
+    pub line_ratio: f64,
+}
+
+impl TenantShare {
+    /// Normalized per-tenant service rates for a shared resource of
+    /// `total` bytes/cycle — the single splitting rule both the fabric
+    /// ports and the memory-engine bus queues use, so the two can never
+    /// diverge.  Rejects empty share lists and non-positive weights.
+    pub fn rates(shares: &[TenantShare], total: f64) -> Vec<f64> {
+        assert!(!shares.is_empty(), "at least one tenant share required");
+        for s in shares {
+            assert!(
+                s.weight.is_finite() && s.weight > 0.0,
+                "tenant weights must be positive and finite, got {}",
+                s.weight
+            );
+        }
+        let wsum: f64 = shares.iter().map(|s| s.weight).sum();
+        shares.iter().map(|s| total * (s.weight / wsum)).collect()
+    }
+}
+
+/// Multi-tenant cluster topology (§6.7 scenario): C tenants — independent
+/// compute components, each with its own trace/profile/scheme — sharing M
+/// memory modules through a switched fabric.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub memory_modules: usize,
+    /// Per-port link parameters (switch latency + bandwidth factor).
+    pub net: NetConfig,
+    /// Extra per-traversal fabric hop latency, ns.  At 0 the fabric is
+    /// timing-identical to the point-to-point links, so a single-tenant
+    /// cluster reproduces `Machine` exactly (regression-tested).
+    pub fabric_hop_ns: f64,
+    /// Per-tenant bandwidth weights (empty = equal shares).
+    pub weights: Vec<f64>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            memory_modules: 1,
+            net: NetConfig::new(100.0, 4.0),
+            fabric_hop_ns: 0.0,
+            weights: Vec::new(),
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn new(memory_modules: usize) -> Self {
+        Self { memory_modules: memory_modules.max(1), ..Self::default() }
+    }
+
+    pub fn with_net(mut self, switch_ns: f64, bw_factor: f64) -> Self {
+        self.net = NetConfig::new(switch_ns, bw_factor);
+        self
+    }
+
+    pub fn with_hop(mut self, hop_ns: f64) -> Self {
+        self.fabric_hop_ns = hop_ns;
+        self
+    }
+
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// The per-module link configurations the fabric is built from.
+    pub fn nets(&self) -> Vec<NetConfig> {
+        vec![self.net; self.memory_modules.max(1)]
+    }
+}
+
 /// Full system configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -312,6 +400,35 @@ mod tests {
         assert_eq!(c.cores, 8);
         assert_eq!(c.replacement, Replacement::Fifo);
         assert!((c.lines_per_page_slot() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_share_rates_split_by_weight() {
+        let sh = |w| TenantShare { weight: w, partitioned: false, line_ratio: 0.25 };
+        let r = TenantShare::rates(&[sh(3.0), sh(1.0)], 8.0);
+        assert_eq!(r, vec![6.0, 2.0]);
+        assert_eq!(TenantShare::rates(&[sh(1.0)], 4.2), vec![4.2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive and finite")]
+    fn tenant_share_rejects_nonpositive_weight() {
+        let sh = |w| TenantShare { weight: w, partitioned: false, line_ratio: 0.25 };
+        let _ = TenantShare::rates(&[sh(2.0), sh(0.0)], 8.0);
+    }
+
+    #[test]
+    fn cluster_config_builders() {
+        let c = ClusterConfig::new(4)
+            .with_net(400.0, 8.0)
+            .with_hop(50.0)
+            .with_weights(vec![2.0, 1.0]);
+        assert_eq!(c.memory_modules, 4);
+        assert_eq!(c.nets().len(), 4);
+        assert_eq!(c.net.switch_latency_ns, 400.0);
+        assert_eq!(c.fabric_hop_ns, 50.0);
+        assert_eq!(c.weights, vec![2.0, 1.0]);
+        assert_eq!(ClusterConfig::new(0).memory_modules, 1);
     }
 
     #[test]

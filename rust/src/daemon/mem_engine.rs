@@ -1,0 +1,164 @@
+//! Memory-side DaeMon engine (§4, §6.7): the per-memory-module half of
+//! the paper's "specialized hardware engine in each compute and memory
+//! unit".
+//!
+//! The compute-side engine (`daemon::engine`) decides *what* moves; the
+//! memory engine provides the *service*: hardware address translation and
+//! DRAM reads/writes on per-tenant bandwidth partitions.  Partitioning is
+//! §4.1-style and two-level — strict across tenants by weight (a share is
+//! reserved even while other tenants idle), then across line/page classes
+//! within a partitioned tenant's share — realizing the per-tenant page
+//! and cache-line queue controllers.  The engine also accounts egress
+//! traffic per tenant (raw vs link-compressed bytes), the memory-side
+//! view of §4.4's link compression.
+
+use crate::config::TenantShare;
+use crate::mem::DramBus;
+use crate::net::Class;
+
+/// Per-tenant memory-side compression statistics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EgressStats {
+    /// Uncompressed bytes the module served toward compute components.
+    pub raw_bytes: u64,
+    /// Bytes actually sent on the link after compression.
+    pub sent_bytes: u64,
+}
+
+impl EgressStats {
+    /// Achieved link-compression ratio (1.0 when nothing was sent).
+    pub fn ratio(&self) -> f64 {
+        if self.sent_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.sent_bytes as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: EgressStats) {
+        self.raw_bytes += other.raw_bytes;
+        self.sent_bytes += other.sent_bytes;
+    }
+}
+
+/// One tenant's queue controllers on the module's DRAM bandwidth.
+struct TenantQueues {
+    bus: DramBus,
+    stats: EgressStats,
+}
+
+pub struct MemoryEngine {
+    ports: Vec<TenantQueues>,
+}
+
+impl MemoryEngine {
+    pub fn new(
+        dram_bytes_per_cycle: f64,
+        latency_cycles: f64,
+        shares: &[TenantShare],
+        interval: f64,
+    ) -> MemoryEngine {
+        let ports = shares
+            .iter()
+            .zip(TenantShare::rates(shares, dram_bytes_per_cycle))
+            .map(|(s, rate)| {
+                let bus = if s.partitioned {
+                    DramBus::partitioned(rate, latency_cycles, s.line_ratio, interval)
+                } else {
+                    DramBus::shared(rate, latency_cycles, interval)
+                };
+                TenantQueues { bus, stats: EgressStats::default() }
+            })
+            .collect();
+        MemoryEngine { ports }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.ports.len()
+    }
+
+    /// DRAM access on tenant `t`'s bandwidth partition; returns completion.
+    pub fn access(&mut self, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
+        self.ports[t].bus.access(now, bytes, class)
+    }
+
+    /// Queue occupancy ahead of tenant `t`'s `class` controller (cycles).
+    pub fn backlog(&self, t: usize, now: f64, class: Class) -> f64 {
+        self.ports[t].bus.backlog(now, class)
+    }
+
+    /// Service rate of tenant `t`'s `class` queue, bytes/cycle.
+    pub fn rate(&self, t: usize, class: Class) -> f64 {
+        self.ports[t].bus.rate(class)
+    }
+
+    /// Fixed DRAM processing latency per access, cycles.
+    pub fn latency_cycles(&self, t: usize) -> f64 {
+        self.ports[t].bus.latency_cycles
+    }
+
+    /// Record an egress transfer for tenant `t`: `raw` uncompressed bytes
+    /// served as `sent` bytes on the link (equal when compression is off).
+    pub fn note_egress(&mut self, t: usize, raw: u64, sent: u64) {
+        self.ports[t].stats.raw_bytes += raw;
+        self.ports[t].stats.sent_bytes += sent;
+    }
+
+    pub fn egress_stats(&self, t: usize) -> EgressStats {
+        self.ports[t].stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shares(n: usize, partitioned: bool) -> Vec<TenantShare> {
+        vec![TenantShare { weight: 1.0, partitioned, line_ratio: 0.25 }; n]
+    }
+
+    #[test]
+    fn single_tenant_matches_plain_bus() {
+        let mut e = MemoryEngine::new(4.0, 54.0, &shares(1, false), 1000.0);
+        let mut d = DramBus::shared(4.0, 54.0, 1000.0);
+        for (now, bytes) in [(0.0, 8u64), (0.0, 4096), (900.0, 64)] {
+            let a = e.access(0, now, bytes, Class::Page);
+            let b = d.access(now, bytes, Class::Page);
+            assert_eq!(a.to_bits(), b.to_bits(), "engine must degrade exactly");
+        }
+    }
+
+    #[test]
+    fn tenant_partitions_are_strict() {
+        let mut e = MemoryEngine::new(4.0, 0.0, &shares(2, false), 1000.0);
+        assert!((e.rate(0, Class::Line) - 2.0).abs() < 1e-12);
+        // Tenant 0 floods its partition; tenant 1 is untouched.
+        e.access(0, 0.0, 10_000, Class::Page);
+        assert!(e.backlog(0, 0.0, Class::Page) > 1000.0);
+        let t1 = e.access(1, 0.0, 64, Class::Line);
+        assert!(t1 < 100.0, "tenant 1 delayed by tenant 0: {t1}");
+    }
+
+    #[test]
+    fn per_tenant_class_partitioning_nests_inside_share() {
+        let e = MemoryEngine::new(8.0, 0.0, &shares(2, true), 1000.0);
+        // 4 B/cyc per tenant, 25% of that for lines.
+        assert!((e.rate(0, Class::Line) - 1.0).abs() < 1e-12);
+        assert!((e.rate(0, Class::Page) - 3.0).abs() < 1e-12);
+        assert_eq!(e.tenants(), 2);
+    }
+
+    #[test]
+    fn egress_stats_track_compression() {
+        let mut e = MemoryEngine::new(4.0, 0.0, &shares(2, false), 1000.0);
+        e.note_egress(0, 4096, 1024);
+        e.note_egress(0, 4096, 1024);
+        e.note_egress(1, 64, 64);
+        assert!((e.egress_stats(0).ratio() - 4.0).abs() < 1e-12);
+        assert!((e.egress_stats(1).ratio() - 1.0).abs() < 1e-12);
+        let mut total = e.egress_stats(0);
+        total.merge(e.egress_stats(1));
+        assert_eq!(total.raw_bytes, 8256);
+        assert_eq!(EgressStats::default().ratio(), 1.0);
+    }
+}

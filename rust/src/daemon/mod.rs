@@ -1,11 +1,14 @@
 //! The DaeMon engines (§3–§4): the paper's architectural contribution.
 //!
 //! `engine` is the compute-engine state machine (inflight buffers,
-//! selection granularity unit, dirty unit); the memory-engine's queues and
-//! bandwidth partitioning are realized by the partitioned link/bus
-//! timelines in `net`/`mem`; `hw_cost` reproduces Table 1.
+//! selection granularity unit, dirty unit); `mem_engine` is the
+//! memory-side engine — per-tenant page/line queue controllers over each
+//! memory module's DRAM bandwidth plus memory-side link-compression
+//! statistics; `hw_cost` reproduces Table 1.
 
 pub mod engine;
 pub mod hw_cost;
+pub mod mem_engine;
 
 pub use engine::{ComputeEngine, Decision, DirtyOutcome, PageArrival, PageState};
+pub use mem_engine::{EgressStats, MemoryEngine};

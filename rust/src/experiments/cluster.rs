@@ -1,0 +1,199 @@
+//! Cluster experiments — the multi-tenant scenario axis (§6.7: "pools of
+//! processors ... interconnected to pools of memory"), declared as
+//! ordinary orchestrator [`Plan`]s so cluster cells batch, shard and
+//! merge like any figure.
+//!
+//! * `cluster_contention` — aggregate throughput as tenants are added to
+//!   a fixed pool of shared memory modules, Remote vs DaeMon.
+//! * `cluster_fairness` — per-tenant slowdown versus running alone on the
+//!   same topology: max slowdown, unfairness index (max/min slowdown) and
+//!   per-tenant p99 access cost, Remote vs DaeMon.
+
+use super::common::Runner;
+use super::orchestrator::{CellSpec, Plan};
+use crate::config::SimConfig;
+use crate::metrics::{fairness, Fairness, Metrics};
+use crate::schemes::SchemeKind;
+use crate::util::stats::geomean;
+use crate::util::table::Table;
+use crate::workloads::Scale;
+
+/// Canonical tenant mix: one workload per locality class (low / low /
+/// high / high compressibility spread).
+pub const TENANT_MIX: [&str; 4] = ["pr", "nw", "sp", "hp"];
+
+/// Shared memory-module pool size for the cluster experiments.
+pub const MODULES: usize = 2;
+
+/// Tenant counts swept by `cluster_contention`.
+pub const TENANT_COUNTS: [usize; 3] = [1, 2, 4];
+
+const SCHEMES: [SchemeKind; 2] = [SchemeKind::Remote, SchemeKind::Daemon];
+
+/// Per-tenant base config scaled to the runner's trace scale (Test-scale
+/// traces need the shrunken hierarchy to stay in the footprint ≫ LLC
+/// regime the paper evaluates).
+fn tenant_cfg(r: &Runner) -> SimConfig {
+    match r.scale {
+        Scale::Test => SimConfig::test_scale(),
+        Scale::Paper => SimConfig::default(),
+    }
+}
+
+/// `cluster_fairness` — 4 tenants × 2 shared memory modules.  For each
+/// scheme: 4 solo baseline cells (each tenant alone on the same topology)
+/// followed by the shared 4-tenant cell.
+pub fn cluster_fairness_plan(r: &Runner) -> Plan {
+    let cfg = tenant_cfg(r);
+    let mut cells = Vec::new();
+    for &k in &SCHEMES {
+        for wl in TENANT_MIX {
+            cells.push(CellSpec::cluster(&[(wl, k)], MODULES, cfg.clone()));
+        }
+        let tenants: Vec<(&str, SchemeKind)> =
+            TENANT_MIX.iter().map(|w| (*w, k)).collect();
+        cells.push(CellSpec::cluster(&tenants, MODULES, cfg.clone()));
+    }
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let fair = split_fairness(ms);
+        let mut summary = Table::new(
+            "Cluster fairness: 4 tenants x 2 memory modules, slowdown vs running alone",
+            &["scheme", "max-slowdown", "unfairness", "geomean-slowdown"],
+        );
+        for (k, f) in SCHEMES.iter().zip(&fair) {
+            summary.row_f(
+                k.name(),
+                &[f.max_slowdown, f.unfairness, geomean(&f.slowdowns)],
+            );
+        }
+        let mut detail = Table::new(
+            "Cluster fairness per tenant: slowdown / shared-run p99 access cost (cycles)",
+            &["tenant", "Remote-slowdown", "DaeMon-slowdown", "Remote-p99", "DaeMon-p99"],
+        );
+        for (i, wl) in TENANT_MIX.iter().enumerate() {
+            detail.row_f(
+                wl,
+                &[
+                    fair[0].slowdowns[i],
+                    fair[1].slowdowns[i],
+                    fair[0].p99_access_cost[i],
+                    fair[1].p99_access_cost[i],
+                ],
+            );
+        }
+        vec![summary, detail]
+    });
+    Plan { id: "cluster_fairness".into(), cells, assemble }
+}
+
+/// Split the fairness plan's flattened metrics (per scheme: T solo
+/// entries then T shared-tenant entries) into per-scheme [`Fairness`].
+pub fn split_fairness(ms: &[Metrics]) -> Vec<Fairness> {
+    let t = TENANT_MIX.len();
+    let per_scheme = 2 * t;
+    assert_eq!(ms.len(), SCHEMES.len() * per_scheme, "fairness layout mismatch");
+    SCHEMES
+        .iter()
+        .enumerate()
+        .map(|(s, _)| {
+            let block = &ms[s * per_scheme..(s + 1) * per_scheme];
+            fairness(&block[..t], &block[t..])
+        })
+        .collect()
+}
+
+/// `cluster_contention` — C ∈ {1,2,4} tenants (cycling the canonical mix)
+/// over 2 shared memory modules, Remote vs DaeMon aggregate throughput.
+pub fn cluster_contention_plan(r: &Runner) -> Plan {
+    let cfg = tenant_cfg(r);
+    let mut cells = Vec::new();
+    for &n in &TENANT_COUNTS {
+        for &k in &SCHEMES {
+            let tenants: Vec<(&str, SchemeKind)> = (0..n)
+                .map(|i| (TENANT_MIX[i % TENANT_MIX.len()], k))
+                .collect();
+            cells.push(CellSpec::cluster(&tenants, MODULES, cfg.clone()));
+        }
+    }
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let mut table = Table::new(
+            "Cluster contention: aggregate IPC over 2 shared memory modules",
+            &["tenants", "Remote-sum-IPC", "DaeMon-sum-IPC", "DaeMon/Remote", "DaeMon-min-IPC"],
+        );
+        let mut off = 0;
+        for &n in &TENANT_COUNTS {
+            let remote = &ms[off..off + n];
+            off += n;
+            let daemon = &ms[off..off + n];
+            off += n;
+            let rs: f64 = remote.iter().map(Metrics::ipc).sum();
+            let ds: f64 = daemon.iter().map(Metrics::ipc).sum();
+            let dmin = daemon.iter().map(Metrics::ipc).fold(f64::INFINITY, f64::min);
+            table.row_f(&format!("{n}"), &[rs, ds, ds / rs.max(1e-12), dmin]);
+        }
+        assert_eq!(off, ms.len());
+        vec![table]
+    });
+    Plan { id: "cluster_contention".into(), cells, assemble }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::orchestrator;
+
+    #[test]
+    fn fairness_plan_layout() {
+        let r = Runner::test();
+        let p = cluster_fairness_plan(&r);
+        // Per scheme: 4 solo cells + 1 shared cell.
+        assert_eq!(p.cells.len(), 2 * (TENANT_MIX.len() + 1));
+        let metrics: usize = p.cells.iter().map(CellSpec::metrics_len).sum();
+        assert_eq!(metrics, 2 * 2 * TENANT_MIX.len());
+    }
+
+    #[test]
+    fn daemon_max_slowdown_beats_remote() {
+        // Acceptance criterion: with 4 tenants contending on 2 shared
+        // memory modules, DaeMon's worst-tenant slowdown (vs running
+        // alone) must be strictly below the Remote baseline's.
+        let r = Runner::test();
+        let plan = cluster_fairness_plan(&r);
+        let ms = orchestrator::run_plan_metrics(&r, &plan.cells);
+        let fair = split_fairness(&ms);
+        let (remote, daemon) = (&fair[0], &fair[1]);
+        assert!(
+            daemon.max_slowdown < remote.max_slowdown,
+            "DaeMon max slowdown {} !< Remote {}",
+            daemon.max_slowdown,
+            remote.max_slowdown
+        );
+        // Contention can only hurt: every tenant runs no faster shared
+        // than alone (small tolerance for metric noise).
+        for f in &fair {
+            for &s in &f.slowdowns {
+                assert!(s > 0.99, "slowdown below 1: {s}");
+            }
+            assert!(f.unfairness >= 1.0);
+        }
+    }
+
+    #[test]
+    fn contention_scales_and_daemon_wins() {
+        let r = Runner::test();
+        let plan = cluster_contention_plan(&r);
+        let tables = orchestrator::run_plan(&r, plan);
+        let rows = &tables[0].rows;
+        assert_eq!(rows.len(), TENANT_COUNTS.len());
+        for row in rows {
+            let remote: f64 = row[1].parse().unwrap();
+            let daemon: f64 = row[2].parse().unwrap();
+            assert!(remote > 0.0 && daemon > 0.0);
+            assert!(
+                daemon > remote,
+                "DaeMon aggregate {daemon} !> Remote {remote} at {} tenants",
+                row[0]
+            );
+        }
+    }
+}

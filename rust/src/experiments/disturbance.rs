@@ -128,7 +128,9 @@ mod tests {
         period_cycles: f64,
     ) -> (Vec<f64>, Vec<f64>, f64) {
         let spec = CellSpec::disturbed(wl, kind, cfg.clone(), load, period_cycles);
-        let m = orchestrator::run_cell_spec(r, TraceCache::global(), &spec);
+        let m = orchestrator::run_cell_spec(r, TraceCache::global(), &spec)
+            .pop()
+            .expect("single-machine cell yields one metrics");
         let interval = ns_to_cycles(cfg.interval_ns);
         (m.ipc_series(interval), m.hit_ratio_series(), m.ipc())
     }

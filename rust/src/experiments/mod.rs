@@ -5,6 +5,7 @@
 //! index, and `orchestrator.rs` for the flat scheduler + sharding.
 
 pub mod ablations;
+pub mod cluster;
 pub mod common;
 pub mod disturbance;
 pub mod main_results;
@@ -18,11 +19,12 @@ pub use common::Runner;
 use crate::util::table::Table;
 use crate::workloads::{ALL, SUBSET};
 
-/// All experiment ids, in paper order.
-pub const ALL_EXPERIMENTS: [&str; 17] = [
+/// All experiment ids: the paper's figures/tables in paper order, then
+/// the cluster (multi-tenant) scenario experiments.
+pub const ALL_EXPERIMENTS: [&str; 19] = [
     "fig3", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
     "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "table1",
-    "headline",
+    "headline", "cluster_contention", "cluster_fairness",
 ];
 
 /// Build the orchestrator plan for one experiment id (the default
@@ -46,6 +48,8 @@ pub fn plan_for(id: &str, r: &Runner) -> Option<orchestrator::Plan> {
         "fig22" => scaling::fig22_plan(r, &SUBSET),
         "table1" => table1::plan(),
         "headline" => main_results::headline_plan(r),
+        "cluster_contention" => cluster::cluster_contention_plan(r),
+        "cluster_fairness" => cluster::cluster_fairness_plan(r),
         "ablation_dirty_threshold" => {
             ablations::ablation_dirty_threshold_plan(r, &SUBSET)
         }

@@ -23,11 +23,11 @@
 
 use super::common::Runner;
 use super::plan_for;
-use crate::config::SimConfig;
+use crate::config::{ClusterConfig, SimConfig};
 use crate::metrics::Metrics;
 use crate::net::Disturbance;
 use crate::schemes::SchemeKind;
-use crate::system::Machine;
+use crate::system::{cluster, Machine};
 use crate::util::json::Json;
 use crate::util::table::Table;
 use crate::workloads::cache::TraceCache;
@@ -36,21 +36,46 @@ use crate::compress::synth::Profile;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, OnceLock};
 
+/// A multi-tenant cluster cell: one `(workload, scheme)` per tenant over
+/// `modules` shared memory modules on the switched fabric.  Contributes
+/// one `Metrics` per tenant to the flat result list.
+#[derive(Clone, Debug)]
+pub struct ClusterCell {
+    pub tenants: Vec<(String, SchemeKind)>,
+    pub modules: usize,
+    /// Per-tenant fabric/bus bandwidth weights (empty = equal).
+    pub weights: Vec<f64>,
+    /// Extra fabric hop latency, ns.
+    pub hop_ns: f64,
+}
+
 /// One simulation cell in the flat job list.
 #[derive(Clone, Debug)]
 pub struct CellSpec {
     /// One entry = single-trace cell; several = per-core mix (Fig. 18).
     pub workloads: Vec<String>,
+    /// Scheme of the cell.  For cluster cells this is only tenant 0's
+    /// representative — the authoritative per-tenant schemes live in
+    /// `cluster.tenants`.
     pub kind: SchemeKind,
     pub cfg: SimConfig,
     /// Square-wave network disturbance `(load, period_cycles)`
     /// (Figs. 13/14); step and horizon match the legacy harness.
     pub disturbance: Option<(f64, f64)>,
+    /// Multi-tenant cluster cell (overrides the single/mix execution
+    /// path; `cfg.net[0]` supplies the per-port link parameters).
+    pub cluster: Option<ClusterCell>,
 }
 
 impl CellSpec {
     pub fn new(workload: &str, kind: SchemeKind, cfg: SimConfig) -> CellSpec {
-        CellSpec { workloads: vec![workload.to_string()], kind, cfg, disturbance: None }
+        CellSpec {
+            workloads: vec![workload.to_string()],
+            kind,
+            cfg,
+            disturbance: None,
+            cluster: None,
+        }
     }
 
     pub fn mix(workloads: &[&str], kind: SchemeKind, cfg: SimConfig) -> CellSpec {
@@ -59,6 +84,7 @@ impl CellSpec {
             kind,
             cfg,
             disturbance: None,
+            cluster: None,
         }
     }
 
@@ -74,7 +100,33 @@ impl CellSpec {
             kind,
             cfg,
             disturbance: Some((load, period_cycles)),
+            cluster: None,
         }
+    }
+
+    /// A cluster cell: `(workload, scheme)` per tenant, `modules` shared
+    /// memory modules; `cfg` carries the per-tenant knobs and (via
+    /// `cfg.net[0]`) the per-port link parameters.
+    pub fn cluster(tenants: &[(&str, SchemeKind)], modules: usize, cfg: SimConfig) -> CellSpec {
+        assert!(!tenants.is_empty(), "cluster cell needs at least one tenant");
+        CellSpec {
+            workloads: tenants.iter().map(|(w, _)| w.to_string()).collect(),
+            kind: tenants[0].1,
+            cfg,
+            disturbance: None,
+            cluster: Some(ClusterCell {
+                tenants: tenants.iter().map(|(w, k)| (w.to_string(), *k)).collect(),
+                modules,
+                weights: Vec::new(),
+                hop_ns: 0.0,
+            }),
+        }
+    }
+
+    /// Number of `Metrics` this cell contributes to the flat result list
+    /// (one per tenant for cluster cells, one otherwise).
+    pub fn metrics_len(&self) -> usize {
+        self.cluster.as_ref().map(|c| c.tenants.len()).unwrap_or(1)
     }
 }
 
@@ -110,9 +162,23 @@ impl Shard {
 
 /// Simulate one cell.  This is the single execution path all figures
 /// share; it reproduces the legacy `run_cell` / `run_mix` /
-/// `run_disturbed` semantics exactly.
-pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Metrics {
+/// `run_disturbed` semantics exactly.  Returns one `Metrics` per slot
+/// entry: a single element for machine cells, one per tenant for cluster
+/// cells.
+pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Vec<Metrics> {
     let cfg = &spec.cfg;
+    if let Some(cl) = &spec.cluster {
+        assert!(spec.disturbance.is_none(), "disturbed cluster cells unsupported");
+        let ccfg = ClusterConfig {
+            memory_modules: cl.modules,
+            net: cfg.net[0],
+            fabric_hop_ns: cl.hop_ns,
+            weights: cl.weights.clone(),
+        };
+        return cluster::run_cluster(&ccfg, cfg, &cl.tenants, |wl| {
+            cache.get(wl, r.scale, cfg.seed, r.max_accesses)
+        });
+    }
     if let [workload] = spec.workloads.as_slice() {
         let (trace, profile) = cache.get(workload, r.scale, cfg.seed, r.max_accesses);
         let mut m = Machine::new(
@@ -128,7 +194,7 @@ pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Metrics
             });
         }
         m.run(std::slice::from_ref(&*trace));
-        m.metrics.clone()
+        vec![m.metrics.clone()]
     } else {
         assert_eq!(spec.workloads.len(), cfg.cores, "one mix workload per core");
         assert!(spec.disturbance.is_none(), "disturbed mix cells unsupported");
@@ -142,23 +208,24 @@ pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Metrics
         let traces: Vec<Arc<Trace>> = pairs.into_iter().map(|(t, _)| t).collect();
         let mut m = Machine::new(cfg.clone(), spec.kind, footprint, profiles, None);
         m.run(&traces);
-        m.metrics.clone()
+        vec![m.metrics.clone()]
     }
 }
 
 /// Work-stealing scheduler: run this shard's share of `cells` over `jobs`
 /// OS threads.  Returns one entry per global slot — `None` for slots
-/// outside the shard.
+/// outside the shard.  A slot carries the cell's full metrics list (one
+/// per tenant for cluster cells).
 pub fn run_cells_flat(
     r: &Runner,
     cache: &TraceCache,
     cells: &[CellSpec],
     shard: Shard,
     jobs: usize,
-) -> Vec<Option<Metrics>> {
+) -> Vec<Option<Vec<Metrics>>> {
     let n = cells.len();
     let todo: Vec<usize> = (0..n).filter(|i| shard.owns(*i)).collect();
-    let slots: Vec<OnceLock<Metrics>> = (0..n).map(|_| OnceLock::new()).collect();
+    let slots: Vec<OnceLock<Vec<Metrics>>> = (0..n).map(|_| OnceLock::new()).collect();
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..jobs.max(1).min(todo.len().max(1)) {
@@ -183,11 +250,13 @@ pub fn run_plan(r: &Runner, plan: Plan) -> Vec<Table> {
     (plan.assemble)(&ms)
 }
 
-/// Run a cell list unsharded and return the metrics in slot order.
+/// Run a cell list unsharded and return the metrics flattened in slot
+/// order (cluster cells contribute one entry per tenant, in tenant
+/// order — the layout every plan's `assemble` indexes).
 pub fn run_plan_metrics(r: &Runner, cells: &[CellSpec]) -> Vec<Metrics> {
     run_cells_flat(r, TraceCache::global(), cells, Shard::full(), r.threads)
         .into_iter()
-        .map(|m| m.expect("unsharded run must fill every slot"))
+        .flat_map(|m| m.expect("unsharded run must fill every slot"))
         .collect()
 }
 
@@ -210,11 +279,15 @@ pub struct ShardData {
     pub max_accesses: usize,
     pub shard: Shard,
     pub total_slots: usize,
-    /// `(global slot, metrics)` for every slot this shard owns.
-    pub results: Vec<(usize, Metrics)>,
+    /// `(global slot, that cell's metrics list)` for every slot this
+    /// shard owns (one entry per tenant for cluster cells).
+    pub results: Vec<(usize, Vec<Metrics>)>,
 }
 
-const SHARD_FORMAT: &str = "daemon-sim-shard-v1";
+/// v2: each slot carries a metrics *array* (cluster cells yield one entry
+/// per tenant) and `Metrics` gained the `access_hist` field — v1 files
+/// are rejected with a clear regenerate message.
+const SHARD_FORMAT: &str = "daemon-sim-shard-v2";
 
 fn scale_name(s: Scale) -> &'static str {
     match s {
@@ -246,10 +319,13 @@ impl ShardData {
                 Json::Arr(
                     self.results
                         .iter()
-                        .map(|(slot, m)| {
+                        .map(|(slot, ms)| {
                             Json::obj(vec![
                                 ("slot", Json::num(*slot as f64)),
-                                ("metrics", m.to_json()),
+                                (
+                                    "metrics",
+                                    Json::Arr(ms.iter().map(Metrics::to_json).collect()),
+                                ),
                             ])
                         })
                         .collect(),
@@ -289,9 +365,12 @@ impl ShardData {
             let slot = entry
                 .get_f64("slot")
                 .ok_or("shard json: result missing 'slot'")? as usize;
-            let metrics = Metrics::from_json(
-                entry.get("metrics").ok_or("shard json: result missing 'metrics'")?,
-            )?;
+            let metrics = entry
+                .get_arr("metrics")
+                .ok_or("shard json: result missing 'metrics' array")?
+                .iter()
+                .map(Metrics::from_json)
+                .collect::<Result<Vec<_>, _>>()?;
             results.push((slot, metrics));
         }
         Ok(ShardData {
@@ -339,7 +418,7 @@ pub fn sweep_plans(
             plans.iter().flat_map(|p| p.cells.iter().cloned()).collect();
         let all: Vec<Metrics> = run_cells_flat(r, cache, &cells, shard, jobs)
             .into_iter()
-            .map(|m| m.expect("unsharded run must fill every slot"))
+            .flat_map(|m| m.expect("unsharded run must fill every slot"))
             .collect();
         Ok(SweepResult::Tables(assemble_all(plans, &all)))
     } else {
@@ -388,13 +467,13 @@ pub fn sweep_shard(
     Ok(shard_plans(&plans, ids, r, cache, shard, jobs))
 }
 
-/// Hand each plan its slice of the flat result vector, in declaration
-/// order.
+/// Hand each plan its slice of the flat (per-tenant-expanded) result
+/// vector, in declaration order.
 fn assemble_all(plans: Vec<Plan>, all: &[Metrics]) -> Vec<(String, Vec<Table>)> {
     let mut out = Vec::with_capacity(plans.len());
     let mut off = 0;
     for p in plans {
-        let n = p.cells.len();
+        let n: usize = p.cells.iter().map(CellSpec::metrics_len).sum();
         let tables = (p.assemble)(&all[off..off + n]);
         off += n;
         out.push((p.id, tables));
@@ -445,7 +524,14 @@ pub fn merge_with_plans(
             first.total_slots
         ));
     }
-    let mut all: Vec<Option<Metrics>> = vec![None; first.total_slots];
+    // Per-slot metrics count (1, or the tenant count for cluster cells):
+    // a mismatch means the cluster definitions changed since the shards
+    // were written and flat assembly would silently misalign.
+    let expected: Vec<usize> = plans
+        .iter()
+        .flat_map(|p| p.cells.iter().map(CellSpec::metrics_len))
+        .collect();
+    let mut all: Vec<Option<Vec<Metrics>>> = vec![None; first.total_slots];
     for s in shards {
         for (slot, m) in &s.results {
             let cell = all
@@ -453,6 +539,14 @@ pub fn merge_with_plans(
                 .ok_or_else(|| format!("merge: slot {slot} out of range"))?;
             if cell.is_some() {
                 return Err(format!("merge: slot {slot} provided by two shards"));
+            }
+            if m.len() != expected[*slot] {
+                return Err(format!(
+                    "merge: slot {slot} carries {} metrics but the current \
+                     experiment definitions expect {} — regenerate the shards",
+                    m.len(),
+                    expected[*slot]
+                ));
             }
             *cell = Some(m.clone());
         }
@@ -465,7 +559,7 @@ pub fn merge_with_plans(
             first.shard.total
         ));
     }
-    let all: Vec<Metrics> = all.into_iter().map(Option::unwrap).collect();
+    let all: Vec<Metrics> = all.into_iter().flat_map(Option::unwrap).collect();
     Ok(assemble_all(plans, &all))
 }
 
@@ -568,10 +662,87 @@ mod tests {
         let one = run_cells_flat(&r, &TraceCache::new(), &plan.cells, Shard::full(), 1);
         let many = run_cells_flat(&r, &TraceCache::new(), &plan.cells, Shard::full(), 8);
         assert_eq!(one.len(), many.len());
+        let fmt = |slot: &Option<Vec<Metrics>>| -> Vec<String> {
+            slot.as_ref()
+                .unwrap()
+                .iter()
+                .map(|m| m.to_json().to_string())
+                .collect()
+        };
         for (a, b) in one.iter().zip(many.iter()) {
-            let (a, b) = (a.as_ref().unwrap(), b.as_ref().unwrap());
-            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+            assert_eq!(fmt(a), fmt(b));
         }
+    }
+
+    /// A minimal plan holding one 2-tenant cluster cell + one machine
+    /// cell, assembling per-tenant IPCs — exercises the multi-metrics
+    /// slot path end to end.
+    fn cluster_mini_plan(_r: &Runner) -> Plan {
+        let cfg = SimConfig::test_scale();
+        let cells = vec![
+            CellSpec::cluster(
+                &[("pr", SchemeKind::Daemon), ("sp", SchemeKind::Remote)],
+                2,
+                cfg.clone(),
+            ),
+            CellSpec::new("pr", SchemeKind::Remote, cfg),
+        ];
+        let assemble = Box::new(move |ms: &[Metrics]| {
+            assert_eq!(ms.len(), 3, "2 tenants + 1 machine cell");
+            let mut t = Table::new("cluster mini", &["cell", "ipc"]);
+            for (i, m) in ms.iter().enumerate() {
+                t.row_f(&format!("{i}"), &[m.ipc()]);
+            }
+            vec![t]
+        });
+        Plan { id: "cluster_mini".into(), cells, assemble }
+    }
+
+    #[test]
+    fn cluster_cells_flatten_and_shard_like_any_figure() {
+        let r = Runner::test();
+        let ids = vec!["cluster_mini".to_string()];
+        let full = match sweep_plans(
+            vec![cluster_mini_plan(&r)],
+            &ids,
+            &r,
+            &TraceCache::new(),
+            Shard::full(),
+            2,
+        )
+        .unwrap()
+        {
+            SweepResult::Tables(sets) => sets,
+            SweepResult::Shard(_) => panic!(),
+        };
+        assert_eq!(full[0].1[0].rows.len(), 3, "cluster cell expands per tenant");
+        // Shard 2 ways (slot 0 = cluster cell, slot 1 = machine cell),
+        // round-trip the wire format, merge: byte-identical tables.
+        let shards: Vec<ShardData> = (0..2)
+            .map(|index| {
+                let d = match sweep_plans(
+                    vec![cluster_mini_plan(&r)],
+                    &ids,
+                    &r,
+                    &TraceCache::new(),
+                    Shard { index, total: 2 },
+                    2,
+                )
+                .unwrap()
+                {
+                    SweepResult::Shard(d) => d,
+                    SweepResult::Tables(_) => panic!(),
+                };
+                ShardData::from_json(&Json::parse(&d.to_json().to_string()).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(shards[0].results[0].1.len(), 2, "cluster slot carries 2 metrics");
+        let merged = merge_with_plans(vec![cluster_mini_plan(&r)], &shards).unwrap();
+        assert_eq!(
+            figures_json(&full).to_string(),
+            figures_json(&merged).to_string()
+        );
     }
 
     #[test]
@@ -613,7 +784,48 @@ mod tests {
         wrong.total_slots += 1;
         let err = merge_with_plans(plans(), &[d0.clone(), wrong]).unwrap_err();
         assert!(err.contains("header"), "{err}");
+        // A slot whose metrics count disagrees with the current cell
+        // definitions (e.g. a cluster cell's tenant count changed).
+        let mut inflated = d0.clone();
+        let extra = inflated.results[0].1[0].clone();
+        inflated.results[0].1.push(extra);
+        let err = merge_with_plans(plans(), &[inflated, mk(1)]).unwrap_err();
+        assert!(err.contains("regenerate"), "{err}");
         assert!(merge_with_plans(plans(), &[d0, mk(1)]).is_ok());
+    }
+
+    #[test]
+    fn cluster_cell_weights_and_hop_are_plumbed_through() {
+        let r = Runner::test();
+        let cfg = SimConfig::test_scale();
+        // Same workload twice; tenant 0 gets 3x the bandwidth weight.
+        let mut weighted = CellSpec::cluster(
+            &[("pr", SchemeKind::Remote), ("pr", SchemeKind::Remote)],
+            1,
+            cfg.clone(),
+        );
+        weighted.cluster.as_mut().unwrap().weights = vec![3.0, 1.0];
+        let ms = run_cell_spec(&r, &TraceCache::new(), &weighted);
+        assert_eq!(ms.len(), 2);
+        assert!(
+            ms[0].ipc() > ms[1].ipc(),
+            "heavier-weighted tenant must run faster: {} vs {}",
+            ms[0].ipc(),
+            ms[1].ipc()
+        );
+        // An extra fabric hop slows every remote access down.
+        let base = CellSpec::cluster(&[("pr", SchemeKind::Remote)], 1, cfg.clone());
+        let mut hopped = base.clone();
+        hopped.cluster.as_mut().unwrap().hop_ns = 400.0;
+        let cache = TraceCache::new();
+        let b = run_cell_spec(&r, &cache, &base);
+        let h = run_cell_spec(&r, &cache, &hopped);
+        assert!(
+            h[0].cycles > b[0].cycles,
+            "fabric hop must cost cycles: {} vs {}",
+            h[0].cycles,
+            b[0].cycles
+        );
     }
 
     #[test]

@@ -75,11 +75,25 @@ RUN OPTIONS:
 
 EXPERIMENT OPTIONS:
   --quick       400K-access traces (CI smoke) instead of 2M
+  --scale       test | paper trace scale            [paper]
+  --max-accesses trace cap override (tiny smoke runs)
   --jobs K      worker threads for the cell scheduler  [cores-1]
   --shard I/N   run only slots with slot%N==I and write a
                 shard-I-of-N.json for `merge` (CI grid splitting)
   --out DIR     write per-table CSVs + figures.json (or the shard file)
+
+Cluster experiments (`cluster_contention`, `cluster_fairness`) simulate
+C tenants sharing M memory modules over the switched fabric and report
+per-tenant + fairness aggregates; they batch/shard like any figure.
 ";
+
+fn parse_scale(s: &str) -> Result<Scale, String> {
+    match s {
+        "test" => Ok(Scale::Test),
+        "paper" => Ok(Scale::Paper),
+        other => Err(format!("bad --scale '{other}'")),
+    }
+}
 
 fn cmd_list() -> i32 {
     println!("workloads: {}", ALL.join(" "));
@@ -119,11 +133,7 @@ fn cmd_run(args: &Args) -> i32 {
         let workload =
             by_name(wl_name).ok_or_else(|| format!("unknown workload '{wl_name}'"))?;
         let cfg = build_cfg(args)?;
-        let scale = match args.get_or("scale", "paper") {
-            "test" => Scale::Test,
-            "paper" => Scale::Paper,
-            other => return Err(format!("bad --scale '{other}'")),
-        };
+        let scale = parse_scale(args.get_or("scale", "paper"))?;
         let max = args.get_usize("max-accesses", 2_000_000)?;
         let trace = workload.generate(cfg.seed, scale).truncated(max);
 
@@ -239,6 +249,10 @@ fn cmd_experiment(args: &Args) -> i32 {
         } else {
             Runner::paper()
         };
+        if let Some(s) = args.get("scale") {
+            runner.scale = parse_scale(s)?;
+        }
+        runner.max_accesses = args.get_usize("max-accesses", runner.max_accesses)?;
         runner.threads = args.get_usize("jobs", runner.threads)?.max(1);
         // An explicit --shard always produces a shard file, even 0/1, so
         // scripted shard matrices work at N=1.

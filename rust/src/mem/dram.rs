@@ -43,6 +43,11 @@ impl DramBus {
         self.link.backlog(now, class)
     }
 
+    /// Service rate of the `class` sub-channel, bytes/cycle.
+    pub fn rate(&self, class: Class) -> f64 {
+        self.link.rate(class)
+    }
+
     /// One-lookup hardware address translation (a dependent DRAM access).
     pub fn translate(&mut self, now: f64, class: Class) -> f64 {
         self.access(now, 8, class)

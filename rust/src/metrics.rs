@@ -1,7 +1,7 @@
 //! Simulation metrics: everything the paper's figures plot.
 
 use crate::util::json::Json;
-use crate::util::stats::Running;
+use crate::util::stats::{LogHistogram, Running};
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -11,6 +11,9 @@ pub struct Metrics {
     pub cycles: f64,
     /// Raw latency (issue -> data arrival) of LLC-miss accesses.
     pub access_cost: Running,
+    /// Log-bucketed distribution of the same latencies — tail quantiles
+    /// (per-tenant p99) for the cluster fairness reports.
+    pub access_hist: LogHistogram,
     /// Memory stall cycles the core actually suffered (MLP-window blocking
     /// + final drain).  `mean_access_cost` = stalls per LLC miss — the
     /// quantity the paper's "data access cost" figure tracks (a scheme
@@ -79,6 +82,12 @@ impl Metrics {
         self.access_cost.mean()
     }
 
+    /// Approximate p99 of raw access latency (issue -> data arrival),
+    /// cycles — the per-tenant tail metric the fairness reports use.
+    pub fn p99_access_cost(&self) -> f64 {
+        self.access_hist.value_at(0.99)
+    }
+
     /// Record an instruction count into the interval series.
     pub fn bump_interval(&mut self, interval: usize, instrs: u64) {
         if self.interval_instructions.len() <= interval {
@@ -141,6 +150,7 @@ impl Metrics {
             ("net_bytes_in", Json::num(self.net_bytes_in as f64)),
             ("net_utilization", Json::num(self.net_utilization)),
             ("compression_ratio", Json::num(self.compression_ratio)),
+            ("access_hist", u64s(&self.access_hist.counts)),
             ("interval_instructions", u64s(&self.interval_instructions)),
             ("interval_local_hits", u64s(&self.interval_local_hits)),
             ("interval_local_total", u64s(&self.interval_local_total)),
@@ -168,10 +178,55 @@ impl Metrics {
         m.net_bytes_in = jint(j, "net_bytes_in")?;
         m.net_utilization = jnum(j, "net_utilization")?;
         m.compression_ratio = jnum(j, "compression_ratio")?;
+        let hist = jvec(j, "access_hist")?;
+        if hist.len() != 64 {
+            return Err(format!(
+                "metrics json: 'access_hist' carries {} buckets, want 64",
+                hist.len()
+            ));
+        }
+        m.access_hist = LogHistogram::from_counts(&hist);
         m.interval_instructions = jvec(j, "interval_instructions")?;
         m.interval_local_hits = jvec(j, "interval_local_hits")?;
         m.interval_local_total = jvec(j, "interval_local_total")?;
         Ok(m)
+    }
+}
+
+/// Per-tenant slowdown of a shared (cluster) run versus the same tenant
+/// running alone on the same topology: solo IPC / shared IPC.
+pub fn slowdown(solo: &Metrics, shared: &Metrics) -> f64 {
+    if shared.ipc() <= 0.0 {
+        return f64::INFINITY;
+    }
+    solo.ipc() / shared.ipc()
+}
+
+/// Fairness aggregates over a cluster run's per-tenant metrics.
+#[derive(Clone, Debug)]
+pub struct Fairness {
+    pub slowdowns: Vec<f64>,
+    pub max_slowdown: f64,
+    /// Unfairness index: max slowdown / min slowdown (1.0 = perfectly fair).
+    pub unfairness: f64,
+    /// Per-tenant p99 access cost in the shared run, cycles.
+    pub p99_access_cost: Vec<f64>,
+}
+
+/// Compute fairness aggregates from per-tenant solo baselines and the
+/// shared cluster run (index i = tenant i in both).
+pub fn fairness(solo: &[Metrics], shared: &[Metrics]) -> Fairness {
+    assert_eq!(solo.len(), shared.len(), "one solo baseline per tenant");
+    assert!(!solo.is_empty(), "fairness needs at least one tenant");
+    let slowdowns: Vec<f64> =
+        solo.iter().zip(shared).map(|(s, sh)| slowdown(s, sh)).collect();
+    let max = slowdowns.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let min = slowdowns.iter().cloned().fold(f64::INFINITY, f64::min);
+    Fairness {
+        max_slowdown: max,
+        unfairness: if min > 0.0 { max / min } else { f64::INFINITY },
+        p99_access_cost: shared.iter().map(Metrics::p99_access_cost).collect(),
+        slowdowns,
     }
 }
 
@@ -275,6 +330,40 @@ mod tests {
         assert_eq!(back.access_cost.min, f64::INFINITY);
         assert_eq!(back.access_cost.max, f64::NEG_INFINITY);
         assert_eq!(back.mean_access_cost(), 0.0);
+    }
+
+    #[test]
+    fn access_hist_roundtrips_and_feeds_p99() {
+        let mut m = Metrics::new();
+        for _ in 0..99 {
+            m.access_hist.add(100.0); // bucket [64, 128)
+        }
+        m.access_hist.add(3000.0); // bucket [2048, 4096)
+        assert!((m.p99_access_cost() - 96.0).abs() < 1e-9, "{}", m.p99_access_cost());
+        let back =
+            Metrics::from_json(&Json::parse(&m.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.access_hist, m.access_hist);
+        assert_eq!(back.p99_access_cost(), m.p99_access_cost());
+    }
+
+    #[test]
+    fn fairness_aggregates() {
+        let mk = |instr: u64, cycles: f64| {
+            let mut m = Metrics::new();
+            m.instructions = instr;
+            m.cycles = cycles;
+            m
+        };
+        // Tenant 0 slows 2x, tenant 1 slows 4x.
+        let solo = vec![mk(1000, 1000.0), mk(1000, 1000.0)];
+        let shared = vec![mk(1000, 2000.0), mk(1000, 4000.0)];
+        let f = fairness(&solo, &shared);
+        assert!((f.slowdowns[0] - 2.0).abs() < 1e-12);
+        assert!((f.slowdowns[1] - 4.0).abs() < 1e-12);
+        assert!((f.max_slowdown - 4.0).abs() < 1e-12);
+        assert!((f.unfairness - 2.0).abs() < 1e-12);
+        assert_eq!(f.p99_access_cost.len(), 2);
+        assert_eq!(slowdown(&solo[0], &mk(1000, 0.0)), f64::INFINITY);
     }
 
     #[test]

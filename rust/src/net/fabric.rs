@@ -1,0 +1,200 @@
+//! Switched fabric connecting C compute components (tenants) to M memory
+//! modules — replaces the hardwired point-to-point `MemComponent` links.
+//!
+//! Ports live at the memory modules: each module owns one full-duplex
+//! port pair *per tenant*, carved out of the module's link bandwidth by
+//! the tenant's weight.  Partitioning is strict, like §4.1's class
+//! partitioning — a tenant's share is reserved even while other tenants
+//! idle — which is what gives the cluster its QoS isolation; within a
+//! tenant's share, that tenant's own scheme decides class partitioning.
+//! Every traversal pays the module's switch latency plus an optional
+//! extra fabric hop (`hop_cycles`).  With a single tenant and a zero hop
+//! the fabric is timing-identical to the old point-to-point links, which
+//! is what lets a single-tenant cluster reproduce `Machine` exactly.
+
+use crate::config::{ns_to_cycles, NetConfig, TenantShare};
+use crate::net::disturbance::Disturbance;
+use crate::net::link::{Class, Link};
+
+/// One tenant's full-duplex port on a memory module.
+struct PortPair {
+    down: Link, // memory -> compute (data)
+    up: Link,   // compute -> memory (writebacks)
+    /// Unsplit port capacity, bytes/cycle (disturbance injection base).
+    capacity: f64,
+    disturbance: Disturbance,
+}
+
+struct ModulePorts {
+    switch_cycles: f64,
+    ports: Vec<PortPair>,
+}
+
+pub struct Fabric {
+    hop_cycles: f64,
+    modules: Vec<ModulePorts>,
+}
+
+impl Fabric {
+    pub fn new(
+        nets: &[NetConfig],
+        dram_gbps: f64,
+        shares: &[TenantShare],
+        hop_cycles: f64,
+        interval: f64,
+    ) -> Fabric {
+        assert!(!nets.is_empty(), "fabric needs at least one memory module");
+        let modules = nets
+            .iter()
+            .map(|n| {
+                let bpc = n.bytes_per_cycle(dram_gbps);
+                let sw = ns_to_cycles(n.switch_latency_ns);
+                let ports = shares
+                    .iter()
+                    .zip(TenantShare::rates(shares, bpc))
+                    .map(|(s, rate)| {
+                        let mk = || {
+                            if s.partitioned {
+                                Link::partitioned(sw, rate, s.line_ratio, interval)
+                            } else {
+                                Link::shared(sw, rate, interval)
+                            }
+                        };
+                        PortPair {
+                            down: mk(),
+                            up: mk(),
+                            capacity: rate,
+                            disturbance: Disturbance::none(),
+                        }
+                    })
+                    .collect();
+                ModulePorts { switch_cycles: sw, ports }
+            })
+            .collect();
+        Fabric { hop_cycles, modules }
+    }
+
+    pub fn modules(&self) -> usize {
+        self.modules.len()
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.modules[0].ports.len()
+    }
+
+    /// Latency of a control message from a tenant to module `m`.
+    pub fn request_latency(&self, m: usize) -> f64 {
+        self.modules[m].switch_cycles + self.hop_cycles
+    }
+
+    /// Send data from module `m` down to tenant `t`; returns arrival time
+    /// at the compute component (serialization + switch + fabric hop).
+    pub fn send_down(&mut self, m: usize, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
+        self.modules[m].ports[t].down.send(now, bytes, class) + self.hop_cycles
+    }
+
+    /// Send data from tenant `t` up to module `m` (writebacks).
+    pub fn send_up(&mut self, m: usize, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
+        self.modules[m].ports[t].up.send(now, bytes, class) + self.hop_cycles
+    }
+
+    pub fn down_backlog(&self, m: usize, t: usize, now: f64, class: Class) -> f64 {
+        self.modules[m].ports[t].down.backlog(now, class)
+    }
+
+    /// Service rate of tenant `t`'s downlink `class` channel on module `m`.
+    pub fn down_rate(&self, m: usize, t: usize, class: Class) -> f64 {
+        self.modules[m].ports[t].down.rate(class)
+    }
+
+    /// Advance tenant `t`'s disturbance injector on module `m` to `now`.
+    pub fn advance_disturbance(&mut self, m: usize, t: usize, now: f64) {
+        let p = &mut self.modules[m].ports[t];
+        p.disturbance.advance(now, &mut p.down);
+    }
+
+    /// Install a disturbance on every port (capacity = that port's rate).
+    pub fn set_disturbance(&mut self, mk: impl Fn(f64) -> Disturbance) {
+        for m in self.modules.iter_mut() {
+            for p in m.ports.iter_mut() {
+                p.disturbance = mk(p.capacity);
+            }
+        }
+    }
+
+    pub fn down_utilization(&self, m: usize, t: usize, horizon: f64) -> f64 {
+        self.modules[m].ports[t].down.utilization(horizon)
+    }
+
+    pub fn down_series(&self, m: usize, t: usize) -> Vec<f64> {
+        self.modules[m].ports[t].down.utilization_series()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn share(weight: f64) -> TenantShare {
+        TenantShare { weight, partitioned: false, line_ratio: 0.25 }
+    }
+
+    #[test]
+    fn single_tenant_matches_point_to_point_link() {
+        let net = NetConfig::new(100.0, 4.0);
+        let bpc = net.bytes_per_cycle(17.0);
+        let mut f = Fabric::new(&[net], 17.0, &[share(1.0)], 0.0, 1000.0);
+        let mut l = Link::shared(ns_to_cycles(100.0), bpc, 1000.0);
+        for (now, bytes) in [(0.0, 4096u64), (10.0, 64), (5000.0, 640)] {
+            let a = f.send_down(0, 0, now, bytes, Class::Page);
+            let b = l.send(now, bytes, Class::Page);
+            assert_eq!(a.to_bits(), b.to_bits(), "fabric must degrade exactly");
+        }
+        assert_eq!(f.request_latency(0), ns_to_cycles(100.0));
+    }
+
+    #[test]
+    fn tenants_are_strictly_isolated() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f = Fabric::new(&[net], 7.2, &[share(1.0), share(1.0)], 0.0, 1000.0);
+        assert_eq!(f.tenants(), 2);
+        assert_eq!(f.modules(), 1);
+        // Each tenant gets 1 B/cycle of the 2 B/cycle port.
+        assert!((f.down_rate(0, 0, Class::Line) - 1.0).abs() < 1e-12);
+        // Tenant 0 saturates its partition ...
+        let t0 = f.send_down(0, 0, 0.0, 1000, Class::Line);
+        assert!((t0 - 1000.0).abs() < 1e-9);
+        // ... tenant 1's transfers are unaffected (strict shares).
+        let t1 = f.send_down(0, 1, 0.0, 100, Class::Line);
+        assert!((t1 - 100.0).abs() < 1e-9, "cross-tenant interference: {t1}");
+    }
+
+    #[test]
+    fn weights_skew_port_rates() {
+        let net = NetConfig::new(0.0, 1.0);
+        let f = Fabric::new(&[net], 10.8, &[share(3.0), share(1.0)], 0.0, 1e4);
+        assert!((f.down_rate(0, 0, Class::Line) - 2.25).abs() < 1e-12);
+        assert!((f.down_rate(0, 1, Class::Line) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fabric_hop_adds_to_every_traversal() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f = Fabric::new(&[net], 3.6, &[share(1.0)], 25.0, 1e4);
+        assert_eq!(f.request_latency(0), 25.0);
+        let t = f.send_down(0, 0, 0.0, 100, Class::Line);
+        assert!((t - 125.0).abs() < 1e-9, "serialization + hop: {t}");
+        let u = f.send_up(0, 0, 0.0, 100, Class::Line);
+        assert!((u - 125.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partitioned_tenant_share_splits_classes() {
+        let net = NetConfig::new(0.0, 1.0);
+        let sh = TenantShare { weight: 1.0, partitioned: true, line_ratio: 0.25 };
+        let f = Fabric::new(&[net], 14.4, &[sh, sh], 0.0, 1e4);
+        // 4 B/cyc port, 2 B/cyc per tenant, 25% of that for lines.
+        assert!((f.down_rate(0, 0, Class::Line) - 0.5).abs() < 1e-12);
+        assert!((f.down_rate(0, 0, Class::Page) - 1.5).abs() < 1e-12);
+    }
+}

@@ -198,6 +198,11 @@ impl Link {
         self.chan(class).backlog(now)
     }
 
+    /// Service rate of the channel carrying `class`, bytes/cycle.
+    pub fn rate(&self, class: Class) -> f64 {
+        self.chan(class).bytes_per_cycle()
+    }
+
     /// Disturbance injection on all channels proportionally.
     pub fn inject(&mut self, now: f64, bytes: u64) {
         if let Some(c) = self.shared.as_mut() {

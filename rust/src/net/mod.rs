@@ -3,7 +3,9 @@
 //! partitioning, and the Fig. 13/14 disturbance injector.
 
 pub mod disturbance;
+pub mod fabric;
 pub mod link;
 
 pub use disturbance::{Disturbance, Phase};
+pub use fabric::Fabric;
 pub use link::{BwChannel, Class, Link, Transfer};

@@ -1,0 +1,304 @@
+//! Multi-tenant cluster driver: C independent tenants — each with its own
+//! trace, content profile, scheme, cores, caches, local memory and
+//! compute engine — time-sliced over one shared [`RemoteMemory`] (the
+//! switched fabric plus the per-module memory-side engines).  This is the
+//! "pools of processors ... interconnected to pools of memory" scenario
+//! of §6.7 and the prerequisite for every serving/QoS experiment.
+//!
+//! Sharing model: module bandwidth (fabric ports + DRAM bus queues) is
+//! *strictly* partitioned across tenants by weight — §4.1's reservation
+//! discipline applied to tenants, which is what yields QoS isolation and
+//! a well-defined per-tenant slowdown.  "Contention" therefore shows up
+//! as each tenant's reduced share, not as dynamic interference.  The
+//! driver still advances the tenant whose next access issues earliest
+//! (global min over every tenant's cores; first tenant wins ties), so
+//! results stay deterministic and the loop is ready for future
+//! work-conserving fabric modes where interleaving order matters.  With
+//! a single tenant it degenerates to exactly `Machine::run` — pinned by
+//! the `single_tenant_cluster_matches_machine` regression test.
+
+use crate::compress::synth::Profile;
+use crate::config::{ClusterConfig, SimConfig, TenantShare};
+use crate::daemon::EgressStats;
+use crate::metrics::Metrics;
+use crate::schemes::SchemeKind;
+use crate::system::machine::{Machine, RemoteMemory, SizeOracle};
+use crate::workloads::Trace;
+use std::sync::Arc;
+
+/// Everything needed to instantiate one tenant.
+pub struct TenantInit {
+    /// Per-tenant knobs (cache sizes, cores, DaeMon parameters, seed).
+    /// The `net` field is ignored — the cluster's fabric supplies links —
+    /// and the shared-hardware fields (`dram_gbps`, `dram_latency_ns`,
+    /// `interval_ns`) must agree across tenants (asserted): the memory
+    /// modules are one physical pool.
+    pub cfg: SimConfig,
+    pub kind: SchemeKind,
+    pub footprint_pages: usize,
+    pub profiles: Vec<Profile>,
+    pub oracle: Option<Box<dyn SizeOracle>>,
+}
+
+pub struct Cluster {
+    tenants: Vec<Machine>,
+    remote: RemoteMemory,
+}
+
+impl Cluster {
+    pub fn new(ccfg: &ClusterConfig, inits: Vec<TenantInit>) -> Cluster {
+        assert!(!inits.is_empty(), "cluster needs at least one tenant");
+        assert!(
+            ccfg.weights.is_empty() || ccfg.weights.len() == inits.len(),
+            "ClusterConfig carries {} weights for {} tenants",
+            ccfg.weights.len(),
+            inits.len()
+        );
+        let shares: Vec<TenantShare> = inits
+            .iter()
+            .enumerate()
+            .map(|(i, t)| TenantShare {
+                weight: ccfg.weights.get(i).copied().unwrap_or(1.0),
+                partitioned: t.kind.policy().partitioned,
+                line_ratio: t.cfg.daemon.partition_ratio,
+            })
+            .collect();
+        let base = &inits[0].cfg;
+        for t in &inits[1..] {
+            assert!(
+                t.cfg.dram_gbps == base.dram_gbps
+                    && t.cfg.dram_latency_ns == base.dram_latency_ns
+                    && t.cfg.interval_ns == base.interval_ns,
+                "tenants must agree on the shared memory-hardware parameters \
+                 (dram_gbps / dram_latency_ns / interval_ns)"
+            );
+        }
+        let remote = RemoteMemory::new(
+            &ccfg.nets(),
+            base.dram_gbps,
+            base.dram_latency_ns,
+            &shares,
+            ccfg.fabric_hop_ns,
+            base.interval_ns,
+        );
+        let tenants = inits
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| {
+                Machine::tenant(i, t.cfg, t.kind, t.footprint_pages, t.profiles, t.oracle)
+            })
+            .collect();
+        Cluster { tenants, remote }
+    }
+
+    pub fn tenants(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Run every tenant to completion over the shared fabric; one trace
+    /// list per tenant (a tenant's cores cycle over its list exactly as
+    /// in `Machine::run`).  Returns per-tenant metrics in tenant order.
+    pub fn run(&mut self, traces: &[Vec<Arc<Trace>>]) -> Vec<Metrics> {
+        assert_eq!(traces.len(), self.tenants.len(), "one trace list per tenant");
+        for (t, tr) in self.tenants.iter_mut().zip(traces) {
+            t.prepare(tr);
+        }
+        loop {
+            let mut best: Option<(usize, usize, f64)> = None;
+            for (i, t) in self.tenants.iter().enumerate() {
+                if let Some((ci, at)) = t.peek(&traces[i]) {
+                    if best.map(|(_, _, bt)| at < bt).unwrap_or(true) {
+                        best = Some((i, ci, at));
+                    }
+                }
+            }
+            let Some((i, ci, _)) = best else { break };
+            self.tenants[i].step_core(&mut self.remote, &traces[i], ci);
+        }
+        for t in self.tenants.iter_mut() {
+            t.finish(&mut self.remote);
+        }
+        self.tenants.iter().map(|t| t.metrics.clone()).collect()
+    }
+
+    /// Memory-side link-compression stats for tenant `t`, aggregated over
+    /// all memory modules.
+    pub fn egress_stats(&self, t: usize) -> EgressStats {
+        let mut total = EgressStats::default();
+        for e in &self.remote.engines {
+            total.merge(e.egress_stats(t));
+        }
+        total
+    }
+}
+
+/// Build and run a cluster cell: one `(workload, scheme)` pair per tenant,
+/// every tenant sharing `base_cfg`'s per-tenant knobs; `fetch` resolves a
+/// workload name to its (cached) trace + content profile.  Returns
+/// per-tenant metrics — the orchestrator's cluster-cell execution path.
+pub fn run_cluster(
+    ccfg: &ClusterConfig,
+    base_cfg: &SimConfig,
+    tenants: &[(String, SchemeKind)],
+    fetch: impl Fn(&str) -> (Arc<Trace>, Profile),
+) -> Vec<Metrics> {
+    let mut inits = Vec::new();
+    let mut traces = Vec::new();
+    for (wl, kind) in tenants {
+        let (trace, profile) = fetch(wl);
+        inits.push(TenantInit {
+            cfg: base_cfg.clone(),
+            kind: *kind,
+            footprint_pages: trace.footprint_pages,
+            profiles: vec![profile; base_cfg.cores.max(1)],
+            oracle: None,
+        });
+        traces.push(vec![trace]);
+    }
+    Cluster::new(ccfg, inits).run(&traces)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::NetConfig;
+    use crate::workloads::{by_name, Scale};
+
+    fn fetch_test(wl: &str, seed: u64) -> (Arc<Trace>, Profile) {
+        let w = by_name(wl).unwrap();
+        (Arc::new(w.generate(seed, Scale::Test)), w.profile())
+    }
+
+    #[test]
+    fn single_tenant_cluster_matches_machine() {
+        // Acceptance criterion: a 1-tenant cluster over M modules must
+        // reproduce the existing Machine metrics for the same cell.
+        let net = NetConfig::new(100.0, 4.0);
+        for kind in [SchemeKind::Daemon, SchemeKind::Remote] {
+            let cfg = SimConfig::test_scale();
+            let (trace, profile) = fetch_test("pr", cfg.seed);
+            let mut machine = Machine::new(
+                cfg.clone().with_memory_components(vec![net; 2]),
+                kind,
+                trace.footprint_pages,
+                vec![profile],
+                None,
+            );
+            machine.run(std::slice::from_ref(&*trace));
+
+            let ccfg = ClusterConfig::new(2).with_net(100.0, 4.0);
+            let mut cluster = Cluster::new(
+                &ccfg,
+                vec![TenantInit {
+                    cfg,
+                    kind,
+                    footprint_pages: trace.footprint_pages,
+                    profiles: vec![profile],
+                    oracle: None,
+                }],
+            );
+            let ms = cluster.run(&[vec![trace.clone()]]);
+            assert_eq!(
+                ms[0].to_json().to_string(),
+                machine.metrics.to_json().to_string(),
+                "{kind:?}: single-tenant cluster diverged from Machine"
+            );
+        }
+    }
+
+    #[test]
+    fn tenants_slow_down_under_contention() {
+        // 2 tenants on 1 module each get half the bandwidth: both finish
+        // later than solo, instructions are preserved per tenant.
+        let ccfg = ClusterConfig::new(1);
+        let cfg = SimConfig::test_scale();
+        let mk = |n: usize| {
+            (0..n)
+                .map(|_| {
+                    let (trace, profile) = fetch_test("pr", cfg.seed);
+                    (
+                        TenantInit {
+                            cfg: cfg.clone(),
+                            kind: SchemeKind::Remote,
+                            footprint_pages: trace.footprint_pages,
+                            profiles: vec![profile],
+                            oracle: None,
+                        },
+                        vec![trace],
+                    )
+                })
+                .unzip::<_, _, Vec<_>, Vec<_>>()
+        };
+        let (solo_init, solo_traces) = mk(1);
+        let solo = Cluster::new(&ccfg, solo_init).run(&solo_traces);
+        let (shared_init, shared_traces) = mk(2);
+        let shared = Cluster::new(&ccfg, shared_init).run(&shared_traces);
+        assert_eq!(shared.len(), 2);
+        for m in &shared {
+            assert_eq!(m.instructions, solo[0].instructions);
+            assert!(
+                m.cycles > solo[0].cycles,
+                "half-bandwidth tenant not slower: {} vs {}",
+                m.cycles,
+                solo[0].cycles
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_reports_memory_side_compression() {
+        let ccfg = ClusterConfig::new(1);
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("sp", cfg.seed);
+        let mut cluster = Cluster::new(
+            &ccfg,
+            vec![TenantInit {
+                cfg: cfg.clone(),
+                kind: SchemeKind::Daemon,
+                footprint_pages: trace.footprint_pages,
+                profiles: vec![profile],
+                oracle: None,
+            }],
+        );
+        let ms = cluster.run(&[vec![trace]]);
+        let stats = cluster.egress_stats(0);
+        assert!(stats.raw_bytes > 0, "no egress recorded");
+        assert!(
+            stats.ratio() > 1.5,
+            "memory-side compression ratio {}",
+            stats.ratio()
+        );
+        assert!(ms[0].pages_moved > 0);
+    }
+
+    #[test]
+    fn run_cluster_helper_runs_mixed_schemes() {
+        let ccfg = ClusterConfig::new(2);
+        let cfg = SimConfig::test_scale();
+        let tenants = vec![
+            ("pr".to_string(), SchemeKind::Daemon),
+            ("sp".to_string(), SchemeKind::Remote),
+        ];
+        let ms = run_cluster(&ccfg, &cfg, &tenants, |wl| fetch_test(wl, cfg.seed));
+        assert_eq!(ms.len(), 2);
+        assert!(ms.iter().all(|m| m.instructions > 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "weights for")]
+    fn cluster_rejects_mismatched_weights() {
+        let ccfg = ClusterConfig::new(1).with_weights(vec![1.0, 2.0]);
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let _ = Cluster::new(
+            &ccfg,
+            vec![TenantInit {
+                cfg,
+                kind: SchemeKind::Remote,
+                footprint_pages: trace.footprint_pages,
+                profiles: vec![profile],
+                oracle: None,
+            }],
+        );
+    }
+}

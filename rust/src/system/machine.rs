@@ -1,20 +1,30 @@
 //! The disaggregated machine: cores + cache hierarchy + local memory on
-//! the compute component, network links to one or more memory components,
-//! and the DaeMon engines — driven by workload traces under a
-//! data-movement scheme.
+//! the compute component, a switched fabric to one or more memory
+//! modules (each with a memory-side engine), and the DaeMon compute
+//! engine — driven by workload traces under a data-movement scheme.
 //!
 //! Timing model: resource timelines (bandwidth channels) + an arrival
 //! event queue + an interval-style OoO core (gap instructions at base CPI;
 //! long-latency misses overlapped across a bounded MLP window).  This is
 //! the same abstraction level as the paper's Sniper setup — IPC
 //! differences between schemes arise only from memory stall cycles.
+//!
+//! A solo `Machine` owns its [`RemoteMemory`] (fabric + memory engines,
+//! single tenant, zero fabric hop — timing-identical to the old
+//! point-to-point links).  A [`crate::system::Cluster`] instead builds
+//! one shared `RemoteMemory` for C tenants and drives each tenant
+//! `Machine` through the public stepping API (`prepare` / `peek` /
+//! `step_core` / `finish`) in global earliest-access order — the
+//! ordering that keeps cluster results well-defined independent of
+//! tenant count (and becomes load-bearing once the fabric gains
+//! work-conserving sharing modes on top of today's strict shares).
 
 use crate::compress::{synth::Profile, Compressor};
-use crate::config::{ns_to_cycles, SimConfig, LINE_BYTES, PAGE_BYTES};
-use crate::daemon::{ComputeEngine, DirtyOutcome, PageArrival};
+use crate::config::{ns_to_cycles, NetConfig, SimConfig, TenantShare, CORE_GHZ, LINE_BYTES, PAGE_BYTES};
+use crate::daemon::{ComputeEngine, DirtyOutcome, MemoryEngine, PageArrival};
 use crate::mem::{Access as CacheAccess, Cache, DramBus, LocalMemory};
 use crate::metrics::Metrics;
-use crate::net::{Class, Disturbance, Link};
+use crate::net::{Class, Disturbance, Fabric};
 use crate::schemes::{Policy, SchemeKind};
 use crate::sim::EventQueue;
 use crate::workloads::{Scale, Trace, Workload};
@@ -53,6 +63,14 @@ impl ExactOracle {
 
 impl SizeOracle for ExactOracle {
     fn page_size(&mut self, core: usize, page: u64) -> u32 {
+        // A core index past the profile list means the caller built the
+        // oracle with fewer profiles than cores — surface the mismatch
+        // instead of silently reusing the last profile.
+        debug_assert!(
+            core < self.comps.len(),
+            "core {core} has no content profile ({} configured)",
+            self.comps.len()
+        );
         let i = core.min(self.comps.len() - 1);
         self.comps[i].size_of(page)
     }
@@ -68,13 +86,58 @@ impl SizeOracle for ExactOracle {
     }
 }
 
-/// One memory component: full-duplex link + DRAM bus + translation.
-struct MemComponent {
-    link_in: Link,  // memory -> compute (data)
-    link_out: Link, // compute -> memory (writebacks)
-    bus: DramBus,
-    switch_cycles: f64,
-    disturbance: Disturbance,
+/// The shared remote-memory subsystem: the switched [`Fabric`] plus one
+/// memory-side [`MemoryEngine`] per module.
+pub struct RemoteMemory {
+    pub fabric: Fabric,
+    pub engines: Vec<MemoryEngine>,
+}
+
+impl RemoteMemory {
+    pub fn new(
+        nets: &[NetConfig],
+        dram_gbps: f64,
+        dram_latency_ns: f64,
+        shares: &[TenantShare],
+        hop_ns: f64,
+        interval_ns: f64,
+    ) -> RemoteMemory {
+        let interval = ns_to_cycles(interval_ns);
+        let fabric = Fabric::new(nets, dram_gbps, shares, ns_to_cycles(hop_ns), interval);
+        let engines = nets
+            .iter()
+            .map(|_| {
+                MemoryEngine::new(
+                    dram_gbps / CORE_GHZ,
+                    ns_to_cycles(dram_latency_ns),
+                    shares,
+                    interval,
+                )
+            })
+            .collect();
+        RemoteMemory { fabric, engines }
+    }
+
+    /// The single-tenant subsystem a solo [`Machine`] owns.
+    pub fn for_config(cfg: &SimConfig, policy: Policy) -> RemoteMemory {
+        let share = TenantShare {
+            weight: 1.0,
+            partitioned: policy.partitioned,
+            line_ratio: cfg.daemon.partition_ratio,
+        };
+        RemoteMemory::new(
+            &cfg.net,
+            cfg.dram_gbps,
+            cfg.dram_latency_ns,
+            &[share],
+            0.0,
+            cfg.interval_ns,
+        )
+    }
+
+    pub fn modules(&self) -> usize {
+        self.engines.len()
+    }
 }
 
 /// Arrival events applied as core time advances.
@@ -98,11 +161,15 @@ pub struct Machine {
     cfg: SimConfig,
     policy: Policy,
     kind: SchemeKind,
+    /// Tenant index on the shared fabric (0 for a solo machine).
+    id: usize,
+    /// Solo machines own their remote subsystem; cluster tenants get it
+    /// passed into the stepping API instead.
+    remote: Option<RemoteMemory>,
     cores: Vec<Core>,
     llc: Cache,
     local: LocalMemory,
     local_bus: DramBus,
-    comps: Vec<MemComponent>,
     engine: ComputeEngine,
     arrivals: EventQueue<Arrival>,
     oracle: Box<dyn SizeOracle>,
@@ -113,9 +180,36 @@ pub struct Machine {
 }
 
 impl Machine {
-    /// Build a machine for `traces` (one per core) with content `profiles`
-    /// (one per core).
+    /// Build a solo machine for `traces` (one per core) with content
+    /// `profiles` (one per core).
     pub fn new(
+        cfg: SimConfig,
+        kind: SchemeKind,
+        footprint_pages: usize,
+        profiles: Vec<Profile>,
+        oracle: Option<Box<dyn SizeOracle>>,
+    ) -> Machine {
+        let remote = RemoteMemory::for_config(&cfg, kind.policy());
+        Machine::build(0, Some(remote), cfg, kind, footprint_pages, profiles, oracle)
+    }
+
+    /// Build a tenant machine for a [`crate::system::Cluster`]: it shares
+    /// an external [`RemoteMemory`] (passed into `step_next`/`finish`)
+    /// instead of owning one, and `id` selects its fabric/engine ports.
+    pub fn tenant(
+        id: usize,
+        cfg: SimConfig,
+        kind: SchemeKind,
+        footprint_pages: usize,
+        profiles: Vec<Profile>,
+        oracle: Option<Box<dyn SizeOracle>>,
+    ) -> Machine {
+        Machine::build(id, None, cfg, kind, footprint_pages, profiles, oracle)
+    }
+
+    fn build(
+        id: usize,
+        remote: Option<RemoteMemory>,
         cfg: SimConfig,
         kind: SchemeKind,
         footprint_pages: usize,
@@ -136,43 +230,6 @@ impl Machine {
         let algo = cfg.daemon.compress.unwrap_or(crate::compress::Algo::Lz);
         let oracle = oracle
             .unwrap_or_else(|| Box::new(ExactOracle::new(cfg.seed, &profiles, algo)));
-
-        let comps = cfg
-            .net
-            .iter()
-            .map(|n| {
-                let bpc = n.bytes_per_cycle(cfg.dram_gbps);
-                let ratio = cfg.daemon.partition_ratio;
-                let mk_link = || {
-                    if policy.partitioned {
-                        Link::partitioned(ns_to_cycles(n.switch_latency_ns), bpc, ratio, interval_cycles)
-                    } else {
-                        Link::shared(ns_to_cycles(n.switch_latency_ns), bpc, interval_cycles)
-                    }
-                };
-                let bus = if policy.partitioned {
-                    DramBus::partitioned(
-                        cfg.dram_bytes_per_cycle(),
-                        ns_to_cycles(cfg.dram_latency_ns),
-                        ratio,
-                        interval_cycles,
-                    )
-                } else {
-                    DramBus::shared(
-                        cfg.dram_bytes_per_cycle(),
-                        ns_to_cycles(cfg.dram_latency_ns),
-                        interval_cycles,
-                    )
-                };
-                MemComponent {
-                    link_in: mk_link(),
-                    link_out: mk_link(),
-                    bus,
-                    switch_cycles: ns_to_cycles(n.switch_latency_ns),
-                    disturbance: Disturbance::none(),
-                }
-            })
-            .collect();
 
         // Non-selection schemes get effectively unbounded inflight
         // buffers (they have no selection unit; dedup still applies).
@@ -203,7 +260,6 @@ impl Machine {
                 ns_to_cycles(cfg.dram_latency_ns),
                 interval_cycles,
             ),
-            comps,
             engine: ComputeEngine::new(dp),
             arrivals: EventQueue::new(),
             oracle,
@@ -214,22 +270,24 @@ impl Machine {
             cfg,
             policy,
             kind,
+            id,
+            remote,
         }
     }
 
-    /// Install network disturbance phases on every memory component.
+    /// Install network disturbance phases on every memory-module port
+    /// (solo machines only; a cluster owns the shared fabric).
     pub fn set_disturbance(&mut self, mk: impl Fn(f64) -> Disturbance) {
-        for c in self.comps.iter_mut() {
-            // Capacity = full link bandwidth in B/cycle.
-            let cap = self.cfg.net[0].bytes_per_cycle(self.cfg.dram_gbps);
-            let _ = cap;
-            c.disturbance = mk(self.cfg.net[0].bytes_per_cycle(self.cfg.dram_gbps));
-        }
+        self.remote
+            .as_mut()
+            .expect("set_disturbance drives a solo machine's own fabric")
+            .fabric
+            .set_disturbance(mk);
     }
 
     #[inline]
-    fn placement(&self, page: u64) -> usize {
-        let n = self.comps.len();
+    fn placement(&self, remote: &RemoteMemory, page: u64) -> usize {
+        let n = remote.modules();
         if n == 1 {
             0
         } else if self.cfg.placement_round_robin {
@@ -257,7 +315,7 @@ impl Machine {
     }
 
     /// Schedule a page migration; returns its (start, arrival) cycles.
-    fn schedule_page(&mut self, page: u64, now: f64) -> (f64, f64) {
+    fn schedule_page(&mut self, remote: &mut RemoteMemory, page: u64, now: f64) -> (f64, f64) {
         let compress = self.policy.compress;
         let owner = self.owner_core(page);
         let bytes = if compress {
@@ -265,19 +323,19 @@ impl Machine {
         } else {
             PAGE_BYTES
         };
-        let ci = self.placement(page);
-        let comp = &mut self.comps[ci];
-        comp.disturbance.advance(now, &mut comp.link_in);
+        let m = self.placement(remote, page);
+        remote.fabric.advance_disturbance(m, self.id, now);
         // Request propagation (control message) + HW translation + DRAM
-        // page read at the memory component.
-        let t0 = now + comp.switch_cycles;
-        let t1 = comp.bus.access(t0, 8, Class::Page); // translation lookup
-        let mut t2 = comp.bus.access(t1, PAGE_BYTES, Class::Page);
+        // page read at the memory module.
+        let t0 = now + remote.fabric.request_latency(m);
+        let t1 = remote.engines[m].access(self.id, t0, 8, Class::Page); // translation lookup
+        let mut t2 = remote.engines[m].access(self.id, t1, PAGE_BYTES, Class::Page);
         if compress {
             t2 += self.cfg.daemon.compress_cycles; // MXT compression
         }
         // Link transfer (page class when partitioned) + switch latency.
-        let t3 = comp.link_in.send(t2, bytes, Class::Page);
+        let t3 = remote.fabric.send_down(m, self.id, t2, bytes, Class::Page);
+        remote.engines[m].note_egress(self.id, PAGE_BYTES, bytes);
         let mut t4 = t3;
         if compress {
             t4 += self.cfg.daemon.compress_cycles; // decompression
@@ -291,56 +349,53 @@ impl Machine {
 
     /// Estimated arrival time of a line request issued now — the quantity
     /// the selection unit's queue-occupancy comparison approximates.
-    fn line_eta(&self, page: u64, now: f64) -> f64 {
-        let ci = self.placement(page);
-        let comp = &self.comps[ci];
-        let bus_rate = self.cfg.dram_bytes_per_cycle()
-            * if self.policy.partitioned { self.cfg.daemon.partition_ratio } else { 1.0 };
-        let link_rate = self.cfg.net[ci].bytes_per_cycle(self.cfg.dram_gbps)
-            * if self.policy.partitioned { self.cfg.daemon.partition_ratio } else { 1.0 };
-        now + 2.0 * comp.switch_cycles
-            + comp.bus.backlog(now, Class::Line)
-            + 2.0 * comp.bus.latency_cycles
+    fn line_eta(&self, remote: &RemoteMemory, page: u64, now: f64) -> f64 {
+        let m = self.placement(remote, page);
+        let bus_rate = remote.engines[m].rate(self.id, Class::Line);
+        let link_rate = remote.fabric.down_rate(m, self.id, Class::Line);
+        now + 2.0 * remote.fabric.request_latency(m)
+            + remote.engines[m].backlog(self.id, now, Class::Line)
+            + 2.0 * remote.engines[m].latency_cycles(self.id)
             + (8.0 + LINE_BYTES as f64) / bus_rate
-            + comp.link_in.backlog(now, Class::Line)
+            + remote.fabric.down_backlog(m, self.id, now, Class::Line)
             + LINE_BYTES as f64 / link_rate
     }
 
     /// Schedule a cache-line movement; returns its arrival cycle.
-    fn schedule_line(&mut self, addr: u64, now: f64) -> f64 {
+    fn schedule_line(&mut self, remote: &mut RemoteMemory, addr: u64, now: f64) -> f64 {
         let page = Self::page_of(addr);
-        let ci = self.placement(page);
-        let comp = &mut self.comps[ci];
-        comp.disturbance.advance(now, &mut comp.link_in);
-        let t0 = now + comp.switch_cycles;
-        let t1 = comp.bus.access(t0, 8, Class::Line); // translation
-        let t2 = comp.bus.access(t1, LINE_BYTES, Class::Line);
-        let t3 = comp.link_in.send(t2, LINE_BYTES, Class::Line);
+        let m = self.placement(remote, page);
+        remote.fabric.advance_disturbance(m, self.id, now);
+        let t0 = now + remote.fabric.request_latency(m);
+        let t1 = remote.engines[m].access(self.id, t0, 8, Class::Line); // translation
+        let t2 = remote.engines[m].access(self.id, t1, LINE_BYTES, Class::Line);
+        let t3 = remote.fabric.send_down(m, self.id, t2, LINE_BYTES, Class::Line);
+        remote.engines[m].note_egress(self.id, LINE_BYTES, LINE_BYTES);
         self.metrics.net_bytes_in += LINE_BYTES;
         t3
     }
 
     /// Write a dirty line back to remote memory (asynchronous).  §4.6:
     /// with `dirty_replicas > 1`, the write goes to multiple memory
-    /// components (replica ACKs are off the critical path; the bandwidth
-    /// cost is modeled on each replica's link and bus).
-    fn writeback_line(&mut self, addr: u64, now: f64) {
+    /// modules (replica ACKs are off the critical path; the bandwidth
+    /// cost is modeled on each replica's port and bus).
+    fn writeback_line(&mut self, remote: &mut RemoteMemory, addr: u64, now: f64) {
         let page = Self::page_of(addr);
-        let home = self.placement(page);
-        let replicas = self.cfg.dirty_replicas.min(self.comps.len());
+        let home = self.placement(remote, page);
+        let n = remote.modules();
+        let replicas = self.cfg.dirty_replicas.min(n);
         for k in 0..replicas.max(1) {
-            let ci = (home + k) % self.comps.len();
-            let comp = &mut self.comps[ci];
-            let t1 = comp.link_out.send(now, LINE_BYTES, Class::Line);
-            let t2 = comp.bus.access(t1, 8, Class::Line); // translation
-            comp.bus.access(t2, LINE_BYTES, Class::Line);
+            let m = (home + k) % n;
+            let t1 = remote.fabric.send_up(m, self.id, now, LINE_BYTES, Class::Line);
+            let t2 = remote.engines[m].access(self.id, t1, 8, Class::Line); // translation
+            remote.engines[m].access(self.id, t2, LINE_BYTES, Class::Line);
             self.metrics.writeback_bytes += LINE_BYTES;
         }
     }
 
     /// Write a dirty page back to remote memory (asynchronous, on local
     /// memory eviction).
-    fn writeback_page(&mut self, page: u64, now: f64) {
+    fn writeback_page(&mut self, remote: &mut RemoteMemory, page: u64, now: f64) {
         let compress = self.policy.compress;
         let owner = self.owner_core(page);
         let bytes = if compress {
@@ -348,15 +403,14 @@ impl Machine {
         } else {
             PAGE_BYTES
         };
-        let ci = self.placement(page);
-        let comp = &mut self.comps[ci];
+        let m = self.placement(remote, page);
         let mut t0 = now;
         if compress {
             t0 += self.cfg.daemon.compress_cycles;
         }
-        let t1 = comp.link_out.send(t0, bytes, Class::Page);
-        let t2 = comp.bus.access(t1, 8, Class::Page);
-        comp.bus.access(t2, PAGE_BYTES, Class::Page);
+        let t1 = remote.fabric.send_up(m, self.id, t0, bytes, Class::Page);
+        let t2 = remote.engines[m].access(self.id, t1, 8, Class::Page);
+        remote.engines[m].access(self.id, t2, PAGE_BYTES, Class::Page);
         self.metrics.writeback_bytes += bytes;
     }
 
@@ -368,7 +422,7 @@ impl Machine {
     }
 
     /// Apply all arrivals due at or before `now`.
-    fn apply_arrivals(&mut self, now: f64) {
+    fn apply_arrivals(&mut self, remote: &mut RemoteMemory, now: f64) {
         while let Some((at, ev)) = self.arrivals.pop_due(now) {
             match ev {
                 Arrival::Page { page } => match self.engine.page_arrived(page) {
@@ -376,7 +430,7 @@ impl Machine {
                         self.metrics.pages_moved += 1;
                         if let Some(ev) = self.local.install(page, at) {
                             if ev.dirty {
-                                self.writeback_page(ev.page, at);
+                                self.writeback_page(remote, ev.page, at);
                             }
                         }
                         if parked_dirty_lines > 0 {
@@ -384,7 +438,7 @@ impl Machine {
                         }
                     }
                     PageArrival::ThrottledRerequest => {
-                        let (start, arrive) = self.schedule_page(page, at);
+                        let (start, arrive) = self.schedule_page(remote, page, at);
                         self.engine.note_page_scheduled(page, start, arrive);
                         self.arrivals.push(arrive, Arrival::Page { page });
                     }
@@ -396,7 +450,7 @@ impl Machine {
                         // Critical line goes straight to LLC through the
                         // coherent path (§4.1) — handle the LLC victim.
                         if let Some(victim) = self.llc.install(addr) {
-                            self.handle_dirty_victim(victim, at);
+                            self.handle_dirty_victim(remote, victim, at);
                         }
                     }
                     // Stale packet (page arrived first): ignored, §4.3(i).
@@ -406,7 +460,7 @@ impl Machine {
     }
 
     /// §4.3 dirty-data handling for a dirty line evicted from the LLC.
-    fn handle_dirty_victim(&mut self, addr: u64, now: f64) {
+    fn handle_dirty_victim(&mut self, remote: &mut RemoteMemory, addr: u64, now: f64) {
         let page = Self::page_of(addr);
         // Hits local memory: write it there.
         if self.local.present(page, now) && !self.policy.local_only {
@@ -420,19 +474,19 @@ impl Machine {
         }
         let offset = Self::offset_of(addr);
         match self.engine.dirty_evict(page, offset, now) {
-            DirtyOutcome::WriteRemote => self.writeback_line(addr, now),
+            DirtyOutcome::WriteRemote => self.writeback_line(remote, addr, now),
             DirtyOutcome::Parked => {}
             DirtyOutcome::FlushAllAndThrottle { parked_flushed } => {
                 // Flush all parked lines plus this one to remote.
                 for _ in 0..=parked_flushed {
-                    self.writeback_line(addr, now);
+                    self.writeback_line(remote, addr, now);
                 }
             }
         }
     }
 
     /// Service an LLC-miss demand access; returns its completion time.
-    fn memory_access(&mut self, addr: u64, write: bool, now: f64) -> f64 {
+    fn memory_access(&mut self, remote: &mut RemoteMemory, addr: u64, write: bool, now: f64) -> f64 {
         let page = Self::page_of(addr);
         let offset = Self::offset_of(addr);
 
@@ -447,7 +501,7 @@ impl Machine {
             if let Some(arr) = self.engine.inflight_line(page, offset) {
                 return arr;
             }
-            let arr = self.schedule_line(addr, now);
+            let arr = self.schedule_line(remote, addr, now);
             self.engine.note_line_scheduled(page, offset, arr);
             self.arrivals.push(arr, Arrival::Line { page, offset, addr });
             return arr;
@@ -479,14 +533,14 @@ impl Machine {
         if self.policy.free_pages {
             if let Some(ev) = self.local.install(page, now) {
                 if ev.dirty {
-                    self.writeback_page(ev.page, now);
+                    self.writeback_page(remote, ev.page, now);
                 }
             }
             self.metrics.pages_moved += 1;
-            return self.schedule_line(addr, now);
+            return self.schedule_line(remote, addr, now);
         }
 
-        let line_eta = self.line_eta(page, now);
+        let line_eta = self.line_eta(remote, page, now);
         let decision = self
             .engine
             .decide(page, offset, now, self.policy.selection, line_eta);
@@ -503,7 +557,7 @@ impl Machine {
                 } else {
                     now
                 };
-                let (start, arrive) = self.schedule_page(page, req_at);
+                let (start, arrive) = self.schedule_page(remote, page, req_at);
                 self.engine.note_page_scheduled(page, start, arrive);
                 self.arrivals.push(arrive, Arrival::Page { page });
                 page_arr = Some(arrive);
@@ -521,7 +575,7 @@ impl Machine {
                     if !d.send_page {
                         break; // buffer pressure: stop prefetching
                     }
-                    let (s, a) = self.schedule_page(next, now);
+                    let (s, a) = self.schedule_page(remote, next, now);
                     self.engine.note_page_scheduled(next, s, a);
                     self.arrivals.push(a, Arrival::Page { page: next });
                 }
@@ -533,7 +587,7 @@ impl Machine {
 
         if self.policy.move_lines && !self.policy.blocking_pages && line_arr.is_none() {
             if decision.send_line {
-                let arr = self.schedule_line(addr, now);
+                let arr = self.schedule_line(remote, addr, now);
                 self.engine.note_line_scheduled(page, offset, arr);
                 self.arrivals.push(arr, Arrival::Line { page, offset, addr });
                 line_arr = Some(arr);
@@ -549,7 +603,7 @@ impl Machine {
             (None, None) => {
                 // Both buffers saturated with nothing inflight for this
                 // address: fall back to an (overcommitted) line request.
-                let arr = self.schedule_line(addr, now);
+                let arr = self.schedule_line(remote, addr, now);
                 self.arrivals.push(arr, Arrival::Line { page, offset, addr });
                 arr
             }
@@ -557,10 +611,10 @@ impl Machine {
     }
 
     /// Process one trace access on core `ci`.
-    fn step(&mut self, ci: usize, addr: u64, write: bool, gap: u32) {
+    fn step(&mut self, remote: &mut RemoteMemory, ci: usize, addr: u64, write: bool, gap: u32) {
         let tagged = addr | ((ci as u64) << self.core_tag_shift);
         let now0 = self.cores[ci].time;
-        self.apply_arrivals(now0);
+        self.apply_arrivals(remote, now0);
 
         // Gap instructions + the access instruction itself.
         let instrs = gap as u64 + 1;
@@ -586,8 +640,9 @@ impl Machine {
                     self.cfg.llc.latency_cycles / self.cfg.issue_width as f64;
             }
             CacheAccess::Miss { dirty_victim } => {
-                let done = self.memory_access(tagged, write, now);
+                let done = self.memory_access(remote, tagged, write, now);
                 self.metrics.access_cost.add(done - now);
+                self.metrics.access_hist.add(done - now);
                 // MLP window: block when full on the oldest completion.
                 // Blocking-page schemes go through the kernel fault path,
                 // which sustains far fewer concurrent outstanding misses.
@@ -614,18 +669,16 @@ impl Machine {
                 }
                 core.outstanding.push(done);
                 if let Some(victim) = dirty_victim {
-                    self.handle_dirty_victim(victim, now);
+                    self.handle_dirty_victim(remote, victim, now);
                 }
             }
         }
     }
 
-    /// Run the traces to completion (one per core, cycled if fewer).
-    /// Generic over `Borrow<Trace>` so callers can hand in owned traces or
-    /// `Arc<Trace>`s shared from the trace cache without cloning.
-    pub fn run<T: std::borrow::Borrow<Trace>>(&mut self, traces: &[T]) -> &Metrics {
+    /// Pre-run setup (local-only schemes preinstall every page).  Part of
+    /// the stepping API a [`crate::system::Cluster`] drives directly.
+    pub fn prepare<T: std::borrow::Borrow<Trace>>(&mut self, traces: &[T]) {
         assert!(!traces.is_empty());
-        // Local-only: preinstall every page.
         if self.policy.local_only {
             for (ci, t) in traces.iter().enumerate().take(self.cores.len()) {
                 for a in &t.borrow().accesses {
@@ -646,25 +699,62 @@ impl Machine {
                 }
             }
         }
-        loop {
-            // Advance the core with the smallest time that still has work.
-            let mut best: Option<(usize, f64)> = None;
-            for ci in 0..self.cores.len() {
-                let t: &Trace = traces[ci % traces.len()].borrow();
-                if self.cores[ci].pos < t.accesses.len() {
-                    let time = self.cores[ci].time;
-                    if best.map(|(_, bt)| time < bt).unwrap_or(true) {
-                        best = Some((ci, time));
-                    }
+    }
+
+    /// The core the driver advances next: smallest time with work left
+    /// (first core wins ties, matching the legacy run loop).
+    pub fn next_core<T: std::borrow::Borrow<Trace>>(&self, traces: &[T]) -> Option<usize> {
+        let mut best: Option<(usize, f64)> = None;
+        for ci in 0..self.cores.len() {
+            let t: &Trace = traces[ci % traces.len()].borrow();
+            if self.cores[ci].pos < t.accesses.len() {
+                let time = self.cores[ci].time;
+                if best.map(|(_, bt)| time < bt).unwrap_or(true) {
+                    best = Some((ci, time));
                 }
             }
-            let Some((ci, _)) = best else { break };
-            let t: &Trace = traces[ci % traces.len()].borrow();
-            let a = t.accesses[self.cores[ci].pos];
-            self.cores[ci].pos += 1;
-            self.step(ci, a.addr, a.write, a.gap);
         }
-        // Drain outstanding misses + arrivals.
+        best.map(|(ci, _)| ci)
+    }
+
+    /// Next core and its issue time — what a cluster compares across
+    /// tenants to advance the globally-earliest access; the core index
+    /// goes straight back into [`Machine::step_core`] so the winner is
+    /// not rescanned.
+    pub fn peek<T: std::borrow::Borrow<Trace>>(&self, traces: &[T]) -> Option<(usize, f64)> {
+        self.next_core(traces).map(|ci| (ci, self.cores[ci].time))
+    }
+
+    /// Advance one access on core `ci` (as returned by `peek`/`next_core`)
+    /// over `remote`.
+    pub fn step_core<T: std::borrow::Borrow<Trace>>(
+        &mut self,
+        remote: &mut RemoteMemory,
+        traces: &[T],
+        ci: usize,
+    ) {
+        let t: &Trace = traces[ci % traces.len()].borrow();
+        let a = t.accesses[self.cores[ci].pos];
+        self.cores[ci].pos += 1;
+        self.step(remote, ci, a.addr, a.write, a.gap);
+    }
+
+    /// Advance one access on the next core over `remote`; returns false
+    /// once every core has drained its trace.
+    pub fn step_next<T: std::borrow::Borrow<Trace>>(
+        &mut self,
+        remote: &mut RemoteMemory,
+        traces: &[T],
+    ) -> bool {
+        let Some(ci) = self.next_core(traces) else {
+            return false;
+        };
+        self.step_core(remote, traces, ci);
+        true
+    }
+
+    /// Drain outstanding misses + arrivals and finalize the metrics.
+    pub fn finish(&mut self, remote: &mut RemoteMemory) {
         for ci in 0..self.cores.len() {
             let max_out = self.cores[ci]
                 .outstanding
@@ -681,21 +771,36 @@ impl Machine {
             .iter()
             .map(|c| c.time)
             .fold(0.0f64, f64::max);
-        self.apply_arrivals(end + 1e12);
+        self.apply_arrivals(remote, end + 1e12);
 
         self.metrics.instructions = self.cores.iter().map(|c| c.instructions).sum();
         self.metrics.cycles = end.max(1.0);
         self.metrics.net_utilization = {
             let horizon = end.max(1.0);
-            let u: f64 = self.comps.iter().map(|c| c.link_in.utilization(horizon)).sum();
-            u / self.comps.len() as f64
+            let u: f64 = (0..remote.modules())
+                .map(|m| remote.fabric.down_utilization(m, self.id, horizon))
+                .sum();
+            u / remote.modules() as f64
         };
         self.metrics.compression_ratio = if self.policy.compress {
             self.oracle.ratio()
         } else {
             1.0
         };
-        self.metrics.pages_throttled += 0;
+    }
+
+    /// Run the traces to completion (one per core, cycled if fewer).
+    /// Generic over `Borrow<Trace>` so callers can hand in owned traces or
+    /// `Arc<Trace>`s shared from the trace cache without cloning.
+    pub fn run<T: std::borrow::Borrow<Trace>>(&mut self, traces: &[T]) -> &Metrics {
+        let mut remote = self
+            .remote
+            .take()
+            .expect("this Machine is a cluster tenant; drive it through Cluster::run");
+        self.prepare(traces);
+        while self.step_next(&mut remote, traces) {}
+        self.finish(&mut remote);
+        self.remote = Some(remote);
         &self.metrics
     }
 
@@ -707,9 +812,14 @@ impl Machine {
         &self.engine
     }
 
-    /// Per-interval utilization of the first memory component's link.
+    /// Per-interval utilization of the first memory module's downlink
+    /// (solo machines only).
     pub fn link_utilization_series(&self) -> Vec<f64> {
-        self.comps[0].link_in.utilization_series()
+        self.remote
+            .as_ref()
+            .expect("link_utilization_series reads a solo machine's own fabric")
+            .fabric
+            .down_series(0, self.id)
     }
 
     pub fn local_hit_rate(&self) -> f64 {
@@ -868,6 +978,29 @@ mod tests {
     }
 
     #[test]
+    fn exact_oracle_selects_per_core_profile() {
+        use crate::compress::Algo;
+        let (a, b) = (Profile::high(), Profile::uniform_mix(1.0));
+        let mut oracle = ExactOracle::new(7, &[a, b], Algo::Lz);
+        // Each core's sizes must match a compressor built with that core's
+        // profile and per-core seed — not the last profile for everyone.
+        let mut ca = Compressor::new(7, a, Algo::Lz);
+        let mut cb = Compressor::new(7 ^ 1u64 << 32, b, Algo::Lz);
+        for page in [1u64, 99, 4242] {
+            assert_eq!(oracle.page_size(0, page), ca.size_of(page), "core 0 @ {page}");
+            assert_eq!(oracle.page_size(1, page), cb.size_of(page), "core 1 @ {page}");
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "has no content profile")]
+    fn exact_oracle_rejects_out_of_range_core() {
+        let mut oracle = ExactOracle::new(7, &[Profile::high()], crate::compress::Algo::Lz);
+        let _ = oracle.page_size(1, 42); // only core 0 has a profile
+    }
+
+    #[test]
     fn run_accepts_shared_arc_traces() {
         use std::sync::Arc;
         let w = by_name("pr").unwrap();
@@ -898,6 +1031,36 @@ mod tests {
             "4 comps {} vs 1 comp {}",
             four.metrics.ipc(),
             one.metrics.ipc()
+        );
+    }
+
+    #[test]
+    fn stepping_api_matches_run() {
+        // prepare/step_next/finish (what a Cluster drives) must replay the
+        // exact run() sequence.
+        let w = by_name("bf").unwrap();
+        let cfg = quick_cfg();
+        let trace = w.generate(cfg.seed, Scale::Test);
+        let mk = || {
+            Machine::new(
+                cfg.clone(),
+                SchemeKind::Daemon,
+                trace.footprint_pages,
+                vec![w.profile()],
+                None,
+            )
+        };
+        let mut a = mk();
+        a.run(std::slice::from_ref(&trace));
+        let mut b = mk();
+        let mut remote = RemoteMemory::for_config(&cfg, SchemeKind::Daemon.policy());
+        b.prepare(std::slice::from_ref(&trace));
+        while b.step_next(&mut remote, std::slice::from_ref(&trace)) {}
+        b.finish(&mut remote);
+        assert_eq!(
+            a.metrics.to_json().to_string(),
+            b.metrics.to_json().to_string(),
+            "stepping API diverged from run()"
         );
     }
 }

@@ -1,7 +1,10 @@
-//! System coordinator: the disaggregated machine driver, multi-workload
-//! execution, and parallel experiment sweeps.
+//! System coordinator: the disaggregated machine driver, the multi-tenant
+//! cluster driver, multi-workload execution, and parallel experiment
+//! sweeps.
 
+pub mod cluster;
 pub mod machine;
 pub mod sweep;
 
-pub use machine::{run_workload, ExactOracle, Machine, RunResult, SizeOracle};
+pub use cluster::{run_cluster, Cluster, TenantInit};
+pub use machine::{run_workload, ExactOracle, Machine, RemoteMemory, RunResult, SizeOracle};

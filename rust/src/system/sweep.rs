@@ -53,7 +53,8 @@ pub fn run_cells(cells: Vec<Cell>, threads: usize) -> Vec<CellResult> {
                 // Ad-hoc sweeps run the full trace (cap 0).
                 let r = Runner { scale: cell.scale, max_accesses: 0, threads: 1 };
                 let spec = CellSpec::new(&cell.workload, cell.scheme, cell.cfg.clone());
-                let m = run_cell_spec(&r, TraceCache::global(), &spec);
+                let mut ms = run_cell_spec(&r, TraceCache::global(), &spec);
+                let m = ms.pop().expect("single-machine cell yields one metrics");
                 let _ = slots[i].set(m);
             });
         }

@@ -28,12 +28,14 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+/// NaN entries sort last (IEEE total order), so they never panic the sort
+/// and only contaminate the percentiles that actually reach them.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -110,6 +112,79 @@ impl Running {
     }
 }
 
+/// Fixed 64-bucket base-2 log histogram — cheap, deterministic percentile
+/// estimates for hot counters (per-tenant p99 access cost).  Bucket 0
+/// holds `[0, 1)` (and any non-finite/negative input); bucket `k` in
+/// `1..=63` holds `[2^(k-1), 2^k)`, the top bucket absorbing everything
+/// larger.  Bucketing reads the exponent bits directly rather than libm
+/// logs, so results are bit-identical across platforms.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogHistogram {
+    pub counts: [u64; 64],
+    pub total: u64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self { counts: [0; 64], total: 0 }
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket_of(x: f64) -> usize {
+        // NaN and anything below 1.0 (negatives included) land in bucket 0.
+        if !(x >= 1.0) {
+            return 0;
+        }
+        let e = ((x.to_bits() >> 52) & 0x7FF) as i64 - 1023; // floor(log2 x)
+        (e.min(62) as usize) + 1 // +inf has e = 1024 -> top bucket
+    }
+
+    #[inline]
+    pub fn add(&mut self, x: f64) {
+        self.counts[Self::bucket_of(x)] += 1;
+        self.total += 1;
+    }
+
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Rebuild from serialized bucket counts (inverse of reading `counts`).
+    pub fn from_counts(counts: &[u64]) -> LogHistogram {
+        assert_eq!(counts.len(), 64, "log histogram carries 64 buckets");
+        let mut h = LogHistogram::new();
+        h.counts.copy_from_slice(counts);
+        h.total = counts.iter().sum();
+        h
+    }
+
+    /// Approximate `q`-quantile (`q` in [0,1]): the geometric midpoint of
+    /// the bucket containing the target rank.  0.0 when empty.
+    pub fn value_at(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (k, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return if k == 0 { 0.5 } else { 1.5 * (1u64 << (k - 1)) as f64 };
+            }
+        }
+        1.5 * (1u64 << 62) as f64 // unreachable: counts sum to total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,6 +215,60 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert!((percentile(&xs, 75.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_input() {
+        // Pre-fix this panicked in the sort's `partial_cmp(..).unwrap()`.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // NaNs sort last under total order: low/mid percentiles are clean.
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+        assert!(percentile(&xs, 100.0).is_nan());
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn geomean_and_stddev_degenerate_inputs() {
+        assert_eq!(geomean(&[]), 0.0);
+        assert!((geomean(&[7.0]) - 7.0).abs() < 1e-12, "singleton geomean");
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(stddev(&[4.2]), 0.0, "singleton stddev is degenerate");
+    }
+
+    #[test]
+    fn log_histogram_buckets_and_quantiles() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.value_at(0.99), 0.0, "empty histogram");
+        for _ in 0..99 {
+            h.add(3.0); // bucket 2: [2, 4)
+        }
+        h.add(1000.0); // bucket 10: [512, 1024)
+        assert_eq!(h.total, 100);
+        assert_eq!(h.counts[2], 99);
+        assert_eq!(h.counts[10], 1);
+        assert!((h.value_at(0.5) - 3.0).abs() < 1e-9, "midpoint of [2,4)");
+        assert!((h.value_at(0.99) - 3.0).abs() < 1e-9);
+        assert!((h.value_at(1.0) - 768.0).abs() < 1e-9, "midpoint of [512,1024)");
+    }
+
+    #[test]
+    fn log_histogram_edge_inputs_and_merge() {
+        let mut h = LogHistogram::new();
+        h.add(0.0);
+        h.add(-5.0);
+        h.add(f64::NAN);
+        h.add(0.99);
+        assert_eq!(h.counts[0], 4, "sub-1/negative/NaN land in bucket 0");
+        h.add(f64::INFINITY);
+        h.add(1e300);
+        assert_eq!(h.counts[63], 2, "top bucket absorbs the tail");
+        let mut g = LogHistogram::new();
+        g.add(2.0);
+        g.merge(&h);
+        assert_eq!(g.total, 7);
+        let back = LogHistogram::from_counts(&g.counts);
+        assert_eq!(back, g, "counts round-trip");
     }
 
     #[test]

@@ -167,4 +167,47 @@ mod tests {
         assert_eq!(st.misses, 1, "one generation for 4 concurrent gets");
         assert_eq!(st.hits, 3);
     }
+
+    #[test]
+    fn racing_workers_over_mixed_keys_count_exactly_and_share_traces() {
+        // 8 workers x 3 keys x 5 rounds: every key generates exactly once
+        // (misses == distinct keys), every other access is a hit, and all
+        // workers observe the same Arc per key.
+        use std::collections::HashMap;
+        use std::sync::Mutex;
+        let c = TraceCache::new();
+        let keys: [(&str, u64); 3] = [("pr", 1), ("bf", 1), ("pr", 2)];
+        let seen: Mutex<HashMap<(String, u64), Arc<Trace>>> =
+            Mutex::new(HashMap::new());
+        std::thread::scope(|s| {
+            for w in 0..8 {
+                let seen = &seen;
+                let c = &c;
+                s.spawn(move || {
+                    for round in 0..5 {
+                        // Vary the visit order per worker/round to race
+                        // generation against lookup on every key.
+                        let (wl, seed) = keys[(w + round) % keys.len()];
+                        let (t, _) = c.get(wl, Scale::Test, seed, 600);
+                        let mut map = seen.lock().unwrap();
+                        let prev = map
+                            .entry((wl.to_string(), seed))
+                            .or_insert_with(|| t.clone());
+                        assert!(
+                            Arc::ptr_eq(prev, &t),
+                            "{wl}/{seed}: workers saw distinct trace copies"
+                        );
+                    }
+                });
+            }
+        });
+        let st = c.stats();
+        assert_eq!(st.misses, keys.len() as u64, "each key generated exactly once");
+        assert_eq!(
+            st.hits + st.misses,
+            8 * 5,
+            "every access is counted exactly once"
+        );
+        assert_eq!(c.len(), keys.len());
+    }
 }
