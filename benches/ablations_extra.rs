@@ -1,4 +1,5 @@
-//! Bench target regenerating the paper's ablation_dirty_threshold,ablation_buffer_size (see DESIGN.md index).
+//! Bench target regenerating the paper's ablation_dirty_threshold and
+//! ablation_buffer_size experiments (see DESIGN.md index).
 mod bench_common;
 
 fn main() {

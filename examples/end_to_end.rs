@@ -39,7 +39,16 @@ fn main() {
             "End-to-end: all workloads, paper config ({} oracle)",
             if use_pjrt { "PJRT" } else { "exact" }
         ),
-        &["workload", "Remote-IPC", "PQ-x", "DaeMon-x", "cost-gain-x", "hit-Remote", "hit-DaeMon", "ratio"],
+        &[
+            "workload",
+            "Remote-IPC",
+            "PQ-x",
+            "DaeMon-x",
+            "cost-gain-x",
+            "hit-Remote",
+            "hit-DaeMon",
+            "ratio",
+        ],
     );
     let mut daemon_speedups = Vec::new();
     let mut pq_speedups = Vec::new();

@@ -1,7 +1,12 @@
 use daemon_sim::compress::{est, lz, synth};
 use daemon_sim::util::prng::Rng;
 fn main() {
-    for (name, p) in [("high", synth::Profile::high()), ("med", synth::Profile::medium()), ("low", synth::Profile::low())] {
+    let profiles = [
+        ("high", synth::Profile::high()),
+        ("med", synth::Profile::medium()),
+        ("low", synth::Profile::low()),
+    ];
+    for (name, p) in profiles {
         let mut rng = Rng::new(9);
         let (mut e_sum, mut r_sum) = (0f64, 0f64);
         let n = 40;

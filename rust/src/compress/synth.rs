@@ -49,19 +49,43 @@ impl Profile {
     /// Highly compressible scientific/sparse data (sp, sl, hp, pf):
     /// LZ ratio ~5-7x.
     pub fn high() -> Profile {
-        Profile { zero: 0.35, runs: 0.30, narrow: 0.22, pool: 0.08, random: 0.05, run_len: 16, pool_size: 16 }
+        Profile {
+            zero: 0.35,
+            runs: 0.30,
+            narrow: 0.22,
+            pool: 0.08,
+            random: 0.05,
+            run_len: 16,
+            pool_size: 16,
+        }
     }
 
     /// Moderately compressible (graphs, DP matrices, timeseries):
     /// LZ ratio ~3-4x.
     pub fn medium() -> Profile {
-        Profile { zero: 0.15, runs: 0.25, narrow: 0.25, pool: 0.10, random: 0.25, run_len: 8, pool_size: 32 }
+        Profile {
+            zero: 0.15,
+            runs: 0.25,
+            narrow: 0.25,
+            pool: 0.10,
+            random: 0.25,
+            run_len: 8,
+            pool_size: 32,
+        }
     }
 
     /// Poorly compressible dense float weights/activations (dr, rs):
     /// LZ ratio ~1.4x.
     pub fn low() -> Profile {
-        Profile { zero: 0.02, runs: 0.04, narrow: 0.06, pool: 0.04, random: 0.84, run_len: 4, pool_size: 48 }
+        Profile {
+            zero: 0.02,
+            runs: 0.04,
+            narrow: 0.06,
+            pool: 0.04,
+            random: 0.84,
+            run_len: 4,
+            pool_size: 48,
+        }
     }
 
     fn normalized(&self) -> [f64; 5] {

@@ -103,6 +103,49 @@ impl Default for DaemonParams {
     }
 }
 
+/// How idle capacity on a shared memory-module resource is treated.
+///
+/// `Strict` is §4.1's reservation discipline lifted to tenants: a share
+/// is reserved even while its owner idles, so "contention" shows up only
+/// as a smaller share and per-tenant slowdown stays well-defined (QoS
+/// isolation).  `WorkConserving` redistributes capacity that is idle *at
+/// request time* — a peer tenant's unused port/bus queue, or the sibling
+/// class channel inside a partitioned share — proportionally to the
+/// candidates' service rates (deficit-style: borrowed bytes are charged
+/// to the lending channel's timeline, so a lender that wakes up queues
+/// behind what it lent).  Strict mode takes the exact pre-existing code
+/// path and is byte-identical to the historical results.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SharingMode {
+    #[default]
+    Strict,
+    WorkConserving,
+}
+
+impl SharingMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SharingMode::Strict => "strict",
+            SharingMode::WorkConserving => "work-conserving",
+        }
+    }
+}
+
+/// Plain-data description of a square-wave link-condition schedule (the
+/// §6 "high runtime variability in network latencies/bandwidth" regime):
+/// alternating degraded / nominal phases of `period_cycles` each,
+/// starting degraded at cycle 0, until `horizon_cycles` (nominal after).
+/// `net::disturbance::NetSchedule::from_spec` materializes it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScheduleSpec {
+    pub period_cycles: f64,
+    /// Bandwidth multiplier during degraded phases, in (0, 1].
+    pub rate_scale: f64,
+    /// Extra switch latency during degraded phases, ns.
+    pub extra_latency_ns: f64,
+    pub horizon_cycles: f64,
+}
+
 /// One tenant's share of every shared memory-module resource (fabric port
 /// + DRAM bus): a bandwidth weight, plus that tenant's own §4.1 class
 /// partitioning applied *within* its share.  Shares are strict (reserved
@@ -152,6 +195,12 @@ pub struct ClusterConfig {
     pub fabric_hop_ns: f64,
     /// Per-tenant bandwidth weights (empty = equal shares).
     pub weights: Vec<f64>,
+    /// How idle tenant/class capacity is treated on the fabric ports and
+    /// DRAM bus queues (default: strict shares, the historical behavior).
+    pub sharing: SharingMode,
+    /// Time-varying link conditions applied to every fabric port
+    /// (`None` = steady nominal conditions).
+    pub schedule: Option<ScheduleSpec>,
 }
 
 impl Default for ClusterConfig {
@@ -161,6 +210,8 @@ impl Default for ClusterConfig {
             net: NetConfig::new(100.0, 4.0),
             fabric_hop_ns: 0.0,
             weights: Vec::new(),
+            sharing: SharingMode::Strict,
+            schedule: None,
         }
     }
 }
@@ -182,6 +233,16 @@ impl ClusterConfig {
 
     pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
         self.weights = weights;
+        self
+    }
+
+    pub fn with_sharing(mut self, sharing: SharingMode) -> Self {
+        self.sharing = sharing;
+        self
+    }
+
+    pub fn with_schedule(mut self, schedule: ScheduleSpec) -> Self {
+        self.schedule = Some(schedule);
         self
     }
 
@@ -419,16 +480,31 @@ mod tests {
 
     #[test]
     fn cluster_config_builders() {
+        let spec = ScheduleSpec {
+            period_cycles: 1e6,
+            rate_scale: 0.5,
+            extra_latency_ns: 100.0,
+            horizon_cycles: 1e9,
+        };
         let c = ClusterConfig::new(4)
             .with_net(400.0, 8.0)
             .with_hop(50.0)
-            .with_weights(vec![2.0, 1.0]);
+            .with_weights(vec![2.0, 1.0])
+            .with_sharing(SharingMode::WorkConserving)
+            .with_schedule(spec);
         assert_eq!(c.memory_modules, 4);
         assert_eq!(c.nets().len(), 4);
         assert_eq!(c.net.switch_latency_ns, 400.0);
         assert_eq!(c.fabric_hop_ns, 50.0);
         assert_eq!(c.weights, vec![2.0, 1.0]);
+        assert_eq!(c.sharing, SharingMode::WorkConserving);
+        assert_eq!(c.schedule, Some(spec));
         assert_eq!(ClusterConfig::new(0).memory_modules, 1);
+        // Strict, steady conditions remain the default.
+        let d = ClusterConfig::default();
+        assert_eq!(d.sharing, SharingMode::Strict);
+        assert_eq!(d.schedule, None);
+        assert_eq!(SharingMode::WorkConserving.name(), "work-conserving");
     }
 
     #[test]

@@ -485,6 +485,34 @@ mod tests {
     }
 
     #[test]
+    fn dirty_buffer_full_throttles_page_with_zero_parked_lines() {
+        // The *global* dirty buffer is full, but the evicting page has no
+        // parked lines of its own: the eviction must still flush (just
+        // this line) and throttle that page — parking would overflow the
+        // buffer — while other pages' parked lines stay put.
+        let mut e = ComputeEngine::new(DaemonParams {
+            inflight_page_buf: 8,
+            inflight_subblock_buf: 8,
+            dirty_data_buf: 2,
+            dirty_flush_threshold: 8, // threshold alone would allow parking
+            ..DaemonParams::default()
+        });
+        e.note_page_scheduled(1, 0.0, 100.0);
+        e.note_page_scheduled(2, 0.0, 100.0);
+        assert_eq!(e.dirty_evict(1, 0, 1.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_evict(1, 1, 2.0), DirtyOutcome::Parked);
+        assert_eq!(e.dirty_buffered(), 2, "buffer now full");
+        let out = e.dirty_evict(2, 0, 3.0);
+        assert_eq!(out, DirtyOutcome::FlushAllAndThrottle { parked_flushed: 0 });
+        assert_eq!(e.dirty_buffered(), 2, "page 1's parked lines untouched");
+        // Page 2 arrives stale and is re-requested; page 1 installs its
+        // parked lines normally.
+        assert_eq!(e.page_arrived(2), PageArrival::ThrottledRerequest);
+        assert_eq!(e.page_arrived(1), PageArrival::Install { parked_dirty_lines: 2 });
+        assert_eq!(e.dirty_buffered(), 0);
+    }
+
+    #[test]
     fn dirty_same_offset_rewrites_dont_double_count() {
         let mut e = small_engine();
         e.note_page_scheduled(7, 0.0, 100.0);

@@ -53,17 +53,24 @@ fn model(kind: MemKind, size_kb: f64) -> (f64, f64, f64) {
 /// DaeMon's hardware structures (Table 1 rows).
 pub fn structures() -> Vec<Structure> {
     use MemKind::*;
+    let s = |name: &'static str, engine, kind, entries, size_kb| Structure {
+        name,
+        engine,
+        kind,
+        entries,
+        size_kb,
+    };
     vec![
-        Structure { name: "Sub-block Queue (C)", engine: 'C', kind: Sram, entries: Some(128), size_kb: 0.5 },
-        Structure { name: "Sub-block Queue (M)", engine: 'M', kind: Sram, entries: Some(512), size_kb: 2.0 },
-        Structure { name: "Page Queue (C)", engine: 'C', kind: Sram, entries: Some(256), size_kb: 1.0 },
-        Structure { name: "Page Queue (M)", engine: 'M', kind: Sram, entries: Some(1024), size_kb: 4.0 },
-        Structure { name: "Inflight Sub-block Buffer (C)", engine: 'C', kind: Cam, entries: Some(128), size_kb: 1.625 },
-        Structure { name: "Inflight Page Buffer (C)", engine: 'C', kind: Cam, entries: Some(256), size_kb: 3.25 },
-        Structure { name: "Dirty Data Buffer (C)", engine: 'C', kind: Sram, entries: Some(256), size_kb: 17.0 },
-        Structure { name: "Packet Buffer (C)", engine: 'C', kind: Sram, entries: None, size_kb: 8.0 },
-        Structure { name: "Packet Buffer (M)", engine: 'M', kind: Sram, entries: None, size_kb: 32.0 },
-        Structure { name: "2 x Dictionary Table (C,M)", engine: 'B', kind: Cam, entries: Some(1024), size_kb: 1.0 },
+        s("Sub-block Queue (C)", 'C', Sram, Some(128), 0.5),
+        s("Sub-block Queue (M)", 'M', Sram, Some(512), 2.0),
+        s("Page Queue (C)", 'C', Sram, Some(256), 1.0),
+        s("Page Queue (M)", 'M', Sram, Some(1024), 4.0),
+        s("Inflight Sub-block Buffer (C)", 'C', Cam, Some(128), 1.625),
+        s("Inflight Page Buffer (C)", 'C', Cam, Some(256), 3.25),
+        s("Dirty Data Buffer (C)", 'C', Sram, Some(256), 17.0),
+        s("Packet Buffer (C)", 'C', Sram, None, 8.0),
+        s("Packet Buffer (M)", 'M', Sram, None, 32.0),
+        s("2 x Dictionary Table (C,M)", 'B', Cam, Some(1024), 1.0),
     ]
 }
 

@@ -5,16 +5,22 @@
 //! The compute-side engine (`daemon::engine`) decides *what* moves; the
 //! memory engine provides the *service*: hardware address translation and
 //! DRAM reads/writes on per-tenant bandwidth partitions.  Partitioning is
-//! §4.1-style and two-level — strict across tenants by weight (a share is
-//! reserved even while other tenants idle), then across line/page classes
-//! within a partitioned tenant's share — realizing the per-tenant page
-//! and cache-line queue controllers.  The engine also accounts egress
-//! traffic per tenant (raw vs link-compressed bytes), the memory-side
-//! view of §4.4's link compression.
+//! §4.1-style and two-level — across tenants by weight, then across
+//! line/page classes within a partitioned tenant's share — realizing the
+//! per-tenant page and cache-line queue controllers.  Under
+//! [`SharingMode::Strict`] a share is reserved even while other tenants
+//! idle (the historical behavior, byte-identical); under
+//! [`SharingMode::WorkConserving`] an access also draws on bus-queue
+//! capacity idle at request time (peer tenants' queues, the sibling
+//! class queue of a partitioned share), split proportionally by rate
+//! with borrowed bytes charged to the lending queue's timeline.  The
+//! engine also accounts egress traffic per tenant (raw vs
+//! link-compressed bytes), the memory-side view of §4.4's link
+//! compression.
 
-use crate::config::TenantShare;
+use crate::config::{SharingMode, TenantShare};
 use crate::mem::DramBus;
-use crate::net::Class;
+use crate::net::{work_conserving_issue, work_conserving_plan, Class};
 
 /// Per-tenant memory-side compression statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -45,9 +51,13 @@ impl EgressStats {
 struct TenantQueues {
     bus: DramBus,
     stats: EgressStats,
+    /// Bytes this tenant served on borrowed (idle peer / sibling-class)
+    /// queue capacity — work-conserving mode only.
+    reclaimed_bytes: u64,
 }
 
 pub struct MemoryEngine {
+    sharing: SharingMode,
     ports: Vec<TenantQueues>,
 }
 
@@ -57,6 +67,7 @@ impl MemoryEngine {
         latency_cycles: f64,
         shares: &[TenantShare],
         interval: f64,
+        sharing: SharingMode,
     ) -> MemoryEngine {
         let ports = shares
             .iter()
@@ -67,19 +78,55 @@ impl MemoryEngine {
                 } else {
                     DramBus::shared(rate, latency_cycles, interval)
                 };
-                TenantQueues { bus, stats: EgressStats::default() }
+                TenantQueues { bus, stats: EgressStats::default(), reclaimed_bytes: 0 }
             })
             .collect();
-        MemoryEngine { ports }
+        MemoryEngine { sharing, ports }
     }
 
     pub fn tenants(&self) -> usize {
         self.ports.len()
     }
 
-    /// DRAM access on tenant `t`'s bandwidth partition; returns completion.
+    /// DRAM access on tenant `t`'s bandwidth partition; returns
+    /// completion.  Work-conserving mode additionally draws on queue
+    /// capacity idle at `now`.
     pub fn access(&mut self, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
-        self.ports[t].bus.access(now, bytes, class)
+        match self.sharing {
+            SharingMode::Strict => self.ports[t].bus.access(now, bytes, class),
+            SharingMode::WorkConserving => self.access_wc(t, now, bytes, class),
+        }
+    }
+
+    /// Work-conserving DRAM access: split `bytes` across tenant `t`'s
+    /// own `class` queue plus every queue idle at `now` (sibling class
+    /// inside a partitioned share, peer tenants' queues), proportionally
+    /// to the queues' service rates; completion is when the slowest
+    /// chunk finishes.
+    fn access_wc(&mut self, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
+        let (cands, chunks) = {
+            let ports = &self.ports;
+            work_conserving_plan(
+                t,
+                class,
+                ports.len(),
+                bytes,
+                |u| ports[u].bus.is_partitioned(),
+                |u, c| ports[u].bus.idle(now, c),
+                |u, c| ports[u].bus.rate(c),
+            )
+        };
+        let ports = &mut self.ports;
+        let (done, borrowed) = work_conserving_issue(&cands, &chunks, |u, c, chunk| {
+            ports[u].bus.access(now, chunk, c)
+        });
+        ports[t].reclaimed_bytes += borrowed;
+        done
+    }
+
+    /// Bytes tenant `t` served on borrowed queue capacity.
+    pub fn reclaimed_bytes(&self, t: usize) -> u64 {
+        self.ports[t].reclaimed_bytes
     }
 
     /// Queue occupancy ahead of tenant `t`'s `class` controller (cycles).
@@ -117,9 +164,18 @@ mod tests {
         vec![TenantShare { weight: 1.0, partitioned, line_ratio: 0.25 }; n]
     }
 
+    fn strict(
+        bpc: f64,
+        latency: f64,
+        shares: &[TenantShare],
+        interval: f64,
+    ) -> MemoryEngine {
+        MemoryEngine::new(bpc, latency, shares, interval, SharingMode::Strict)
+    }
+
     #[test]
     fn single_tenant_matches_plain_bus() {
-        let mut e = MemoryEngine::new(4.0, 54.0, &shares(1, false), 1000.0);
+        let mut e = strict(4.0, 54.0, &shares(1, false), 1000.0);
         let mut d = DramBus::shared(4.0, 54.0, 1000.0);
         for (now, bytes) in [(0.0, 8u64), (0.0, 4096), (900.0, 64)] {
             let a = e.access(0, now, bytes, Class::Page);
@@ -130,18 +186,19 @@ mod tests {
 
     #[test]
     fn tenant_partitions_are_strict() {
-        let mut e = MemoryEngine::new(4.0, 0.0, &shares(2, false), 1000.0);
+        let mut e = strict(4.0, 0.0, &shares(2, false), 1000.0);
         assert!((e.rate(0, Class::Line) - 2.0).abs() < 1e-12);
         // Tenant 0 floods its partition; tenant 1 is untouched.
         e.access(0, 0.0, 10_000, Class::Page);
         assert!(e.backlog(0, 0.0, Class::Page) > 1000.0);
         let t1 = e.access(1, 0.0, 64, Class::Line);
         assert!(t1 < 100.0, "tenant 1 delayed by tenant 0: {t1}");
+        assert_eq!(e.reclaimed_bytes(0), 0, "strict mode never borrows");
     }
 
     #[test]
     fn per_tenant_class_partitioning_nests_inside_share() {
-        let e = MemoryEngine::new(8.0, 0.0, &shares(2, true), 1000.0);
+        let e = strict(8.0, 0.0, &shares(2, true), 1000.0);
         // 4 B/cyc per tenant, 25% of that for lines.
         assert!((e.rate(0, Class::Line) - 1.0).abs() < 1e-12);
         assert!((e.rate(0, Class::Page) - 3.0).abs() < 1e-12);
@@ -149,8 +206,35 @@ mod tests {
     }
 
     #[test]
+    fn work_conserving_borrows_idle_queue_capacity() {
+        let mut e =
+            MemoryEngine::new(4.0, 0.0, &shares(2, false), 1e6, SharingMode::WorkConserving);
+        // Tenant 1 idle: tenant 0's 1000-byte read runs at the full
+        // 4 B/cyc bus rate (500 bytes on each 2 B/cyc queue).
+        let t = e.access(0, 0.0, 1000, Class::Page);
+        assert!((t - 250.0).abs() < 1e-9, "idle queue capacity not reclaimed: {t}");
+        assert_eq!(e.reclaimed_bytes(0), 500);
+        // The lender queues behind what it lent.
+        let t1 = e.access(1, 0.0, 100, Class::Page);
+        assert!((t1 - 300.0).abs() < 1e-9, "{t1}");
+    }
+
+    #[test]
+    fn work_conserving_single_tenant_matches_strict_bitwise() {
+        let mut a = strict(4.0, 54.0, &shares(1, false), 1000.0);
+        let mut b =
+            MemoryEngine::new(4.0, 54.0, &shares(1, false), 1000.0, SharingMode::WorkConserving);
+        for (now, bytes) in [(0.0, 8u64), (0.0, 4096), (900.0, 64)] {
+            let x = a.access(0, now, bytes, Class::Page);
+            let y = b.access(0, now, bytes, Class::Page);
+            assert_eq!(x.to_bits(), y.to_bits(), "WC with no idle candidates must be strict");
+        }
+        assert_eq!(b.reclaimed_bytes(0), 0);
+    }
+
+    #[test]
     fn egress_stats_track_compression() {
-        let mut e = MemoryEngine::new(4.0, 0.0, &shares(2, false), 1000.0);
+        let mut e = strict(4.0, 0.0, &shares(2, false), 1000.0);
         e.note_egress(0, 4096, 1024);
         e.note_egress(0, 4096, 1024);
         e.note_egress(1, 64, 64);

@@ -32,8 +32,9 @@ const SCHEMES: [SchemeKind; 2] = [SchemeKind::Remote, SchemeKind::Daemon];
 
 /// Per-tenant base config scaled to the runner's trace scale (Test-scale
 /// traces need the shrunken hierarchy to stay in the footprint ≫ LLC
-/// regime the paper evaluates).
-fn tenant_cfg(r: &Runner) -> SimConfig {
+/// regime the paper evaluates).  Shared with the `variability` cells so
+/// both cluster experiment families run the same hierarchy.
+pub(super) fn tenant_cfg(r: &Runner) -> SimConfig {
     match r.scale {
         Scale::Test => SimConfig::test_scale(),
         Scale::Paper => SimConfig::default(),

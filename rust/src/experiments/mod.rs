@@ -13,6 +13,7 @@ pub mod motivation;
 pub mod orchestrator;
 pub mod scaling;
 pub mod table1;
+pub mod variability;
 
 pub use common::Runner;
 
@@ -20,11 +21,11 @@ use crate::util::table::Table;
 use crate::workloads::{ALL, SUBSET};
 
 /// All experiment ids: the paper's figures/tables in paper order, then
-/// the cluster (multi-tenant) scenario experiments.
-pub const ALL_EXPERIMENTS: [&str; 19] = [
+/// the cluster (multi-tenant) and variability scenario experiments.
+pub const ALL_EXPERIMENTS: [&str; 20] = [
     "fig3", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
     "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "table1",
-    "headline", "cluster_contention", "cluster_fairness",
+    "headline", "cluster_contention", "cluster_fairness", "variability",
 ];
 
 /// Build the orchestrator plan for one experiment id (the default
@@ -50,6 +51,7 @@ pub fn plan_for(id: &str, r: &Runner) -> Option<orchestrator::Plan> {
         "headline" => main_results::headline_plan(r),
         "cluster_contention" => cluster::cluster_contention_plan(r),
         "cluster_fairness" => cluster::cluster_fairness_plan(r),
+        "variability" => variability::variability_plan(r),
         "ablation_dirty_threshold" => {
             ablations::ablation_dirty_threshold_plan(r, &SUBSET)
         }

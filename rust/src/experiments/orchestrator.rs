@@ -23,7 +23,7 @@
 
 use super::common::Runner;
 use super::plan_for;
-use crate::config::{ClusterConfig, SimConfig};
+use crate::config::{ClusterConfig, ScheduleSpec, SharingMode, SimConfig};
 use crate::metrics::Metrics;
 use crate::net::Disturbance;
 use crate::schemes::SchemeKind;
@@ -47,6 +47,11 @@ pub struct ClusterCell {
     pub weights: Vec<f64>,
     /// Extra fabric hop latency, ns.
     pub hop_ns: f64,
+    /// Idle-capacity policy on the shared fabric/bus (default strict).
+    pub sharing: SharingMode,
+    /// Time-varying link conditions on every fabric port (default
+    /// steady).
+    pub schedule: Option<ScheduleSpec>,
 }
 
 /// One simulation cell in the flat job list.
@@ -119,6 +124,8 @@ impl CellSpec {
                 modules,
                 weights: Vec::new(),
                 hop_ns: 0.0,
+                sharing: SharingMode::Strict,
+                schedule: None,
             }),
         }
     }
@@ -174,6 +181,8 @@ pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Vec<Met
             net: cfg.net[0],
             fabric_hop_ns: cl.hop_ns,
             weights: cl.weights.clone(),
+            sharing: cl.sharing,
+            schedule: cl.schedule,
         };
         return cluster::run_cluster(&ccfg, cfg, &cl.tenants, |wl| {
             cache.get(wl, r.scale, cfg.seed, r.max_accesses)
@@ -284,10 +293,11 @@ pub struct ShardData {
     pub results: Vec<(usize, Vec<Metrics>)>,
 }
 
-/// v2: each slot carries a metrics *array* (cluster cells yield one entry
-/// per tenant) and `Metrics` gained the `access_hist` field — v1 files
-/// are rejected with a clear regenerate message.
-const SHARD_FORMAT: &str = "daemon-sim-shard-v2";
+/// v3: `Metrics` gained the `reclaimed_bytes` counter and the
+/// `net_util_series` array (work-conserving fabric + variability
+/// experiments); v2 carried per-slot metrics arrays + `access_hist`.
+/// Older files are rejected with a clear regenerate message.
+const SHARD_FORMAT: &str = "daemon-sim-shard-v3";
 
 fn scale_name(s: Scale) -> &'static str {
     match s {
@@ -356,7 +366,10 @@ impl ShardData {
             })
             .collect::<Result<Vec<_>, _>>()?;
         let scale = scale_by_name(j.get_str("scale").unwrap_or(""))?;
-        let shard = Shard { index: num("shard_index")? as usize, total: num("shard_total")? as usize };
+        let shard = Shard {
+            index: num("shard_index")? as usize,
+            total: num("shard_total")? as usize,
+        };
         if shard.total == 0 || shard.index >= shard.total {
             return Err(format!("shard json: bad shard {}/{}", shard.index, shard.total));
         }

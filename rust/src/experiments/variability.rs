@@ -1,0 +1,279 @@
+//! `variability` — the paper's §6 robustness regime ("high runtime
+//! variability in network latencies/bandwidth") opened as a first-class
+//! experiment: scheme × sharing-mode × link-condition schedule over the
+//! canonical 4-tenant × 2-module cluster.
+//!
+//! Each cell runs the tenant mix under one [`SharingMode`] and one
+//! piecewise [`ScheduleSpec`] (steady, bandwidth bursts, bandwidth +
+//! latency bursts).  Reported per cell: aggregate goodput and IPC, the
+//! worst per-tenant p99 access cost (tail sensitivity is where adaptive
+//! granularity selection shows up), and reclaimed capacity (bytes served
+//! on borrowed shares — zero under strict sharing by construction).  A
+//! per-phase port-utilization time series rides along for the bursty
+//! cells.  Cells batch/shard/merge through the orchestrator like any
+//! figure.
+
+use super::cluster::{tenant_cfg, MODULES, TENANT_MIX};
+use super::common::Runner;
+use super::orchestrator::{CellSpec, Plan};
+use crate::config::{ns_to_cycles, ScheduleSpec, SharingMode, SimConfig};
+use crate::metrics::Metrics;
+use crate::schemes::SchemeKind;
+use crate::util::table::Table;
+
+/// Page-granularity baseline vs DaeMon — the pair whose p99 gap the
+/// bursty schedules are expected to widen.
+pub const SCHEMES: [SchemeKind; 2] = [SchemeKind::Pq, SchemeKind::Daemon];
+
+pub const MODES: [SharingMode; 2] = [SharingMode::Strict, SharingMode::WorkConserving];
+
+/// Degraded-phase length: 2 ms, matching Fig. 13/14's disturbance wave.
+fn period_cycles() -> f64 {
+    ns_to_cycles(2_000_000.0)
+}
+
+/// The swept link-condition schedules.  Schedules start degraded at
+/// cycle 0 and alternate with nominal phases; past the horizon the link
+/// runs nominal.
+pub fn schedules() -> Vec<(&'static str, Option<ScheduleSpec>)> {
+    let mk = |rate_scale: f64, extra_latency_ns: f64| ScheduleSpec {
+        period_cycles: period_cycles(),
+        rate_scale,
+        extra_latency_ns,
+        horizon_cycles: 1e11,
+    };
+    vec![
+        ("steady", None),
+        ("bw-burst", Some(mk(0.25, 0.0))),
+        ("bw+lat-burst", Some(mk(0.25, 300.0))),
+    ]
+}
+
+/// One cluster cell of the sweep: the canonical tenant mix, every tenant
+/// under `kind`, with the given sharing mode and schedule.
+pub fn cell(
+    kind: SchemeKind,
+    mode: SharingMode,
+    sched: Option<ScheduleSpec>,
+    cfg: SimConfig,
+) -> CellSpec {
+    let tenants: Vec<(&str, SchemeKind)> = TENANT_MIX.iter().map(|w| (*w, kind)).collect();
+    let mut spec = CellSpec::cluster(&tenants, MODULES, cfg);
+    let cl = spec.cluster.as_mut().expect("cluster cell");
+    cl.sharing = mode;
+    cl.schedule = sched;
+    spec
+}
+
+/// `variability` — schedule × sharing-mode × scheme sweep, in that cell
+/// order (schemes innermost).
+pub fn variability_plan(r: &Runner) -> Plan {
+    let cfg = tenant_cfg(r);
+    let scheds = schedules();
+    let mut cells = Vec::new();
+    let mut labels = Vec::new();
+    for (sname, sched) in &scheds {
+        for &mode in &MODES {
+            for &kind in &SCHEMES {
+                cells.push(cell(kind, mode, *sched, cfg.clone()));
+                labels.push(format!("{}/{}/{}", kind.name(), mode.name(), sname));
+            }
+        }
+    }
+    let interval = ns_to_cycles(cfg.interval_ns);
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let t = TENANT_MIX.len();
+        assert_eq!(ms.len(), labels.len() * t, "variability layout mismatch");
+        let cell_ms = |i: usize| &ms[i * t..(i + 1) * t];
+
+        let mut summary = Table::new(
+            "Variability: scheme x sharing x schedule, 4 tenants x 2 modules",
+            &["cell", "agg-goodput-B/cyc", "agg-IPC", "max-p99-cycles", "reclaimed-MB"],
+        );
+        for (i, label) in labels.iter().enumerate() {
+            let block = cell_ms(i);
+            let goodput: f64 = block.iter().map(Metrics::goodput).sum();
+            let ipc: f64 = block.iter().map(Metrics::ipc).sum();
+            let p99 = block
+                .iter()
+                .map(Metrics::p99_access_cost)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let reclaimed: u64 = block.iter().map(|m| m.reclaimed_bytes).sum();
+            summary.row_f(label, &[goodput, ipc, p99, reclaimed as f64 / 1e6]);
+        }
+
+        // Per-phase mean port utilization for the bw-burst schedule
+        // (schedule index 1), one column per scheme x mode, coarsened to
+        // 10 buckets like the Fig. 13 series.
+        let per_sched = MODES.len() * SCHEMES.len();
+        let burst_cells: Vec<usize> = (0..per_sched).map(|k| per_sched + k).collect();
+        let tenant_avg = |i: usize| -> Vec<f64> {
+            let block = cell_ms(i);
+            let len = block.iter().map(|m| m.net_util_series.len()).max().unwrap_or(0);
+            let mut avg = vec![0.0f64; len];
+            for m in block {
+                for (j, v) in m.net_util_series.iter().enumerate() {
+                    avg[j] += v;
+                }
+            }
+            avg.iter_mut().for_each(|v| *v /= block.len() as f64);
+            avg
+        };
+        let series: Vec<Vec<f64>> = burst_cells.iter().map(|&i| tenant_avg(i)).collect();
+        let mut ts = Table::new(
+            &format!(
+                "Variability series: mean port utilization under bw-burst \
+                 ({}-cycle intervals)",
+                interval
+            ),
+            &[
+                "phase",
+                "PQ/strict",
+                "DaeMon/strict",
+                "PQ/work-conserving",
+                "DaeMon/work-conserving",
+            ],
+        );
+        let buckets = 10;
+        let len = series.iter().map(|s| s.len()).min().unwrap_or(0);
+        if len >= buckets {
+            let chunk = len / buckets;
+            for b in 0..buckets {
+                let avg = |v: &Vec<f64>| {
+                    let s = &v[b * chunk..(b + 1) * chunk];
+                    s.iter().sum::<f64>() / s.len() as f64
+                };
+                // Cell order within a schedule is modes-outer, schemes
+                // inner: [PQ/strict, DaeMon/strict, PQ/wc, DaeMon/wc].
+                ts.row_f(
+                    &format!("{b}"),
+                    &[avg(&series[0]), avg(&series[1]), avg(&series[2]), avg(&series[3])],
+                );
+            }
+        }
+        vec![summary, ts]
+    });
+    Plan { id: "variability".into(), cells, assemble }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::orchestrator::{
+        self, merge_with_plans, sweep_plans, Shard, ShardData, SweepResult,
+    };
+    use crate::util::json::Json;
+    use crate::workloads::cache::TraceCache;
+
+    #[test]
+    fn variability_plan_layout() {
+        let r = Runner::test();
+        let p = variability_plan(&r);
+        assert_eq!(p.cells.len(), schedules().len() * MODES.len() * SCHEMES.len());
+        let metrics: usize = p.cells.iter().map(CellSpec::metrics_len).sum();
+        assert_eq!(metrics, p.cells.len() * TENANT_MIX.len());
+        for c in &p.cells {
+            let cl = c.cluster.as_ref().unwrap();
+            assert_eq!(cl.modules, MODULES);
+            assert_eq!(cl.tenants.len(), TENANT_MIX.len());
+        }
+        // Steady cells must keep strict/steady defaults where declared.
+        assert_eq!(p.cells[0].cluster.as_ref().unwrap().sharing, SharingMode::Strict);
+        assert_eq!(p.cells[0].cluster.as_ref().unwrap().schedule, None);
+    }
+
+    #[test]
+    fn bursty_schedule_costs_cycles() {
+        // The bw-burst cell must run no faster than the steady cell for
+        // the same scheme/mode (the schedule starts degraded, so short
+        // runs sit in a quarter-bandwidth phase).
+        let r = Runner::test();
+        let cfg = tenant_cfg(&r);
+        let cache = TraceCache::new();
+        let sched = schedules();
+        let steady = orchestrator::run_cell_spec(
+            &r,
+            &cache,
+            &cell(SchemeKind::Pq, SharingMode::Strict, sched[0].1, cfg.clone()),
+        );
+        let burst = orchestrator::run_cell_spec(
+            &r,
+            &cache,
+            &cell(SchemeKind::Pq, SharingMode::Strict, sched[1].1, cfg),
+        );
+        let cyc = |ms: &[Metrics]| ms.iter().map(|m| m.cycles).sum::<f64>();
+        assert!(
+            cyc(&burst) > cyc(&steady),
+            "bursty degradation must cost cycles: {} vs {}",
+            cyc(&burst),
+            cyc(&steady)
+        );
+        assert_eq!(
+            burst.iter().map(|m| m.instructions).sum::<u64>(),
+            steady.iter().map(|m| m.instructions).sum::<u64>()
+        );
+    }
+
+    /// Reduced 2-cell plan for the shard byte-identity test (full sweep
+    /// is CI's job).
+    fn mini_plan(r: &Runner) -> Plan {
+        let cfg = tenant_cfg(r);
+        let sched = schedules()[1].1;
+        let cells = vec![
+            cell(SchemeKind::Daemon, SharingMode::Strict, sched, cfg.clone()),
+            cell(SchemeKind::Daemon, SharingMode::WorkConserving, sched, cfg),
+        ];
+        let assemble = Box::new(move |ms: &[Metrics]| {
+            let mut t = Table::new("variability mini", &["tenant", "goodput"]);
+            for (i, m) in ms.iter().enumerate() {
+                t.row_f(&format!("{i}"), &[m.goodput()]);
+            }
+            vec![t]
+        });
+        Plan { id: "variability_mini".into(), cells, assemble }
+    }
+
+    #[test]
+    fn variability_cells_shard_byte_identically() {
+        let r = Runner::test();
+        let ids = vec!["variability_mini".to_string()];
+        let full = match sweep_plans(
+            vec![mini_plan(&r)],
+            &ids,
+            &r,
+            &TraceCache::new(),
+            Shard::full(),
+            2,
+        )
+        .unwrap()
+        {
+            SweepResult::Tables(sets) => sets,
+            SweepResult::Shard(_) => panic!("unsharded run produced a shard"),
+        };
+        let shards: Vec<ShardData> = (0..2)
+            .map(|index| {
+                let d = match sweep_plans(
+                    vec![mini_plan(&r)],
+                    &ids,
+                    &r,
+                    &TraceCache::new(),
+                    Shard { index, total: 2 },
+                    2,
+                )
+                .unwrap()
+                {
+                    SweepResult::Shard(d) => d,
+                    SweepResult::Tables(_) => panic!("sharded run produced tables"),
+                };
+                ShardData::from_json(&Json::parse(&d.to_json().to_string()).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        let merged = merge_with_plans(vec![mini_plan(&r)], &shards).unwrap();
+        assert_eq!(
+            orchestrator::figures_json(&full).to_string(),
+            orchestrator::figures_json(&merged).to_string(),
+            "variability cells must shard/merge byte-identically"
+        );
+    }
+}

@@ -84,7 +84,10 @@ EXPERIMENT OPTIONS:
 
 Cluster experiments (`cluster_contention`, `cluster_fairness`) simulate
 C tenants sharing M memory modules over the switched fabric and report
-per-tenant + fairness aggregates; they batch/shard like any figure.
+per-tenant + fairness aggregates; `variability` sweeps scheme x
+sharing-mode (strict vs work-conserving) x link-condition schedule
+(steady / bandwidth bursts / bandwidth+latency bursts) over the same
+cluster.  All of them batch/shard like any figure.
 ";
 
 fn parse_scale(s: &str) -> Result<Scale, String> {

@@ -43,6 +43,16 @@ impl DramBus {
         self.link.backlog(now, class)
     }
 
+    /// Whether the `class` queue has nothing queued or in service at
+    /// `now` (the work-conserving borrow test).
+    pub fn idle(&self, now: f64, class: Class) -> bool {
+        self.link.idle(now, class)
+    }
+
+    pub fn is_partitioned(&self) -> bool {
+        self.link.is_partitioned()
+    }
+
     /// Service rate of the `class` sub-channel, bytes/cycle.
     pub fn rate(&self, class: Class) -> f64 {
         self.link.rate(class)

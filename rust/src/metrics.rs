@@ -33,8 +33,14 @@ pub struct Metrics {
     pub writeback_bytes: u64,
     /// Bytes moved over the network, compute-bound direction.
     pub net_bytes_in: u64,
+    /// Bytes served on borrowed (idle peer / sibling-class) capacity
+    /// under work-conserving sharing — 0 in strict mode by construction.
+    pub reclaimed_bytes: u64,
     /// Mean network utilization over the run, [0,1].
     pub net_utilization: f64,
+    /// Per-interval downlink utilization, horizon-clipped (variability
+    /// time series; averaged over this tenant's module ports).
+    pub net_util_series: Vec<f64>,
     /// Compression ratio achieved on migrated pages (1.0 if off).
     pub compression_ratio: f64,
     /// Per-interval instruction counts (Fig. 13 time series).
@@ -80,6 +86,17 @@ impl Metrics {
     /// Raw mean latency from issue to data arrival.
     pub fn mean_access_latency(&self) -> f64 {
         self.access_cost.mean()
+    }
+
+    /// Network goodput toward the compute component over the run,
+    /// bytes/cycle — the per-tenant quantity the work-conserving fabric
+    /// must not decrease in aggregate.
+    pub fn goodput(&self) -> f64 {
+        if self.cycles <= 0.0 {
+            0.0
+        } else {
+            self.net_bytes_in as f64 / self.cycles
+        }
     }
 
     /// Approximate p99 of raw access latency (issue -> data arrival),
@@ -133,6 +150,7 @@ impl Metrics {
     pub fn to_json(&self) -> Json {
         let u64s =
             |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect());
+        let f64s = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::num(x)).collect());
         Json::obj(vec![
             ("instructions", Json::num(self.instructions as f64)),
             ("cycles", Json::num(self.cycles)),
@@ -148,7 +166,9 @@ impl Metrics {
             ("lines_moved", Json::num(self.lines_moved as f64)),
             ("writeback_bytes", Json::num(self.writeback_bytes as f64)),
             ("net_bytes_in", Json::num(self.net_bytes_in as f64)),
+            ("reclaimed_bytes", Json::num(self.reclaimed_bytes as f64)),
             ("net_utilization", Json::num(self.net_utilization)),
+            ("net_util_series", f64s(&self.net_util_series)),
             ("compression_ratio", Json::num(self.compression_ratio)),
             ("access_hist", u64s(&self.access_hist.counts)),
             ("interval_instructions", u64s(&self.interval_instructions)),
@@ -176,7 +196,9 @@ impl Metrics {
         m.lines_moved = jint(j, "lines_moved")?;
         m.writeback_bytes = jint(j, "writeback_bytes")?;
         m.net_bytes_in = jint(j, "net_bytes_in")?;
+        m.reclaimed_bytes = jint(j, "reclaimed_bytes")?;
         m.net_utilization = jnum(j, "net_utilization")?;
+        m.net_util_series = jvec_f64(j, "net_util_series")?;
         m.compression_ratio = jnum(j, "compression_ratio")?;
         let hist = jvec(j, "access_hist")?;
         if hist.len() != 64 {
@@ -266,6 +288,18 @@ fn jvec(j: &Json, key: &str) -> Result<Vec<u64>, String> {
         .collect()
 }
 
+fn jvec_f64(j: &Json, key: &str) -> Result<Vec<f64>, String> {
+    j.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| format!("metrics json: missing array field '{key}'"))?
+        .iter()
+        .map(|v| {
+            v.as_f64()
+                .ok_or_else(|| format!("metrics json: non-numeric entry in '{key}'"))
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -288,6 +322,9 @@ mod tests {
         assert_eq!(m.local_hit_ratio(), 0.0);
         assert_eq!(m.mean_access_cost(), 0.0);
         assert_eq!(m.compression_ratio, 1.0);
+        assert_eq!(m.goodput(), 0.0);
+        assert_eq!(m.reclaimed_bytes, 0);
+        assert!(m.net_util_series.is_empty());
     }
 
     #[test]
@@ -305,7 +342,9 @@ mod tests {
         m.lines_moved = 9;
         m.writeback_bytes = 4096;
         m.net_bytes_in = 1 << 40;
+        m.reclaimed_bytes = 123_456;
         m.net_utilization = 1.0 / 3.0;
+        m.net_util_series = vec![0.25, 1.0 / 7.0, 0.0, 0.99];
         m.compression_ratio = 2.39;
         m.bump_interval(0, 5);
         m.bump_interval_local(2, true);
@@ -319,6 +358,10 @@ mod tests {
         assert_eq!(back.mean_access_cost(), m.mean_access_cost());
         assert_eq!(back.interval_instructions, m.interval_instructions);
         assert_eq!(back.hit_ratio_series(), m.hit_ratio_series());
+        assert_eq!(back.reclaimed_bytes, m.reclaimed_bytes);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.net_util_series), bits(&m.net_util_series));
+        assert_eq!(back.goodput().to_bits(), m.goodput().to_bits());
     }
 
     #[test]

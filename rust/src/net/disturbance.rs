@@ -1,12 +1,21 @@
-//! Artificial network disturbance (§6 "Network Disturbance", Fig. 13/14).
+//! Time-varying network conditions (§6 "Network Disturbance" and the
+//! runtime-variability regime of Figs. 13/14).
 //!
-//! The paper simulates contention from other compute components by
-//! injecting packets into the network during runtime.  We model phases of
-//! load: within an active phase, a fraction of the link capacity is
-//! consumed by injected packets, applied per accounting interval as the
-//! simulation clock advances.
+//! Two mechanisms, composable per fabric port:
+//!
+//! * [`Disturbance`] — *injection*: phases of load during which a
+//!   fraction of the link capacity is consumed by other components'
+//!   packets, applied per accounting interval as the simulation clock
+//!   advances.  The link's nominal rate never changes; the injected
+//!   traffic occupies its timeline.
+//! * [`NetSchedule`] — *conditions*: a piecewise-constant schedule of
+//!   bandwidth and switch-latency phases the channel itself obeys
+//!   (degraded links, bursty cross-traffic modeled as capacity loss).
+//!   Serialization integrates the rate over the phases a transfer spans.
 
+use crate::config::{ns_to_cycles, ScheduleSpec};
 use crate::net::link::Link;
+use std::sync::Arc;
 
 /// One disturbance phase: during `[from_cycle, to_cycle)`, inject traffic
 /// equal to `load` x link capacity.
@@ -18,29 +27,61 @@ pub struct Phase {
 }
 
 pub struct Disturbance {
+    /// Sorted by `from_cycle`, non-overlapping (asserted).
     phases: Vec<Phase>,
     /// Injection granularity in cycles.
     step: f64,
     /// Next cycle at which injection is due.
     cursor: f64,
+    /// Monotone cursor into `phases`: the first phase whose `to_cycle`
+    /// lies beyond the injection cursor.  `advance` visits cycles in
+    /// nondecreasing order, so the cursor only ever moves forward — this
+    /// replaces a per-step linear scan over all phases (`square_wave` on
+    /// long horizons builds thousands, making injection O(phases x
+    /// steps) without it).
+    phase_idx: usize,
     /// Link capacity in bytes/cycle (sum over channels).
     capacity: f64,
 }
 
 impl Disturbance {
     pub fn new(phases: Vec<Phase>, step_cycles: f64, capacity_bytes_per_cycle: f64) -> Self {
-        Self { phases, step: step_cycles.max(1.0), cursor: 0.0, capacity: capacity_bytes_per_cycle }
+        // Hard assert (matching `NetSchedule::new`): the monotone phase
+        // cursor silently mis-injects on unsorted/overlapping lists that
+        // the old linear scan tolerated.
+        assert!(
+            phases.windows(2).all(|w| w[0].to_cycle <= w[1].from_cycle),
+            "disturbance phases must be sorted and non-overlapping"
+        );
+        Self {
+            phases,
+            step: step_cycles.max(1.0),
+            cursor: 0.0,
+            phase_idx: 0,
+            capacity: capacity_bytes_per_cycle,
+        }
     }
 
     /// No disturbance.
     pub fn none() -> Self {
-        Self { phases: Vec::new(), step: f64::INFINITY, cursor: f64::INFINITY, capacity: 0.0 }
+        Self {
+            phases: Vec::new(),
+            step: f64::INFINITY,
+            cursor: f64::INFINITY,
+            phase_idx: 0,
+            capacity: 0.0,
+        }
     }
 
     /// Periodic square-wave load: alternating `busy_load` / 0 with the
     /// given period (used by Fig. 13/14's runtime variation).
-    pub fn square_wave(period_cycles: f64, busy_load: f64, horizon_cycles: f64,
-                       step_cycles: f64, capacity: f64) -> Self {
+    pub fn square_wave(
+        period_cycles: f64,
+        busy_load: f64,
+        horizon_cycles: f64,
+        step_cycles: f64,
+        capacity: f64,
+    ) -> Self {
         let mut phases = Vec::new();
         let mut t = 0.0;
         let mut on = true;
@@ -54,29 +95,175 @@ impl Disturbance {
         Self::new(phases, step_cycles, capacity)
     }
 
-    fn load_at(&self, cycle: f64) -> f64 {
-        for p in &self.phases {
-            if cycle >= p.from_cycle && cycle < p.to_cycle {
-                return p.load;
-            }
+    /// Load active at `cycle`.  Queries must be nondecreasing across
+    /// calls (they come from the monotone injection cursor); the phase
+    /// cursor advances past every phase that ended at or before `cycle`
+    /// and never rewinds.
+    fn load_at(&mut self, cycle: f64) -> f64 {
+        while self.phase_idx < self.phases.len()
+            && cycle >= self.phases[self.phase_idx].to_cycle
+        {
+            self.phase_idx += 1;
         }
-        0.0
+        match self.phases.get(self.phase_idx) {
+            Some(p) if cycle >= p.from_cycle => p.load,
+            _ => 0.0,
+        }
     }
 
     /// Advance to `now`, injecting the due traffic into `link`.
     pub fn advance(&mut self, now: f64, link: &mut Link) {
         while self.cursor <= now {
-            let load = self.load_at(self.cursor);
+            let cursor = self.cursor;
+            let load = self.load_at(cursor);
             if load > 0.0 {
                 let bytes = (load * self.capacity * self.step) as u64;
                 if bytes > 0 {
-                    link.inject(self.cursor, bytes);
+                    link.inject(cursor, bytes);
                 }
             }
             self.cursor += self.step;
         }
     }
 }
+
+/// One piecewise-constant phase of link conditions, active from
+/// `from_cycle` until the next phase's start (the last phase extends
+/// forever).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetPhase {
+    pub from_cycle: f64,
+    /// Multiplier on the channel's nominal bytes/cycle (> 0).
+    pub rate_scale: f64,
+    /// Extra switch latency while the phase is active, cycles.
+    pub extra_latency_cycles: f64,
+}
+
+/// A schedule of bandwidth/latency phases a link obeys — the §6
+/// time-varying operating condition (bursty degradation, diurnal load).
+/// Before the first phase the link runs nominal (scale 1, no extra
+/// latency); an empty schedule is nominal forever and is timing-identical
+/// to no schedule at all.  Lookups binary-search on `from_cycle`, so
+/// arbitrary (non-monotone) query times stay O(log phases).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NetSchedule {
+    phases: Vec<NetPhase>,
+}
+
+impl NetSchedule {
+    pub fn new(phases: Vec<NetPhase>) -> NetSchedule {
+        assert!(
+            phases.windows(2).all(|w| w[0].from_cycle <= w[1].from_cycle),
+            "schedule phases must be sorted by from_cycle"
+        );
+        assert!(
+            phases.iter().all(|p| p.rate_scale > 0.0 && p.rate_scale.is_finite()),
+            "rate_scale must be positive and finite"
+        );
+        assert!(
+            phases
+                .iter()
+                .all(|p| p.extra_latency_cycles >= 0.0 && p.extra_latency_cycles.is_finite()),
+            "extra_latency_cycles must be non-negative and finite"
+        );
+        NetSchedule { phases }
+    }
+
+    /// Steady nominal conditions.
+    pub fn steady() -> NetSchedule {
+        NetSchedule { phases: Vec::new() }
+    }
+
+    /// Alternating degraded / nominal phases of `period_cycles` each,
+    /// starting degraded at cycle 0, until `horizon_cycles` (the tail
+    /// past the horizon runs nominal).
+    pub fn square_wave(
+        period_cycles: f64,
+        rate_scale: f64,
+        extra_latency_cycles: f64,
+        horizon_cycles: f64,
+    ) -> NetSchedule {
+        assert!(period_cycles > 0.0, "schedule period must be positive");
+        let mut phases = Vec::new();
+        let mut t = 0.0;
+        let mut degraded = true;
+        while t < horizon_cycles {
+            phases.push(if degraded {
+                NetPhase { from_cycle: t, rate_scale, extra_latency_cycles }
+            } else {
+                NetPhase { from_cycle: t, rate_scale: 1.0, extra_latency_cycles: 0.0 }
+            });
+            t += period_cycles;
+            degraded = !degraded;
+        }
+        // Nominal tail from the horizon on (clamped: when the horizon is
+        // not a period multiple, the last phase must still end there).
+        phases.push(NetPhase {
+            from_cycle: horizon_cycles.min(t),
+            rate_scale: 1.0,
+            extra_latency_cycles: 0.0,
+        });
+        NetSchedule::new(phases)
+    }
+
+    /// Materialize a plain-data [`ScheduleSpec`] (the config-level
+    /// description cluster cells carry).
+    pub fn from_spec(spec: &ScheduleSpec) -> NetSchedule {
+        NetSchedule::square_wave(
+            spec.period_cycles,
+            spec.rate_scale,
+            ns_to_cycles(spec.extra_latency_ns),
+            spec.horizon_cycles,
+        )
+    }
+
+    /// The phase active at `cycle` (`None` before the first phase).
+    fn phase_at(&self, cycle: f64) -> Option<&NetPhase> {
+        let i = self.phases.partition_point(|p| p.from_cycle <= cycle);
+        if i == 0 {
+            None
+        } else {
+            Some(&self.phases[i - 1])
+        }
+    }
+
+    pub fn rate_scale_at(&self, cycle: f64) -> f64 {
+        self.phase_at(cycle).map(|p| p.rate_scale).unwrap_or(1.0)
+    }
+
+    pub fn extra_latency_at(&self, cycle: f64) -> f64 {
+        self.phase_at(cycle).map(|p| p.extra_latency_cycles).unwrap_or(0.0)
+    }
+
+    /// End time of a transfer of `bytes` starting at `start` on a channel
+    /// with nominal `base_rate` bytes/cycle, integrating the rate over
+    /// every phase the transfer spans.
+    pub fn transfer_end(&self, start: f64, bytes: f64, base_rate: f64) -> f64 {
+        let mut t = start;
+        let mut left = bytes;
+        let mut i = self.phases.partition_point(|p| p.from_cycle <= t);
+        loop {
+            let scale = if i == 0 { 1.0 } else { self.phases[i - 1].rate_scale };
+            let rate = base_rate * scale;
+            let bound = self.phases.get(i).map(|p| p.from_cycle).unwrap_or(f64::INFINITY);
+            let capacity = (bound - t) * rate;
+            if left <= capacity {
+                return t + left / rate;
+            }
+            left -= capacity;
+            t = bound;
+            i += 1;
+        }
+    }
+
+    pub fn is_steady(&self) -> bool {
+        self.phases.is_empty()
+    }
+}
+
+/// Shared handle the channels hold (one schedule per port, `Arc`-shared
+/// between its channels and the owning link).
+pub type ScheduleHandle = Arc<NetSchedule>;
 
 #[cfg(test)]
 mod tests {
@@ -108,7 +295,7 @@ mod tests {
 
     #[test]
     fn square_wave_alternates() {
-        let d = Disturbance::square_wave(100.0, 0.8, 400.0, 10.0, 1.0);
+        let mut d = Disturbance::square_wave(100.0, 0.8, 400.0, 10.0, 1.0);
         assert!(d.load_at(50.0) > 0.0);
         assert_eq!(d.load_at(150.0), 0.0);
         assert!(d.load_at(250.0) > 0.0);
@@ -128,5 +315,116 @@ mod tests {
         d.advance(150.0, &mut l);
         let backlog_2 = l.backlog(0.0, Class::Line);
         assert!(backlog_2 > backlog_1);
+    }
+
+    #[test]
+    fn phase_boundaries_land_in_the_right_phase() {
+        // Two adjacent phases + a gap: queries at exact from_cycle /
+        // to_cycle boundaries must resolve per the [from, to) convention,
+        // through the monotone cursor.
+        let phases = vec![
+            Phase { from_cycle: 100.0, to_cycle: 200.0, load: 0.5 },
+            Phase { from_cycle: 200.0, to_cycle: 300.0, load: 0.9 },
+            Phase { from_cycle: 400.0, to_cycle: 500.0, load: 0.3 },
+        ];
+        let mut d = Disturbance::new(phases.clone(), 10.0, 1.0);
+        assert_eq!(d.load_at(0.0), 0.0, "before the first phase");
+        assert_eq!(d.load_at(100.0), 0.5, "inclusive from_cycle");
+        assert_eq!(d.load_at(199.0), 0.5);
+        assert_eq!(d.load_at(200.0), 0.9, "to_cycle is exclusive; next from is inclusive");
+        assert_eq!(d.load_at(300.0), 0.0, "gap after an exclusive to_cycle");
+        assert_eq!(d.load_at(400.0), 0.3);
+        assert_eq!(d.load_at(500.0), 0.0, "past the last phase");
+        // The cursor path must agree with a straight linear scan at every
+        // (monotone) step boundary.
+        let mut cursor = Disturbance::new(phases.clone(), 10.0, 1.0);
+        let mut t = 0.0;
+        while t <= 600.0 {
+            let linear = phases
+                .iter()
+                .find(|p| t >= p.from_cycle && t < p.to_cycle)
+                .map(|p| p.load)
+                .unwrap_or(0.0);
+            assert_eq!(cursor.load_at(t), linear, "divergence at cycle {t}");
+            t += 10.0;
+        }
+    }
+
+    #[test]
+    fn boundary_injection_matches_phase_bytes() {
+        // Step boundaries aligned with the phase edges: exactly the
+        // cycles in [100, 200) inject (10 steps x 0.5 x 10 = 50 bytes).
+        let mut d = Disturbance::new(
+            vec![Phase { from_cycle: 100.0, to_cycle: 200.0, load: 0.5 }],
+            10.0,
+            1.0,
+        );
+        let mut l = Link::shared(0.0, 1.0, 1000.0);
+        d.advance(90.0, &mut l);
+        assert_eq!(l.utilization(100.0), 0.0, "no injection before from_cycle");
+        d.advance(200.0, &mut l);
+        // Steps at 100,110,...,190 inject 5 bytes each (50 busy cycles at
+        // 1 B/cyc); the step at exactly 200 (== to_cycle) must not.
+        assert!((l.utilization(200.0) - 50.0 / 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn schedule_lookup_and_defaults() {
+        let s = NetSchedule::square_wave(100.0, 0.5, 36.0, 350.0);
+        // Degraded [0,100), nominal [100,200), degraded [200,300),
+        // nominal [300,400) + nominal tail at 400.
+        assert_eq!(s.rate_scale_at(0.0), 0.5);
+        assert_eq!(s.extra_latency_at(50.0), 36.0);
+        assert_eq!(s.rate_scale_at(100.0), 1.0);
+        assert_eq!(s.extra_latency_at(150.0), 0.0);
+        assert_eq!(s.rate_scale_at(250.0), 0.5);
+        assert_eq!(s.rate_scale_at(1e9), 1.0, "nominal past the horizon");
+        assert!(NetSchedule::steady().is_steady());
+        assert_eq!(NetSchedule::steady().rate_scale_at(123.0), 1.0);
+        assert_eq!(NetSchedule::steady().extra_latency_at(123.0), 0.0);
+    }
+
+    #[test]
+    fn square_wave_tail_is_clamped_to_the_horizon() {
+        // Horizon not a period multiple: the degraded phase at 200 must
+        // still end at the 250-cycle horizon, per the ScheduleSpec
+        // contract ("nominal after the horizon").
+        let s = NetSchedule::square_wave(100.0, 0.25, 9.0, 250.0);
+        assert_eq!(s.rate_scale_at(249.0), 0.25);
+        assert_eq!(s.rate_scale_at(250.0), 1.0, "nominal from the horizon on");
+        assert_eq!(s.extra_latency_at(250.0), 0.0);
+        assert_eq!(s.rate_scale_at(1e12), 1.0);
+    }
+
+    #[test]
+    fn transfer_end_integrates_across_phases() {
+        // Rate 1 B/cyc nominal, halved during [0,100).
+        let s = NetSchedule::square_wave(100.0, 0.5, 0.0, 100.0);
+        // 40 bytes at t=0: 0.5 B/cyc -> 80 cycles, inside the phase.
+        assert!((s.transfer_end(0.0, 40.0, 1.0) - 80.0).abs() < 1e-9);
+        // 80 bytes at t=0: 50 bytes drain by cycle 100, the remaining 30
+        // at full rate -> ends at 130.
+        assert!((s.transfer_end(0.0, 80.0, 1.0) - 130.0).abs() < 1e-9);
+        // Entirely inside the nominal tail.
+        assert!((s.transfer_end(500.0, 40.0, 1.0) - 540.0).abs() < 1e-9);
+        // A steady schedule is one plain division — bit-identical to the
+        // unscheduled path.
+        let steady = NetSchedule::steady();
+        let end = steady.transfer_end(7.0, 123.0, 3.0);
+        assert_eq!(end.to_bits(), (7.0f64 + 123.0 / 3.0).to_bits());
+    }
+
+    #[test]
+    fn from_spec_converts_latency_ns() {
+        let spec = crate::config::ScheduleSpec {
+            period_cycles: 100.0,
+            rate_scale: 0.25,
+            extra_latency_ns: 100.0,
+            horizon_cycles: 150.0,
+        };
+        let s = NetSchedule::from_spec(&spec);
+        assert_eq!(s.rate_scale_at(0.0), 0.25);
+        assert!((s.extra_latency_at(0.0) - 360.0).abs() < 1e-9);
+        assert_eq!(s.rate_scale_at(100.0), 1.0);
     }
 }

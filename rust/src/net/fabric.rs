@@ -3,18 +3,28 @@
 //!
 //! Ports live at the memory modules: each module owns one full-duplex
 //! port pair *per tenant*, carved out of the module's link bandwidth by
-//! the tenant's weight.  Partitioning is strict, like §4.1's class
-//! partitioning — a tenant's share is reserved even while other tenants
-//! idle — which is what gives the cluster its QoS isolation; within a
-//! tenant's share, that tenant's own scheme decides class partitioning.
+//! the tenant's weight.  Under [`SharingMode::Strict`] partitioning is
+//! §4.1-style strict — a tenant's share is reserved even while other
+//! tenants idle — which is what gives the cluster its QoS isolation;
+//! within a tenant's share, that tenant's own scheme decides class
+//! partitioning.  Under [`SharingMode::WorkConserving`] a transfer also
+//! draws on capacity that is idle at request time (peer tenants' port
+//! channels and the sibling class channel of a partitioned share),
+//! split proportionally to the candidate channels' rates — deficit-style:
+//! borrowed bytes are charged to the lending channel's timeline, so a
+//! lender waking up queues behind what it lent, and nothing is reserved
+//! twice.  Strict mode takes the exact historical code path.
+//!
 //! Every traversal pays the module's switch latency plus an optional
-//! extra fabric hop (`hop_cycles`).  With a single tenant and a zero hop
-//! the fabric is timing-identical to the old point-to-point links, which
-//! is what lets a single-tenant cluster reproduce `Machine` exactly.
+//! extra fabric hop (`hop_cycles`); a [`NetSchedule`] per port adds §6's
+//! time-varying bandwidth/latency conditions.  With a single tenant and
+//! a zero hop the fabric is timing-identical to the old point-to-point
+//! links, which is what lets a single-tenant cluster reproduce `Machine`
+//! exactly.
 
-use crate::config::{ns_to_cycles, NetConfig, TenantShare};
-use crate::net::disturbance::Disturbance;
-use crate::net::link::{Class, Link};
+use crate::config::{ns_to_cycles, NetConfig, SharingMode, TenantShare};
+use crate::net::disturbance::{Disturbance, ScheduleHandle};
+use crate::net::link::{work_conserving_issue, work_conserving_plan, Class, Link};
 
 /// One tenant's full-duplex port on a memory module.
 struct PortPair {
@@ -23,6 +33,25 @@ struct PortPair {
     /// Unsplit port capacity, bytes/cycle (disturbance injection base).
     capacity: f64,
     disturbance: Disturbance,
+    /// Bytes this tenant served on borrowed (idle peer / sibling-class)
+    /// capacity, both directions — work-conserving mode only.
+    reclaimed_bytes: u64,
+}
+
+fn dir(p: &PortPair, down: bool) -> &Link {
+    if down {
+        &p.down
+    } else {
+        &p.up
+    }
+}
+
+fn dir_mut(p: &mut PortPair, down: bool) -> &mut Link {
+    if down {
+        &mut p.down
+    } else {
+        &mut p.up
+    }
 }
 
 struct ModulePorts {
@@ -32,6 +61,7 @@ struct ModulePorts {
 
 pub struct Fabric {
     hop_cycles: f64,
+    sharing: SharingMode,
     modules: Vec<ModulePorts>,
 }
 
@@ -42,6 +72,7 @@ impl Fabric {
         shares: &[TenantShare],
         hop_cycles: f64,
         interval: f64,
+        sharing: SharingMode,
     ) -> Fabric {
         assert!(!nets.is_empty(), "fabric needs at least one memory module");
         let modules = nets
@@ -65,13 +96,14 @@ impl Fabric {
                             up: mk(),
                             capacity: rate,
                             disturbance: Disturbance::none(),
+                            reclaimed_bytes: 0,
                         }
                     })
                     .collect();
                 ModulePorts { switch_cycles: sw, ports }
             })
             .collect();
-        Fabric { hop_cycles, modules }
+        Fabric { hop_cycles, sharing, modules }
     }
 
     pub fn modules(&self) -> usize {
@@ -82,6 +114,10 @@ impl Fabric {
         self.modules[0].ports.len()
     }
 
+    pub fn sharing(&self) -> SharingMode {
+        self.sharing
+    }
+
     /// Latency of a control message from a tenant to module `m`.
     pub fn request_latency(&self, m: usize) -> f64 {
         self.modules[m].switch_cycles + self.hop_cycles
@@ -90,21 +126,72 @@ impl Fabric {
     /// Send data from module `m` down to tenant `t`; returns arrival time
     /// at the compute component (serialization + switch + fabric hop).
     pub fn send_down(&mut self, m: usize, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
-        self.modules[m].ports[t].down.send(now, bytes, class) + self.hop_cycles
+        match self.sharing {
+            SharingMode::Strict => {
+                self.modules[m].ports[t].down.send(now, bytes, class) + self.hop_cycles
+            }
+            SharingMode::WorkConserving => self.send_wc(m, t, now, bytes, class, true),
+        }
     }
 
     /// Send data from tenant `t` up to module `m` (writebacks).
     pub fn send_up(&mut self, m: usize, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
-        self.modules[m].ports[t].up.send(now, bytes, class) + self.hop_cycles
+        match self.sharing {
+            SharingMode::Strict => {
+                self.modules[m].ports[t].up.send(now, bytes, class) + self.hop_cycles
+            }
+            SharingMode::WorkConserving => self.send_wc(m, t, now, bytes, class, false),
+        }
+    }
+
+    /// Work-conserving transfer: split `bytes` across tenant `t`'s own
+    /// `class` channel plus every candidate channel idle at `now` (the
+    /// sibling class inside a partitioned share, and peer tenants' port
+    /// channels), proportionally to the candidates' service rates.  The
+    /// arrival is when the slowest chunk lands; borrowed chunks occupy
+    /// the lending channels' timelines.
+    fn send_wc(
+        &mut self,
+        m: usize,
+        t: usize,
+        now: f64,
+        bytes: u64,
+        class: Class,
+        down: bool,
+    ) -> f64 {
+        let module = &mut self.modules[m];
+        let (cands, chunks) = {
+            let ports = &module.ports;
+            work_conserving_plan(
+                t,
+                class,
+                ports.len(),
+                bytes,
+                |u| dir(&ports[u], down).is_partitioned(),
+                |u, c| dir(&ports[u], down).idle(now, c),
+                |u, c| dir(&ports[u], down).rate(c),
+            )
+        };
+        let (arrival, borrowed) = work_conserving_issue(&cands, &chunks, |u, c, chunk| {
+            dir_mut(&mut module.ports[u], down).send(now, chunk, c)
+        });
+        module.ports[t].reclaimed_bytes += borrowed;
+        arrival + self.hop_cycles
     }
 
     pub fn down_backlog(&self, m: usize, t: usize, now: f64, class: Class) -> f64 {
         self.modules[m].ports[t].down.backlog(now, class)
     }
 
-    /// Service rate of tenant `t`'s downlink `class` channel on module `m`.
+    /// Service rate of tenant `t`'s downlink `class` channel on module
+    /// `m` (the strict share; work-conserving borrowing comes on top).
     pub fn down_rate(&self, m: usize, t: usize, class: Class) -> f64 {
         self.modules[m].ports[t].down.rate(class)
+    }
+
+    /// Bytes tenant `t` moved on borrowed capacity at module `m`.
+    pub fn reclaimed_bytes(&self, m: usize, t: usize) -> u64 {
+        self.modules[m].ports[t].reclaimed_bytes
     }
 
     /// Advance tenant `t`'s disturbance injector on module `m` to `now`.
@@ -122,28 +209,55 @@ impl Fabric {
         }
     }
 
+    /// Install a disturbance on every port of module `m` only — other
+    /// modules' ports keep whatever injector they have.
+    pub fn set_disturbance_at(&mut self, m: usize, mk: impl Fn(f64) -> Disturbance) {
+        for p in self.modules[m].ports.iter_mut() {
+            p.disturbance = mk(p.capacity);
+        }
+    }
+
+    /// Install time-varying link conditions: `mk(module, tenant)` yields
+    /// the schedule for that port pair (both directions; `None` clears).
+    pub fn set_schedule(&mut self, mk: impl Fn(usize, usize) -> Option<ScheduleHandle>) {
+        for (m, module) in self.modules.iter_mut().enumerate() {
+            for (t, p) in module.ports.iter_mut().enumerate() {
+                let s = mk(m, t);
+                p.down.set_schedule(s.clone());
+                p.up.set_schedule(s);
+            }
+        }
+    }
+
     pub fn down_utilization(&self, m: usize, t: usize, horizon: f64) -> f64 {
         self.modules[m].ports[t].down.utilization(horizon)
     }
 
-    pub fn down_series(&self, m: usize, t: usize) -> Vec<f64> {
-        self.modules[m].ports[t].down.utilization_series()
+    /// Per-interval downlink utilization series over `[0, horizon)`.
+    pub fn down_series(&self, m: usize, t: usize, horizon: f64) -> Vec<f64> {
+        self.modules[m].ports[t].down.utilization_series(horizon)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::disturbance::{NetSchedule, Phase};
+    use std::sync::Arc;
 
     fn share(weight: f64) -> TenantShare {
         TenantShare { weight, partitioned: false, line_ratio: 0.25 }
+    }
+
+    fn strict(nets: &[NetConfig], gbps: f64, shares: &[TenantShare], hop: f64, iv: f64) -> Fabric {
+        Fabric::new(nets, gbps, shares, hop, iv, SharingMode::Strict)
     }
 
     #[test]
     fn single_tenant_matches_point_to_point_link() {
         let net = NetConfig::new(100.0, 4.0);
         let bpc = net.bytes_per_cycle(17.0);
-        let mut f = Fabric::new(&[net], 17.0, &[share(1.0)], 0.0, 1000.0);
+        let mut f = strict(&[net], 17.0, &[share(1.0)], 0.0, 1000.0);
         let mut l = Link::shared(ns_to_cycles(100.0), bpc, 1000.0);
         for (now, bytes) in [(0.0, 4096u64), (10.0, 64), (5000.0, 640)] {
             let a = f.send_down(0, 0, now, bytes, Class::Page);
@@ -156,9 +270,10 @@ mod tests {
     #[test]
     fn tenants_are_strictly_isolated() {
         let net = NetConfig::new(0.0, 1.0);
-        let mut f = Fabric::new(&[net], 7.2, &[share(1.0), share(1.0)], 0.0, 1000.0);
+        let mut f = strict(&[net], 7.2, &[share(1.0), share(1.0)], 0.0, 1000.0);
         assert_eq!(f.tenants(), 2);
         assert_eq!(f.modules(), 1);
+        assert_eq!(f.sharing(), SharingMode::Strict);
         // Each tenant gets 1 B/cycle of the 2 B/cycle port.
         assert!((f.down_rate(0, 0, Class::Line) - 1.0).abs() < 1e-12);
         // Tenant 0 saturates its partition ...
@@ -167,12 +282,13 @@ mod tests {
         // ... tenant 1's transfers are unaffected (strict shares).
         let t1 = f.send_down(0, 1, 0.0, 100, Class::Line);
         assert!((t1 - 100.0).abs() < 1e-9, "cross-tenant interference: {t1}");
+        assert_eq!(f.reclaimed_bytes(0, 0), 0, "strict mode never borrows");
     }
 
     #[test]
     fn weights_skew_port_rates() {
         let net = NetConfig::new(0.0, 1.0);
-        let f = Fabric::new(&[net], 10.8, &[share(3.0), share(1.0)], 0.0, 1e4);
+        let f = strict(&[net], 10.8, &[share(3.0), share(1.0)], 0.0, 1e4);
         assert!((f.down_rate(0, 0, Class::Line) - 2.25).abs() < 1e-12);
         assert!((f.down_rate(0, 1, Class::Line) - 0.75).abs() < 1e-12);
     }
@@ -180,7 +296,7 @@ mod tests {
     #[test]
     fn fabric_hop_adds_to_every_traversal() {
         let net = NetConfig::new(0.0, 1.0);
-        let mut f = Fabric::new(&[net], 3.6, &[share(1.0)], 25.0, 1e4);
+        let mut f = strict(&[net], 3.6, &[share(1.0)], 25.0, 1e4);
         assert_eq!(f.request_latency(0), 25.0);
         let t = f.send_down(0, 0, 0.0, 100, Class::Line);
         assert!((t - 125.0).abs() < 1e-9, "serialization + hop: {t}");
@@ -192,9 +308,102 @@ mod tests {
     fn partitioned_tenant_share_splits_classes() {
         let net = NetConfig::new(0.0, 1.0);
         let sh = TenantShare { weight: 1.0, partitioned: true, line_ratio: 0.25 };
-        let f = Fabric::new(&[net], 14.4, &[sh, sh], 0.0, 1e4);
+        let f = strict(&[net], 14.4, &[sh, sh], 0.0, 1e4);
         // 4 B/cyc port, 2 B/cyc per tenant, 25% of that for lines.
         assert!((f.down_rate(0, 0, Class::Line) - 0.5).abs() < 1e-12);
         assert!((f.down_rate(0, 0, Class::Page) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn work_conserving_borrows_idle_peer_capacity() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f = Fabric::new(
+            &[net],
+            7.2,
+            &[share(1.0), share(1.0)],
+            0.0,
+            1e6,
+            SharingMode::WorkConserving,
+        );
+        // Tenant 1 idle: tenant 0's 1000-byte transfer runs at the full
+        // 2 B/cyc port rate (500 + 500 split over both 1 B/cyc channels)
+        // instead of 1000 cycles on its own 1 B/cyc share.
+        let t0 = f.send_down(0, 0, 0.0, 1000, Class::Line);
+        assert!((t0 - 500.0).abs() < 1e-9, "idle capacity not reclaimed: {t0}");
+        assert_eq!(f.reclaimed_bytes(0, 0), 500);
+        // Tenant 1 wakes up mid-lease: it queues behind what it lent
+        // (deficit accounting — nothing is reserved twice).
+        let t1 = f.send_down(0, 1, 100.0, 100, Class::Line);
+        assert!((t1 - 600.0).abs() < 1e-9, "lender must queue behind its lease: {t1}");
+        // With both channels busy there is nothing to borrow.
+        let t0b = f.send_down(0, 0, 100.0, 100, Class::Line);
+        assert!((t0b - 600.0).abs() < 1e-9, "{t0b}");
+        assert_eq!(f.reclaimed_bytes(0, 0), 500, "no borrow while peers are busy");
+    }
+
+    #[test]
+    fn work_conserving_with_single_unpartitioned_tenant_degrades_exactly() {
+        let net = NetConfig::new(100.0, 4.0);
+        let mk = |mode| Fabric::new(&[net], 17.0, &[share(1.0)], 0.0, 1000.0, mode);
+        let mut a = mk(SharingMode::Strict);
+        let mut b = mk(SharingMode::WorkConserving);
+        for (now, bytes) in [(0.0, 4096u64), (10.0, 64), (5000.0, 640)] {
+            let x = a.send_down(0, 0, now, bytes, Class::Page);
+            let y = b.send_down(0, 0, now, bytes, Class::Page);
+            assert_eq!(x.to_bits(), y.to_bits(), "WC with no idle candidates must be strict");
+        }
+        assert_eq!(b.reclaimed_bytes(0, 0), 0);
+    }
+
+    #[test]
+    fn work_conserving_borrows_idle_sibling_class() {
+        let net = NetConfig::new(0.0, 1.0);
+        let sh = TenantShare { weight: 1.0, partitioned: true, line_ratio: 0.25 };
+        let mut f = Fabric::new(&[net], 14.4, &[sh], 0.0, 1e6, SharingMode::WorkConserving);
+        // 4 B/cyc port: line channel 1 B/cyc, page channel 3 B/cyc.  With
+        // the page class idle, a 1000-byte line burst runs at 4 B/cyc.
+        let t = f.send_down(0, 0, 0.0, 1000, Class::Line);
+        assert!((t - 250.0).abs() < 1e-9, "sibling class capacity not reclaimed: {t}");
+        assert_eq!(f.reclaimed_bytes(0, 0), 750);
+    }
+
+    #[test]
+    fn disturbance_degrades_only_the_targeted_module() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f = strict(&[net, net], 7.2, &[share(1.0)], 0.0, 1e6);
+        // 80% load on module 0's ports only, for the first 1e5 cycles.
+        f.set_disturbance_at(0, |cap| {
+            Disturbance::new(vec![Phase { from_cycle: 0.0, to_cycle: 1e5, load: 0.8 }], 100.0, cap)
+        });
+        f.advance_disturbance(0, 0, 5000.0);
+        f.advance_disturbance(1, 0, 5000.0);
+        let rate = f.down_rate(1, 0, Class::Line);
+        let clean = f.send_down(1, 0, 5000.0, 100, Class::Line);
+        assert!(
+            (clean - (5000.0 + 100.0 / rate)).abs() < 1e-9,
+            "untargeted module must be clean: {clean}"
+        );
+        // 80% load injects 160 bytes per 100-cycle step (80 busy cycles),
+        // so the send queues behind the current step's injection.
+        let dirty = f.send_down(0, 0, 5000.0, 100, Class::Line);
+        assert!(
+            dirty > clean + 50.0,
+            "targeted module must queue behind injected load: {dirty} vs {clean}"
+        );
+    }
+
+    #[test]
+    fn port_schedules_apply_per_module_and_tenant() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f = strict(&[net, net], 7.2, &[share(1.0)], 0.0, 1e6);
+        // Halve module 0's port bandwidth for 1e12 cycles; module 1
+        // nominal.
+        let sched = Arc::new(NetSchedule::square_wave(1e12, 0.5, 0.0, 1e12));
+        f.set_schedule(|m, _| if m == 0 { Some(sched.clone()) } else { None });
+        let rate = f.down_rate(0, 0, Class::Line);
+        let slow = f.send_down(0, 0, 0.0, 100, Class::Line);
+        assert!((slow - 200.0 / rate).abs() < 1e-9, "degraded module: {slow}");
+        let fast = f.send_down(1, 0, 0.0, 100, Class::Line);
+        assert!((fast - 100.0 / rate).abs() < 1e-9, "nominal module: {fast}");
     }
 }

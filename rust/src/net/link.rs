@@ -1,13 +1,18 @@
 //! Bandwidth-serialized channel — the core timing resource of the
 //! simulator.
 //!
-//! A `BwChannel` serializes transfers at a fixed bytes/cycle rate and
-//! tracks per-interval busy time for utilization reporting (Fig. 19).  A
+//! A `BwChannel` serializes transfers at a nominal bytes/cycle rate —
+//! optionally modulated by a piecewise-constant [`NetSchedule`] of
+//! rate/latency phases (§6's time-varying conditions) — and tracks
+//! per-interval busy time for utilization reporting (Fig. 19).  A
 //! `Link` composes switch latency with either one shared channel or two
 //! partitioned sub-channels (DaeMon's §4.1 approximate bandwidth
 //! partitioning: the queue controller's alternate serving reserves a fixed
 //! fraction for each class *even when the other queue is empty*, so the
-//! partitions are strict).
+//! partitions are strict).  Without a schedule the timing math is
+//! bit-identical to the historical fixed-rate behavior.
+
+use crate::net::disturbance::ScheduleHandle;
 
 /// A transfer scheduled on a channel.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -23,6 +28,9 @@ pub struct BwChannel {
     interval: f64,
     /// Busy cycles accumulated per interval index.
     busy: Vec<f64>,
+    /// Time-varying rate schedule (`None` = fixed nominal rate, with the
+    /// exact historical duration math).
+    schedule: Option<ScheduleHandle>,
     pub bytes_moved: u64,
 }
 
@@ -34,6 +42,7 @@ impl BwChannel {
             next_free: 0.0,
             interval: interval_cycles.max(1.0),
             busy: Vec::new(),
+            schedule: None,
             bytes_moved: 0,
         }
     }
@@ -46,16 +55,29 @@ impl BwChannel {
         self.next_free
     }
 
+    /// Install (or clear) a rate schedule; applies to subsequent
+    /// transfers.
+    pub fn set_schedule(&mut self, schedule: Option<ScheduleHandle>) {
+        self.schedule = schedule;
+    }
+
     /// Queue occupancy ahead of a request issued at `now`, in cycles.
     pub fn backlog(&self, now: f64) -> f64 {
         (self.next_free - now).max(0.0)
     }
 
+    /// Whether the channel has no queued or in-service transfer at `now`.
+    pub fn idle_at(&self, now: f64) -> bool {
+        self.next_free <= now
+    }
+
     /// Schedule `bytes` at time `now`; FIFO behind earlier transfers.
     pub fn transfer(&mut self, now: f64, bytes: u64) -> Transfer {
         let start = self.next_free.max(now);
-        let dur = bytes as f64 / self.bytes_per_cycle;
-        let end = start + dur;
+        let end = match &self.schedule {
+            None => start + bytes as f64 / self.bytes_per_cycle,
+            Some(s) => s.transfer_end(start, bytes as f64, self.bytes_per_cycle),
+        };
         self.next_free = end;
         self.bytes_moved += bytes;
         self.account(start, end);
@@ -112,9 +134,28 @@ impl BwChannel {
         (total_busy / horizon_cycles).min(1.0)
     }
 
-    /// Per-interval utilization series (for the disturbance time plots).
-    pub fn utilization_series(&self) -> Vec<f64> {
-        self.busy.iter().map(|b| (b / self.interval).min(1.0)).collect()
+    /// Per-interval utilization series over `[0, horizon_cycles)` (for
+    /// the disturbance/variability time plots).  Clipped at the horizon
+    /// exactly like [`BwChannel::utilization`]: buckets past the horizon
+    /// are dropped, and the one straddling bucket counts at most the
+    /// busy time that fits in its covered span (normalized by that span,
+    /// so `sum(series[i] * covered_i) / horizon == utilization(horizon)`)
+    /// — otherwise the tail point reports busy time the link spent after
+    /// the run ended.
+    pub fn utilization_series(&self, horizon_cycles: f64) -> Vec<f64> {
+        if horizon_cycles <= 0.0 {
+            return Vec::new();
+        }
+        let mut out = Vec::new();
+        for (idx, &busy) in self.busy.iter().enumerate() {
+            let start = idx as f64 * self.interval;
+            if start >= horizon_cycles {
+                break;
+            }
+            let covered = (horizon_cycles - start).min(self.interval);
+            out.push((busy.min(covered) / covered).min(1.0));
+        }
+        out
     }
 }
 
@@ -125,6 +166,16 @@ pub enum Class {
     Page,
 }
 
+impl Class {
+    /// The sibling class on a partitioned resource.
+    pub fn other(self) -> Class {
+        match self {
+            Class::Line => Class::Page,
+            Class::Page => Class::Line,
+        }
+    }
+}
+
 /// A network hop: switch latency + bandwidth, optionally partitioned.
 pub struct Link {
     pub switch_cycles: f64,
@@ -132,6 +183,9 @@ pub struct Link {
     shared: Option<BwChannel>,
     line_chan: Option<BwChannel>,
     page_chan: Option<BwChannel>,
+    /// Time-varying conditions: the channels obey its rate phases; the
+    /// link adds its extra switch latency (sampled at send time).
+    schedule: Option<ScheduleHandle>,
 }
 
 impl Link {
@@ -142,6 +196,7 @@ impl Link {
             shared: Some(BwChannel::new(bytes_per_cycle, interval)),
             line_chan: None,
             page_chan: None,
+            schedule: None,
         }
     }
 
@@ -158,7 +213,24 @@ impl Link {
             shared: None,
             line_chan: Some(BwChannel::new(bytes_per_cycle * ratio, interval)),
             page_chan: Some(BwChannel::new(bytes_per_cycle * (1.0 - ratio), interval)),
+            schedule: None,
         }
+    }
+
+    /// Install (or clear) a schedule of time-varying link conditions on
+    /// every channel (rate phases) and on the link itself (extra switch
+    /// latency).
+    pub fn set_schedule(&mut self, schedule: Option<ScheduleHandle>) {
+        if let Some(c) = self.shared.as_mut() {
+            c.set_schedule(schedule.clone());
+        }
+        if let Some(c) = self.line_chan.as_mut() {
+            c.set_schedule(schedule.clone());
+        }
+        if let Some(c) = self.page_chan.as_mut() {
+            c.set_schedule(schedule.clone());
+        }
+        self.schedule = schedule;
     }
 
     pub fn is_partitioned(&self) -> bool {
@@ -186,9 +258,13 @@ impl Link {
     }
 
     /// Send `bytes` of `class` at `now`; returns arrival time at the far
-    /// end (serialization + switch latency).
+    /// end (serialization + switch latency, plus any schedule-phase extra
+    /// latency sampled at send time).
     pub fn send(&mut self, now: f64, bytes: u64, class: Class) -> f64 {
-        let sw = self.switch_cycles;
+        let mut sw = self.switch_cycles;
+        if let Some(s) = &self.schedule {
+            sw += s.extra_latency_at(now);
+        }
         let t = self.chan_mut(class).transfer(now, bytes);
         t.end + sw
     }
@@ -196,6 +272,11 @@ impl Link {
     /// Queue backlog for `class` at `now` (cycles).
     pub fn backlog(&self, now: f64, class: Class) -> f64 {
         self.chan(class).backlog(now)
+    }
+
+    /// Whether the channel carrying `class` is idle at `now`.
+    pub fn idle(&self, now: f64, class: Class) -> bool {
+        self.chan(class).idle_at(now)
     }
 
     /// Service rate of the channel carrying `class`, bytes/cycle.
@@ -243,12 +324,15 @@ impl Link {
         }
     }
 
-    pub fn utilization_series(&self) -> Vec<f64> {
+    /// Per-interval utilization series over `[0, horizon)` —
+    /// capacity-weighted across channels, horizon-clipped like
+    /// [`Link::utilization`].
+    pub fn utilization_series(&self, horizon: f64) -> Vec<f64> {
         match &self.shared {
-            Some(c) => c.utilization_series(),
+            Some(c) => c.utilization_series(horizon),
             None => {
-                let a = self.line_chan.as_ref().unwrap().utilization_series();
-                let b = self.page_chan.as_ref().unwrap().utilization_series();
+                let a = self.line_chan.as_ref().unwrap().utilization_series(horizon);
+                let b = self.page_chan.as_ref().unwrap().utilization_series(horizon);
                 let n = a.len().max(b.len());
                 let wl = self.line_chan.as_ref().unwrap().bytes_per_cycle();
                 let wp = self.page_chan.as_ref().unwrap().bytes_per_cycle();
@@ -262,6 +346,96 @@ impl Link {
             }
         }
     }
+}
+
+/// Work-conserving candidate plan — the single borrow policy shared by
+/// the fabric ports and the memory-engine bus queues, so the two can
+/// never diverge.  Candidates are `(slot, class)` channels: the owner's
+/// own `class` channel first (the remainder slot of the proportional
+/// split — always issued, even for zero bytes), then the sibling class
+/// inside a partitioned owner, then every peer channel idle at request
+/// time (same class, and the sibling when that peer is partitioned).
+/// `bytes` is split across the candidates proportionally to their
+/// service rates.
+pub fn work_conserving_plan(
+    owner: usize,
+    class: Class,
+    slots: usize,
+    bytes: u64,
+    is_partitioned: impl Fn(usize) -> bool,
+    idle: impl Fn(usize, Class) -> bool,
+    rate: impl Fn(usize, Class) -> f64,
+) -> (Vec<(usize, Class)>, Vec<u64>) {
+    let mut cands: Vec<(usize, Class)> = vec![(owner, class)];
+    if is_partitioned(owner) && idle(owner, class.other()) {
+        cands.push((owner, class.other()));
+    }
+    for u in 0..slots {
+        if u == owner {
+            continue;
+        }
+        if idle(u, class) {
+            cands.push((u, class));
+        }
+        if is_partitioned(u) && idle(u, class.other()) {
+            cands.push((u, class.other()));
+        }
+    }
+    let rates: Vec<f64> = cands.iter().map(|&(u, c)| rate(u, c)).collect();
+    let chunks = proportional_split(bytes, &rates);
+    (cands, chunks)
+}
+
+/// Execute a [`work_conserving_plan`]: issue each chunk on its channel
+/// via `issue(slot, class, chunk)` and return `(finish, borrowed)` —
+/// the slowest chunk's completion time and the bytes served off the
+/// owner's own channel.  The owner chunk (slot 0 of the plan) is always
+/// issued, even zero-byte, so a plan with no idle candidates degrades
+/// exactly to the strict single-channel path; borrowed zero chunks are
+/// skipped.  Shared by the fabric ports and the memory-engine bus
+/// queues so the execution rules can never diverge either.
+pub fn work_conserving_issue(
+    cands: &[(usize, Class)],
+    chunks: &[u64],
+    mut issue: impl FnMut(usize, Class, u64) -> f64,
+) -> (f64, u64) {
+    let mut finish = f64::NEG_INFINITY;
+    let mut borrowed = 0u64;
+    for (k, (&(u, c), &chunk)) in cands.iter().zip(chunks).enumerate() {
+        if chunk == 0 && k > 0 {
+            continue;
+        }
+        finish = finish.max(issue(u, c, chunk));
+        if k > 0 {
+            borrowed += chunk;
+        }
+    }
+    (finish, borrowed)
+}
+
+/// Split `bytes` across capacity `rates` proportionally — the
+/// work-conserving redistribution rule shared by the fabric ports and
+/// the memory-engine bus queues.  Slot `i > 0` gets
+/// `floor(bytes * rates[i] / sum)`; slot 0 (the requesting owner) takes
+/// the remainder, so no byte is ever lost and the result is
+/// deterministic.
+pub fn proportional_split(bytes: u64, rates: &[f64]) -> Vec<u64> {
+    let total: f64 = rates.iter().sum();
+    let mut out = vec![0u64; rates.len()];
+    if bytes == 0 || rates.is_empty() || total <= 0.0 {
+        if let Some(first) = out.first_mut() {
+            *first = bytes;
+        }
+        return out;
+    }
+    let mut assigned = 0u64;
+    for (i, &r) in rates.iter().enumerate().skip(1) {
+        let share = (bytes as f64 * (r / total)).floor() as u64;
+        out[i] = share;
+        assigned += share;
+    }
+    out[0] = bytes - assigned;
+    out
 }
 
 #[cfg(test)]
@@ -291,10 +465,134 @@ mod tests {
     fn utilization_accounting_spans_intervals() {
         let mut c = BwChannel::new(1.0, 100.0);
         c.transfer(50.0, 100); // busy 50..150: half of interval 0 and 1
-        let series = c.utilization_series();
+        let series = c.utilization_series(200.0);
         assert!((series[0] - 0.5).abs() < 1e-9);
         assert!((series[1] - 0.5).abs() < 1e-9);
         assert!((c.utilization(200.0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_clips_at_horizon_like_utilization() {
+        // Regression: the same straddling transfer through both paths.
+        // Busy 50..150 over 100-cycle buckets; horizon 100 cuts bucket 1
+        // entirely and leaves 50 busy cycles in bucket 0 — previously the
+        // series reported bucket 1's post-run busy time as a tail point.
+        let mut c = BwChannel::new(1.0, 100.0);
+        c.transfer(50.0, 100);
+        assert!((c.utilization(100.0) - 0.5).abs() < 1e-9);
+        let s = c.utilization_series(100.0);
+        assert_eq!(s.len(), 1, "bucket past the horizon must be dropped");
+        assert!((s[0] - 0.5).abs() < 1e-9);
+        // Mid-bucket horizon: bucket 1 is covered for 20 cycles and its
+        // 50 busy cycles clip to the covered span (fully busy).
+        let s = c.utilization_series(120.0);
+        assert_eq!(s.len(), 2);
+        assert!((s[0] - 0.5).abs() < 1e-9);
+        assert!((s[1] - 1.0).abs() < 1e-9);
+        // Covered-span weighting keeps the two paths consistent:
+        // sum(series[i] * covered_i) / horizon == utilization(horizon).
+        let weighted = (s[0] * 100.0 + s[1] * 20.0) / 120.0;
+        assert!((weighted - c.utilization(120.0)).abs() < 1e-9);
+        // Horizon beyond all activity: the unclipped shape.
+        assert_eq!(c.utilization_series(1000.0), vec![0.5, 0.5]);
+        assert_eq!(c.utilization_series(0.0), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn partitioned_series_is_weighted_and_clipped() {
+        let mut l = Link::partitioned(0.0, 4.0, 0.25, 100.0);
+        // Fill the 1 B/c line channel for 150 cycles; page idle.
+        l.send(0.0, 150, Class::Line);
+        let s = l.utilization_series(100.0);
+        assert_eq!(s.len(), 1, "straddling line bucket clipped at horizon");
+        assert!((s[0] - 0.25).abs() < 1e-9, "{s:?}");
+    }
+
+    #[test]
+    fn schedule_scales_rate_and_latency() {
+        use crate::net::disturbance::NetSchedule;
+        use std::sync::Arc;
+        // Degraded [0,100): half rate + 7 extra switch cycles.
+        let sched = Arc::new(NetSchedule::square_wave(100.0, 0.5, 7.0, 100.0));
+        let mut l = Link::shared(10.0, 1.0, 1000.0);
+        l.set_schedule(Some(sched));
+        // 40 bytes at t=0: 80 cycles at half rate + 10 switch + 7 extra.
+        let a = l.send(0.0, 40, Class::Line);
+        assert!((a - 97.0).abs() < 1e-9, "{a}");
+        // Next transfer starts in the nominal tail (idle since 80): full
+        // rate, and the extra latency no longer applies at send time 150.
+        let b = l.send(150.0, 40, Class::Line);
+        assert!((b - 200.0).abs() < 1e-9, "{b}");
+        // Clearing the schedule restores fixed-rate timing.
+        l.set_schedule(None);
+        let c = l.send(1000.0, 40, Class::Line);
+        assert!((c - 1050.0).abs() < 1e-9, "{c}");
+    }
+
+    #[test]
+    fn class_other_and_idle() {
+        assert_eq!(Class::Line.other(), Class::Page);
+        assert_eq!(Class::Page.other(), Class::Line);
+        let mut l = Link::partitioned(0.0, 4.0, 0.25, 1000.0);
+        assert!(l.idle(0.0, Class::Line) && l.idle(0.0, Class::Page));
+        l.send(0.0, 100, Class::Line); // 100 cycles on the 1 B/c channel
+        assert!(!l.idle(50.0, Class::Line));
+        assert!(l.idle(50.0, Class::Page), "sibling class unaffected");
+        assert!(l.idle(100.0, Class::Line), "idle again once drained");
+    }
+
+    #[test]
+    fn work_conserving_plan_orders_and_filters_candidates() {
+        // 3 slots; owner 0 partitioned with an idle sibling; slot 1 idle
+        // (unpartitioned); slot 2 busy.  Owner-first ordering is what
+        // makes slot 0 the remainder taker.
+        let partitioned = [true, false, false];
+        let idle = [true, true, false];
+        let (cands, chunks) = work_conserving_plan(
+            0,
+            Class::Line,
+            3,
+            100,
+            |u| partitioned[u],
+            |u, _| idle[u],
+            |_, _| 1.0,
+        );
+        assert_eq!(
+            cands,
+            vec![(0, Class::Line), (0, Class::Page), (1, Class::Line)]
+        );
+        assert_eq!(chunks, vec![34, 33, 33]);
+        // Nothing idle: the owner carries everything.
+        let (cands, chunks) = work_conserving_plan(
+            0,
+            Class::Line,
+            3,
+            100,
+            |_| false,
+            |_, _| false,
+            |_, _| 1.0,
+        );
+        assert_eq!(cands, vec![(0, Class::Line)]);
+        assert_eq!(chunks, vec![100]);
+    }
+
+    #[test]
+    fn proportional_split_conserves_bytes() {
+        assert_eq!(proportional_split(100, &[1.0, 1.0]), vec![50, 50]);
+        assert_eq!(proportional_split(100, &[1.0, 3.0]), vec![25, 75]);
+        // Remainder goes to the owner slot.
+        assert_eq!(proportional_split(10, &[1.0, 1.0, 1.0]), vec![4, 3, 3]);
+        assert_eq!(proportional_split(7, &[2.0]), vec![7]);
+        assert_eq!(proportional_split(0, &[1.0, 1.0]), vec![0, 0]);
+        // Tiny transfers stay whole on the owner.
+        assert_eq!(proportional_split(1, &[1.0, 5.0]), vec![1, 0]);
+        crate::util::proptest::check(0x5917, 40, |rng| {
+            let n = 1 + rng.index(5);
+            let rates: Vec<f64> = (0..n).map(|_| 0.1 + rng.f64() * 9.9).collect();
+            let bytes = rng.below(1 << 20);
+            let split = proportional_split(bytes, &rates);
+            assert_eq!(split.iter().sum::<u64>(), bytes, "bytes lost in split");
+        });
     }
 
     #[test]

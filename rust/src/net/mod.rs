@@ -1,11 +1,15 @@
 //! Network substrate: bandwidth-serialized links with switch latency,
 //! per-interval utilization accounting, optional §4.1 bandwidth
-//! partitioning, and the Fig. 13/14 disturbance injector.
+//! partitioning, the Fig. 13/14 disturbance injector, and piecewise
+//! time-varying rate/latency schedules (`NetSchedule`).
 
 pub mod disturbance;
 pub mod fabric;
 pub mod link;
 
-pub use disturbance::{Disturbance, Phase};
+pub use disturbance::{Disturbance, NetPhase, NetSchedule, Phase, ScheduleHandle};
 pub use fabric::Fabric;
-pub use link::{BwChannel, Class, Link, Transfer};
+pub use link::{
+    proportional_split, work_conserving_issue, work_conserving_plan, BwChannel, Class, Link,
+    Transfer,
+};

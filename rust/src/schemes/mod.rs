@@ -65,10 +65,25 @@ impl SchemeKind {
             Local => Policy { local_only: true, ..Policy::none() },
             CacheLine => Policy { move_lines: true, install_pages: false, ..Policy::none() },
             Remote => Policy { move_pages: true, blocking_pages: true, ..Policy::none() },
-            PageFree => Policy { move_pages: true, free_pages: true, move_lines: true, ..Policy::none() },
+            PageFree => Policy {
+                move_pages: true,
+                free_pages: true,
+                move_lines: true,
+                ..Policy::none()
+            },
             CacheLinePage => Policy { move_pages: true, move_lines: true, ..Policy::none() },
-            Lc => Policy { move_pages: true, blocking_pages: true, compress: true, ..Policy::none() },
-            Bp => Policy { move_pages: true, move_lines: true, partitioned: true, ..Policy::none() },
+            Lc => Policy {
+                move_pages: true,
+                blocking_pages: true,
+                compress: true,
+                ..Policy::none()
+            },
+            Bp => Policy {
+                move_pages: true,
+                move_lines: true,
+                partitioned: true,
+                ..Policy::none()
+            },
             Pq => Policy {
                 move_pages: true,
                 move_lines: true,

@@ -6,21 +6,28 @@
 //! of §6.7 and the prerequisite for every serving/QoS experiment.
 //!
 //! Sharing model: module bandwidth (fabric ports + DRAM bus queues) is
-//! *strictly* partitioned across tenants by weight — §4.1's reservation
-//! discipline applied to tenants, which is what yields QoS isolation and
-//! a well-defined per-tenant slowdown.  "Contention" therefore shows up
-//! as each tenant's reduced share, not as dynamic interference.  The
-//! driver still advances the tenant whose next access issues earliest
+//! partitioned across tenants by weight under a [`SharingMode`].  The
+//! default `Strict` mode is §4.1's reservation discipline applied to
+//! tenants — a share is reserved even while its owner idles — which is
+//! what yields QoS isolation and a well-defined per-tenant slowdown;
+//! "contention" shows up as each tenant's reduced share, not as dynamic
+//! interference.  `WorkConserving` trades some of that isolation for
+//! throughput: capacity idle at request time (peer ports/queues, the
+//! sibling class of a partitioned share) is redistributed by weight,
+//! making the driver's global earliest-access ordering load-bearing —
+//! the driver advances the tenant whose next access issues earliest
 //! (global min over every tenant's cores; first tenant wins ties), so
-//! results stay deterministic and the loop is ready for future
-//! work-conserving fabric modes where interleaving order matters.  With
-//! a single tenant it degenerates to exactly `Machine::run` — pinned by
+//! interleaving, and therefore who borrows from whom, is deterministic.
+//! A [`ScheduleSpec`] additionally applies §6's time-varying
+//! bandwidth/latency conditions to every fabric port.  With a single
+//! tenant the cluster degenerates to exactly `Machine::run` — pinned by
 //! the `single_tenant_cluster_matches_machine` regression test.
 
 use crate::compress::synth::Profile;
 use crate::config::{ClusterConfig, SimConfig, TenantShare};
 use crate::daemon::EgressStats;
 use crate::metrics::Metrics;
+use crate::net::NetSchedule;
 use crate::schemes::SchemeKind;
 use crate::system::machine::{Machine, RemoteMemory, SizeOracle};
 use crate::workloads::Trace;
@@ -73,14 +80,19 @@ impl Cluster {
                  (dram_gbps / dram_latency_ns / interval_ns)"
             );
         }
-        let remote = RemoteMemory::new(
+        let mut remote = RemoteMemory::new(
             &ccfg.nets(),
             base.dram_gbps,
             base.dram_latency_ns,
             &shares,
             ccfg.fabric_hop_ns,
             base.interval_ns,
+            ccfg.sharing,
         );
+        if let Some(spec) = &ccfg.schedule {
+            let sched = Arc::new(NetSchedule::from_spec(spec));
+            remote.fabric.set_schedule(|_, _| Some(sched.clone()));
+        }
         let tenants = inits
             .into_iter()
             .enumerate()
@@ -161,7 +173,7 @@ pub fn run_cluster(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::NetConfig;
+    use crate::config::{NetConfig, SharingMode};
     use crate::workloads::{by_name, Scale};
 
     fn fetch_test(wl: &str, seed: u64) -> (Arc<Trace>, Profile) {
@@ -282,6 +294,113 @@ mod tests {
         let ms = run_cluster(&ccfg, &cfg, &tenants, |wl| fetch_test(wl, cfg.seed));
         assert_eq!(ms.len(), 2);
         assert!(ms.iter().all(|m| m.instructions > 0));
+    }
+
+    #[test]
+    fn work_conserving_single_tenant_matches_strict() {
+        // With one (unpartitioned) tenant there is nothing to borrow, so
+        // the work-conserving scheduler must be byte-identical to strict
+        // — the regression pin that the sharing plumbing leaves the
+        // historical strict path untouched.
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let run = |sharing: SharingMode| {
+            let ccfg = ClusterConfig::new(2).with_sharing(sharing);
+            let mut cluster = Cluster::new(
+                &ccfg,
+                vec![TenantInit {
+                    cfg: cfg.clone(),
+                    kind: SchemeKind::Remote,
+                    footprint_pages: trace.footprint_pages,
+                    profiles: vec![profile],
+                    oracle: None,
+                }],
+            );
+            cluster.run(&[vec![trace.clone()]]).remove(0)
+        };
+        let strict = run(SharingMode::Strict);
+        let wc = run(SharingMode::WorkConserving);
+        assert_eq!(
+            strict.to_json().to_string(),
+            wc.to_json().to_string(),
+            "work-conserving with no idle peers diverged from strict"
+        );
+        assert_eq!(wc.reclaimed_bytes, 0);
+    }
+
+    #[test]
+    fn work_conserving_raises_aggregate_goodput() {
+        // Acceptance criterion: in the contention cell (4 tenants x 2
+        // shared modules) work-conserving sharing must strictly beat
+        // strict sharing on aggregate goodput — idle capacity (tenants
+        // finishing early, bursty gaps) is reclaimed instead of burned.
+        let cfg = SimConfig::test_scale();
+        let tenants: Vec<(String, SchemeKind)> = ["pr", "nw", "sp", "hp"]
+            .iter()
+            .map(|w| (w.to_string(), SchemeKind::Remote))
+            .collect();
+        let run = |sharing: SharingMode| {
+            let ccfg = ClusterConfig::new(2).with_sharing(sharing);
+            run_cluster(&ccfg, &cfg, &tenants, |wl| fetch_test(wl, cfg.seed))
+        };
+        let strict = run(SharingMode::Strict);
+        let wc = run(SharingMode::WorkConserving);
+        let agg = |ms: &[Metrics]| ms.iter().map(Metrics::goodput).sum::<f64>();
+        assert!(
+            agg(&wc) > agg(&strict),
+            "work-conserving aggregate goodput {} !> strict {}",
+            agg(&wc),
+            agg(&strict)
+        );
+        assert!(strict.iter().all(|m| m.reclaimed_bytes == 0), "strict must never borrow");
+        assert!(
+            wc.iter().map(|m| m.reclaimed_bytes).sum::<u64>() > 0,
+            "work-conserving run reclaimed nothing"
+        );
+        // Same work either way.
+        for (s, w) in strict.iter().zip(&wc) {
+            assert_eq!(s.instructions, w.instructions);
+        }
+    }
+
+    #[test]
+    fn degraded_schedule_slows_the_cluster() {
+        use crate::config::ScheduleSpec;
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let run = |schedule: Option<ScheduleSpec>| {
+            let mut ccfg = ClusterConfig::new(1);
+            if let Some(s) = schedule {
+                ccfg = ccfg.with_schedule(s);
+            }
+            let mut cluster = Cluster::new(
+                &ccfg,
+                vec![TenantInit {
+                    cfg: cfg.clone(),
+                    kind: SchemeKind::Remote,
+                    footprint_pages: trace.footprint_pages,
+                    profiles: vec![profile],
+                    oracle: None,
+                }],
+            );
+            cluster.run(&[vec![trace.clone()]]).remove(0)
+        };
+        let steady = run(None);
+        // Quarter bandwidth + 200ns extra switch latency, everywhere,
+        // for 1e12 cycles (the whole run).
+        let degraded = run(Some(ScheduleSpec {
+            period_cycles: 1e12,
+            rate_scale: 0.25,
+            extra_latency_ns: 200.0,
+            horizon_cycles: 1e12,
+        }));
+        assert_eq!(steady.instructions, degraded.instructions);
+        assert!(
+            degraded.cycles > steady.cycles,
+            "degraded link conditions must cost cycles: {} vs {}",
+            degraded.cycles,
+            steady.cycles
+        );
     }
 
     #[test]

@@ -20,11 +20,14 @@
 //! work-conserving sharing modes on top of today's strict shares).
 
 use crate::compress::{synth::Profile, Compressor};
-use crate::config::{ns_to_cycles, NetConfig, SimConfig, TenantShare, CORE_GHZ, LINE_BYTES, PAGE_BYTES};
+use crate::config::{
+    ns_to_cycles, NetConfig, SharingMode, SimConfig, TenantShare, CORE_GHZ, LINE_BYTES,
+    PAGE_BYTES,
+};
 use crate::daemon::{ComputeEngine, DirtyOutcome, MemoryEngine, PageArrival};
 use crate::mem::{Access as CacheAccess, Cache, DramBus, LocalMemory};
 use crate::metrics::Metrics;
-use crate::net::{Class, Disturbance, Fabric};
+use crate::net::{Class, Disturbance, Fabric, ScheduleHandle};
 use crate::schemes::{Policy, SchemeKind};
 use crate::sim::EventQueue;
 use crate::workloads::{Scale, Trace, Workload};
@@ -101,9 +104,11 @@ impl RemoteMemory {
         shares: &[TenantShare],
         hop_ns: f64,
         interval_ns: f64,
+        sharing: SharingMode,
     ) -> RemoteMemory {
         let interval = ns_to_cycles(interval_ns);
-        let fabric = Fabric::new(nets, dram_gbps, shares, ns_to_cycles(hop_ns), interval);
+        let fabric =
+            Fabric::new(nets, dram_gbps, shares, ns_to_cycles(hop_ns), interval, sharing);
         let engines = nets
             .iter()
             .map(|_| {
@@ -112,13 +117,16 @@ impl RemoteMemory {
                     ns_to_cycles(dram_latency_ns),
                     shares,
                     interval,
+                    sharing,
                 )
             })
             .collect();
         RemoteMemory { fabric, engines }
     }
 
-    /// The single-tenant subsystem a solo [`Machine`] owns.
+    /// The single-tenant subsystem a solo [`Machine`] owns.  Always
+    /// strict: with one tenant there are no peers to reclaim from, and
+    /// §4.1's class partitions stay the reservation the paper specifies.
     pub fn for_config(cfg: &SimConfig, policy: Policy) -> RemoteMemory {
         let share = TenantShare {
             weight: 1.0,
@@ -132,6 +140,7 @@ impl RemoteMemory {
             &[share],
             0.0,
             cfg.interval_ns,
+            SharingMode::Strict,
         )
     }
 
@@ -283,6 +292,16 @@ impl Machine {
             .expect("set_disturbance drives a solo machine's own fabric")
             .fabric
             .set_disturbance(mk);
+    }
+
+    /// Install time-varying link conditions on every memory-module port
+    /// (solo machines only; a cluster owns the shared fabric).
+    pub fn set_net_schedule(&mut self, mk: impl Fn(usize, usize) -> Option<ScheduleHandle>) {
+        self.remote
+            .as_mut()
+            .expect("set_net_schedule drives a solo machine's own fabric")
+            .fabric
+            .set_schedule(mk);
     }
 
     #[inline]
@@ -486,7 +505,13 @@ impl Machine {
     }
 
     /// Service an LLC-miss demand access; returns its completion time.
-    fn memory_access(&mut self, remote: &mut RemoteMemory, addr: u64, write: bool, now: f64) -> f64 {
+    fn memory_access(
+        &mut self,
+        remote: &mut RemoteMemory,
+        addr: u64,
+        write: bool,
+        now: f64,
+    ) -> f64 {
         let page = Self::page_of(addr);
         let offset = Self::offset_of(addr);
 
@@ -774,14 +799,39 @@ impl Machine {
         self.apply_arrivals(remote, end + 1e12);
 
         self.metrics.instructions = self.cores.iter().map(|c| c.instructions).sum();
-        self.metrics.cycles = end.max(1.0);
+        let horizon = end.max(1.0);
+        self.metrics.cycles = horizon;
         self.metrics.net_utilization = {
-            let horizon = end.max(1.0);
             let u: f64 = (0..remote.modules())
                 .map(|m| remote.fabric.down_utilization(m, self.id, horizon))
                 .sum();
             u / remote.modules() as f64
         };
+        // Per-interval downlink utilization, averaged over this tenant's
+        // ports across all modules (the variability time-series input).
+        self.metrics.net_util_series = {
+            let mut series: Vec<f64> = Vec::new();
+            for m in 0..remote.modules() {
+                let s = remote.fabric.down_series(m, self.id, horizon);
+                if s.len() > series.len() {
+                    series.resize(s.len(), 0.0);
+                }
+                for (i, v) in s.iter().enumerate() {
+                    series[i] += v;
+                }
+            }
+            let n = remote.modules() as f64;
+            series.iter_mut().for_each(|v| *v /= n);
+            series
+        };
+        // Capacity this tenant served on borrowed (idle peer /
+        // sibling-class) shares — zero in strict mode by construction.
+        self.metrics.reclaimed_bytes = (0..remote.modules())
+            .map(|m| {
+                remote.fabric.reclaimed_bytes(m, self.id)
+                    + remote.engines[m].reclaimed_bytes(self.id)
+            })
+            .sum();
         self.metrics.compression_ratio = if self.policy.compress {
             self.oracle.ratio()
         } else {
@@ -812,14 +862,15 @@ impl Machine {
         &self.engine
     }
 
-    /// Per-interval utilization of the first memory module's downlink
-    /// (solo machines only).
+    /// Per-interval utilization of the first memory module's downlink,
+    /// clipped at the finished run's horizon (solo machines only, after
+    /// `run()`).
     pub fn link_utilization_series(&self) -> Vec<f64> {
         self.remote
             .as_ref()
             .expect("link_utilization_series reads a solo machine's own fabric")
             .fabric
-            .down_series(0, self.id)
+            .down_series(0, self.id, self.metrics.cycles.max(1.0))
     }
 
     pub fn local_hit_rate(&self) -> f64 {
@@ -998,6 +1049,39 @@ mod tests {
     fn exact_oracle_rejects_out_of_range_core() {
         let mut oracle = ExactOracle::new(7, &[Profile::high()], crate::compress::Algo::Lz);
         let _ = oracle.page_size(1, 42); // only core 0 has a profile
+    }
+
+    #[test]
+    fn solo_net_schedule_degrades_throughput() {
+        use crate::net::NetSchedule;
+        use std::sync::Arc;
+        let w = by_name("pr").unwrap();
+        let cfg = quick_cfg();
+        let trace = w.generate(cfg.seed, Scale::Test);
+        let mk = || {
+            Machine::new(
+                cfg.clone(),
+                SchemeKind::Remote,
+                trace.footprint_pages,
+                vec![w.profile()],
+                None,
+            )
+        };
+        let mut steady = mk();
+        steady.run(std::slice::from_ref(&trace));
+        let mut degraded = mk();
+        // Quarter bandwidth on every port for 1e12 cycles (whole run).
+        degraded.set_net_schedule(|_, _| {
+            Some(Arc::new(NetSchedule::square_wave(1e12, 0.25, 0.0, 1e12)))
+        });
+        degraded.run(std::slice::from_ref(&trace));
+        assert_eq!(steady.metrics.instructions, degraded.metrics.instructions);
+        assert!(
+            degraded.metrics.cycles > steady.metrics.cycles,
+            "degraded solo fabric must cost cycles: {} vs {}",
+            degraded.metrics.cycles,
+            steady.metrics.cycles
+        );
     }
 
     #[test]
