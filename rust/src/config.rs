@@ -6,6 +6,7 @@
 //! cycles); helpers convert from ns.
 
 use crate::compress::Algo;
+use crate::system::fault::{FaultPlan, RecoveryPolicy};
 
 /// Core clock in GHz (Table 2: 3.6 GHz x86 OoO).
 pub const CORE_GHZ: f64 = 3.6;
@@ -201,6 +202,12 @@ pub struct ClusterConfig {
     /// Time-varying link conditions applied to every fabric port
     /// (`None` = steady nominal conditions).
     pub schedule: Option<ScheduleSpec>,
+    /// Fault-injection plan (module crashes, link flaps, tenant kills)
+    /// materialized onto the shared fabric and memory engines; `None` =
+    /// no faults.  Requires [`SharingMode::Strict`].
+    pub faults: Option<FaultPlan>,
+    /// Degraded-mode policy tenants use while a home module is down.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for ClusterConfig {
@@ -212,6 +219,8 @@ impl Default for ClusterConfig {
             weights: Vec::new(),
             sharing: SharingMode::Strict,
             schedule: None,
+            faults: None,
+            recovery: RecoveryPolicy::Stall,
         }
     }
 }
@@ -243,6 +252,16 @@ impl ClusterConfig {
 
     pub fn with_schedule(mut self, schedule: ScheduleSpec) -> Self {
         self.schedule = Some(schedule);
+        self
+    }
+
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    pub fn with_recovery(mut self, recovery: RecoveryPolicy) -> Self {
+        self.recovery = recovery;
         self
     }
 
@@ -486,6 +505,7 @@ mod tests {
             extra_latency_ns: 100.0,
             horizon_cycles: 1e9,
         };
+        let plan = FaultPlan::new().module_crash(0, 1.0, 2.0);
         let c = ClusterConfig::new(4)
             .with_net(400.0, 8.0)
             .with_hop(50.0)
@@ -499,11 +519,18 @@ mod tests {
         assert_eq!(c.weights, vec![2.0, 1.0]);
         assert_eq!(c.sharing, SharingMode::WorkConserving);
         assert_eq!(c.schedule, Some(spec));
+        let f = ClusterConfig::new(2)
+            .with_faults(plan.clone())
+            .with_recovery(RecoveryPolicy::Refetch);
+        assert_eq!(f.faults, Some(plan));
+        assert_eq!(f.recovery, RecoveryPolicy::Refetch);
         assert_eq!(ClusterConfig::new(0).memory_modules, 1);
-        // Strict, steady conditions remain the default.
+        // Strict, steady, fault-free conditions remain the default.
         let d = ClusterConfig::default();
         assert_eq!(d.sharing, SharingMode::Strict);
         assert_eq!(d.schedule, None);
+        assert_eq!(d.faults, None);
+        assert_eq!(d.recovery, RecoveryPolicy::Stall);
         assert_eq!(SharingMode::WorkConserving.name(), "work-conserving");
     }
 

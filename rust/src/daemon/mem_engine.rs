@@ -18,9 +18,16 @@
 //! link-compressed bytes), the memory-side view of §4.4's link
 //! compression.
 
+//! Under a module-crash [`FaultTimeline`] the engine is a
+//! failure-isolated component: work issued while the module is down is
+//! deferred to the recovery edge, and work whose service interval
+//! overlaps a crash is lost and replayed after it (requeued) — an empty
+//! timeline takes the exact historical code path.
+
 use crate::config::{SharingMode, TenantShare};
 use crate::mem::DramBus;
 use crate::net::{work_conserving_issue, work_conserving_plan, Class};
+use crate::system::fault::{FaultCounters, FaultTimeline};
 
 /// Per-tenant memory-side compression statistics.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -54,14 +61,23 @@ struct TenantQueues {
     /// Bytes this tenant served on borrowed (idle peer / sibling-class)
     /// queue capacity — work-conserving mode only.
     reclaimed_bytes: u64,
+    /// Aborted/deferred access counts under module-crash windows.
+    counters: FaultCounters,
 }
 
+/// One memory module's engine: per-tenant page/line queue controllers
+/// over the module's DRAM bandwidth — see the module docs for the
+/// partitioning, sharing and failure models.
 pub struct MemoryEngine {
     sharing: SharingMode,
     ports: Vec<TenantQueues>,
+    /// Module-crash windows (empty = the exact no-fault code path).
+    faults: FaultTimeline,
 }
 
 impl MemoryEngine {
+    /// Build the engine from the module's DRAM rate/latency and the
+    /// per-tenant shares (same splitting rule as the fabric ports).
     pub fn new(
         dram_bytes_per_cycle: f64,
         latency_cycles: f64,
@@ -78,12 +94,18 @@ impl MemoryEngine {
                 } else {
                     DramBus::shared(rate, latency_cycles, interval)
                 };
-                TenantQueues { bus, stats: EgressStats::default(), reclaimed_bytes: 0 }
+                TenantQueues {
+                    bus,
+                    stats: EgressStats::default(),
+                    reclaimed_bytes: 0,
+                    counters: FaultCounters::default(),
+                }
             })
             .collect();
-        MemoryEngine { sharing, ports }
+        MemoryEngine { sharing, ports, faults: FaultTimeline::default() }
     }
 
+    /// Number of tenant queue-controller sets on this module.
     pub fn tenants(&self) -> usize {
         self.ports.len()
     }
@@ -93,9 +115,43 @@ impl MemoryEngine {
     /// capacity idle at `now`.
     pub fn access(&mut self, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
         match self.sharing {
-            SharingMode::Strict => self.ports[t].bus.access(now, bytes, class),
+            SharingMode::Strict => {
+                if self.faults.is_empty() {
+                    self.ports[t].bus.access(now, bytes, class)
+                } else {
+                    self.faulted_access(t, now, bytes, class)
+                }
+            }
             SharingMode::WorkConserving => self.access_wc(t, now, bytes, class),
         }
+    }
+
+    /// DRAM access on a crashed/crashing module through the shared
+    /// [`FaultTimeline::replay`] discipline: issue while down defers to
+    /// the recovery edge; a service interval overlapping a crash is
+    /// requeued — the occupied queue time is wasted and the access
+    /// replays from the recovery edge.
+    fn faulted_access(&mut self, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
+        let TenantQueues { bus, counters, .. } = &mut self.ports[t];
+        let (done, _) = self.faults.replay(now, counters, |at| bus.access(at, bytes, class));
+        done
+    }
+
+    /// Install the module's crash windows (strict sharing only — see
+    /// `Fabric::set_faults` for why borrowing and faults don't compose).
+    pub fn set_faults(&mut self, faults: FaultTimeline) {
+        assert!(
+            self.sharing == SharingMode::Strict,
+            "fault injection requires strict sharing (SharingMode::Strict)"
+        );
+        self.faults = faults;
+    }
+
+    /// `(aborted, deferred)` access counts for tenant `t` — both zero
+    /// unless crash windows are installed.
+    pub fn fault_counts(&self, t: usize) -> (u64, u64) {
+        let c = self.ports[t].counters;
+        (c.aborted, c.deferred)
     }
 
     /// Work-conserving DRAM access: split `bytes` across tenant `t`'s
@@ -230,6 +286,47 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits(), "WC with no idle candidates must be strict");
         }
         assert_eq!(b.reclaimed_bytes(0), 0);
+    }
+
+    #[test]
+    fn module_crash_defers_and_requeues_work() {
+        let mut e = strict(4.0, 0.0, &shares(2, false), 1e6);
+        e.set_faults(FaultTimeline::new(vec![(100.0, 500.0)]));
+        // In service at the crash: 800 bytes on tenant 0's 2 B/cyc queue
+        // span [0, 400) — lost, replayed from the recovery edge (the
+        // wasted queue time stays on the timeline): 500 + 400 = 900.
+        let a = e.access(0, 0.0, 800, Class::Page);
+        assert!((a - 900.0).abs() < 1e-9, "{a}");
+        // Issued during the outage: deferred to recovery on its own
+        // (independent) queue.
+        let b = e.access(1, 200.0, 100, Class::Line);
+        assert!((b - 550.0).abs() < 1e-9, "{b}");
+        assert_eq!(e.fault_counts(0), (1, 0));
+        assert_eq!(e.fault_counts(1), (0, 1));
+        // Post-recovery accesses are clean.
+        let c = e.access(1, 2000.0, 100, Class::Line);
+        assert!((c - 2050.0).abs() < 1e-9, "{c}");
+    }
+
+    #[test]
+    fn empty_fault_timeline_degrades_exactly() {
+        let mut a = strict(4.0, 54.0, &shares(1, false), 1000.0);
+        let mut b = strict(4.0, 54.0, &shares(1, false), 1000.0);
+        b.set_faults(FaultTimeline::default());
+        for (now, bytes) in [(0.0, 8u64), (0.0, 4096), (900.0, 64)] {
+            let x = a.access(0, now, bytes, Class::Page);
+            let y = b.access(0, now, bytes, Class::Page);
+            assert_eq!(x.to_bits(), y.to_bits(), "empty timeline must be the no-fault path");
+        }
+        assert_eq!(b.fault_counts(0), (0, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "strict sharing")]
+    fn engine_fault_injection_requires_strict_sharing() {
+        let mut e =
+            MemoryEngine::new(4.0, 0.0, &shares(1, false), 1e6, SharingMode::WorkConserving);
+        e.set_faults(FaultTimeline::new(vec![(0.0, 10.0)]));
     }
 
     #[test]

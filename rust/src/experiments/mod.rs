@@ -1,8 +1,14 @@
 //! Experiment drivers — one entry per figure/table in the paper's
-//! evaluation (§2.2, §6, Appendix A).  Each declares its simulation cells
-//! as an orchestrator [`orchestrator::Plan`] and assembles rendered tables
-//! with the same rows/series the paper plots.  See DESIGN.md for the
-//! index, and `orchestrator.rs` for the flat scheduler + sharding.
+//! evaluation (§2.2, §6, Appendix A), plus the cluster / variability /
+//! resilience scenario experiments.  Each declares its simulation cells
+//! as an orchestrator [`orchestrator::Plan`] and assembles rendered
+//! tables with the same rows/series the paper plots.  See DESIGN.md for
+//! the index, and `orchestrator.rs` for the flat scheduler + sharding.
+//!
+//! Registration is a single table: [`REGISTRY`] is the one place an
+//! experiment id exists — `plan_for`, the CLI `list` output and the
+//! default `experiment all` set all derive from it (drift-tested in
+//! `registry_is_the_single_source_of_truth`).
 
 pub mod ablations;
 pub mod cluster;
@@ -11,6 +17,7 @@ pub mod disturbance;
 pub mod main_results;
 pub mod motivation;
 pub mod orchestrator;
+pub mod resilience;
 pub mod scaling;
 pub mod table1;
 pub mod variability;
@@ -19,45 +26,180 @@ pub use common::Runner;
 
 use crate::util::table::Table;
 use crate::workloads::{ALL, SUBSET};
+use orchestrator::Plan;
 
-/// All experiment ids: the paper's figures/tables in paper order, then
-/// the cluster (multi-tenant) and variability scenario experiments.
-pub const ALL_EXPERIMENTS: [&str; 20] = [
-    "fig3", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig15",
-    "fig16", "fig17", "fig18", "fig19", "fig20", "fig21", "fig22", "table1",
-    "headline", "cluster_contention", "cluster_fairness", "variability",
+/// One registered experiment: its id, a one-line description for the CLI
+/// `list` output, whether the default `experiment all` set includes it
+/// (aliases and extra ablations resolve by id but opt out), and the plan
+/// builder.
+pub struct ExperimentDef {
+    pub id: &'static str,
+    pub about: &'static str,
+    pub in_all: bool,
+    pub build: fn(&Runner) -> Plan,
+}
+
+/// The experiment registry — the single source of truth for experiment
+/// ids (paper figures/tables in paper order, then the scenario
+/// experiments, then aliases/extras).
+pub static REGISTRY: [ExperimentDef; 24] = [
+    ExperimentDef {
+        id: "fig3",
+        about: "motivation: IPC normalized to Local, 6 schemes",
+        in_all: true,
+        build: |r| motivation::plan(r, &ALL),
+    },
+    ExperimentDef {
+        id: "fig8",
+        about: "speedup over Remote across the network grid",
+        in_all: true,
+        build: |r| main_results::fig8_plan(r, &ALL),
+    },
+    ExperimentDef {
+        id: "fig9",
+        about: "data access cost normalized to Remote",
+        in_all: true,
+        build: |r| main_results::fig9_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig10",
+        about: "local-memory hit ratio (+extra pages vs PQ)",
+        in_all: true,
+        build: |r| main_results::fig10_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig11",
+        about: "partition-ratio sweep (PQ, DaeMon)",
+        in_all: true,
+        build: |r| ablations::fig11_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig12",
+        about: "link compression by algorithm",
+        in_all: true,
+        build: |r| ablations::fig12_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig13",
+        about: "IPC + hit ratio under network disturbance",
+        in_all: true,
+        build: |r| disturbance::fig13_14_plan(r, &["pr", "nw"]),
+    },
+    ExperimentDef {
+        id: "fig15",
+        about: "8-core multithreaded speedups",
+        in_all: true,
+        build: |r| scaling::fig15_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig16",
+        about: "FIFO local-memory replacement",
+        in_all: true,
+        build: |r| ablations::fig16_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig17",
+        about: "memory-component configurations (MCx.y)",
+        in_all: true,
+        build: |r| scaling::fig17_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig18",
+        about: "4 concurrent heterogeneous workloads",
+        in_all: true,
+        build: scaling::fig18_plan,
+    },
+    ExperimentDef {
+        id: "fig19",
+        about: "network bandwidth utilization",
+        in_all: true,
+        build: |r| main_results::fig19_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig20",
+        about: "switch-latency sweep",
+        in_all: true,
+        build: |r| ablations::fig20_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig21",
+        about: "bandwidth-factor sweep (8 cores)",
+        in_all: true,
+        build: |r| ablations::fig21_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "fig22",
+        about: "1/2/4 memory components",
+        in_all: true,
+        build: |r| scaling::fig22_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "table1",
+        about: "DaeMon hardware overheads (analytic)",
+        in_all: true,
+        build: |_| table1::plan(),
+    },
+    ExperimentDef {
+        id: "headline",
+        about: "abstract numbers: 2.39x / 3.06x",
+        in_all: true,
+        build: main_results::headline_plan,
+    },
+    ExperimentDef {
+        id: "cluster_contention",
+        about: "aggregate IPC, C tenants x 2 shared modules",
+        in_all: true,
+        build: cluster::cluster_contention_plan,
+    },
+    ExperimentDef {
+        id: "cluster_fairness",
+        about: "max slowdown / unfairness / per-tenant p99",
+        in_all: true,
+        build: cluster::cluster_fairness_plan,
+    },
+    ExperimentDef {
+        id: "variability",
+        about: "scheme x sharing-mode x link-condition schedule",
+        in_all: true,
+        build: variability::variability_plan,
+    },
+    ExperimentDef {
+        id: "resilience",
+        about: "scheme x fault pattern x recovery policy",
+        in_all: true,
+        build: resilience::resilience_plan,
+    },
+    ExperimentDef {
+        id: "fig14",
+        about: "alias of fig13 (same plan, requested id kept)",
+        in_all: false,
+        build: |r| disturbance::fig13_14_plan(r, &["pr", "nw"]),
+    },
+    ExperimentDef {
+        id: "ablation_dirty_threshold",
+        about: "our ablation: dirty flush threshold",
+        in_all: false,
+        build: |r| ablations::ablation_dirty_threshold_plan(r, &SUBSET),
+    },
+    ExperimentDef {
+        id: "ablation_buffer_size",
+        about: "our ablation: inflight buffer sizing",
+        in_all: false,
+        build: |r| ablations::ablation_buffer_size_plan(r, &SUBSET),
+    },
 ];
+
+/// Experiment ids the default `experiment all` sweep runs, in registry
+/// order.
+pub fn default_experiment_ids() -> Vec<&'static str> {
+    REGISTRY.iter().filter(|d| d.in_all).map(|d| d.id).collect()
+}
 
 /// Build the orchestrator plan for one experiment id (the default
 /// workload sets the paper uses).  `None` for unknown ids.
-pub fn plan_for(id: &str, r: &Runner) -> Option<orchestrator::Plan> {
-    let mut plan = match id {
-        "fig3" => motivation::plan(r, &ALL),
-        "fig8" => main_results::fig8_plan(r, &ALL),
-        "fig9" => main_results::fig9_plan(r, &SUBSET),
-        "fig10" => main_results::fig10_plan(r, &SUBSET),
-        "fig11" => ablations::fig11_plan(r, &SUBSET),
-        "fig12" => ablations::fig12_plan(r, &SUBSET),
-        "fig13" | "fig14" => disturbance::fig13_14_plan(r, &["pr", "nw"]),
-        "fig15" => scaling::fig15_plan(r, &SUBSET),
-        "fig16" => ablations::fig16_plan(r, &SUBSET),
-        "fig17" => scaling::fig17_plan(r, &SUBSET),
-        "fig18" => scaling::fig18_plan(r),
-        "fig19" => main_results::fig19_plan(r, &SUBSET),
-        "fig20" => ablations::fig20_plan(r, &SUBSET),
-        "fig21" => ablations::fig21_plan(r, &SUBSET),
-        "fig22" => scaling::fig22_plan(r, &SUBSET),
-        "table1" => table1::plan(),
-        "headline" => main_results::headline_plan(r),
-        "cluster_contention" => cluster::cluster_contention_plan(r),
-        "cluster_fairness" => cluster::cluster_fairness_plan(r),
-        "variability" => variability::variability_plan(r),
-        "ablation_dirty_threshold" => {
-            ablations::ablation_dirty_threshold_plan(r, &SUBSET)
-        }
-        "ablation_buffer_size" => ablations::ablation_buffer_size_plan(r, &SUBSET),
-        _ => return None,
-    };
+pub fn plan_for(id: &str, r: &Runner) -> Option<Plan> {
+    let def = REGISTRY.iter().find(|d| d.id == id)?;
+    let mut plan = (def.build)(r);
     plan.id = id.to_string();
     Some(plan)
 }
@@ -72,14 +214,32 @@ mod tests {
     use super::*;
 
     #[test]
+    fn registry_is_the_single_source_of_truth() {
+        // Drift test: every registered id resolves to a plan carrying
+        // that id, ids are unique, and the default set is the in_all
+        // slice of the registry.
+        let r = Runner::test();
+        let mut seen = std::collections::HashSet::new();
+        for def in &REGISTRY {
+            assert!(seen.insert(def.id), "duplicate experiment id {}", def.id);
+            assert!(!def.about.is_empty(), "{} has no description", def.id);
+            let p = plan_for(def.id, &r).unwrap_or_else(|| panic!("no plan for {}", def.id));
+            assert_eq!(p.id, def.id, "plan id drifted from registry id");
+        }
+        assert!(plan_for("nope", &r).is_none());
+        let all = default_experiment_ids();
+        assert_eq!(all.len(), REGISTRY.iter().filter(|d| d.in_all).count());
+        assert!(all.contains(&"resilience"));
+        assert!(!all.contains(&"fig14"), "aliases stay out of `all`");
+        assert!(!all.contains(&"ablation_dirty_threshold"));
+    }
+
+    #[test]
     fn all_ids_resolve() {
         let r = Runner::test();
         // table1 is cheap enough to actually run here.
         assert!(run_experiment("table1", &r).is_some());
         assert!(run_experiment("nope", &r).is_none());
-        for id in ALL_EXPERIMENTS {
-            assert!(plan_for(id, &r).is_some(), "no plan for {id}");
-        }
         // fig14 aliases the fig13 plan but keeps its requested id.
         assert_eq!(plan_for("fig14", &r).unwrap().id, "fig14");
     }
@@ -87,10 +247,10 @@ mod tests {
     #[test]
     fn plans_declare_nonempty_grids() {
         let r = Runner::test();
-        for id in ALL_EXPERIMENTS {
-            let p = plan_for(id, &r).unwrap();
-            if id != "table1" {
-                assert!(!p.cells.is_empty(), "{id} declared no cells");
+        for def in &REGISTRY {
+            let p = plan_for(def.id, &r).unwrap();
+            if def.id != "table1" {
+                assert!(!p.cells.is_empty(), "{} declared no cells", def.id);
             }
         }
     }

@@ -27,6 +27,7 @@ use crate::config::{ClusterConfig, ScheduleSpec, SharingMode, SimConfig};
 use crate::metrics::Metrics;
 use crate::net::Disturbance;
 use crate::schemes::SchemeKind;
+use crate::system::fault::{FaultPlan, RecoveryPolicy};
 use crate::system::{cluster, Machine};
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -52,6 +53,11 @@ pub struct ClusterCell {
     /// Time-varying link conditions on every fabric port (default
     /// steady).
     pub schedule: Option<ScheduleSpec>,
+    /// Fault-injection plan on the shared fabric/engines (default none;
+    /// requires strict sharing).
+    pub faults: Option<FaultPlan>,
+    /// Degraded-mode policy while a home module is down (default stall).
+    pub recovery: RecoveryPolicy,
 }
 
 /// One simulation cell in the flat job list.
@@ -73,6 +79,7 @@ pub struct CellSpec {
 }
 
 impl CellSpec {
+    /// A single-trace machine cell.
     pub fn new(workload: &str, kind: SchemeKind, cfg: SimConfig) -> CellSpec {
         CellSpec {
             workloads: vec![workload.to_string()],
@@ -83,6 +90,7 @@ impl CellSpec {
         }
     }
 
+    /// A per-core heterogeneous mix cell (one workload per core).
     pub fn mix(workloads: &[&str], kind: SchemeKind, cfg: SimConfig) -> CellSpec {
         CellSpec {
             workloads: workloads.iter().map(|w| w.to_string()).collect(),
@@ -93,6 +101,7 @@ impl CellSpec {
         }
     }
 
+    /// A machine cell under square-wave network disturbance (Fig. 13/14).
     pub fn disturbed(
         workload: &str,
         kind: SchemeKind,
@@ -126,6 +135,8 @@ impl CellSpec {
                 hop_ns: 0.0,
                 sharing: SharingMode::Strict,
                 schedule: None,
+                faults: None,
+                recovery: RecoveryPolicy::Stall,
             }),
         }
     }
@@ -183,6 +194,8 @@ pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Vec<Met
             weights: cl.weights.clone(),
             sharing: cl.sharing,
             schedule: cl.schedule,
+            faults: cl.faults.clone(),
+            recovery: cl.recovery,
         };
         return cluster::run_cluster(&ccfg, cfg, &cl.tenants, |wl| {
             cache.get(wl, r.scale, cfg.seed, r.max_accesses)
@@ -293,11 +306,12 @@ pub struct ShardData {
     pub results: Vec<(usize, Vec<Metrics>)>,
 }
 
-/// v3: `Metrics` gained the `reclaimed_bytes` counter and the
-/// `net_util_series` array (work-conserving fabric + variability
-/// experiments); v2 carried per-slot metrics arrays + `access_hist`.
-/// Older files are rejected with a clear regenerate message.
-const SHARD_FORMAT: &str = "daemon-sim-shard-v3";
+/// v4: `Metrics` gained the fault counters (`downtime_cycles`,
+/// `aborted_transfers`, `deferred_requests`) for the resilience
+/// experiment; v3 added `reclaimed_bytes` + `net_util_series`; v2
+/// carried per-slot metrics arrays + `access_hist`.  Older files are
+/// rejected with a clear regenerate message.
+const SHARD_FORMAT: &str = "daemon-sim-shard-v4";
 
 fn scale_name(s: Scale) -> &'static str {
     match s {

@@ -1,0 +1,339 @@
+//! `resilience` — the "independent failure-isolated components" claim
+//! (§1, §4.6) opened as a first-class experiment: scheme × fault pattern
+//! × recovery policy over the canonical 4-tenant × 2-module cluster.
+//!
+//! Fault patterns: a single-module crash (module 1 down for one window —
+//! its ports and DRAM engine lose in-flight work and refuse new work),
+//! periodic link flaps on one tenant's port to module 0 (isolation: the
+//! other three tenants must be untouched), and a tenant kill (the
+//! compute component dies; survivors must reproduce their no-fault
+//! numbers).  Each pattern runs under both [`RecoveryPolicy`]s — stall
+//! until recovery vs re-fetch from the surviving module — against a
+//! no-fault baseline cell per scheme.  Refetch routing is decided at
+//! issue time (failure detection is not retroactive), so work already
+//! dispatched when a window opens still pays the defer/abort cost; only
+//! requests issued during an observed outage route around it.
+//! Reported per cell: aggregate IPC,
+//! the worst per-tenant slowdown versus the same scheme's no-fault run,
+//! port downtime, and aborted/deferred request counts.  Cells
+//! batch/shard/merge through the orchestrator like any figure.
+
+use super::cluster::{tenant_cfg, MODULES, TENANT_MIX};
+use super::common::Runner;
+use super::orchestrator::{CellSpec, Plan};
+use crate::config::{ns_to_cycles, SimConfig};
+use crate::metrics::{slowdown, Metrics};
+use crate::schemes::SchemeKind;
+use crate::system::fault::{FaultPlan, RecoveryPolicy};
+use crate::util::table::Table;
+
+/// Page-granularity baseline vs DaeMon — the expected headline is that
+/// DaeMon's worst-tenant slowdown under a single-module crash stays well
+/// below Remote's (cache-line fallback keeps cores fed while pages
+/// re-route or wait).
+pub const SCHEMES: [SchemeKind; 2] = [SchemeKind::Remote, SchemeKind::Daemon];
+
+pub const POLICIES: [RecoveryPolicy; 2] = [RecoveryPolicy::Stall, RecoveryPolicy::Refetch];
+
+/// Module-crash window: module 1 dies at 0.2 Mcycles and recovers 0.5 ms
+/// later — early enough to hit even tiny smoke runs, long enough to
+/// dominate a stalled tenant's critical path.
+pub fn crash_window() -> (f64, f64) {
+    let from = 2e5;
+    (from, from + ns_to_cycles(500_000.0))
+}
+
+/// The swept fault patterns over the 4-tenant × 2-module cluster.
+pub fn fault_patterns() -> Vec<(&'static str, FaultPlan)> {
+    let (from, to) = crash_window();
+    vec![
+        ("module-crash", FaultPlan::new().module_crash(1, from, to)),
+        (
+            // Tenant 0's port to module 0 flaps 50 µs down / 250 µs
+            // period for the whole run horizon: ~20% link downtime for
+            // one tenant, zero for the other three.
+            "link-flaps",
+            FaultPlan::new().link_flaps(
+                0,
+                0,
+                ns_to_cycles(250_000.0),
+                ns_to_cycles(50_000.0),
+                1e9,
+            ),
+        ),
+        ("tenant-kill", FaultPlan::new().tenant_kill(3, 8e5)),
+    ]
+}
+
+/// One cluster cell: the canonical tenant mix, every tenant under
+/// `kind`, with the given fault plan and recovery policy.
+pub fn cell(
+    kind: SchemeKind,
+    faults: Option<FaultPlan>,
+    recovery: RecoveryPolicy,
+    cfg: SimConfig,
+) -> CellSpec {
+    let tenants: Vec<(&str, SchemeKind)> = TENANT_MIX.iter().map(|w| (*w, kind)).collect();
+    let mut spec = CellSpec::cluster(&tenants, MODULES, cfg);
+    let cl = spec.cluster.as_mut().expect("cluster cell");
+    cl.faults = faults;
+    cl.recovery = recovery;
+    spec
+}
+
+/// `resilience` — per scheme: one no-fault baseline cell, then fault
+/// pattern × recovery policy (policies innermost).
+pub fn resilience_plan(r: &Runner) -> Plan {
+    let cfg = tenant_cfg(r);
+    let patterns = fault_patterns();
+    let mut cells = Vec::new();
+    let mut labels = Vec::new();
+    for &kind in &SCHEMES {
+        cells.push(cell(kind, None, RecoveryPolicy::Stall, cfg.clone()));
+        labels.push(format!("{}/no-fault/-", kind.name()));
+        for (pname, plan) in &patterns {
+            for &policy in &POLICIES {
+                cells.push(cell(kind, Some(plan.clone()), policy, cfg.clone()));
+                labels.push(format!("{}/{}/{}", kind.name(), pname, policy.name()));
+            }
+        }
+    }
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let t = TENANT_MIX.len();
+        assert_eq!(ms.len(), labels.len() * t, "resilience layout mismatch");
+        let cell_ms = |i: usize| &ms[i * t..(i + 1) * t];
+        let per_scheme = labels.len() / SCHEMES.len();
+        let mut table = Table::new(
+            "Resilience: scheme x fault pattern x recovery policy, 4 tenants x 2 modules",
+            &[
+                "cell",
+                "agg-IPC",
+                "max-slowdown-vs-no-fault",
+                "downtime-cycles",
+                "aborted",
+                "deferred",
+            ],
+        );
+        for (i, label) in labels.iter().enumerate() {
+            let block = cell_ms(i);
+            // The same scheme's no-fault cell heads each scheme block.
+            let base = cell_ms((i / per_scheme) * per_scheme);
+            let ipc: f64 = block.iter().map(Metrics::ipc).sum();
+            let slow = block
+                .iter()
+                .zip(base)
+                .map(|(m, b)| slowdown(b, m))
+                .fold(f64::NEG_INFINITY, f64::max);
+            let downtime = block.iter().map(|m| m.downtime_cycles).fold(0.0f64, f64::max);
+            let aborted: u64 = block.iter().map(|m| m.aborted_transfers).sum();
+            let deferred: u64 = block.iter().map(|m| m.deferred_requests).sum();
+            table.row_f(label, &[ipc, slow, downtime, aborted as f64, deferred as f64]);
+        }
+        vec![table]
+    });
+    Plan { id: "resilience".into(), cells, assemble }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::orchestrator::{
+        self, merge_with_plans, run_cell_spec, run_cells_flat, sweep_plans, Shard, ShardData,
+        SweepResult,
+    };
+    use crate::util::json::Json;
+    use crate::workloads::cache::TraceCache;
+
+    #[test]
+    fn resilience_plan_layout() {
+        let r = Runner::test();
+        let p = resilience_plan(&r);
+        let per_scheme = 1 + fault_patterns().len() * POLICIES.len();
+        assert_eq!(p.cells.len(), SCHEMES.len() * per_scheme);
+        let metrics: usize = p.cells.iter().map(CellSpec::metrics_len).sum();
+        assert_eq!(metrics, p.cells.len() * TENANT_MIX.len());
+        // Baseline cells keep the no-fault defaults.
+        let c0 = p.cells[0].cluster.as_ref().unwrap();
+        assert!(c0.faults.is_none());
+        assert_eq!(c0.recovery, RecoveryPolicy::Stall);
+        // Faulted cells carry their plan and policy.
+        let c1 = p.cells[1].cluster.as_ref().unwrap();
+        assert!(c1.faults.is_some());
+        let c2 = p.cells[2].cluster.as_ref().unwrap();
+        assert_eq!(c2.recovery, RecoveryPolicy::Refetch);
+    }
+
+    #[test]
+    fn module_crash_stalls_then_refetch_routes_around() {
+        let r = Runner::test();
+        let cfg = tenant_cfg(&r);
+        let cache = TraceCache::new();
+        // Module 1 is down from cycle 0 to 1e6: certain to bite.
+        let plan = FaultPlan::new().module_crash(1, 0.0, 1e6);
+        let base = run_cell_spec(
+            &r,
+            &cache,
+            &cell(SchemeKind::Remote, None, RecoveryPolicy::Stall, cfg.clone()),
+        );
+        let stall = run_cell_spec(
+            &r,
+            &cache,
+            &cell(SchemeKind::Remote, Some(plan.clone()), RecoveryPolicy::Stall, cfg.clone()),
+        );
+        let refetch = run_cell_spec(
+            &r,
+            &cache,
+            &cell(SchemeKind::Remote, Some(plan), RecoveryPolicy::Refetch, cfg),
+        );
+        let cyc = |ms: &[Metrics]| ms.iter().map(|m| m.cycles).sum::<f64>();
+        let deferred = |ms: &[Metrics]| ms.iter().map(|m| m.deferred_requests).sum::<u64>();
+        let instr = |ms: &[Metrics]| ms.iter().map(|m| m.instructions).sum::<u64>();
+        // The no-fault baseline reports no fault activity at all.
+        assert_eq!(deferred(&base), 0);
+        assert!(base.iter().all(|m| m.aborted_transfers == 0 && m.downtime_cycles == 0.0));
+        // Stall: requests to the dead module wait for recovery.
+        assert!(deferred(&stall) > 0, "stalled run never hit the crash window");
+        assert!(
+            cyc(&stall) > cyc(&base),
+            "a 1e6-cycle outage must cost cycles: {} vs {}",
+            cyc(&stall),
+            cyc(&base)
+        );
+        assert!(stall.iter().all(|m| m.downtime_cycles > 0.0), "downtime must be reported");
+        // Refetch: with the module down from cycle 0, every request is
+        // issued during an observed outage and routes around the dead
+        // module — zero deferrals.  (A window opening mid-run would
+        // still defer work dispatched before its edge: routing is
+        // decided at issue time.)
+        assert_eq!(deferred(&refetch), 0, "refetch must route around the dead module");
+        assert!(
+            cyc(&refetch) < cyc(&stall),
+            "re-fetching from the surviving module must beat stalling: {} vs {}",
+            cyc(&refetch),
+            cyc(&stall)
+        );
+        // Same committed work in all three runs.
+        assert_eq!(instr(&base), instr(&stall));
+        assert_eq!(instr(&base), instr(&refetch));
+    }
+
+    #[test]
+    fn link_flaps_hit_only_the_flapped_tenant() {
+        let r = Runner::test();
+        let cfg = tenant_cfg(&r);
+        let cache = TraceCache::new();
+        // Tenant 0's module-0 link flaps from cycle 0; others clean.
+        let plan = FaultPlan::new().link_flaps(0, 0, 5e5, 2e5, 1e9);
+        let base = run_cell_spec(
+            &r,
+            &cache,
+            &cell(SchemeKind::Daemon, None, RecoveryPolicy::Stall, cfg.clone()),
+        );
+        let flapped = run_cell_spec(
+            &r,
+            &cache,
+            &cell(SchemeKind::Daemon, Some(plan), RecoveryPolicy::Stall, cfg),
+        );
+        assert!(
+            flapped[0].deferred_requests + flapped[0].aborted_transfers > 0,
+            "the flapped tenant never hit a down window"
+        );
+        assert!(flapped[0].downtime_cycles > 0.0);
+        // Failure isolation: the other tenants are byte-identical to the
+        // no-fault run.
+        for i in 1..TENANT_MIX.len() {
+            assert_eq!(
+                flapped[i].to_json().to_string(),
+                base[i].to_json().to_string(),
+                "tenant {i} perturbed by tenant 0's link flaps"
+            );
+        }
+    }
+
+    #[test]
+    fn fault_metrics_are_thread_count_invariant() {
+        // Satellite: same FaultPlan + seed => byte-identical metrics
+        // regardless of the --jobs worker count.
+        let r = Runner::test();
+        let cfg = tenant_cfg(&r);
+        let plan = FaultPlan::new().module_crash(1, 0.0, 1e6).link_flaps(0, 1, 5e5, 1e5, 1e8);
+        let cells = vec![
+            cell(SchemeKind::Daemon, Some(plan.clone()), RecoveryPolicy::Stall, cfg.clone()),
+            cell(SchemeKind::Daemon, Some(plan), RecoveryPolicy::Refetch, cfg),
+        ];
+        let fmt = |slots: Vec<Option<Vec<Metrics>>>| -> Vec<String> {
+            slots
+                .into_iter()
+                .flat_map(|s| s.expect("unsharded run must fill every slot"))
+                .map(|m| m.to_json().to_string())
+                .collect()
+        };
+        let one = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 1));
+        let eight = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 8));
+        assert_eq!(one, eight, "fault runs diverged across --jobs counts");
+    }
+
+    /// Reduced 2-cell plan for the shard byte-identity test (the full
+    /// sweep rides CI's 2-shard merge check).
+    fn mini_plan(r: &Runner) -> Plan {
+        let cfg = tenant_cfg(r);
+        let (from, to) = crash_window();
+        let plan = FaultPlan::new().module_crash(1, from, to);
+        let cells = vec![
+            cell(SchemeKind::Daemon, Some(plan.clone()), RecoveryPolicy::Stall, cfg.clone()),
+            cell(SchemeKind::Daemon, Some(plan), RecoveryPolicy::Refetch, cfg),
+        ];
+        let assemble = Box::new(move |ms: &[Metrics]| {
+            let mut t = Table::new("resilience mini", &["tenant", "ipc", "deferred"]);
+            for (i, m) in ms.iter().enumerate() {
+                t.row_f(&format!("{i}"), &[m.ipc(), m.deferred_requests as f64]);
+            }
+            vec![t]
+        });
+        Plan { id: "resilience_mini".into(), cells, assemble }
+    }
+
+    #[test]
+    fn resilience_cells_shard_byte_identically() {
+        let r = Runner::test();
+        let ids = vec!["resilience_mini".to_string()];
+        let full = match sweep_plans(
+            vec![mini_plan(&r)],
+            &ids,
+            &r,
+            &TraceCache::new(),
+            Shard::full(),
+            2,
+        )
+        .unwrap()
+        {
+            SweepResult::Tables(sets) => sets,
+            SweepResult::Shard(_) => panic!("unsharded run produced a shard"),
+        };
+        let shards: Vec<ShardData> = (0..2)
+            .map(|index| {
+                let d = match sweep_plans(
+                    vec![mini_plan(&r)],
+                    &ids,
+                    &r,
+                    &TraceCache::new(),
+                    Shard { index, total: 2 },
+                    2,
+                )
+                .unwrap()
+                {
+                    SweepResult::Shard(d) => d,
+                    SweepResult::Tables(_) => panic!("sharded run produced tables"),
+                };
+                ShardData::from_json(&Json::parse(&d.to_json().to_string()).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        let merged = merge_with_plans(vec![mini_plan(&r)], &shards).unwrap();
+        assert_eq!(
+            orchestrator::figures_json(&full).to_string(),
+            orchestrator::figures_json(&merged).to_string(),
+            "resilience cells must shard/merge byte-identically"
+        );
+    }
+}

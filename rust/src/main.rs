@@ -13,7 +13,7 @@
 
 use daemon_sim::config::{Replacement, SimConfig};
 use daemon_sim::experiments::orchestrator::{self, Shard, ShardData, SweepResult};
-use daemon_sim::experiments::{Runner, ALL_EXPERIMENTS};
+use daemon_sim::experiments::{default_experiment_ids, Runner, REGISTRY};
 use daemon_sim::runtime::{ModelRunner, NetParams, PjrtOracle};
 use daemon_sim::schemes::SchemeKind;
 use daemon_sim::system::Machine;
@@ -87,7 +87,11 @@ C tenants sharing M memory modules over the switched fabric and report
 per-tenant + fairness aggregates; `variability` sweeps scheme x
 sharing-mode (strict vs work-conserving) x link-condition schedule
 (steady / bandwidth bursts / bandwidth+latency bursts) over the same
-cluster.  All of them batch/shard like any figure.
+cluster; `resilience` sweeps scheme x fault pattern (module crash, link
+flaps, tenant kill) x recovery policy (stall-until-recovery vs re-fetch
+from a surviving module) and reports downtime, aborted/deferred
+requests, and per-tenant slowdown vs the no-fault run.  All of them
+batch/shard like any figure; `list` prints the full registry.
 ";
 
 fn parse_scale(s: &str) -> Result<Scale, String> {
@@ -103,7 +107,11 @@ fn cmd_list() -> i32 {
     println!(
         "schemes:   local cache-line remote page-free cache-line+page lc bp pq daemon"
     );
-    println!("experiments: {}", ALL_EXPERIMENTS.join(" "));
+    println!("experiments:");
+    for d in REGISTRY.iter() {
+        let extra = if d.in_all { "" } else { "  [extra; not in `all`]" };
+        println!("  {:<24} {}{}", d.id, d.about, extra);
+    }
     0
 }
 
@@ -263,7 +271,7 @@ fn cmd_experiment(args: &Args) -> i32 {
             .get_shard("shard")?
             .map(|(index, total)| Shard { index, total });
         let ids: Vec<String> = if args.positional.iter().any(|p| p == "all") {
-            ALL_EXPERIMENTS.iter().map(|s| s.to_string()).collect()
+            default_experiment_ids().iter().map(|s| s.to_string()).collect()
         } else if args.positional.is_empty() {
             return Err("no experiment id given; try `daemon-sim list`".into());
         } else {

@@ -36,6 +36,16 @@ pub struct Metrics {
     /// Bytes served on borrowed (idle peer / sibling-class) capacity
     /// under work-conserving sharing — 0 in strict mode by construction.
     pub reclaimed_bytes: u64,
+    /// Down time of this tenant's worst fabric port within the run
+    /// horizon (max over modules — a single-module outage reports its
+    /// full length), cycles; 0 when no fault plan is installed.
+    pub downtime_cycles: f64,
+    /// Transfers/DRAM accesses lost to a mid-flight component crash and
+    /// replayed after recovery (fabric ports + memory engines).
+    pub aborted_transfers: u64,
+    /// Requests issued while their target component was down, deferred
+    /// to the recovery edge (stall-until-recovery).
+    pub deferred_requests: u64,
     /// Mean network utilization over the run, [0,1].
     pub net_utilization: f64,
     /// Per-interval downlink utilization, horizon-clipped (variability
@@ -167,6 +177,9 @@ impl Metrics {
             ("writeback_bytes", Json::num(self.writeback_bytes as f64)),
             ("net_bytes_in", Json::num(self.net_bytes_in as f64)),
             ("reclaimed_bytes", Json::num(self.reclaimed_bytes as f64)),
+            ("downtime_cycles", Json::num(self.downtime_cycles)),
+            ("aborted_transfers", Json::num(self.aborted_transfers as f64)),
+            ("deferred_requests", Json::num(self.deferred_requests as f64)),
             ("net_utilization", Json::num(self.net_utilization)),
             ("net_util_series", f64s(&self.net_util_series)),
             ("compression_ratio", Json::num(self.compression_ratio)),
@@ -197,6 +210,9 @@ impl Metrics {
         m.writeback_bytes = jint(j, "writeback_bytes")?;
         m.net_bytes_in = jint(j, "net_bytes_in")?;
         m.reclaimed_bytes = jint(j, "reclaimed_bytes")?;
+        m.downtime_cycles = jnum(j, "downtime_cycles")?;
+        m.aborted_transfers = jint(j, "aborted_transfers")?;
+        m.deferred_requests = jint(j, "deferred_requests")?;
         m.net_utilization = jnum(j, "net_utilization")?;
         m.net_util_series = jvec_f64(j, "net_util_series")?;
         m.compression_ratio = jnum(j, "compression_ratio")?;
@@ -324,6 +340,9 @@ mod tests {
         assert_eq!(m.compression_ratio, 1.0);
         assert_eq!(m.goodput(), 0.0);
         assert_eq!(m.reclaimed_bytes, 0);
+        assert_eq!(m.downtime_cycles, 0.0);
+        assert_eq!(m.aborted_transfers, 0);
+        assert_eq!(m.deferred_requests, 0);
         assert!(m.net_util_series.is_empty());
     }
 
@@ -343,6 +362,9 @@ mod tests {
         m.writeback_bytes = 4096;
         m.net_bytes_in = 1 << 40;
         m.reclaimed_bytes = 123_456;
+        m.downtime_cycles = 0.1 + 0.7; // not exactly representable
+        m.aborted_transfers = 17;
+        m.deferred_requests = 29;
         m.net_utilization = 1.0 / 3.0;
         m.net_util_series = vec![0.25, 1.0 / 7.0, 0.0, 0.99];
         m.compression_ratio = 2.39;
@@ -359,6 +381,9 @@ mod tests {
         assert_eq!(back.interval_instructions, m.interval_instructions);
         assert_eq!(back.hit_ratio_series(), m.hit_ratio_series());
         assert_eq!(back.reclaimed_bytes, m.reclaimed_bytes);
+        assert_eq!(back.downtime_cycles.to_bits(), m.downtime_cycles.to_bits());
+        assert_eq!(back.aborted_transfers, m.aborted_transfers);
+        assert_eq!(back.deferred_requests, m.deferred_requests);
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&back.net_util_series), bits(&m.net_util_series));
         assert_eq!(back.goodput().to_bits(), m.goodput().to_bits());

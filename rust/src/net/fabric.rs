@@ -16,15 +16,26 @@
 //! twice.  Strict mode takes the exact historical code path.
 //!
 //! Every traversal pays the module's switch latency plus an optional
-//! extra fabric hop (`hop_cycles`); a [`NetSchedule`] per port adds §6's
-//! time-varying bandwidth/latency conditions.  With a single tenant and
-//! a zero hop the fabric is timing-identical to the old point-to-point
-//! links, which is what lets a single-tenant cluster reproduce `Machine`
-//! exactly.
+//! extra fabric hop (`hop_cycles`); a
+//! [`NetSchedule`](crate::net::disturbance::NetSchedule) per port adds
+//! §6's time-varying bandwidth/latency conditions.  With a single tenant
+//! and a zero hop the fabric is timing-identical to the old
+//! point-to-point links, which is what lets a single-tenant cluster
+//! reproduce `Machine` exactly.
+//!
+//! Ports are additionally **failure-isolated components**: a
+//! [`FaultPlan`] installs per-port Up/Down windows (module crashes +
+//! link flaps).  A send issued while its port is down is *deferred* to
+//! the recovery edge; a send whose issue→arrival interval overlaps a
+//! down window is *aborted* (the occupied wire time is wasted) and
+//! replayed after recovery.  A port with no fault windows takes the
+//! exact historical code path, and other ports' timing is untouched —
+//! the isolation property the resilience experiment measures.
 
 use crate::config::{ns_to_cycles, NetConfig, SharingMode, TenantShare};
 use crate::net::disturbance::{Disturbance, ScheduleHandle};
 use crate::net::link::{work_conserving_issue, work_conserving_plan, Class, Link};
+use crate::system::fault::{FaultCounters, FaultPlan, FaultTimeline, PortState};
 
 /// One tenant's full-duplex port on a memory module.
 struct PortPair {
@@ -36,6 +47,14 @@ struct PortPair {
     /// Bytes this tenant served on borrowed (idle peer / sibling-class)
     /// capacity, both directions — work-conserving mode only.
     reclaimed_bytes: u64,
+    /// Down windows of this port (module crashes + its own link flaps);
+    /// empty = the exact no-fault code path.
+    faults: FaultTimeline,
+    /// Latest arrival among fault-deferred/replayed transfers — the port
+    /// reads as `Recovering` until it passes.
+    recovering_until: f64,
+    /// Aborted/deferred transfer counts on this port.
+    counters: FaultCounters,
 }
 
 fn dir(p: &PortPair, down: bool) -> &Link {
@@ -59,6 +78,8 @@ struct ModulePorts {
     ports: Vec<PortPair>,
 }
 
+/// The switched fabric: per-(module × tenant) full-duplex port pairs —
+/// see the module docs for the sharing, scheduling and failure models.
 pub struct Fabric {
     hop_cycles: f64,
     sharing: SharingMode,
@@ -66,6 +87,9 @@ pub struct Fabric {
 }
 
 impl Fabric {
+    /// Build a fabric of one port pair per `(module, tenant share)` —
+    /// each module's link bandwidth (from its [`NetConfig`]) is carved
+    /// across `shares` by weight.
     pub fn new(
         nets: &[NetConfig],
         dram_gbps: f64,
@@ -97,6 +121,9 @@ impl Fabric {
                             capacity: rate,
                             disturbance: Disturbance::none(),
                             reclaimed_bytes: 0,
+                            faults: FaultTimeline::default(),
+                            recovering_until: 0.0,
+                            counters: FaultCounters::default(),
                         }
                     })
                     .collect();
@@ -106,14 +133,17 @@ impl Fabric {
         Fabric { hop_cycles, sharing, modules }
     }
 
+    /// Number of memory modules on the fabric.
     pub fn modules(&self) -> usize {
         self.modules.len()
     }
 
+    /// Number of tenant port pairs per module.
     pub fn tenants(&self) -> usize {
         self.modules[0].ports.len()
     }
 
+    /// The idle-capacity policy this fabric was built with.
     pub fn sharing(&self) -> SharingMode {
         self.sharing
     }
@@ -128,7 +158,13 @@ impl Fabric {
     pub fn send_down(&mut self, m: usize, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
         match self.sharing {
             SharingMode::Strict => {
-                self.modules[m].ports[t].down.send(now, bytes, class) + self.hop_cycles
+                let hop = self.hop_cycles;
+                let p = &mut self.modules[m].ports[t];
+                if p.faults.is_empty() {
+                    p.down.send(now, bytes, class) + hop
+                } else {
+                    Self::send_faulted(p, now, bytes, class, true) + hop
+                }
             }
             SharingMode::WorkConserving => self.send_wc(m, t, now, bytes, class, true),
         }
@@ -138,10 +174,32 @@ impl Fabric {
     pub fn send_up(&mut self, m: usize, t: usize, now: f64, bytes: u64, class: Class) -> f64 {
         match self.sharing {
             SharingMode::Strict => {
-                self.modules[m].ports[t].up.send(now, bytes, class) + self.hop_cycles
+                let hop = self.hop_cycles;
+                let p = &mut self.modules[m].ports[t];
+                if p.faults.is_empty() {
+                    p.up.send(now, bytes, class) + hop
+                } else {
+                    Self::send_faulted(p, now, bytes, class, false) + hop
+                }
             }
             SharingMode::WorkConserving => self.send_wc(m, t, now, bytes, class, false),
         }
+    }
+
+    /// Send on a port carrying fault windows through the shared
+    /// [`FaultTimeline::replay`] discipline: issue while down defers to
+    /// the recovery edge; an issue→arrival interval overlapping a later
+    /// window aborts (the wire time already occupied is wasted — the
+    /// data was in flight or queued at the component when it died) and
+    /// replays from that window's end.
+    fn send_faulted(p: &mut PortPair, now: f64, bytes: u64, class: Class, down: bool) -> f64 {
+        let PortPair { down: d, up: u, faults, counters, recovering_until, .. } = p;
+        let link = if down { d } else { u };
+        let (arr, at) = faults.replay(now, counters, |at| link.send(at, bytes, class));
+        if at > now {
+            *recovering_until = recovering_until.max(arr);
+        }
+        arr
     }
 
     /// Work-conserving transfer: split `bytes` across tenant `t`'s own
@@ -227,6 +285,57 @@ impl Fabric {
                 p.up.set_schedule(s);
             }
         }
+    }
+
+    /// Materialize a [`FaultPlan`] onto every port: each port gets the
+    /// merged timeline of its module's crash windows plus its own link
+    /// flaps.  Fault injection composes with strict sharing only — the
+    /// work-conserving borrow planner would read a down port as merely
+    /// idle and lend its capacity away.
+    pub fn set_faults(&mut self, plan: &FaultPlan) {
+        assert!(
+            self.sharing == SharingMode::Strict,
+            "fault injection requires strict sharing (SharingMode::Strict)"
+        );
+        for (m, module) in self.modules.iter_mut().enumerate() {
+            for (t, p) in module.ports.iter_mut().enumerate() {
+                p.faults = plan.port_timeline(m, t);
+            }
+        }
+    }
+
+    /// Lifecycle state of tenant `t`'s port on module `m` at `now`:
+    /// `Down` inside a fault window, `Recovering` while draining
+    /// fault-deferred/replayed transfers, `Up` otherwise.
+    pub fn port_state(&self, m: usize, t: usize, now: f64) -> PortState {
+        let p = &self.modules[m].ports[t];
+        if p.faults.is_down(now) {
+            PortState::Down
+        } else if now < p.recovering_until {
+            PortState::Recovering
+        } else {
+            PortState::Up
+        }
+    }
+
+    /// Whether tenant `t` can reach module `m` at `now` (not inside a
+    /// fault window) — the query
+    /// [`RecoveryPolicy::Refetch`](crate::system::fault::RecoveryPolicy)
+    /// routes by.
+    pub fn port_up(&self, m: usize, t: usize, now: f64) -> bool {
+        !self.modules[m].ports[t].faults.is_down(now)
+    }
+
+    /// Down time of tenant `t`'s port on module `m` within `[0, horizon)`.
+    pub fn port_downtime(&self, m: usize, t: usize, horizon: f64) -> f64 {
+        self.modules[m].ports[t].faults.downtime(horizon)
+    }
+
+    /// `(aborted, deferred)` transfer counts of tenant `t`'s port on
+    /// module `m` — both zero unless a fault plan is installed.
+    pub fn fault_counts(&self, m: usize, t: usize) -> (u64, u64) {
+        let c = self.modules[m].ports[t].counters;
+        (c.aborted, c.deferred)
     }
 
     pub fn down_utilization(&self, m: usize, t: usize, horizon: f64) -> f64 {
@@ -390,6 +499,78 @@ mod tests {
             dirty > clean + 50.0,
             "targeted module must queue behind injected load: {dirty} vs {clean}"
         );
+    }
+
+    #[test]
+    fn faulted_port_defers_aborts_and_recovers() {
+        let net = NetConfig::new(0.0, 1.0);
+        // 2 modules, 1 tenant: each port runs at 7.2/3.6 = 2 B/cycle.
+        let mut f = strict(&[net, net], 7.2, &[share(1.0)], 0.0, 1e6);
+        f.set_faults(&FaultPlan::new().module_crash(0, 100.0, 500.0));
+        assert_eq!(f.port_state(0, 0, 50.0), PortState::Up);
+        assert_eq!(f.port_state(0, 0, 100.0), PortState::Down);
+        assert_eq!(f.port_state(1, 0, 300.0), PortState::Up, "other module unaffected");
+        assert!(!f.port_up(0, 0, 300.0) && f.port_up(1, 0, 300.0));
+        // In flight at the crash: 400 bytes issued at 0 serialize over
+        // [0, 200), overlapping the window — aborted, replayed from the
+        // recovery edge 500, arriving 700 (wasted wire time stays).
+        let a = f.send_down(0, 0, 0.0, 400, Class::Line);
+        assert!((a - 700.0).abs() < 1e-9, "{a}");
+        assert_eq!(f.fault_counts(0, 0), (1, 0));
+        // Issued while down: deferred to 500, queued behind the replay.
+        let b = f.send_down(0, 0, 300.0, 100, Class::Line);
+        assert!((b - 750.0).abs() < 1e-9, "{b}");
+        assert_eq!(f.fault_counts(0, 0), (1, 1));
+        // Recovering while the deferred backlog drains, Up afterwards.
+        assert_eq!(f.port_state(0, 0, 600.0), PortState::Recovering);
+        assert_eq!(f.port_state(0, 0, 800.0), PortState::Up);
+        // Failure isolation: module 1's timing is byte-identical clean.
+        let c = f.send_down(1, 0, 0.0, 400, Class::Line);
+        assert!((c - 200.0).abs() < 1e-9, "{c}");
+        assert_eq!(f.fault_counts(1, 0), (0, 0));
+        assert_eq!(f.port_downtime(1, 0, 1e4), 0.0);
+        assert!((f.port_downtime(0, 0, 1e4) - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_flap_hits_only_its_tenant() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f = strict(&[net], 7.2, &[share(1.0), share(1.0)], 0.0, 1e6);
+        f.set_faults(&FaultPlan::new().link_flap(0, 1, 0.0, 300.0));
+        let t0 = f.send_down(0, 0, 0.0, 100, Class::Line);
+        assert!((t0 - 100.0).abs() < 1e-9, "tenant 0 must be clean: {t0}");
+        let t1 = f.send_down(0, 1, 0.0, 100, Class::Line);
+        assert!((t1 - 400.0).abs() < 1e-9, "tenant 1 must defer to recovery: {t1}");
+        assert_eq!(f.fault_counts(0, 0), (0, 0));
+        assert_eq!(f.fault_counts(0, 1), (0, 1));
+    }
+
+    #[test]
+    fn empty_fault_plan_degrades_exactly() {
+        let net = NetConfig::new(100.0, 4.0);
+        let mk = || strict(&[net], 17.0, &[share(1.0)], 0.0, 1000.0);
+        let mut a = mk();
+        let mut b = mk();
+        b.set_faults(&FaultPlan::new());
+        for (now, bytes) in [(0.0, 4096u64), (10.0, 64), (5000.0, 640)] {
+            let x = a.send_down(0, 0, now, bytes, Class::Page);
+            let y = b.send_down(0, 0, now, bytes, Class::Page);
+            assert_eq!(x.to_bits(), y.to_bits(), "empty plan must be the no-fault path");
+            let x = a.send_up(0, 0, now, bytes, Class::Page);
+            let y = b.send_up(0, 0, now, bytes, Class::Page);
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(b.fault_counts(0, 0), (0, 0));
+        assert_eq!(b.port_state(0, 0, 0.0), PortState::Up);
+    }
+
+    #[test]
+    #[should_panic(expected = "strict sharing")]
+    fn fault_injection_requires_strict_sharing() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f =
+            Fabric::new(&[net], 7.2, &[share(1.0)], 0.0, 1e6, SharingMode::WorkConserving);
+        f.set_faults(&FaultPlan::new().module_crash(0, 0.0, 10.0));
     }
 
     #[test]

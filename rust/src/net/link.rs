@@ -2,7 +2,8 @@
 //! simulator.
 //!
 //! A `BwChannel` serializes transfers at a nominal bytes/cycle rate —
-//! optionally modulated by a piecewise-constant [`NetSchedule`] of
+//! optionally modulated by a piecewise-constant
+//! [`NetSchedule`](crate::net::disturbance::NetSchedule) of
 //! rate/latency phases (§6's time-varying conditions) — and tracks
 //! per-interval busy time for utilization reporting (Fig. 19).  A
 //! `Link` composes switch latency with either one shared channel or two

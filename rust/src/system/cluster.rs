@@ -18,13 +18,25 @@
 //! the driver advances the tenant whose next access issues earliest
 //! (global min over every tenant's cores; first tenant wins ties), so
 //! interleaving, and therefore who borrows from whom, is deterministic.
-//! A [`ScheduleSpec`] additionally applies §6's time-varying
-//! bandwidth/latency conditions to every fabric port.  With a single
-//! tenant the cluster degenerates to exactly `Machine::run` — pinned by
-//! the `single_tenant_cluster_matches_machine` regression test.
+//! A [`ScheduleSpec`](crate::config::ScheduleSpec) additionally applies
+//! §6's time-varying bandwidth/latency conditions to every fabric port.
+//! With a single tenant the cluster degenerates to exactly
+//! `Machine::run` — pinned by the `single_tenant_cluster_matches_machine`
+//! regression test.
+//!
+//! Failure isolation: a [`FaultPlan`](crate::system::fault::FaultPlan)
+//! on the `ClusterConfig` installs
+//! module-crash windows on the fabric ports and DRAM engines, link flaps
+//! on individual ports, and tenant kills (the driver stops advancing a
+//! killed tenant at its kill cycle).  The cluster's
+//! [`RecoveryPolicy`](crate::system::fault::RecoveryPolicy) decides
+//! whether tenants stall on a dead home module or re-fetch from a
+//! surviving one.  Under strict sharing each tenant's resources are its
+//! own, so tenants untouched by a fault reproduce their no-fault metrics
+//! byte-identically (pinned by `tenant_kill_isolates_the_survivors`).
 
 use crate::compress::synth::Profile;
-use crate::config::{ClusterConfig, SimConfig, TenantShare};
+use crate::config::{ClusterConfig, SharingMode, SimConfig, TenantShare};
 use crate::daemon::EgressStats;
 use crate::metrics::Metrics;
 use crate::net::NetSchedule;
@@ -50,9 +62,16 @@ pub struct TenantInit {
 pub struct Cluster {
     tenants: Vec<Machine>,
     remote: RemoteMemory,
+    /// Per-tenant kill cycle from the fault plan (`f64::INFINITY` when a
+    /// tenant is never killed): the driver issues no access at or after
+    /// a tenant's kill cycle.
+    kills: Vec<f64>,
 }
 
 impl Cluster {
+    /// Build a cluster: one tenant [`Machine`] per init over one shared
+    /// [`RemoteMemory`] sized by `ccfg`, with the fault plan (if any)
+    /// materialized onto the fabric ports and DRAM engines.
     pub fn new(ccfg: &ClusterConfig, inits: Vec<TenantInit>) -> Cluster {
         assert!(!inits.is_empty(), "cluster needs at least one tenant");
         assert!(
@@ -93,16 +112,35 @@ impl Cluster {
             let sched = Arc::new(NetSchedule::from_spec(spec));
             remote.fabric.set_schedule(|_, _| Some(sched.clone()));
         }
+        if let Some(plan) = &ccfg.faults {
+            assert!(
+                ccfg.sharing == SharingMode::Strict,
+                "fault injection requires SharingMode::Strict (the work-conserving \
+                 borrow planner would lend a down port's capacity away)"
+            );
+            plan.validate(ccfg.memory_modules.max(1), inits.len());
+            remote.fabric.set_faults(plan);
+            for (m, e) in remote.engines.iter_mut().enumerate() {
+                e.set_faults(plan.module_timeline(m));
+            }
+        }
+        let kills: Vec<f64> = (0..inits.len())
+            .map(|t| ccfg.faults.as_ref().map_or(f64::INFINITY, |p| p.kill_time(t)))
+            .collect();
         let tenants = inits
             .into_iter()
             .enumerate()
             .map(|(i, t)| {
-                Machine::tenant(i, t.cfg, t.kind, t.footprint_pages, t.profiles, t.oracle)
+                let mut m =
+                    Machine::tenant(i, t.cfg, t.kind, t.footprint_pages, t.profiles, t.oracle);
+                m.set_recovery(ccfg.recovery);
+                m
             })
             .collect();
-        Cluster { tenants, remote }
+        Cluster { tenants, remote, kills }
     }
 
+    /// Number of tenants in the cluster.
     pub fn tenants(&self) -> usize {
         self.tenants.len()
     }
@@ -119,6 +157,9 @@ impl Cluster {
             let mut best: Option<(usize, usize, f64)> = None;
             for (i, t) in self.tenants.iter().enumerate() {
                 if let Some((ci, at)) = t.peek(&traces[i]) {
+                    if at >= self.kills[i] {
+                        continue; // killed compute component: no more issues
+                    }
                     if best.map(|(_, _, bt)| at < bt).unwrap_or(true) {
                         best = Some((i, ci, at));
                     }
@@ -400,6 +441,91 @@ mod tests {
             "degraded link conditions must cost cycles: {} vs {}",
             degraded.cycles,
             steady.cycles
+        );
+    }
+
+    #[test]
+    fn empty_fault_plan_is_byte_identical_to_no_faults() {
+        // The no-fault pin: an installed-but-empty plan (and the refetch
+        // policy with nothing down) must take the exact historical code
+        // path, byte for byte.
+        use crate::system::fault::{FaultPlan, RecoveryPolicy};
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let run = |ccfg: ClusterConfig| {
+            let mut cluster = Cluster::new(
+                &ccfg,
+                vec![TenantInit {
+                    cfg: cfg.clone(),
+                    kind: SchemeKind::Daemon,
+                    footprint_pages: trace.footprint_pages,
+                    profiles: vec![profile],
+                    oracle: None,
+                }],
+            );
+            cluster.run(&[vec![trace.clone()]]).remove(0).to_json().to_string()
+        };
+        let clean = run(ClusterConfig::new(2));
+        let faultless = run(
+            ClusterConfig::new(2)
+                .with_faults(FaultPlan::new())
+                .with_recovery(RecoveryPolicy::Refetch),
+        );
+        assert_eq!(clean, faultless, "empty fault plan diverged from the no-fault path");
+    }
+
+    #[test]
+    fn tenant_kill_isolates_the_survivors() {
+        use crate::system::fault::FaultPlan;
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let mk_init = || TenantInit {
+            cfg: cfg.clone(),
+            kind: SchemeKind::Remote,
+            footprint_pages: trace.footprint_pages,
+            profiles: vec![profile],
+            oracle: None,
+        };
+        let traces = vec![vec![trace.clone()], vec![trace.clone()]];
+        let base = Cluster::new(&ClusterConfig::new(1), vec![mk_init(), mk_init()])
+            .run(&traces);
+        let ccfg = ClusterConfig::new(1).with_faults(FaultPlan::new().tenant_kill(1, 1e5));
+        let killed = Cluster::new(&ccfg, vec![mk_init(), mk_init()]).run(&traces);
+        // The killed tenant stops mid-run but had committed work.
+        assert!(
+            killed[1].instructions < base[1].instructions,
+            "kill at 1e5 cycles must truncate the run: {} vs {}",
+            killed[1].instructions,
+            base[1].instructions
+        );
+        assert!(killed[1].instructions > 0, "kill is not at time zero");
+        // Failure isolation under strict sharing: the surviving tenant's
+        // metrics are byte-identical to the no-fault run.
+        assert_eq!(
+            killed[0].to_json().to_string(),
+            base[0].to_json().to_string(),
+            "survivor perturbed by a peer tenant's death"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "requires SharingMode::Strict")]
+    fn cluster_rejects_faults_under_work_conserving_sharing() {
+        use crate::system::fault::FaultPlan;
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let ccfg = ClusterConfig::new(1)
+            .with_sharing(SharingMode::WorkConserving)
+            .with_faults(FaultPlan::new().module_crash(0, 0.0, 10.0));
+        let _ = Cluster::new(
+            &ccfg,
+            vec![TenantInit {
+                cfg,
+                kind: SchemeKind::Remote,
+                footprint_pages: trace.footprint_pages,
+                profiles: vec![profile],
+                oracle: None,
+            }],
         );
     }
 

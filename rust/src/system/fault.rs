@@ -1,0 +1,465 @@
+//! Fault injection and degraded-mode recovery — the "independent
+//! failure-isolated components" axis of disaggregation (§1, §4.6).
+//!
+//! A [`FaultPlan`] is a plain-data list of fault windows, the same
+//! shardable spec style as [`ScheduleSpec`](crate::config::ScheduleSpec):
+//! module crash/recover windows (the module's fabric ports *and* its DRAM
+//! engine go down), per-port link flaps (one tenant's path to one module),
+//! and tenant kills (a compute component dies and stops issuing work).
+//! [`crate::system::Cluster`] materializes the plan into per-resource
+//! [`FaultTimeline`]s on the shared fabric and memory engines, and every
+//! tenant `Machine` gets the cluster's [`RecoveryPolicy`].
+//!
+//! Failure semantics on a timeline-based resource (fabric port channel or
+//! DRAM bus queue):
+//!
+//! * a request issued while the resource is down is **deferred** to the
+//!   recovery edge (stall-until-recovery);
+//! * a transfer whose issue→arrival interval overlaps a down window is
+//!   **aborted** — the occupied wire/queue time is wasted (the bytes were
+//!   in flight or queued at the component when it died) and the transfer
+//!   is replayed from the recovery edge.  This covers queued work too:
+//!   anything between issue and arrival is lost with the component.
+//!
+//! [`RecoveryPolicy`] decides what the *compute side* does about a dead
+//! home module: `Stall` waits for recovery (every request pays the
+//! deferral), `Refetch` re-routes requests to the next surviving module
+//! (§4.6-style recovery from replicated data) so tenants keep making
+//! progress — the failure-isolation property itself.  An empty plan and
+//! the default `Stall` policy leave the no-fault timing byte-identical
+//! (pinned by tests at every layer).
+
+/// What a fault window applies to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// Whole memory module: all its fabric ports and its DRAM engine.
+    Module { module: usize },
+    /// One tenant's full-duplex port pair on one module (link flap).
+    Link { module: usize, tenant: usize },
+    /// A tenant's compute component dies at `from_cycle` (permanent:
+    /// `to_cycle` is `f64::INFINITY`) and issues no further accesses.
+    Tenant { tenant: usize },
+}
+
+/// One fault window: `target` is down during `[from_cycle, to_cycle)`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultWindow {
+    pub target: FaultTarget,
+    pub from_cycle: f64,
+    pub to_cycle: f64,
+}
+
+/// Plain-data fault-injection plan — carried by
+/// [`ClusterConfig`](crate::config::ClusterConfig) and cluster cells so
+/// the orchestrator can shard fault experiments like any figure.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub windows: Vec<FaultWindow>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    /// Crash memory module `module` during `[from, to)` cycles.
+    pub fn module_crash(mut self, module: usize, from: f64, to: f64) -> FaultPlan {
+        self.windows.push(FaultWindow {
+            target: FaultTarget::Module { module },
+            from_cycle: from,
+            to_cycle: to,
+        });
+        self
+    }
+
+    /// Flap tenant `tenant`'s link to module `module` during `[from, to)`.
+    pub fn link_flap(mut self, module: usize, tenant: usize, from: f64, to: f64) -> FaultPlan {
+        self.windows.push(FaultWindow {
+            target: FaultTarget::Link { module, tenant },
+            from_cycle: from,
+            to_cycle: to,
+        });
+        self
+    }
+
+    /// Periodic link flaps: the port is down for the first `down_cycles`
+    /// of every `period_cycles` until `horizon_cycles` (down first,
+    /// matching the `ScheduleSpec` square-wave convention).
+    pub fn link_flaps(
+        mut self,
+        module: usize,
+        tenant: usize,
+        period_cycles: f64,
+        down_cycles: f64,
+        horizon_cycles: f64,
+    ) -> FaultPlan {
+        assert!(
+            period_cycles > 0.0 && down_cycles > 0.0 && down_cycles <= period_cycles,
+            "flap down time must fit inside a positive period"
+        );
+        let mut t = 0.0;
+        while t < horizon_cycles {
+            self = self.link_flap(module, tenant, t, t + down_cycles);
+            t += period_cycles;
+        }
+        self
+    }
+
+    /// Kill tenant `tenant`'s compute component at cycle `at` (permanent).
+    pub fn tenant_kill(mut self, tenant: usize, at: f64) -> FaultPlan {
+        self.windows.push(FaultWindow {
+            target: FaultTarget::Tenant { tenant },
+            from_cycle: at,
+            to_cycle: f64::INFINITY,
+        });
+        self
+    }
+
+    /// Panic (with a clear message) on windows that reference resources
+    /// outside a `modules` × `tenants` cluster or never recover.
+    pub fn validate(&self, modules: usize, tenants: usize) {
+        for w in &self.windows {
+            assert!(
+                w.from_cycle >= 0.0 && w.from_cycle.is_finite(),
+                "fault window start must be finite and non-negative, got {}",
+                w.from_cycle
+            );
+            assert!(
+                w.to_cycle > w.from_cycle,
+                "empty fault window [{}, {})",
+                w.from_cycle,
+                w.to_cycle
+            );
+            match w.target {
+                FaultTarget::Module { module } => {
+                    assert!(
+                        module < modules,
+                        "fault targets module {module} but the cluster has {modules}"
+                    );
+                    assert!(
+                        w.to_cycle.is_finite(),
+                        "module crash windows must recover (finite to_cycle)"
+                    );
+                }
+                FaultTarget::Link { module, tenant } => {
+                    assert!(
+                        module < modules,
+                        "link flap targets module {module} but the cluster has {modules}"
+                    );
+                    assert!(
+                        tenant < tenants,
+                        "link flap targets tenant {tenant} but the cluster has {tenants}"
+                    );
+                    assert!(
+                        w.to_cycle.is_finite(),
+                        "link flap windows must recover (finite to_cycle)"
+                    );
+                }
+                FaultTarget::Tenant { tenant } => {
+                    assert!(
+                        tenant < tenants,
+                        "fault kills tenant {tenant} but the cluster has {tenants}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Down timeline of tenant `tenant`'s port on module `module`: the
+    /// module's crash windows plus that port's own link flaps, merged.
+    pub fn port_timeline(&self, module: usize, tenant: usize) -> FaultTimeline {
+        FaultTimeline::new(
+            self.windows
+                .iter()
+                .filter(|w| match w.target {
+                    FaultTarget::Module { module: m } => m == module,
+                    FaultTarget::Link { module: m, tenant: t } => m == module && t == tenant,
+                    FaultTarget::Tenant { .. } => false,
+                })
+                .map(|w| (w.from_cycle, w.to_cycle))
+                .collect(),
+        )
+    }
+
+    /// Down timeline of module `module`'s DRAM engine (crash windows
+    /// only — link flaps leave the module itself serviceable).
+    pub fn module_timeline(&self, module: usize) -> FaultTimeline {
+        FaultTimeline::new(
+            self.windows
+                .iter()
+                .filter(|w| w.target == FaultTarget::Module { module })
+                .map(|w| (w.from_cycle, w.to_cycle))
+                .collect(),
+        )
+    }
+
+    /// Cycle at which tenant `tenant` is killed (`f64::INFINITY` when it
+    /// never is).
+    pub fn kill_time(&self, tenant: usize) -> f64 {
+        self.windows
+            .iter()
+            .filter(|w| w.target == FaultTarget::Tenant { tenant })
+            .map(|w| w.from_cycle)
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// How a tenant machine treats remote accesses whose home module is down.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Wait for the home module to recover (every request to it is
+    /// deferred to the recovery edge).
+    #[default]
+    Stall,
+    /// Re-fetch from the next surviving module (§4.6-style recovery from
+    /// replicated dirty data / a secondary home), falling back to the
+    /// home module when every module is down.
+    Refetch,
+}
+
+impl RecoveryPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RecoveryPolicy::Stall => "stall",
+            RecoveryPolicy::Refetch => "refetch",
+        }
+    }
+}
+
+/// Observable lifecycle of a fabric port under fault injection (the
+/// Up/Down/Recovering state machine documented in DESIGN.md): `Down`
+/// inside a fault window; `Recovering` when up again but still draining
+/// transfers a fault deferred or replayed; `Up` otherwise.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PortState {
+    Up,
+    Down,
+    Recovering,
+}
+
+/// Fault bookkeeping of one resource: attempts lost to a mid-flight
+/// crash and replayed, and attempts issued while down and deferred.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub aborted: u64,
+    pub deferred: u64,
+}
+
+/// Sorted, merged down windows of one resource — the materialized form a
+/// fabric port or memory engine holds.  An empty timeline short-circuits
+/// to the exact no-fault code path (byte-identity pinned by tests).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultTimeline {
+    /// Non-overlapping `(from, to)` windows sorted by `from`.
+    windows: Vec<(f64, f64)>,
+}
+
+impl FaultTimeline {
+    /// Build from arbitrary (possibly unsorted / overlapping) windows;
+    /// empty and inverted windows are dropped, overlaps merged.
+    pub fn new(mut windows: Vec<(f64, f64)>) -> FaultTimeline {
+        windows.retain(|w| w.1 > w.0);
+        windows.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let mut merged: Vec<(f64, f64)> = Vec::with_capacity(windows.len());
+        for w in windows {
+            match merged.last_mut() {
+                Some(last) if w.0 <= last.1 => last.1 = last.1.max(w.1),
+                _ => merged.push(w),
+            }
+        }
+        FaultTimeline { windows: merged }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    fn window_at(&self, t: f64) -> Option<(f64, f64)> {
+        let i = self.windows.partition_point(|w| w.0 <= t);
+        if i == 0 {
+            return None;
+        }
+        let w = self.windows[i - 1];
+        (t < w.1).then_some(w)
+    }
+
+    /// Whether the resource is down at `t` (windows are `[from, to)`).
+    pub fn is_down(&self, t: f64) -> bool {
+        self.window_at(t).is_some()
+    }
+
+    /// Earliest cycle at or after `t` at which the resource is up.
+    pub fn release(&self, t: f64) -> f64 {
+        self.window_at(t).map(|w| w.1).unwrap_or(t)
+    }
+
+    /// Recovery edge of the first down window overlapping `[start, end)`,
+    /// `None` when the interval is fault-free.
+    pub fn hit(&self, start: f64, end: f64) -> Option<f64> {
+        let i = self.windows.partition_point(|w| w.1 <= start);
+        let w = self.windows.get(i)?;
+        (w.0 < end).then_some(w.1)
+    }
+
+    /// Run one attempt through the defer/abort/replay discipline — the
+    /// single failure algorithm the fabric ports and memory engines
+    /// share, so their semantics can never diverge.  `issue(at)`
+    /// schedules the attempt at cycle `at` on the underlying resource
+    /// and returns its completion.  Issue while down defers to the
+    /// recovery edge; an attempt whose `[at, completion)` interval
+    /// overlaps a later window is aborted (its occupied resource time is
+    /// wasted) and replayed from that window's end.  Returns the
+    /// surviving attempt's `(completion, start)` — the start feeds
+    /// recovery bookkeeping — and counts deferrals/aborts into
+    /// `counters`.  Terminates: every replay starts at a strictly later
+    /// window's recovery edge, and windows are finitely many.
+    pub fn replay(
+        &self,
+        now: f64,
+        counters: &mut FaultCounters,
+        mut issue: impl FnMut(f64) -> f64,
+    ) -> (f64, f64) {
+        let mut at = self.release(now);
+        if at > now {
+            counters.deferred += 1;
+        }
+        loop {
+            let done = issue(at);
+            match self.hit(at, done) {
+                Some(end) => {
+                    counters.aborted += 1;
+                    at = end;
+                }
+                None => return (done, at),
+            }
+        }
+    }
+
+    /// Total down time within `[0, horizon)`, cycles.
+    pub fn downtime(&self, horizon: f64) -> f64 {
+        self.windows
+            .iter()
+            .map(|w| (w.1.min(horizon) - w.0.max(0.0)).max(0.0))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_merges_sorts_and_queries() {
+        let t = FaultTimeline::new(vec![(300.0, 400.0), (100.0, 200.0), (150.0, 250.0)]);
+        assert!(!t.is_empty());
+        assert!(!t.is_down(50.0));
+        assert!(t.is_down(100.0), "from_cycle is inclusive");
+        assert!(t.is_down(249.0), "overlapping windows merged");
+        assert!(!t.is_down(250.0), "to_cycle is exclusive");
+        assert!(t.is_down(350.0));
+        assert!(!t.is_down(400.0));
+        assert_eq!(t.release(50.0), 50.0);
+        assert_eq!(t.release(120.0), 250.0, "merged window releases at the max to");
+        assert_eq!(t.release(400.0), 400.0);
+        // Interval overlap: first window whose span intersects [start, end).
+        assert_eq!(t.hit(0.0, 100.0), None, "half-open: ends exactly at from");
+        assert_eq!(t.hit(0.0, 101.0), Some(250.0));
+        assert_eq!(t.hit(250.0, 300.0), None, "gap between windows");
+        assert_eq!(t.hit(250.0, 301.0), Some(400.0));
+        assert_eq!(t.hit(500.0, 900.0), None, "past the last window");
+        // Degenerate inputs: empty and inverted windows are dropped.
+        assert!(FaultTimeline::new(vec![(5.0, 5.0), (9.0, 2.0)]).is_empty());
+        assert!(!FaultTimeline::default().is_down(0.0));
+        assert_eq!(FaultTimeline::default().release(7.0), 7.0);
+    }
+
+    #[test]
+    fn replay_defers_aborts_and_counts() {
+        let t = FaultTimeline::new(vec![(100.0, 500.0)]);
+        let mut c = FaultCounters::default();
+        // In flight at the crash (fixed 200-cycle service per attempt):
+        // aborted at 100, replayed from 500, completes 700.
+        let (done, at) = t.replay(0.0, &mut c, |at| at + 200.0);
+        assert_eq!((done, at), (700.0, 500.0));
+        assert_eq!(c, FaultCounters { aborted: 1, deferred: 0 });
+        // Issued while down: deferred to the recovery edge.
+        let (done, at) = t.replay(300.0, &mut c, |at| at + 10.0);
+        assert_eq!((done, at), (510.0, 500.0));
+        assert_eq!(c, FaultCounters { aborted: 1, deferred: 1 });
+        // Clean past the window.
+        let (done, at) = t.replay(600.0, &mut c, |at| at + 10.0);
+        assert_eq!((done, at), (610.0, 600.0));
+        assert_eq!(c, FaultCounters { aborted: 1, deferred: 1 });
+    }
+
+    #[test]
+    fn downtime_clips_to_horizon() {
+        let t = FaultTimeline::new(vec![(100.0, 200.0), (500.0, 700.0)]);
+        assert_eq!(t.downtime(50.0), 0.0);
+        assert!((t.downtime(150.0) - 50.0).abs() < 1e-9);
+        assert!((t.downtime(400.0) - 100.0).abs() < 1e-9);
+        assert!((t.downtime(1e6) - 300.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn plan_builders_materialize_per_resource_timelines() {
+        let plan = FaultPlan::new()
+            .module_crash(1, 100.0, 200.0)
+            .link_flap(0, 2, 50.0, 60.0)
+            .tenant_kill(3, 500.0);
+        plan.validate(2, 4);
+        assert!(!plan.is_empty() && FaultPlan::new().is_empty());
+        // Module 1's ports carry the crash for every tenant; only tenant
+        // 2's module-0 port carries the flap; the kill hits no timeline.
+        assert!(plan.port_timeline(1, 0).is_down(150.0));
+        assert!(plan.port_timeline(1, 3).is_down(150.0));
+        assert!(plan.port_timeline(0, 2).is_down(55.0));
+        assert!(!plan.port_timeline(0, 0).is_down(55.0));
+        assert!(plan.port_timeline(0, 0).is_empty());
+        // The DRAM engine sees module crashes only, never link flaps.
+        assert!(plan.module_timeline(1).is_down(150.0));
+        assert!(plan.module_timeline(0).is_empty());
+        assert_eq!(plan.kill_time(3), 500.0);
+        assert_eq!(plan.kill_time(0), f64::INFINITY);
+    }
+
+    #[test]
+    fn periodic_flaps_are_down_first() {
+        let plan = FaultPlan::new().link_flaps(0, 0, 100.0, 25.0, 250.0);
+        let t = plan.port_timeline(0, 0);
+        assert!(t.is_down(0.0) && t.is_down(24.0));
+        assert!(!t.is_down(25.0) && !t.is_down(99.0));
+        assert!(t.is_down(100.0) && t.is_down(200.0));
+        assert!(!t.is_down(300.0), "no flap past the horizon");
+        assert!((t.downtime(1e6) - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "targets module 2")]
+    fn validate_rejects_out_of_range_module() {
+        FaultPlan::new().module_crash(2, 0.0, 1.0).validate(2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "kills tenant 4")]
+    fn validate_rejects_out_of_range_tenant() {
+        FaultPlan::new().tenant_kill(4, 0.0).validate(2, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "must recover")]
+    fn validate_rejects_permanent_module_crash() {
+        FaultPlan::new().module_crash(0, 0.0, f64::INFINITY).validate(2, 4);
+    }
+
+    #[test]
+    fn recovery_policy_names() {
+        assert_eq!(RecoveryPolicy::default(), RecoveryPolicy::Stall);
+        assert_eq!(RecoveryPolicy::Stall.name(), "stall");
+        assert_eq!(RecoveryPolicy::Refetch.name(), "refetch");
+    }
+}

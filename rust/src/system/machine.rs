@@ -30,6 +30,7 @@ use crate::metrics::Metrics;
 use crate::net::{Class, Disturbance, Fabric, ScheduleHandle};
 use crate::schemes::{Policy, SchemeKind};
 use crate::sim::EventQueue;
+use crate::system::fault::RecoveryPolicy;
 use crate::workloads::{Scale, Trace, Workload};
 
 /// Oracle for compressed page sizes — `Exact` (native algorithms) or the
@@ -186,6 +187,10 @@ pub struct Machine {
     interval_cycles: f64,
     /// Per-core address-space tag shift.
     core_tag_shift: u32,
+    /// Degraded-mode policy while a home module's port is down (only
+    /// meaningful when the shared fabric carries a
+    /// [`crate::system::fault::FaultPlan`]; default `Stall`).
+    recovery: RecoveryPolicy,
 }
 
 impl Machine {
@@ -275,6 +280,7 @@ impl Machine {
             metrics: Metrics::new(),
             interval_cycles,
             core_tag_shift: 40,
+            recovery: RecoveryPolicy::Stall,
             cores,
             cfg,
             policy,
@@ -282,6 +288,13 @@ impl Machine {
             id,
             remote,
         }
+    }
+
+    /// Degraded-mode policy for remote accesses whose home module is
+    /// down (a [`crate::system::Cluster`] sets this from its
+    /// `ClusterConfig`); the default `Stall` leaves routing untouched.
+    pub fn set_recovery(&mut self, policy: RecoveryPolicy) {
+        self.recovery = policy;
     }
 
     /// Install network disturbance phases on every memory-module port
@@ -317,6 +330,34 @@ impl Machine {
         }
     }
 
+    /// Module serving `page` at `now`: the placement-home module, except
+    /// under [`RecoveryPolicy::Refetch`] when that module's port is down
+    /// — then the next surviving module serves the request (§4.6-style
+    /// re-fetch from replicated data), falling back to the home module
+    /// when every module is down.  Under the default `Stall` policy this
+    /// is exactly [`Machine`]'s historical placement.
+    ///
+    /// Routing is decided at issue time — failure detection is not
+    /// retroactive.  A request dispatched toward a module that fails
+    /// between issue and service (or one the engine/fabric only reaches
+    /// inside a window that opens after `now`) rides that resource's
+    /// defer/abort semantics instead of re-routing, so Refetch can still
+    /// report a few deferrals around a window's opening edge.
+    #[inline]
+    fn route(&self, remote: &RemoteMemory, page: u64, now: f64) -> usize {
+        let home = self.placement(remote, page);
+        if self.recovery == RecoveryPolicy::Refetch {
+            let n = remote.modules();
+            for k in 0..n {
+                let m = (home + k) % n;
+                if remote.fabric.port_up(m, self.id, now) {
+                    return m;
+                }
+            }
+        }
+        home
+    }
+
     #[inline]
     fn page_of(addr: u64) -> u64 {
         addr >> 12
@@ -342,7 +383,7 @@ impl Machine {
         } else {
             PAGE_BYTES
         };
-        let m = self.placement(remote, page);
+        let m = self.route(remote, page, now);
         remote.fabric.advance_disturbance(m, self.id, now);
         // Request propagation (control message) + HW translation + DRAM
         // page read at the memory module.
@@ -369,7 +410,7 @@ impl Machine {
     /// Estimated arrival time of a line request issued now — the quantity
     /// the selection unit's queue-occupancy comparison approximates.
     fn line_eta(&self, remote: &RemoteMemory, page: u64, now: f64) -> f64 {
-        let m = self.placement(remote, page);
+        let m = self.route(remote, page, now);
         let bus_rate = remote.engines[m].rate(self.id, Class::Line);
         let link_rate = remote.fabric.down_rate(m, self.id, Class::Line);
         now + 2.0 * remote.fabric.request_latency(m)
@@ -383,7 +424,7 @@ impl Machine {
     /// Schedule a cache-line movement; returns its arrival cycle.
     fn schedule_line(&mut self, remote: &mut RemoteMemory, addr: u64, now: f64) -> f64 {
         let page = Self::page_of(addr);
-        let m = self.placement(remote, page);
+        let m = self.route(remote, page, now);
         remote.fabric.advance_disturbance(m, self.id, now);
         let t0 = now + remote.fabric.request_latency(m);
         let t1 = remote.engines[m].access(self.id, t0, 8, Class::Line); // translation
@@ -400,7 +441,7 @@ impl Machine {
     /// cost is modeled on each replica's port and bus).
     fn writeback_line(&mut self, remote: &mut RemoteMemory, addr: u64, now: f64) {
         let page = Self::page_of(addr);
-        let home = self.placement(remote, page);
+        let home = self.route(remote, page, now);
         let n = remote.modules();
         let replicas = self.cfg.dirty_replicas.min(n);
         for k in 0..replicas.max(1) {
@@ -422,7 +463,7 @@ impl Machine {
         } else {
             PAGE_BYTES
         };
-        let m = self.placement(remote, page);
+        let m = self.route(remote, page, now);
         let mut t0 = now;
         if compress {
             t0 += self.cfg.daemon.compress_cycles;
@@ -832,6 +873,23 @@ impl Machine {
                     + remote.engines[m].reclaimed_bytes(self.id)
             })
             .sum();
+        // Failure accounting: this tenant's worst-port down time within
+        // the horizon (max over its module ports — a single-module
+        // outage reports its full length) and fault-deferred /
+        // aborted-and-replayed work summed over the fabric ports and the
+        // memory engines — all zero when no fault plan is installed.
+        self.metrics.downtime_cycles = (0..remote.modules())
+            .map(|m| remote.fabric.port_downtime(m, self.id, horizon))
+            .fold(0.0f64, f64::max);
+        let (mut aborted, mut deferred) = (0u64, 0u64);
+        for m in 0..remote.modules() {
+            let (fa, fd) = remote.fabric.fault_counts(m, self.id);
+            let (ea, ed) = remote.engines[m].fault_counts(self.id);
+            aborted += fa + ea;
+            deferred += fd + ed;
+        }
+        self.metrics.aborted_transfers = aborted;
+        self.metrics.deferred_requests = deferred;
         self.metrics.compression_ratio = if self.policy.compress {
             self.oracle.ratio()
         } else {

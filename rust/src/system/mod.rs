@@ -1,10 +1,14 @@
 //! System coordinator: the disaggregated machine driver, the multi-tenant
-//! cluster driver, multi-workload execution, and parallel experiment
-//! sweeps.
+//! cluster driver, fault injection / degraded-mode recovery,
+//! multi-workload execution, and parallel experiment sweeps.
 
 pub mod cluster;
+pub mod fault;
 pub mod machine;
 pub mod sweep;
 
 pub use cluster::{run_cluster, Cluster, TenantInit};
+pub use fault::{
+    FaultCounters, FaultPlan, FaultTarget, FaultTimeline, FaultWindow, PortState, RecoveryPolicy,
+};
 pub use machine::{run_workload, ExactOracle, Machine, RemoteMemory, RunResult, SizeOracle};

@@ -2,7 +2,7 @@
 //!
 //! All-pairs similarity join: for each diagonal of the distance matrix,
 //! stream the series computing running dot products and updating the
-//! profile.  Two interleaved streams (series[i], series[i+lag]) plus
+//! profile.  Two interleaved streams (`series[i]`, `series[i+lag]`) plus
 //! profile updates give medium spatial locality — sequential runs broken
 //! by the lag-offset stream and profile writes.
 
