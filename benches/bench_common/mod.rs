@@ -12,8 +12,46 @@
 
 use daemon_sim::experiments::orchestrator::{self, Shard, SweepResult};
 use daemon_sim::experiments::Runner;
+use daemon_sim::util::json::Json;
 use daemon_sim::workloads::cache::TraceCache;
 use daemon_sim::workloads::Scale;
+
+/// Build metadata stamped into every bench JSON artifact, so recorded
+/// numbers stay interpretable once the perf trajectory accumulates.
+#[allow(dead_code)] // only JSON-emitting bench binaries use this
+pub fn build_metadata() -> Json {
+    Json::obj(vec![
+        ("crate_version", Json::str(env!("CARGO_PKG_VERSION"))),
+        (
+            "profile",
+            Json::str(if cfg!(debug_assertions) { "debug" } else { "release" }),
+        ),
+        ("os", Json::str(std::env::consts::OS)),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        (
+            "unix_time",
+            Json::num(
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_secs() as f64)
+                    .unwrap_or(0.0),
+            ),
+        ),
+    ])
+}
+
+/// Write a machine-readable bench artifact to `BENCH_<name>.json` in the
+/// working directory (override the directory with `DAEMON_BENCH_DIR`) —
+/// the recorded perf-trajectory counterpart of the human-readable table.
+#[allow(dead_code)] // only JSON-emitting bench binaries use this
+pub fn write_bench_json(name: &str, payload: Json) {
+    let dir = std::env::var("DAEMON_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, format!("{payload}\n")) {
+        Ok(()) => println!("[wrote {}]", path.display()),
+        Err(e) => eprintln!("[bench json: failed to write {}: {e}]", path.display()),
+    }
+}
 
 #[allow(dead_code)] // not every bench binary uses both helpers
 pub fn bench_runner() -> Runner {

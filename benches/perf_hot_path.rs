@@ -1,17 +1,31 @@
 //! §Perf microbenchmark: raw simulator throughput (accesses/second) per
 //! scheme on a fixed pr trace — the number the performance pass optimizes.
+//!
+//! Besides the human-readable table, the run records
+//! `BENCH_perf_hot_path.json` (scheme → M accesses/s + build metadata +
+//! the `pq`+`daemon` aggregate the acceptance gate compares across
+//! binaries), so the perf trajectory is tracked instead of lost in CI
+//! logs.  Knobs: `DAEMON_BENCH_ACCESSES` truncates the trace (CI smoke
+//! uses a small cap; default 2M), `DAEMON_BENCH_DIR` redirects the JSON.
 mod bench_common;
 
 use daemon_sim::config::SimConfig;
 use daemon_sim::schemes::SchemeKind;
 use daemon_sim::system::Machine;
+use daemon_sim::util::json::Json;
 use daemon_sim::workloads::{by_name, Scale};
 
 fn main() {
+    let accesses: usize = std::env::var("DAEMON_BENCH_ACCESSES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2_000_000);
     let w = by_name("pr").unwrap();
     let cfg = SimConfig::default().with_seed(1);
-    let trace = w.generate(cfg.seed, Scale::Paper).truncated(2_000_000);
+    let trace = w.generate(cfg.seed, Scale::Paper).truncated(accesses);
     println!("==== bench: perf_hot_path ({} accesses) ====", trace.accesses.len());
+    let mut schemes = Vec::new();
+    let mut agg_gate = 0.0f64;
     for kind in [
         SchemeKind::Local,
         SchemeKind::Remote,
@@ -47,5 +61,32 @@ fn main() {
             min,
             max
         );
+        if matches!(kind, SchemeKind::Pq | SchemeKind::Daemon) {
+            agg_gate += mean;
+        }
+        schemes.push((
+            kind.name().to_string(),
+            Json::obj(vec![
+                ("mean_macc_per_s", Json::num(mean)),
+                ("min_macc_per_s", Json::num(min)),
+                ("max_macc_per_s", Json::num(max)),
+            ]),
+        ));
     }
+    println!("pq+daemon aggregate {agg_gate:.2} M acc/s (the >=1.5x gate quantity)");
+    bench_common::write_bench_json(
+        "perf_hot_path",
+        Json::obj(vec![
+            ("bench", Json::str("perf_hot_path")),
+            ("workload", Json::str("pr")),
+            ("accesses", Json::num(trace.accesses.len() as f64)),
+            ("iterations", Json::num(3.0)),
+            (
+                "schemes",
+                Json::Obj(schemes.into_iter().collect()),
+            ),
+            ("pq_daemon_aggregate_macc_per_s", Json::num(agg_gate)),
+            ("build", bench_common::build_metadata()),
+        ]),
+    );
 }

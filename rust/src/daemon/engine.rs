@@ -17,7 +17,7 @@
 //!     *throttled* — its arrival is ignored and the page re-requested.
 
 use crate::config::DaemonParams;
-use std::collections::HashMap;
+use crate::util::hash::FxHashMap;
 
 /// Inflight page buffer entry states (Fig. 7b).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,8 +68,11 @@ pub struct Decision {
 
 pub struct ComputeEngine {
     pub params: DaemonParams,
-    pages: HashMap<u64, PageEntry>,
-    lines: HashMap<u64, LineEntry>,
+    // Fx-hashed: probed on every LLC miss (decide / inflight checks) and
+    // every arrival.  Never iterated — map order must not feed metrics
+    // (DESIGN.md §"Simulator performance model").
+    pages: FxHashMap<u64, PageEntry>,
+    lines: FxHashMap<u64, LineEntry>,
     line_count: usize,
     dirty_count: usize,
     // Statistics for the experiment harness.
@@ -86,8 +89,8 @@ impl ComputeEngine {
     pub fn new(params: DaemonParams) -> Self {
         Self {
             params,
-            pages: HashMap::new(),
-            lines: HashMap::new(),
+            pages: FxHashMap::default(),
+            lines: FxHashMap::default(),
             line_count: 0,
             dirty_count: 0,
             pages_requested: 0,

@@ -5,25 +5,56 @@
 //! (MIND-style, the paper's assumed option).  Supports approximate-LRU and
 //! FIFO replacement (Fig. 16), dirty bits, and "installed_at" times so a
 //! page scheduled by DaeMon only serves requests after it arrives.
+//!
+//! Replacement is an intrusive doubly-linked recency list threaded through
+//! a slab of nodes (`prev`/`next` are slab indices), with an Fx-hashed
+//! page→slot index: access-touch, install and evict are all O(1).  The
+//! seed design kept a lazy-deleted `VecDeque` of (stamp, page) pairs that
+//! grew by one entry per LRU touch until an eviction drained the stale
+//! prefix — the list replaces it with the same victim semantics:
+//!
+//! * LRU: hits on resident pages move the node to the MRU tail; the
+//!   victim is the head (least recently touched).
+//! * FIFO: nothing moves on a hit; list order is insertion order of the
+//!   *current residency* and the victim is the oldest resident install.
+//!   (One deliberate divergence from the lazy queue: a page removed via
+//!   [`LocalMemory::remove`] and later reinstalled re-enters at the back
+//!   — the seed's stale queue entry would have evicted it in its
+//!   original install position.  `remove` has no simulation callers, so
+//!   replay metrics are unaffected.)
+//!
+//! The equivalence is pinned by `matches_naive_reference_model_property`
+//! against a brute-force model.
 
 use crate::config::Replacement;
-use std::collections::{HashMap, VecDeque};
+use crate::util::hash::FxHashMap;
+
+/// Slab null index.
+const NIL: u32 = u32::MAX;
 
 #[derive(Clone, Copy, Debug)]
-struct Entry {
-    stamp: u64,
+struct Node {
+    page: u64,
     dirty: bool,
     /// Simulation time at which the page's data is resident.
     installed_at: f64,
+    prev: u32,
+    next: u32,
 }
 
 pub struct LocalMemory {
     capacity_pages: usize,
-    entries: HashMap<u64, Entry>,
-    /// Lazy-deleted recency queue: (stamp, page).
-    queue: VecDeque<(u64, u64)>,
+    /// page → slab slot of its node.
+    index: FxHashMap<u64, u32>,
+    slab: Vec<Node>,
+    /// Recycled slab slots (bounded by capacity, so the slab never grows
+    /// past capacity + 1 nodes).
+    free: Vec<u32>,
+    /// Least-recently-used end (eviction victim).
+    head: u32,
+    /// Most-recently-used end.
+    tail: u32,
     policy: Replacement,
-    tick: u64,
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
@@ -40,10 +71,12 @@ impl LocalMemory {
     pub fn new(capacity_pages: usize, policy: Replacement) -> Self {
         Self {
             capacity_pages: capacity_pages.max(1),
-            entries: HashMap::new(),
-            queue: VecDeque::new(),
+            index: FxHashMap::default(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
             policy,
-            tick: 0,
             hits: 0,
             misses: 0,
             evictions: 0,
@@ -55,33 +88,56 @@ impl LocalMemory {
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.index.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.index.is_empty()
+    }
+
+    /// Unlink slot `i` from the recency list (does not free it).
+    #[inline]
+    fn unlink(&mut self, i: u32) {
+        let Node { prev, next, .. } = self.slab[i as usize];
+        match prev {
+            NIL => self.head = next,
+            p => self.slab[p as usize].next = next,
+        }
+        match next {
+            NIL => self.tail = prev,
+            n => self.slab[n as usize].prev = prev,
+        }
+    }
+
+    /// Link slot `i` at the MRU tail.
+    #[inline]
+    fn push_tail(&mut self, i: u32) {
+        self.slab[i as usize].prev = self.tail;
+        self.slab[i as usize].next = NIL;
+        match self.tail {
+            NIL => self.head = i,
+            t => self.slab[t as usize].next = i,
+        }
+        self.tail = i;
     }
 
     /// Is `page` resident (data arrived) at time `now`?
     pub fn present(&self, page: u64, now: f64) -> bool {
-        self.entries
+        self.index
             .get(&page)
-            .map(|e| e.installed_at <= now)
+            .map(|&i| self.slab[i as usize].installed_at <= now)
             .unwrap_or(false)
     }
 
     /// Access `page` at `now`; returns true on hit.  Touches recency under
     /// LRU (FIFO order is insertion-only).
     pub fn access(&mut self, page: u64, write: bool, now: f64) -> bool {
-        self.tick += 1;
-        let tick = self.tick;
-        let policy = self.policy;
-        if let Some(e) = self.entries.get_mut(&page) {
-            if e.installed_at <= now {
-                e.dirty |= write;
-                if policy == Replacement::Lru {
-                    e.stamp = tick;
-                    self.queue.push_back((tick, page));
+        if let Some(&i) = self.index.get(&page) {
+            if self.slab[i as usize].installed_at <= now {
+                self.slab[i as usize].dirty |= write;
+                if self.policy == Replacement::Lru && self.tail != i {
+                    self.unlink(i);
+                    self.push_tail(i);
                 }
                 self.hits += 1;
                 return true;
@@ -95,57 +151,59 @@ impl LocalMemory {
     /// victim if capacity was exceeded.  Installing an already-present page
     /// refreshes its arrival time only if earlier data was still in flight.
     pub fn install(&mut self, page: u64, installed_at: f64) -> Option<Evicted> {
-        self.tick += 1;
-        let tick = self.tick;
-        if let Some(e) = self.entries.get_mut(&page) {
-            e.installed_at = e.installed_at.min(installed_at);
+        if let Some(&i) = self.index.get(&page) {
+            let at = &mut self.slab[i as usize].installed_at;
+            *at = at.min(installed_at);
             return None;
         }
         let mut victim = None;
-        if self.entries.len() >= self.capacity_pages {
+        if self.index.len() >= self.capacity_pages {
             victim = self.evict();
         }
-        self.entries.insert(
-            page,
-            Entry { stamp: tick, dirty: false, installed_at },
-        );
-        self.queue.push_back((tick, page));
+        let node = Node { page, dirty: false, installed_at, prev: NIL, next: NIL };
+        let i = match self.free.pop() {
+            Some(i) => {
+                self.slab[i as usize] = node;
+                i
+            }
+            None => {
+                self.slab.push(node);
+                (self.slab.len() - 1) as u32
+            }
+        };
+        self.index.insert(page, i);
+        self.push_tail(i);
         victim
     }
 
     /// Mark a page dirty (e.g. dirty-line flush from the DaeMon dirty
     /// buffer after the page arrives).
     pub fn mark_dirty(&mut self, page: u64) {
-        if let Some(e) = self.entries.get_mut(&page) {
-            e.dirty = true;
+        if let Some(&i) = self.index.get(&page) {
+            self.slab[i as usize].dirty = true;
         }
     }
 
     /// Remove a specific page (invalidate).
     pub fn remove(&mut self, page: u64) -> Option<Evicted> {
-        self.entries
-            .remove(&page)
-            .map(|e| Evicted { page, dirty: e.dirty })
+        let i = self.index.remove(&page)?;
+        self.unlink(i);
+        self.free.push(i);
+        let n = self.slab[i as usize];
+        Some(Evicted { page, dirty: n.dirty })
     }
 
     fn evict(&mut self) -> Option<Evicted> {
-        // Pop lazily-deleted queue entries until one matches live state.
-        while let Some((stamp, page)) = self.queue.pop_front() {
-            if let Some(e) = self.entries.get(&page) {
-                let current = match self.policy {
-                    Replacement::Lru => e.stamp == stamp,
-                    // FIFO: evict on first (oldest) queue entry for a live
-                    // page — insertion order.
-                    Replacement::Fifo => true,
-                };
-                if current {
-                    let e = self.entries.remove(&page).unwrap();
-                    self.evictions += 1;
-                    return Some(Evicted { page, dirty: e.dirty });
-                }
-            }
+        let i = self.head;
+        if i == NIL {
+            return None;
         }
-        None
+        let n = self.slab[i as usize];
+        self.unlink(i);
+        self.free.push(i);
+        self.index.remove(&n.page);
+        self.evictions += 1;
+        Some(Evicted { page: n.page, dirty: n.dirty })
     }
 
     pub fn hit_rate(&self) -> f64 {
@@ -220,6 +278,21 @@ mod tests {
     }
 
     #[test]
+    fn remove_unlinks_and_recycles() {
+        let mut m = LocalMemory::new(2, Replacement::Lru);
+        m.install(1, 0.0);
+        m.install(2, 0.0);
+        assert_eq!(m.remove(1), Some(Evicted { page: 1, dirty: false }));
+        assert_eq!(m.remove(1), None, "double remove");
+        assert_eq!(m.len(), 1);
+        // Capacity freed: two more installs evict only page 2.
+        m.install(3, 1.0);
+        let ev = m.install(4, 2.0).unwrap();
+        assert_eq!(ev.page, 2);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
     fn capacity_never_exceeded_property() {
         crate::util::proptest::check(0x10CA1, 30, |rng| {
             let cap = 1 + rng.index(8);
@@ -237,6 +310,7 @@ mod tests {
                     m.install(page, t as f64);
                 }
                 assert!(m.len() <= cap, "len {} > cap {cap}", m.len());
+                assert!(m.slab.len() <= cap + 1, "slab leak: {}", m.slab.len());
             }
         });
     }
@@ -253,6 +327,125 @@ mod tests {
                     assert!(resident.remove(&ev.page), "phantom victim {}", ev.page);
                 }
                 resident.insert(page);
+            }
+        });
+    }
+
+    /// Brute-force reference model: a plain `Vec` ordered LRU→MRU with
+    /// linear scans — the semantics the intrusive list must reproduce
+    /// exactly (victim identity, dirty bit, arrival gating, counters).
+    struct NaiveLocal {
+        cap: usize,
+        policy: Replacement,
+        /// (page, dirty, installed_at), index 0 = next victim.
+        entries: Vec<(u64, bool, f64)>,
+        hits: u64,
+        misses: u64,
+        evictions: u64,
+    }
+
+    impl NaiveLocal {
+        fn new(cap: usize, policy: Replacement) -> Self {
+            Self { cap, policy, entries: Vec::new(), hits: 0, misses: 0, evictions: 0 }
+        }
+
+        fn access(&mut self, page: u64, write: bool, now: f64) -> bool {
+            if let Some(i) = self.entries.iter().position(|e| e.0 == page) {
+                if self.entries[i].2 <= now {
+                    self.entries[i].1 |= write;
+                    if self.policy == Replacement::Lru {
+                        let e = self.entries.remove(i);
+                        self.entries.push(e);
+                    }
+                    self.hits += 1;
+                    return true;
+                }
+            }
+            self.misses += 1;
+            false
+        }
+
+        fn install(&mut self, page: u64, at: f64) -> Option<Evicted> {
+            if let Some(i) = self.entries.iter().position(|e| e.0 == page) {
+                self.entries[i].2 = self.entries[i].2.min(at);
+                return None;
+            }
+            let mut victim = None;
+            if self.entries.len() >= self.cap {
+                let (page, dirty, _) = self.entries.remove(0);
+                self.evictions += 1;
+                victim = Some(Evicted { page, dirty });
+            }
+            self.entries.push((page, false, at));
+            victim
+        }
+
+        fn remove(&mut self, page: u64) -> Option<Evicted> {
+            let i = self.entries.iter().position(|e| e.0 == page)?;
+            let (page, dirty, _) = self.entries.remove(i);
+            Some(Evicted { page, dirty })
+        }
+    }
+
+    #[test]
+    fn matches_naive_reference_model_property() {
+        // The LRU/FIFO equivalence pin: over random access/install/remove
+        // streams, every observable of the intrusive-list implementation
+        // (return values, victims, counters, residency) must match the
+        // naive model step for step.
+        crate::util::proptest::check(0x10CA3, 40, |rng| {
+            let cap = 1 + rng.index(6);
+            let policy = if rng.chance(0.5) {
+                Replacement::Lru
+            } else {
+                Replacement::Fifo
+            };
+            let mut fast = LocalMemory::new(cap, policy);
+            let mut slow = NaiveLocal::new(cap, policy);
+            for t in 0..400u64 {
+                let page = rng.below(20);
+                let now = t as f64;
+                match rng.below(10) {
+                    0 => assert_eq!(fast.remove(page), slow.remove(page), "remove {page} @ {t}"),
+                    1..=4 => {
+                        // Arrival times sometimes in the future to exercise
+                        // the installed_at <= now gating.
+                        let at = now + if rng.chance(0.3) { 5.0 } else { 0.0 };
+                        assert_eq!(
+                            fast.install(page, at),
+                            slow.install(page, at),
+                            "install {page} @ {t}"
+                        );
+                    }
+                    5 => {
+                        fast.mark_dirty(page);
+                        if let Some(i) = slow.entries.iter().position(|e| e.0 == page) {
+                            slow.entries[i].1 = true;
+                        }
+                    }
+                    _ => {
+                        let write = rng.chance(0.3);
+                        assert_eq!(
+                            fast.access(page, write, now),
+                            slow.access(page, write, now),
+                            "access {page} @ {t}"
+                        );
+                    }
+                }
+                assert_eq!(fast.len(), slow.entries.len(), "len @ {t}");
+                assert_eq!(
+                    (fast.hits, fast.misses, fast.evictions),
+                    (slow.hits, slow.misses, slow.evictions),
+                    "counters @ {t}"
+                );
+            }
+            // Drain: eviction order of the survivors must agree too.
+            for t in 1000..1000 + cap as u64 {
+                assert_eq!(
+                    fast.install(1_000_000 + t, t as f64),
+                    slow.install(1_000_000 + t, t as f64),
+                    "drain install @ {t}"
+                );
             }
         });
     }

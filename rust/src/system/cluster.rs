@@ -41,6 +41,7 @@ use crate::daemon::EgressStats;
 use crate::metrics::Metrics;
 use crate::net::NetSchedule;
 use crate::schemes::SchemeKind;
+use crate::sim::MergeQueue;
 use crate::system::machine::{Machine, RemoteMemory, SizeOracle};
 use crate::workloads::Trace;
 use std::sync::Arc;
@@ -153,20 +154,32 @@ impl Cluster {
         for (t, tr) in self.tenants.iter_mut().zip(traces) {
             t.prepare(tr);
         }
-        loop {
-            let mut best: Option<(usize, usize, f64)> = None;
-            for (i, t) in self.tenants.iter().enumerate() {
-                if let Some((ci, at)) = t.peek(&traces[i]) {
-                    if at >= self.kills[i] {
-                        continue; // killed compute component: no more issues
-                    }
-                    if best.map(|(_, _, bt)| at < bt).unwrap_or(true) {
-                        best = Some((i, ci, at));
-                    }
+        // K-way merge over tenant clocks: one `(next issue time, tenant)`
+        // entry per live tenant, min on time with ties to the lowest
+        // tenant index — the exact order the seed driver's per-step
+        // rescan of every tenant produced, in O(log tenants) per access.
+        // Only the stepped tenant's clock moves, so entries never go
+        // stale; a tenant is dropped (not re-pushed) once its trace
+        // drains or its next issue would be at/after its kill cycle —
+        // clocks are monotone, so neither condition can reverse.
+        let mut q = MergeQueue::with_capacity(self.tenants.len());
+        for (i, t) in self.tenants.iter().enumerate() {
+            if let Some((_, at)) = t.peek(&traces[i]) {
+                if at < self.kills[i] {
+                    q.push(at, i);
                 }
             }
-            let Some((i, ci, _)) = best else { break };
+        }
+        while let Some((i, _)) = q.pop() {
+            let (ci, _) = self.tenants[i]
+                .peek(&traces[i])
+                .expect("queued tenant must have work left");
             self.tenants[i].step_core(&mut self.remote, &traces[i], ci);
+            if let Some((_, at)) = self.tenants[i].peek(&traces[i]) {
+                if at < self.kills[i] {
+                    q.push(at, i);
+                }
+            }
         }
         for t in self.tenants.iter_mut() {
             t.finish(&mut self.remote);

@@ -29,7 +29,7 @@ use crate::mem::{Access as CacheAccess, Cache, DramBus, LocalMemory};
 use crate::metrics::Metrics;
 use crate::net::{Class, Disturbance, Fabric, ScheduleHandle};
 use crate::schemes::{Policy, SchemeKind};
-use crate::sim::EventQueue;
+use crate::sim::{EventQueue, MergeQueue};
 use crate::system::fault::RecoveryPolicy;
 use crate::workloads::{Scale, Trace, Workload};
 
@@ -182,6 +182,11 @@ pub struct Machine {
     local_bus: DramBus,
     engine: ComputeEngine,
     arrivals: EventQueue<Arrival>,
+    /// K-way merge over core clocks — one `(next issue time, core)` entry
+    /// per core with trace left.  Built by [`Machine::prepare`]; while
+    /// absent (or invalidated by an out-of-order [`Machine::step_core`])
+    /// the driver falls back to the historical linear scan.
+    run_queue: Option<MergeQueue>,
     oracle: Box<dyn SizeOracle>,
     pub metrics: Metrics,
     interval_cycles: f64,
@@ -276,6 +281,7 @@ impl Machine {
             ),
             engine: ComputeEngine::new(dp),
             arrivals: EventQueue::new(),
+            run_queue: None,
             oracle,
             metrics: Metrics::new(),
             interval_cycles,
@@ -741,10 +747,24 @@ impl Machine {
         }
     }
 
-    /// Pre-run setup (local-only schemes preinstall every page).  Part of
-    /// the stepping API a [`crate::system::Cluster`] drives directly.
+    /// Pre-run setup: local-only schemes preinstall every page, and the
+    /// core merge-queue is (re)built so `peek`/`next_core`/`step_core`
+    /// run in O(log cores) instead of rescanning every core per access.
+    /// Part of the stepping API a [`crate::system::Cluster`] drives
+    /// directly.  The queue snapshots which cores have work against
+    /// *these* traces — every later stepping call must pass the same
+    /// trace list (all drivers do); to switch lists, call `prepare`
+    /// again.
     pub fn prepare<T: std::borrow::Borrow<Trace>>(&mut self, traces: &[T]) {
         assert!(!traces.is_empty());
+        let mut q = MergeQueue::with_capacity(self.cores.len());
+        for ci in 0..self.cores.len() {
+            let t: &Trace = traces[ci % traces.len()].borrow();
+            if self.cores[ci].pos < t.accesses.len() {
+                q.push(self.cores[ci].time, ci);
+            }
+        }
+        self.run_queue = Some(q);
         if self.policy.local_only {
             for (ci, t) in traces.iter().enumerate().take(self.cores.len()) {
                 for a in &t.borrow().accesses {
@@ -768,8 +788,13 @@ impl Machine {
     }
 
     /// The core the driver advances next: smallest time with work left
-    /// (first core wins ties, matching the legacy run loop).
+    /// (first core wins ties, matching the legacy run loop).  O(1) off
+    /// the merge-queue after [`Machine::prepare`]; the pre-`prepare`
+    /// fallback is the historical linear scan.
     pub fn next_core<T: std::borrow::Borrow<Trace>>(&self, traces: &[T]) -> Option<usize> {
+        if let Some(q) = &self.run_queue {
+            return q.peek().map(|(ci, _)| ci);
+        }
         let mut best: Option<(usize, f64)> = None;
         for ci in 0..self.cores.len() {
             let t: &Trace = traces[ci % traces.len()].borrow();
@@ -802,7 +827,27 @@ impl Machine {
         let t: &Trace = traces[ci % traces.len()].borrow();
         let a = t.accesses[self.cores[ci].pos];
         self.cores[ci].pos += 1;
+        let remaining = self.cores[ci].pos < t.accesses.len();
+        // Merge-queue maintenance: by the peek/next_core contract the
+        // stepped core is the queue head — drop its entry and re-enter it
+        // at its advanced clock below.  Stepping any *other* core leaves
+        // the queue stale, so it is invalidated (linear-scan fallback)
+        // rather than silently misordering.
+        let head = self.run_queue.as_ref().and_then(MergeQueue::peek).map(|(i, _)| i);
+        let queued = if head == Some(ci) {
+            self.run_queue.as_mut().unwrap().pop();
+            true
+        } else {
+            self.run_queue = None;
+            false
+        };
         self.step(remote, ci, a.addr, a.write, a.gap);
+        if queued && remaining {
+            self.run_queue
+                .as_mut()
+                .expect("merge queue present while maintained")
+                .push(self.cores[ci].time, ci);
+        }
     }
 
     /// Advance one access on the next core over `remote`; returns false
@@ -850,13 +895,15 @@ impl Machine {
         };
         // Per-interval downlink utilization, averaged over this tenant's
         // ports across all modules (the variability time-series input).
+        // Collected per module first so the accumulator is allocated once
+        // at its final length instead of growing as modules report.
         self.metrics.net_util_series = {
-            let mut series: Vec<f64> = Vec::new();
-            for m in 0..remote.modules() {
-                let s = remote.fabric.down_series(m, self.id, horizon);
-                if s.len() > series.len() {
-                    series.resize(s.len(), 0.0);
-                }
+            let per_module: Vec<Vec<f64>> = (0..remote.modules())
+                .map(|m| remote.fabric.down_series(m, self.id, horizon))
+                .collect();
+            let len = per_module.iter().map(Vec::len).max().unwrap_or(0);
+            let mut series = vec![0.0; len];
+            for s in &per_module {
                 for (i, v) in s.iter().enumerate() {
                     series[i] += v;
                 }

@@ -1,0 +1,158 @@
+//! Fast, deterministic hashing for the simulator's hot tables.
+//!
+//! `std::collections::HashMap`'s default `RandomState` is SipHash-1-3 —
+//! DoS-resistant, but ~10x the cost of a multiply-rotate mix on the
+//! small fixed-width keys every hot map here uses (page ids, `(u64,
+//! u64)` fingerprints).  The replay loop probes those maps on every
+//! simulated access, so the hasher is hot-path arithmetic, not I/O.
+//!
+//! This is the Fx ("Firefox") hash: per 8-byte word,
+//! `hash = (hash.rotate_left(5) ^ word) * K` with a golden-ratio-derived
+//! odd constant.  Two properties matter here:
+//!
+//! * **speed** — one rotate, one xor, one multiply per word, no lanes,
+//!   no finalizer;
+//! * **determinism** — no random per-process seed, so any code that
+//!   (incorrectly) let map iteration order reach the metrics would at
+//!   least fail *reproducibly* across runs of the same binary.  The
+//!   determinism rules still forbid iterating these maps into results —
+//!   see DESIGN.md §"Simulator performance model".
+//!
+//! The crate is dependency-free by policy (offline registry), so this is
+//! a from-scratch implementation of the well-known algorithm, not a
+//! vendored crate.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiplier: 2^64 / phi, forced odd (the same constant the simulator's
+/// PRNG and placement hash already use as a mixing multiplier).
+const K: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Fx multiply-rotate hasher.  Not DoS-resistant — keys here are
+/// simulator-internal (page numbers, fingerprints), never adversarial.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(K);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rest.len()].copy_from_slice(rest);
+            // Length-tag the tail word so "ab" != "ab\0".
+            self.add(u64::from_le_bytes(tail) ^ (rest.len() as u64) << 56);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add(i);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, i: u128) {
+        self.add(i as u64);
+        self.add((i >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add(i as u64);
+    }
+}
+
+/// Zero-sized deterministic builder (no per-map random state).
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` keyed by [`FxHasher`] — construct with `FxHashMap::default()`.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` keyed by [`FxHasher`] — construct with `FxHashSet::default()`.
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+/// Hash one value to a `u64` with [`FxHasher`] (shard selection, key
+/// fingerprints).
+#[inline]
+pub fn fx_hash_one<T: std::hash::Hash>(v: &T) -> u64 {
+    let mut h = FxHasher::default();
+    v.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_hasher_instances() {
+        // No random state: two maps / two hashers agree, always.
+        assert_eq!(fx_hash_one(&42u64), fx_hash_one(&42u64));
+        assert_eq!(fx_hash_one(&"page"), fx_hash_one(&"page"));
+        assert_eq!(fx_hash_one(&(7u64, 9u64)), fx_hash_one(&(7u64, 9u64)));
+    }
+
+    #[test]
+    fn distinguishes_nearby_keys() {
+        // Not a collision-resistance proof — just a sanity screen that the
+        // mix isn't degenerate on the simulator's typical key shapes.
+        let pages: Vec<u64> = (0..1000).map(|p| fx_hash_one(&(p as u64))).collect();
+        let mut uniq = pages.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), pages.len(), "adjacent page ids collided");
+        assert_ne!(fx_hash_one(&0u64), fx_hash_one(&1u64));
+    }
+
+    #[test]
+    fn byte_tail_is_length_tagged() {
+        let mut a = FxHasher::default();
+        a.write(b"ab");
+        let mut b = FxHasher::default();
+        b.write(b"ab\0");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn map_and_set_aliases_work() {
+        let mut m: FxHashMap<u64, u32> = FxHashMap::default();
+        m.insert(4096, 1);
+        assert_eq!(m.get(&4096), Some(&1));
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        assert!(s.insert(7) && !s.insert(7));
+    }
+}

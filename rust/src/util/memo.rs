@@ -1,0 +1,189 @@
+//! Fixed-shard concurrent memo for pure-function results.
+//!
+//! The compressed-size store used to be one process-global
+//! `Mutex<HashMap>`, locked on *every* `Compressor::size_of` miss and
+//! every insert — which serialized the orchestrator's `--jobs K` workers
+//! exactly where they spend their time.  A [`ShardedMemo`] splits the key
+//! space across N independent `RwLock`ed shards selected by the key's
+//! [`fx_hash_one`](crate::util::hash::fx_hash_one) fingerprint: readers
+//! of different keys never contend, readers of the *same* shard share the
+//! read lock, and writers only exclude their own shard.
+//!
+//! The memo is an optimization, not a correctness store — callers must
+//! recompute on a miss — so each shard enforces a hard entry cap instead
+//! of evicting: once a shard is full, further inserts are dropped and
+//! counted in `full_drops` (surfaced by `Compressor` stats as
+//! `memo_full`).  Dropping is deterministic-per-key-set but fill *order*
+//! under concurrency is not; that only ever changes how often a value is
+//! recomputed, never its value.
+
+use crate::util::hash::{fx_hash_one, FxHashMap};
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Occupancy counters for a [`ShardedMemo`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Entries currently memoized across all shards.
+    pub entries: usize,
+    /// Inserts dropped because their shard was at capacity.
+    pub full_drops: u64,
+}
+
+/// N-way sharded, bounded, concurrent memo of pure values.
+pub struct ShardedMemo<K, V> {
+    shards: Vec<RwLock<FxHashMap<K, V>>>,
+    /// Power-of-two mask selecting a shard from a key fingerprint.
+    mask: u64,
+    per_shard_cap: usize,
+    full_drops: AtomicU64,
+}
+
+impl<K: Hash + Eq, V: Copy> ShardedMemo<K, V> {
+    /// `shards` is rounded up to a power of two; `per_shard_cap` bounds
+    /// each shard (total capacity = shards x per_shard_cap).
+    pub fn new(shards: usize, per_shard_cap: usize) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        Self {
+            shards: (0..n).map(|_| RwLock::new(FxHashMap::default())).collect(),
+            mask: n as u64 - 1,
+            per_shard_cap,
+            full_drops: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, key: &K) -> &RwLock<FxHashMap<K, V>> {
+        // High bits select the shard so shard index and in-shard bucket
+        // (which uses the low bits) stay decorrelated.
+        &self.shards[((fx_hash_one(key) >> 48) & self.mask) as usize]
+    }
+
+    /// Memoized value for `key`, if present (shared read lock).
+    #[inline]
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.shard(key).read().unwrap().get(key).copied()
+    }
+
+    /// Memoize `value` under `key`.  Returns false (and counts the drop)
+    /// when the shard is at capacity — the caller keeps its value either
+    /// way; only future callers lose the shortcut.
+    pub fn insert(&self, key: K, value: V) -> bool {
+        let mut shard = self.shard(&key).write().unwrap();
+        if shard.len() >= self.per_shard_cap && !shard.contains_key(&key) {
+            drop(shard);
+            self.full_drops.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        shard.insert(key, value);
+        true
+    }
+
+    /// Lookup, computing and memoizing on a miss.  `compute` runs outside
+    /// any lock — concurrent same-key callers may both compute (the value
+    /// is pure, so both arrive at the same answer and the second insert
+    /// is a no-op overwrite of an equal value).
+    pub fn get_or_insert_with(&self, key: K, compute: impl FnOnce() -> V) -> V {
+        if let Some(v) = self.get(&key) {
+            return v;
+        }
+        let v = compute();
+        self.insert(key, v);
+        v
+    }
+
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            entries: self.shards.iter().map(|s| s.read().unwrap().len()).sum(),
+            full_drops: self.full_drops.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Drop every memoized entry and reset the drop counter.
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
+        self.full_drops.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memoizes_and_counts() {
+        let m: ShardedMemo<(u64, u64), u32> = ShardedMemo::new(8, 100);
+        assert_eq!(m.get(&(1, 2)), None);
+        assert_eq!(m.get_or_insert_with((1, 2), || 42), 42);
+        assert_eq!(m.get(&(1, 2)), Some(42));
+        // Hit path: the closure must not run again.
+        assert_eq!(m.get_or_insert_with((1, 2), || panic!("recompute on hit")), 42);
+        assert_eq!(m.stats(), MemoStats { entries: 1, full_drops: 0 });
+        m.clear();
+        assert_eq!(m.stats(), MemoStats::default());
+    }
+
+    #[test]
+    fn full_shard_drops_inserts_but_stays_correct() {
+        // 1 shard x 4 entries: the 5th distinct key is dropped and
+        // counted, but get_or_insert_with still returns the right value
+        // (computed, just not memoized).
+        let m: ShardedMemo<u64, u32> = ShardedMemo::new(1, 4);
+        for k in 0..4u64 {
+            assert!(m.insert(k, k as u32 * 10), "insert under cap");
+        }
+        assert!(!m.insert(99, 990), "insert past cap must be dropped");
+        assert_eq!(m.get(&99), None, "dropped key is not memoized");
+        assert_eq!(m.stats(), MemoStats { entries: 4, full_drops: 1 });
+        // The caller-facing contract survives the full memo.
+        assert_eq!(m.get_or_insert_with(99, || 990), 990);
+        assert_eq!(m.stats().full_drops, 2, "each dropped insert is counted");
+        // Existing keys still hit and may be overwritten in place.
+        assert_eq!(m.get(&3), Some(30));
+        assert!(m.insert(3, 31), "overwrite of a resident key is not a drop");
+        assert_eq!(m.get(&3), Some(31));
+        assert_eq!(m.stats().entries, 4);
+    }
+
+    #[test]
+    fn keys_spread_over_shards() {
+        let m: ShardedMemo<u64, u32> = ShardedMemo::new(8, 2);
+        // 64 keys into 8 shards x 2 cap: spreading must memoize far more
+        // than one shard's worth even though shards individually fill.
+        let mut kept = 0u64;
+        for k in 0..64u64 {
+            if m.insert(k, 0) {
+                kept += 1;
+            }
+        }
+        assert_eq!(kept as usize, m.stats().entries);
+        assert!(kept > 2, "all keys landed in one shard");
+        assert_eq!(m.stats().full_drops, 64 - kept);
+    }
+
+    #[test]
+    fn concurrent_fill_and_read_converge() {
+        use std::sync::Arc;
+        let m: Arc<ShardedMemo<u64, u64>> = Arc::new(ShardedMemo::new(16, 1000));
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    for i in 0..500u64 {
+                        let k = (i + t * 31) % 400;
+                        assert_eq!(m.get_or_insert_with(k, || k * 3), k * 3);
+                    }
+                });
+            }
+        });
+        let st = m.stats();
+        assert_eq!(st.entries, 400);
+        assert_eq!(st.full_drops, 0);
+        for k in 0..400u64 {
+            assert_eq!(m.get(&k), Some(k * 3));
+        }
+    }
+}

@@ -1,9 +1,12 @@
-//! Shared infrastructure: PRNGs, statistics, tables, JSON, CLI parsing and
-//! a property-test harness — all in-repo because the offline registry
-//! carries no rand/serde/clap/proptest.
+//! Shared infrastructure: PRNGs, statistics, tables, JSON, CLI parsing,
+//! fast deterministic hashing, a sharded concurrent memo and a
+//! property-test harness — all in-repo because the offline registry
+//! carries no rand/serde/clap/proptest/rustc-hash.
 
 pub mod cli;
+pub mod hash;
 pub mod json;
+pub mod memo;
 pub mod prng;
 pub mod proptest;
 pub mod stats;

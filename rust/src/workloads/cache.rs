@@ -13,7 +13,7 @@
 
 use super::{by_name, Scale, Trace};
 use crate::compress::synth::Profile;
-use std::collections::HashMap;
+use crate::util::hash::FxHashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -36,7 +36,9 @@ pub struct CacheStats {
 type Slot = Arc<OnceLock<(Arc<Trace>, Profile)>>;
 
 pub struct TraceCache {
-    map: Mutex<HashMap<TraceKey, Slot>>,
+    // Fx-hashed (keys are simulator-internal, never iterated into
+    // results); the lock is held only for the slot lookup.
+    map: Mutex<FxHashMap<TraceKey, Slot>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -44,7 +46,7 @@ pub struct TraceCache {
 impl TraceCache {
     pub fn new() -> Self {
         Self {
-            map: Mutex::new(HashMap::new()),
+            map: Mutex::new(FxHashMap::default()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
         }

@@ -1,0 +1,78 @@
+//! Determinism pins for the hot-path data structures (sharded size memo,
+//! Fx-hashed tables, O(1) LRU, heap-driven stepping): the same cell must
+//! produce byte-identical `Metrics::to_json` output on repeat runs of the
+//! same process and under any `--jobs` worker count.  Map iteration order
+//! and memo fill order must never reach the metrics — see DESIGN.md
+//! §"Simulator performance model".
+
+use daemon_sim::config::SimConfig;
+use daemon_sim::experiments::orchestrator::{run_cells_flat, CellSpec, Shard};
+use daemon_sim::experiments::Runner;
+use daemon_sim::metrics::Metrics;
+use daemon_sim::schemes::SchemeKind;
+use daemon_sim::system::Machine;
+use daemon_sim::workloads::cache::TraceCache;
+use daemon_sim::workloads::{by_name, Scale};
+
+fn run_once(kind: SchemeKind) -> String {
+    let w = by_name("pr").unwrap();
+    let cfg = SimConfig::test_scale().with_seed(11);
+    let trace = w.generate(cfg.seed, Scale::Test);
+    let mut m = Machine::new(
+        cfg,
+        kind,
+        trace.footprint_pages,
+        vec![w.profile()],
+        None,
+    );
+    m.run(std::slice::from_ref(&trace));
+    m.metrics.to_json().to_string()
+}
+
+#[test]
+fn pq_and_daemon_repeat_runs_are_byte_identical() {
+    // Two full runs of the same trace in one process: the second run hits
+    // the process-global size memo the first run populated, plus every
+    // Fx-hashed table and the new LRU — none of which may perturb a
+    // single metric byte.
+    for kind in [SchemeKind::Pq, SchemeKind::Daemon] {
+        let a = run_once(kind);
+        let b = run_once(kind);
+        assert_eq!(a, b, "{kind:?}: repeat run diverged");
+    }
+}
+
+/// The `--jobs 4` determinism pin: pq + daemon (+ lc, the heaviest user
+/// of the shared compressed-size memo) cells over shared traces must
+/// produce byte-identical metrics whether one worker fills the sharded
+/// memo serially or four workers race it.
+#[test]
+fn jobs_4_matches_jobs_1_byte_identically() {
+    let r = Runner::test();
+    let cells: Vec<CellSpec> = ["pr", "sp"]
+        .into_iter()
+        .flat_map(|wl| {
+            [SchemeKind::Pq, SchemeKind::Daemon, SchemeKind::Lc]
+                .into_iter()
+                .map(move |k| CellSpec::new(wl, k, SimConfig::test_scale()))
+        })
+        .collect();
+    let fmt = |slots: Vec<Option<Vec<Metrics>>>| -> Vec<String> {
+        slots
+            .into_iter()
+            .map(|s| {
+                s.expect("unsharded run fills every slot")
+                    .iter()
+                    .map(|m| m.to_json().to_string())
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            })
+            .collect()
+    };
+    let serial = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 1));
+    let racing = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 4));
+    assert_eq!(serial, racing, "--jobs 4 diverged from --jobs 1");
+    // And a second racing pass over the now-warm global memo.
+    let warm = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 4));
+    assert_eq!(serial, warm, "warm-memo rerun diverged");
+}
