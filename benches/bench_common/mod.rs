@@ -10,6 +10,11 @@
 //! orchestrator, so traces are generated once per key and every cell of
 //! every requested figure fans out across the worker pool together.
 
+// Benches measure wall-clock throughput and stamp artifacts with host
+// time — the one place outside the CLI where reading the clock is the
+// point, not entropy.
+#![allow(clippy::disallowed_methods)]
+
 use daemon_sim::experiments::orchestrator::{self, Shard, SweepResult};
 use daemon_sim::experiments::Runner;
 use daemon_sim::util::json::Json;

@@ -32,6 +32,8 @@ fn main() {
             .any(|w| w[0] == "--estimator" && w[1] == "pjrt");
     let r = Runner::paper();
     let cfg = SimConfig::default();
+    // Wall-time progress reporting only — never feeds simulated time.
+    #[allow(clippy::disallowed_methods)]
     let t_start = std::time::Instant::now();
 
     let mut table = Table::new(

@@ -1,0 +1,111 @@
+//! `daemon-lint` — the repo's zero-dependency determinism and
+//! invariant static-analysis gate.
+//!
+//! Scans `rust/src`, `rust/tests`, and `benches` and enforces the
+//! DESIGN.md determinism rules (R1 hashing, R2 entropy, R3 iteration
+//! order) plus the drift invariants (R4 registry/lifecycle docs, R5
+//! shard wire format).  CI runs this as a required check; run it
+//! locally with `cargo run --bin daemon-lint`.
+//!
+//! Usage:
+//!   daemon-lint [--root DIR]    scan a tree (default: current dir)
+//!   daemon-lint --list          print rule ids and summaries
+//!   daemon-lint --explain RULE  print a rule's DESIGN.md rationale
+//!
+//! Exit codes: 0 clean, 1 diagnostics found, 2 usage/setup error.
+
+use daemon_sim::util::lint::{all_rules, canonical_rule, run, Repo, Rule};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    root: PathBuf,
+    list: bool,
+    explain: Option<String>,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args { root: PathBuf::from("."), list: false, explain: None };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                let v = it.next().ok_or("--root needs a directory argument")?;
+                args.root = PathBuf::from(v);
+            }
+            "--list" => args.list = true,
+            "--explain" => {
+                let v = it.next().ok_or("--explain needs a rule id argument")?;
+                args.explain = Some(v);
+            }
+            "--help" | "-h" => return Err("help".to_string()),
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+const USAGE: &str = "usage: daemon-lint [--root DIR] [--list] [--explain RULE]";
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) if msg == "help" => {
+            println!("{USAGE}");
+            return ExitCode::SUCCESS;
+        }
+        Err(msg) => {
+            eprintln!("daemon-lint: {msg}");
+            eprintln!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if args.list {
+        for rule in all_rules() {
+            println!("{:<18} {}", rule.id(), rule.summary());
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    if let Some(name) = args.explain {
+        let Some(id) = canonical_rule(&name) else {
+            eprintln!("daemon-lint: unknown rule `{name}` (try --list)");
+            return ExitCode::from(2);
+        };
+        for rule in all_rules() {
+            if rule.id() == id {
+                println!("{} — {}\n\n{}", rule.id(), rule.summary(), rule.explain());
+            }
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    if !args.root.join("Cargo.toml").is_file() || !args.root.join("rust/src").is_dir() {
+        eprintln!(
+            "daemon-lint: `{}` does not look like the repo root (want Cargo.toml and \
+             rust/src); pass --root",
+            args.root.display()
+        );
+        return ExitCode::from(2);
+    }
+
+    let repo = match Repo::load(&args.root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("daemon-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let diags = run(&repo);
+    if diags.is_empty() {
+        eprintln!("daemon-lint: clean ({} files scanned)", repo.files.len());
+        ExitCode::SUCCESS
+    } else {
+        for d in &diags {
+            println!("{d}");
+        }
+        eprintln!("daemon-lint: {} violation(s)", diags.len());
+        ExitCode::from(1)
+    }
+}

@@ -6,15 +6,19 @@
 //! (Fig. 12) uses a 256B dictionary table and 6-cycle latency per line —
 //! timing is charged by the simulator.
 
+use crate::util::hash::{FxHashMap, FxHashSet};
+
 const DICT_ENTRIES: usize = 64;
 
 /// Build the dictionary: the `DICT_ENTRIES` most frequent words.
 fn build_dict(words: &[u32]) -> Vec<u32> {
-    let mut counts: std::collections::HashMap<u32, u32> = std::collections::HashMap::new();
+    let mut counts: FxHashMap<u32, u32> = FxHashMap::default();
     for &w in words {
         *counts.entry(w).or_insert(0) += 1;
     }
     let mut pairs: Vec<(u32, u32)> = counts.into_iter().collect();
+    // Total order (count desc, then word) — map iteration order is
+    // irrelevant to the chosen dictionary.
     pairs.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
     pairs.into_iter().take(DICT_ENTRIES).map(|(w, _)| w).collect()
 }
@@ -32,7 +36,7 @@ pub fn compressed_size(data: &[u8]) -> usize {
         })
         .collect();
     let dict = build_dict(&words);
-    let dict_set: std::collections::HashSet<u32> = dict.iter().copied().collect();
+    let dict_set: FxHashSet<u32> = dict.iter().copied().collect();
     let mut bits: u64 = 0;
     for &w in &words {
         bits += 1; // hit/miss flag
@@ -43,7 +47,7 @@ pub fn compressed_size(data: &[u8]) -> usize {
         }
     }
     // Dictionary sync cost: count distinct hit values actually used.
-    let used: std::collections::HashSet<u32> =
+    let used: FxHashSet<u32> =
         words.iter().copied().filter(|w| dict_set.contains(w)).collect();
     let dict_bytes = 4 * used.len();
     ((bits.div_ceil(8)) as usize + dict_bytes).min(data.len())

@@ -219,7 +219,7 @@ mod tests {
         // that id, ids are unique, and the default set is the in_all
         // slice of the registry.
         let r = Runner::test();
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = crate::util::hash::FxHashSet::default();
         for def in &REGISTRY {
             assert!(seen.insert(def.id), "duplicate experiment id {}", def.id);
             assert!(!def.about.is_empty(), "{} has no description", def.id);

@@ -174,6 +174,8 @@ fn cmd_run(args: &Args) -> i32 {
             vec![workload.profile(); cfg.cores],
             oracle,
         );
+        // CLI progress reporting only — never feeds simulated time.
+        #[allow(clippy::disallowed_methods)]
         let t0 = std::time::Instant::now();
         m.run(std::slice::from_ref(&trace));
         let wall = t0.elapsed().as_secs_f64();
@@ -282,6 +284,8 @@ fn cmd_experiment(args: &Args) -> i32 {
             std::fs::create_dir_all(d).map_err(|e| format!("{}: {e}", d.display()))?;
         }
 
+        // CLI progress reporting only — never feeds simulated time.
+        #[allow(clippy::disallowed_methods)]
         let t0 = std::time::Instant::now();
         let cache = TraceCache::global();
         match shard {

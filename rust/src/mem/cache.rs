@@ -200,8 +200,8 @@ mod tests {
     fn victim_address_reconstruction_property() {
         crate::util::proptest::check(0xCAC4E, 30, |rng| {
             let mut c = tiny();
-            let mut resident: std::collections::HashSet<u64> =
-                std::collections::HashSet::new();
+            let mut resident: crate::util::hash::FxHashSet<u64> =
+                crate::util::hash::FxHashSet::default();
             for _ in 0..200 {
                 let addr = (rng.below(64) * 64) & !63;
                 match c.access(addr, rng.chance(0.5)) {

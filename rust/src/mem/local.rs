@@ -319,8 +319,8 @@ mod tests {
     fn eviction_victims_were_resident_property() {
         crate::util::proptest::check(0x10CA2, 20, |rng| {
             let mut m = LocalMemory::new(4, Replacement::Lru);
-            let mut resident: std::collections::HashSet<u64> =
-                std::collections::HashSet::new();
+            let mut resident: crate::util::hash::FxHashSet<u64> =
+                crate::util::hash::FxHashSet::default();
             for t in 0..200u64 {
                 let page = rng.below(16);
                 if let Some(ev) = m.install(page, t as f64) {

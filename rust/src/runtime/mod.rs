@@ -18,8 +18,8 @@
 
 use crate::compress::synth::{gen_page_words, Profile};
 use crate::system::SizeOracle;
+use crate::util::hash::FxHashMap;
 use crate::util::prng::Rng;
-use std::collections::HashMap;
 
 /// Must match `python/compile/model.py::AOT_BATCH`.
 pub const AOT_BATCH: usize = 64;
@@ -198,7 +198,7 @@ pub struct PjrtOracle {
     params: NetParams,
     seed: u64,
     profiles: Vec<Profile>,
-    cache: HashMap<(usize, u64), u32>,
+    cache: FxHashMap<(usize, u64), u32>,
     raw_bytes: u64,
     compressed_bytes: u64,
     pub batches_run: u64,
@@ -211,7 +211,7 @@ impl PjrtOracle {
             params,
             seed,
             profiles,
-            cache: HashMap::new(),
+            cache: FxHashMap::default(),
             raw_bytes: 0,
             compressed_bytes: 0,
             batches_run: 0,

@@ -60,6 +60,17 @@ pub struct TenantInit {
     pub oracle: Option<Box<dyn SizeOracle>>,
 }
 
+/// Tenant lifecycle (see DESIGN.md §"Lifecycles and state machines"):
+/// a tenant is `Running` until its trace drains (`Finished`) or the
+/// fault plan's kill cycle arrives first (`Killed`).  Both exits are
+/// terminal — the driver never re-queues a terminal tenant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantState {
+    Running,
+    Killed,
+    Finished,
+}
+
 pub struct Cluster {
     tenants: Vec<Machine>,
     remote: RemoteMemory,
@@ -67,6 +78,9 @@ pub struct Cluster {
     /// tenant is never killed): the driver issues no access at or after
     /// a tenant's kill cycle.
     kills: Vec<f64>,
+    /// Per-tenant lifecycle, updated by [`Cluster::run`] as tenants
+    /// leave the merge queue.
+    states: Vec<TenantState>,
 }
 
 impl Cluster {
@@ -128,7 +142,7 @@ impl Cluster {
         let kills: Vec<f64> = (0..inits.len())
             .map(|t| ccfg.faults.as_ref().map_or(f64::INFINITY, |p| p.kill_time(t)))
             .collect();
-        let tenants = inits
+        let tenants: Vec<Machine> = inits
             .into_iter()
             .enumerate()
             .map(|(i, t)| {
@@ -138,12 +152,30 @@ impl Cluster {
                 m
             })
             .collect();
-        Cluster { tenants, remote, kills }
+        let states = vec![TenantState::Running; tenants.len()];
+        Cluster { tenants, remote, kills, states }
     }
 
     /// Number of tenants in the cluster.
     pub fn tenants(&self) -> usize {
         self.tenants.len()
+    }
+
+    /// Lifecycle state of tenant `t` (`Running` until [`Cluster::run`]
+    /// retires it).
+    pub fn tenant_state(&self, t: usize) -> TenantState {
+        self.states[t]
+    }
+
+    /// Retire tenant `t`.  Running → {Killed, Finished} is the only legal
+    /// move — both exits are terminal (asserted).
+    fn transition(&mut self, t: usize, to: TenantState) {
+        assert_eq!(
+            self.states[t],
+            TenantState::Running,
+            "tenant {t} retired twice (to {to:?})"
+        );
+        self.states[t] = to;
     }
 
     /// Run every tenant to completion over the shared fabric; one trace
@@ -162,12 +194,13 @@ impl Cluster {
         // stale; a tenant is dropped (not re-pushed) once its trace
         // drains or its next issue would be at/after its kill cycle —
         // clocks are monotone, so neither condition can reverse.
+        self.states = vec![TenantState::Running; self.tenants.len()];
         let mut q = MergeQueue::with_capacity(self.tenants.len());
-        for (i, t) in self.tenants.iter().enumerate() {
-            if let Some((_, at)) = t.peek(&traces[i]) {
-                if at < self.kills[i] {
-                    q.push(at, i);
-                }
+        for i in 0..self.tenants.len() {
+            match self.tenants[i].peek(&traces[i]) {
+                Some((_, at)) if at < self.kills[i] => q.push(at, i),
+                Some(_) => self.transition(i, TenantState::Killed),
+                None => self.transition(i, TenantState::Finished),
             }
         }
         while let Some((i, _)) = q.pop() {
@@ -175,10 +208,10 @@ impl Cluster {
                 .peek(&traces[i])
                 .expect("queued tenant must have work left");
             self.tenants[i].step_core(&mut self.remote, &traces[i], ci);
-            if let Some((_, at)) = self.tenants[i].peek(&traces[i]) {
-                if at < self.kills[i] {
-                    q.push(at, i);
-                }
+            match self.tenants[i].peek(&traces[i]) {
+                Some((_, at)) if at < self.kills[i] => q.push(at, i),
+                Some(_) => self.transition(i, TenantState::Killed),
+                None => self.transition(i, TenantState::Finished),
             }
         }
         for t in self.tenants.iter_mut() {
@@ -519,6 +552,28 @@ mod tests {
             base[0].to_json().to_string(),
             "survivor perturbed by a peer tenant's death"
         );
+    }
+
+    #[test]
+    fn tenant_lifecycle_states_track_kills_and_completion() {
+        use crate::system::fault::FaultPlan;
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let mk_init = || TenantInit {
+            cfg: cfg.clone(),
+            kind: SchemeKind::Remote,
+            footprint_pages: trace.footprint_pages,
+            profiles: vec![profile],
+            oracle: None,
+        };
+        let traces = vec![vec![trace.clone()], vec![trace.clone()]];
+        let ccfg = ClusterConfig::new(1).with_faults(FaultPlan::new().tenant_kill(1, 1e5));
+        let mut cluster = Cluster::new(&ccfg, vec![mk_init(), mk_init()]);
+        assert_eq!(cluster.tenant_state(0), TenantState::Running);
+        assert_eq!(cluster.tenant_state(1), TenantState::Running);
+        cluster.run(&traces);
+        assert_eq!(cluster.tenant_state(0), TenantState::Finished, "survivor drains");
+        assert_eq!(cluster.tenant_state(1), TenantState::Killed, "victim retired at 1e5");
     }
 
     #[test]

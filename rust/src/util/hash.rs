@@ -22,6 +22,10 @@
 //! a from-scratch implementation of the well-known algorithm, not a
 //! vendored crate.
 
+// The one sanctioned import of the std map types: everything downstream
+// goes through the Fx aliases below (clippy `disallowed_types` +
+// daemon-lint R1 enforce this).
+#[allow(clippy::disallowed_types)]
 use std::collections::{HashMap, HashSet};
 use std::hash::{BuildHasherDefault, Hasher};
 
@@ -100,9 +104,11 @@ impl Hasher for FxHasher {
 pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
 
 /// `HashMap` keyed by [`FxHasher`] — construct with `FxHashMap::default()`.
+#[allow(clippy::disallowed_types)]
 pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
 
 /// `HashSet` keyed by [`FxHasher`] — construct with `FxHashSet::default()`.
+#[allow(clippy::disallowed_types)]
 pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
 
 /// Hash one value to a `u64` with [`FxHasher`] (shard selection, key

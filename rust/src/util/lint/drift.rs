@@ -1,0 +1,283 @@
+//! R4: registry/doc drift.
+//!
+//! Two sync invariants that rot silently without a gate:
+//!
+//! * every experiment id registered in `rust/src/experiments/mod.rs`
+//!   is documented in EXPERIMENTS.md, and every id-shaped token in
+//!   DESIGN.md / EXPERIMENTS.md names a registered experiment;
+//! * every lifecycle state enum named in DESIGN.md's "Lifecycles and
+//!   state machines" transition tables exists in the source, and every
+//!   state named in a table's first column appears as a source
+//!   identifier.
+//!
+//! The rule anchors on the registry file: fixture repos without it are
+//! skipped entirely (a real tree without it would not build), while a
+//! real tree with the registry but without the docs is drift.
+
+use super::{scan, Diagnostic, Repo, Rule, SourceFile, R4};
+
+const REGISTRY_PATH: &str = "rust/src/experiments/mod.rs";
+const LIFECYCLE_HEADING: &str = "## Lifecycles and state machines";
+
+pub struct DocDrift;
+
+fn registry_ids(f: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in f.raw.iter().enumerate() {
+        if let Some(rest) = line.trim_start().strip_prefix("id: \"") {
+            if let Some(end) = rest.find('"') {
+                out.push((rest[..end].to_string(), i + 1));
+            }
+        }
+    }
+    out
+}
+
+fn ident_tokens(line: &str) -> impl Iterator<Item = &str> {
+    line.split(|c: char| !scan::is_ident_char(c)).filter(|t| !t.is_empty())
+}
+
+/// Does `tok` look like an experiment id?  Only the distinctive shapes
+/// are claimed (`fig<N>`, `table<N>`, `cluster_*`, `ablation_*`); free
+/// ids like `headline` are covered by the forward direction only.
+fn id_shaped(tok: &str) -> bool {
+    for p in ["fig", "table"] {
+        if let Some(rest) = tok.strip_prefix(p) {
+            if !rest.is_empty() && rest.bytes().all(|b| b.is_ascii_digit()) {
+                return true;
+            }
+        }
+    }
+    ["cluster_", "ablation_"].iter().any(|p| tok.strip_prefix(p).is_some_and(|r| !r.is_empty()))
+}
+
+fn doc_has_token(text: &str, tok: &str) -> bool {
+    text.lines().any(|l| scan::has_token(l, tok))
+}
+
+/// Backticked spans of a markdown line: odd-indexed pieces of a split
+/// on the backtick character.
+fn backtick_spans(line: &str) -> Vec<&str> {
+    line.split('`').enumerate().filter(|(i, _)| i % 2 == 1).map(|(_, s)| s).collect()
+}
+
+fn lifecycle_section(text: &str) -> Vec<(usize, &str)> {
+    let mut out = Vec::new();
+    let mut inside = false;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim_end() == LIFECYCLE_HEADING {
+            inside = true;
+            continue;
+        }
+        if inside && line.starts_with("## ") {
+            break;
+        }
+        if inside {
+            out.push((i + 1, line));
+        }
+    }
+    out
+}
+
+fn enum_shaped(name: &str) -> bool {
+    name.ends_with("State")
+        && name.len() > "State".len()
+        && name.starts_with(|c: char| c.is_ascii_uppercase())
+        && name.chars().all(|c| c.is_ascii_alphanumeric())
+}
+
+fn source_has_token(repo: &Repo, tok: &str) -> bool {
+    repo.files.iter().any(|f| f.code.iter().any(|l| scan::has_token(l, tok)))
+}
+
+impl Rule for DocDrift {
+    fn id(&self) -> &'static str {
+        R4
+    }
+
+    fn summary(&self) -> &'static str {
+        "experiment registry and lifecycle docs stay in sync with source"
+    }
+
+    fn explain(&self) -> &'static str {
+        "DESIGN.md \"Experiment index\" and \"Lifecycles and state machines\": the docs\n\
+         are the contract for what the binary can run and how its state machines move.\n\
+         R4 checks three things: (a) every id in experiments::REGISTRY is mentioned in\n\
+         EXPERIMENTS.md; (b) every id-shaped token (fig<N>, table<N>, cluster_*,\n\
+         ablation_*) in DESIGN.md/EXPERIMENTS.md names a registered experiment; (c)\n\
+         every `SomethingState` enum named in the lifecycle section exists in rust/src,\n\
+         and every state in a lifecycle table's first column appears as a source\n\
+         identifier.  Fix by registering the experiment, documenting it, or updating\n\
+         the stale doc."
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
+        let Some(reg) = repo.file(REGISTRY_PATH) else { return };
+        let ids = registry_ids(reg);
+
+        match repo.doc("EXPERIMENTS.md") {
+            Some(exps) => {
+                for (id, line) in &ids {
+                    if !doc_has_token(exps, id) {
+                        let msg = format!("experiment id `{id}` is not documented in \
+                                           EXPERIMENTS.md");
+                        out.push(Diagnostic::new(REGISTRY_PATH, *line, R4, msg));
+                    }
+                }
+            }
+            None => {
+                let msg = "EXPERIMENTS.md is missing".to_string();
+                out.push(Diagnostic::new(REGISTRY_PATH, 1, R4, msg));
+            }
+        }
+
+        for (doc, text) in &repo.docs {
+            for (i, line) in text.lines().enumerate() {
+                for tok in ident_tokens(line) {
+                    if id_shaped(tok) && !ids.iter().any(|(id, _)| id == tok) {
+                        let msg = format!(
+                            "`{tok}` looks like an experiment id but is not in the registry"
+                        );
+                        out.push(Diagnostic::new(doc, i + 1, R4, msg));
+                    }
+                }
+            }
+        }
+
+        let Some(design) = repo.doc("DESIGN.md") else {
+            let msg = "DESIGN.md is missing".to_string();
+            out.push(Diagnostic::new(REGISTRY_PATH, 1, R4, msg));
+            return;
+        };
+        let section = lifecycle_section(design);
+        let mut checked: Vec<&str> = Vec::new();
+        for (line_no, line) in &section {
+            for span in backtick_spans(line) {
+                let name = span.rsplit("::").next().unwrap_or(span);
+                if enum_shaped(name) && !checked.contains(&name) {
+                    checked.push(name);
+                    let pat = format!("enum {name}");
+                    if !source_has_token(repo, &pat) {
+                        let msg = format!(
+                            "lifecycle enum `{name}` is named in DESIGN.md but `{pat}` \
+                             does not exist in the scanned source"
+                        );
+                        out.push(Diagnostic::new("DESIGN.md", *line_no, R4, msg));
+                    }
+                }
+            }
+        }
+        let mut states: Vec<&str> = Vec::new();
+        for (line_no, line) in &section {
+            if !line.trim_start().starts_with('|') {
+                continue;
+            }
+            let Some(first) = line.split('|').nth(1) else { continue };
+            for span in backtick_spans(first) {
+                let ok = span.starts_with(|c: char| c.is_ascii_uppercase())
+                    && span.chars().all(scan::is_ident_char);
+                if ok && !states.contains(&span) {
+                    states.push(span);
+                    if !source_has_token(repo, span) {
+                        let msg = format!(
+                            "lifecycle state `{span}` is in a DESIGN.md transition table \
+                             but never appears in the scanned source"
+                        );
+                        out.push(Diagnostic::new("DESIGN.md", *line_no, R4, msg));
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REGISTRY_FIXTURE: &str = "pub const REGISTRY: &[ExperimentDef] = &[\n\
+        ExperimentDef {\n\
+        id: \"fig1\",\n\
+        },\n\
+        ExperimentDef {\n\
+        id: \"cluster_a\",\n\
+        },\n\
+        ];\n";
+
+    const DESIGN_FIXTURE: &str = "# Doc\n\n\
+        ## Lifecycles and state machines\n\n\
+        ### Thing lifecycle (`foo::BarState`)\n\n\
+        | state | meaning |\n\
+        |---|---|\n\
+        | `Alpha` | first |\n\
+        | `Gone` | second |\n\n\
+        ## Next section\n\nfig1 again.\n";
+
+    const ENUM_FIXTURE: &str = "pub enum BarState { Alpha }\n";
+
+    fn check(files: &[(&str, &str)], docs: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let repo = Repo::from_fixtures(files, docs);
+        let mut out = Vec::new();
+        DocDrift.check(&repo, &mut out);
+        out
+    }
+
+    #[test]
+    fn clean_fixture_passes() {
+        let d = check(
+            &[(REGISTRY_PATH, REGISTRY_FIXTURE), ("rust/src/e.rs", ENUM_FIXTURE)],
+            &[
+                ("DESIGN.md", "## Lifecycles and state machines\n\n| state |\n| `Alpha` |\n"),
+                ("EXPERIMENTS.md", "Run fig1 and cluster_a.\n"),
+            ],
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn unregistered_doc_id_and_undocumented_registry_id_are_flagged() {
+        let d = check(
+            &[(REGISTRY_PATH, REGISTRY_FIXTURE)],
+            &[("EXPERIMENTS.md", "Only fig1 here, plus unknown fig9 and ablation_x.\n")],
+        );
+        let msgs: Vec<String> = d.iter().map(|x| x.to_string()).collect();
+        assert!(msgs.iter().any(|m| m.contains("`cluster_a`") && m.contains("not documented")));
+        assert!(msgs.iter().any(|m| m.contains("`fig9`")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("`ablation_x`")), "{msgs:?}");
+        assert!(d.iter().all(|x| x.rule == R4));
+    }
+
+    #[test]
+    fn registry_line_numbers_point_at_the_id() {
+        let docs = [("EXPERIMENTS.md", "fig1\n"), ("DESIGN.md", "no lifecycle section\n")];
+        let d = check(&[(REGISTRY_PATH, REGISTRY_FIXTURE)], &docs);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].line, 6, "cluster_a's `id:` line is line 6");
+    }
+
+    #[test]
+    fn missing_docs_are_drift_when_the_registry_exists() {
+        let d = check(&[(REGISTRY_PATH, REGISTRY_FIXTURE)], &[]);
+        assert!(d.iter().any(|x| x.message.contains("EXPERIMENTS.md is missing")));
+        assert!(d.iter().any(|x| x.message.contains("DESIGN.md is missing")));
+        assert!(check(&[("rust/src/other.rs", "fn f() {}\n")], &[]).is_empty());
+    }
+
+    #[test]
+    fn lifecycle_enum_and_state_drift_are_flagged() {
+        let docs = [
+            ("DESIGN.md", DESIGN_FIXTURE),
+            ("EXPERIMENTS.md", "fig1 cluster_a\n"),
+        ];
+        let d = check(&[(REGISTRY_PATH, REGISTRY_FIXTURE), ("rust/src/e.rs", ENUM_FIXTURE)], &docs);
+        let msgs: Vec<String> = d.iter().map(|x| x.to_string()).collect();
+        assert_eq!(d.len(), 1, "{msgs:?}");
+        assert!(msgs[0].contains("`Gone`"), "{msgs:?}");
+
+        let no_enum = check(&[(REGISTRY_PATH, REGISTRY_FIXTURE)], &docs);
+        assert!(
+            no_enum.iter().any(|x| x.message.contains("`BarState`")),
+            "missing enum is drift: {no_enum:?}"
+        );
+    }
+}

@@ -1,0 +1,386 @@
+//! `daemon-lint`: the repo's zero-dependency static-analysis pass.
+//!
+//! The simulator's correctness story rests on determinism rules and
+//! lifecycle/wire invariants that used to live only as prose in
+//! DESIGN.md.  This module makes them executable: a line/token-level
+//! scanner (`scan`) feeds five rules, each a small struct implementing
+//! [`Rule`]:
+//!
+//! * `R1-rand-state` — no `std::collections` hash maps/sets with the
+//!   default `RandomState` outside an allowlist (`rules::RandState`);
+//! * `R2-wall-clock` — no wall-clock or environment entropy in
+//!   simulation code (`rules::WallClock`);
+//! * `R3-unordered-iter` — no unattested iteration over unordered maps
+//!   in files that feed `Metrics` or JSON (`rules::UnorderedIter`);
+//! * `R4-doc-drift` — registry ids and lifecycle enums stay in sync
+//!   with EXPERIMENTS.md / DESIGN.md (`drift::DocDrift`);
+//! * `R5-wire-drift` — the shard wire format matches the committed
+//!   golden manifest (`wire::WireDrift`).
+//!
+//! Violations can be waived in place with comment attestations:
+//! `// lint: sorted` attests that an iteration on the next (or same)
+//! line is order-independent or explicitly sorted before it reaches
+//! output, and `// lint: allow(R1): <reason>` waives a named rule with
+//! a written justification.  Attestations without a reason, unknown
+//! directives, and unknown rule ids are themselves diagnostics, so the
+//! waiver surface stays auditable.
+//!
+//! The `daemon-lint` binary (`rust/src/bin/lint.rs`) drives this over
+//! `rust/src`, `rust/tests`, and `benches`, and CI runs it as a
+//! required gate.  See DESIGN.md §"Static analysis & invariant
+//! enforcement" for the policy discussion.
+
+pub mod drift;
+pub mod rules;
+pub mod scan;
+pub mod wire;
+pub mod wire_manifest;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Rule ids, in report order.  The short form (`R1`) is accepted
+/// anywhere a rule id is named (attestations, `--explain`).
+pub const R1: &str = "R1-rand-state";
+pub const R2: &str = "R2-wall-clock";
+pub const R3: &str = "R3-unordered-iter";
+pub const R4: &str = "R4-doc-drift";
+pub const R5: &str = "R5-wire-drift";
+/// Pseudo-rule id for malformed attestation directives.
+pub const ATTEST: &str = "attest";
+
+const RULE_IDS: [&str; 5] = [R1, R2, R3, R4, R5];
+
+/// Directories scanned for `.rs` files, relative to the repo root.
+pub const SCAN_ROOTS: [&str; 3] = ["rust/src", "rust/tests", "benches"];
+
+/// Markdown files the drift rules read, relative to the repo root.
+pub const DOC_FILES: [&str; 2] = ["DESIGN.md", "EXPERIMENTS.md"];
+
+/// Resolve a rule name (full id or short `R<n>` form) to its canonical
+/// id.
+pub fn canonical_rule(name: &str) -> Option<&'static str> {
+    RULE_IDS
+        .iter()
+        .find(|id| **id == name || id.split('-').next() == Some(name))
+        .copied()
+}
+
+/// One finding, rendered as `path:line: rule-id message`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(path: &str, line: usize, rule: &'static str, message: String) -> Self {
+        Self { path: path.to_string(), line, rule, message }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {} {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// Attestations attached to one source line.
+#[derive(Clone, Debug, Default)]
+pub struct Marks {
+    /// `// lint: sorted` — iteration here is order-independent or
+    /// sorted before it reaches output.
+    pub sorted: bool,
+    /// Canonical rule ids waived by `// lint: allow(...): reason`.
+    pub allow: Vec<&'static str>,
+}
+
+impl Marks {
+    fn any(&self) -> bool {
+        self.sorted || !self.allow.is_empty()
+    }
+
+    fn merge(&mut self, other: &Marks) {
+        self.sorted |= other.sorted;
+        for id in &other.allow {
+            if !self.allow.contains(id) {
+                self.allow.push(id);
+            }
+        }
+    }
+}
+
+/// One scanned source file: raw lines, comment/literal-blanked code
+/// lines, and per-line attestation marks.
+pub struct SourceFile {
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    pub raw: Vec<String>,
+    pub code: Vec<String>,
+    marks: Vec<Marks>,
+    /// Diagnostics for malformed attestation directives.
+    attest: Vec<Diagnostic>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let scanned = scan::strip(text);
+        let raw: Vec<String> = text.lines().map(str::to_string).collect();
+        let n = raw.len();
+        let mut code = scanned.code;
+        let mut comments = scanned.comments;
+        code.resize(n, String::new());
+        comments.resize(n, String::new());
+        let mut marks: Vec<Marks> = vec![Marks::default(); n];
+        let mut attest = Vec::new();
+        for (i, (cm, mk)) in comments.iter().zip(marks.iter_mut()).enumerate() {
+            parse_directive(path, i, cm, mk, &mut attest);
+        }
+        // A directive on a comment-only line attests the next line, so
+        // an attestation can sit above the statement it waives.
+        for i in 1..n {
+            if code[i - 1].trim().is_empty() && marks[i - 1].any() {
+                let prev = marks[i - 1].clone();
+                marks[i].merge(&prev);
+            }
+        }
+        SourceFile { path: path.to_string(), raw, code, marks, attest }
+    }
+
+    /// Is `rule` waived on 0-based line `line0`?
+    pub fn allows(&self, line0: usize, rule: &str) -> bool {
+        self.marks.get(line0).is_some_and(|m| m.allow.iter().any(|a| *a == rule))
+    }
+
+    /// Does 0-based line `line0` carry a `sorted` attestation?
+    pub fn sorted_ok(&self, line0: usize) -> bool {
+        self.marks.get(line0).is_some_and(|m| m.sorted)
+    }
+}
+
+fn parse_directive(
+    path: &str,
+    line0: usize,
+    comment: &str,
+    marks: &mut Marks,
+    out: &mut Vec<Diagnostic>,
+) {
+    let t = comment.trim_start_matches(['!', '*', ' ', '\t']).trim_end();
+    let Some(rest) = t.strip_prefix("lint:") else { return };
+    let rest = rest.trim();
+    if let Some(after) = rest.strip_prefix("sorted") {
+        if after.starts_with(scan::is_ident_char) {
+            let msg = format!("unknown directive `{rest}`");
+            out.push(Diagnostic::new(path, line0 + 1, ATTEST, msg));
+        } else {
+            marks.sorted = true;
+        }
+        return;
+    }
+    if let Some(body) = rest.strip_prefix("allow(") {
+        let Some(close) = body.find(')') else {
+            let msg = "unclosed `allow(` in attestation".to_string();
+            out.push(Diagnostic::new(path, line0 + 1, ATTEST, msg));
+            return;
+        };
+        let reason = body[close + 1..].trim_start_matches([':', ' ', '\t']).trim();
+        if reason.is_empty() {
+            let msg = "allow() needs a written justification after the rule list".to_string();
+            out.push(Diagnostic::new(path, line0 + 1, ATTEST, msg));
+        }
+        for name in body[..close].split(',') {
+            let name = name.trim();
+            match canonical_rule(name) {
+                Some(id) => marks.allow.push(id),
+                None => {
+                    let msg = format!("unknown rule id `{name}` in allow()");
+                    out.push(Diagnostic::new(path, line0 + 1, ATTEST, msg));
+                }
+            }
+        }
+        return;
+    }
+    let msg = format!("unknown directive `{rest}`");
+    out.push(Diagnostic::new(path, line0 + 1, ATTEST, msg));
+}
+
+/// The scanned tree the rules run over.
+pub struct Repo {
+    pub files: Vec<SourceFile>,
+    /// `(repo-relative path, text)` for each doc file found.
+    pub docs: Vec<(String, String)>,
+}
+
+impl Repo {
+    /// Scan `SCAN_ROOTS` and `DOC_FILES` under `root`.  Missing roots
+    /// are skipped (fixture trees); unreadable files are errors.
+    pub fn load(root: &Path) -> Result<Repo, String> {
+        let mut files = Vec::new();
+        for sub in SCAN_ROOTS {
+            let dir = root.join(sub);
+            if !dir.is_dir() {
+                continue;
+            }
+            let mut paths = Vec::new();
+            walk(&dir, &mut paths)?;
+            for p in paths {
+                let text = std::fs::read_to_string(&p)
+                    .map_err(|e| format!("read {}: {e}", p.display()))?;
+                let rel = p.strip_prefix(root).unwrap_or(&p).to_string_lossy().replace('\\', "/");
+                files.push(SourceFile::parse(&rel, &text));
+            }
+        }
+        let mut docs = Vec::new();
+        for name in DOC_FILES {
+            if let Ok(text) = std::fs::read_to_string(root.join(name)) {
+                docs.push((name.to_string(), text));
+            }
+        }
+        Ok(Repo { files, docs })
+    }
+
+    /// Build a repo from in-memory fixtures (rule unit tests).
+    pub fn from_fixtures(files: &[(&str, &str)], docs: &[(&str, &str)]) -> Repo {
+        Repo {
+            files: files.iter().map(|(p, t)| SourceFile::parse(p, t)).collect(),
+            docs: docs.iter().map(|(p, t)| (p.to_string(), t.to_string())).collect(),
+        }
+    }
+
+    pub fn file(&self, path: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path == path)
+    }
+
+    pub fn doc(&self, path: &str) -> Option<&str> {
+        self.docs.iter().find(|(p, _)| p == path).map(|(_, t)| t.as_str())
+    }
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for e in rd {
+        entries.push(e.map_err(|e| format!("read {}: {e}", dir.display()))?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// A lint rule: an id, a one-line summary, a DESIGN.md-backed rationale
+/// for `--explain`, and the check itself.
+pub trait Rule {
+    fn id(&self) -> &'static str;
+    fn summary(&self) -> &'static str;
+    fn explain(&self) -> &'static str;
+    fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>);
+}
+
+/// All rules, in report order.
+pub fn all_rules() -> Vec<Box<dyn Rule>> {
+    vec![
+        Box::new(rules::RandState),
+        Box::new(rules::WallClock),
+        Box::new(rules::UnorderedIter),
+        Box::new(drift::DocDrift),
+        Box::new(wire::WireDrift),
+    ]
+}
+
+/// Run every rule plus the attestation checks; diagnostics are sorted
+/// by `(path, line, rule)` so output order is deterministic.
+pub fn run(repo: &Repo) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in &repo.files {
+        out.extend(f.attest.iter().cloned());
+    }
+    for rule in all_rules() {
+        rule.check(repo, &mut out);
+    }
+    out.sort_by(|a, b| a.path.cmp(&b.path).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagnostic_renders_file_line_rule() {
+        let d = Diagnostic::new("rust/src/x.rs", 7, R1, "msg".to_string());
+        assert_eq!(d.to_string(), "rust/src/x.rs:7: R1-rand-state msg");
+    }
+
+    #[test]
+    fn canonical_rule_accepts_short_and_full_ids() {
+        assert_eq!(canonical_rule("R1"), Some(R1));
+        assert_eq!(canonical_rule("R3-unordered-iter"), Some(R3));
+        assert_eq!(canonical_rule("R9"), None);
+        assert_eq!(canonical_rule("sorted"), None);
+    }
+
+    #[test]
+    fn sorted_attestation_marks_same_and_next_line() {
+        let f = SourceFile::parse(
+            "f.rs",
+            "// lint: sorted\nfor k in m.keys() {}\nx.iter(); // lint: sorted\n",
+        );
+        assert!(f.sorted_ok(1), "comment-only directive reaches the next line");
+        assert!(f.sorted_ok(2), "trailing directive marks its own line");
+        assert!(f.attest.is_empty(), "well-formed directives produce no diagnostics");
+    }
+
+    #[test]
+    fn allow_requires_reason_and_known_rule() {
+        let f = SourceFile::parse("f.rs", "// lint: allow(R1)\nlet x = 1;\n");
+        assert_eq!(f.attest.len(), 1);
+        assert_eq!(f.attest[0].rule, ATTEST);
+        assert!(f.allows(1, R1), "rule is still parsed so the waiver is visible");
+
+        let f = SourceFile::parse("f.rs", "// lint: allow(R7): because\nlet x = 1;\n");
+        assert_eq!(f.attest.len(), 1);
+        assert!(f.attest[0].message.contains("unknown rule id"));
+
+        let f = SourceFile::parse("f.rs", "// lint: allow(R1, R2): trusted site\nlet x = 1;\n");
+        assert!(f.attest.is_empty());
+        assert!(f.allows(1, R1) && f.allows(1, R2) && !f.allows(1, R3));
+    }
+
+    #[test]
+    fn unknown_directives_are_flagged() {
+        let f = SourceFile::parse("f.rs", "// lint: sortedish\n// lint: frobnicate\n");
+        assert_eq!(f.attest.len(), 2);
+        assert!(f.attest.iter().all(|d| d.rule == ATTEST));
+    }
+
+    #[test]
+    fn directives_inside_strings_are_ignored() {
+        let f = SourceFile::parse("f.rs", "let s = \"// lint: frobnicate\";\n");
+        assert!(f.attest.is_empty());
+    }
+
+    #[test]
+    fn prose_comments_mentioning_the_word_lint_are_not_directives() {
+        let f = SourceFile::parse("f.rs", "// daemon-lint: the repo's analysis pass\n");
+        assert!(f.attest.is_empty());
+    }
+
+    #[test]
+    fn meta_lint_repo_is_clean_at_head() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let repo = Repo::load(root).expect("scan repo");
+        assert!(repo.files.len() > 30, "scanned {} files", repo.files.len());
+        let diags = run(&repo);
+        let rendered: Vec<String> = diags.iter().map(|d| d.to_string()).collect();
+        assert!(diags.is_empty(), "daemon-lint is not clean:\n{}", rendered.join("\n"));
+    }
+}

@@ -1,0 +1,390 @@
+//! Determinism rules R1–R3: hashing, entropy, and iteration order.
+//!
+//! These are the executable form of DESIGN.md §"Simulator performance
+//! model"'s determinism rules: results must be pure functions of
+//! `(config, seed)`, which forbids randomized hash seeds, wall-clock or
+//! environment reads, and unordered-map iteration on any path that can
+//! reach `Metrics` or JSON output.
+
+use super::{scan, Diagnostic, Repo, Rule, SourceFile, R1, R2, R3};
+
+/// Files where default-`RandomState` collections are sanctioned.  Keep
+/// this list short: the only legitimate site is the module that wraps
+/// `std`'s maps with the deterministic Fx hasher.
+const R1_ALLOWED_FILES: [&str; 1] = ["rust/src/util/hash.rs"];
+
+/// Path prefixes where wall-clock / environment reads are sanctioned:
+/// CLI timing and bench harness plumbing, never simulation code.
+const R2_ALLOWED_PREFIXES: [&str; 3] = ["rust/src/main.rs", "rust/src/bin/", "benches/"];
+
+const R2_TOKENS: [&str; 8] = [
+    "Instant::now",
+    "SystemTime",
+    "env::var",
+    "env::var_os",
+    "env::vars",
+    "env::vars_os",
+    "env::args",
+    "env::args_os",
+];
+
+/// R1: no `std::collections` hash maps/sets with the default
+/// (per-process randomized) `RandomState`.
+pub struct RandState;
+
+fn r1_match(line: &str) -> Option<String> {
+    let std_path = scan::has_token(line, "std::collections");
+    for base in ["HashMap", "HashSet"] {
+        if std_path && scan::has_token(line, base) {
+            return Some(format!("std::collections::{base}"));
+        }
+        for ctor in ["new", "with_capacity", "from"] {
+            let pat = format!("{base}::{ctor}");
+            if scan::has_token(line, &pat) {
+                return Some(pat);
+            }
+        }
+    }
+    None
+}
+
+impl Rule for RandState {
+    fn id(&self) -> &'static str {
+        R1
+    }
+
+    fn summary(&self) -> &'static str {
+        "no std hash collections with the default RandomState"
+    }
+
+    fn explain(&self) -> &'static str {
+        "DESIGN.md, determinism rules (\"Simulator performance model\"): results must be\n\
+         pure functions of (config, seed).  std::collections::HashMap/HashSet seed\n\
+         SipHash with per-process random state, so capacity history, iteration order,\n\
+         and anything derived from them varies run to run.  Use util::hash::FxHashMap /\n\
+         FxHashSet (deterministic, seedless, and faster on the simulator's small fixed\n\
+         keys).  The only sanctioned site is rust/src/util/hash.rs, which defines those\n\
+         aliases; anything else needs a `lint: allow(R1): <reason>` attestation."
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
+        for f in &repo.files {
+            if R1_ALLOWED_FILES.contains(&f.path.as_str()) {
+                continue;
+            }
+            for (i, line) in f.code.iter().enumerate() {
+                if f.allows(i, R1) {
+                    continue;
+                }
+                if let Some(tok) = r1_match(line) {
+                    let msg = format!(
+                        "`{tok}` uses the nondeterministic default RandomState; \
+                         use `util::hash::FxHashMap`/`FxHashSet`"
+                    );
+                    out.push(Diagnostic::new(&f.path, i + 1, R1, msg));
+                }
+            }
+        }
+    }
+}
+
+/// R2: no wall-clock or environment entropy in simulation code.
+pub struct WallClock;
+
+impl Rule for WallClock {
+    fn id(&self) -> &'static str {
+        R2
+    }
+
+    fn summary(&self) -> &'static str {
+        "no wall-clock or environment reads in simulation code"
+    }
+
+    fn explain(&self) -> &'static str {
+        "DESIGN.md, determinism rules (\"Simulator performance model\"): simulated time\n\
+         is driven by the event clock, never the host.  Instant::now/SystemTime and\n\
+         env reads make results depend on the machine and the moment, which breaks\n\
+         byte-identity across runs and across the sharded sweep merge.  Sanctioned\n\
+         sites are CLI timing in rust/src/main.rs, the lint binary under rust/src/bin/,\n\
+         and the bench harness under benches/ (host metadata in bench JSON is the\n\
+         point there); anything else needs a `lint: allow(R2): <reason>` attestation."
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
+        for f in &repo.files {
+            if R2_ALLOWED_PREFIXES.iter().any(|p| f.path.starts_with(p)) {
+                continue;
+            }
+            for (i, line) in f.code.iter().enumerate() {
+                if f.allows(i, R2) {
+                    continue;
+                }
+                if let Some(tok) = R2_TOKENS.iter().find(|t| scan::has_token(line, t)) {
+                    let msg = format!(
+                        "`{tok}` injects wall-clock/environment entropy; simulation \
+                         results must be pure functions of (config, seed)"
+                    );
+                    out.push(Diagnostic::new(&f.path, i + 1, R2, msg));
+                }
+            }
+        }
+    }
+}
+
+/// R3: no unattested iteration over unordered maps in files that feed
+/// `Metrics` or JSON output.
+pub struct UnorderedIter;
+
+const ITER_CALLS: [&str; 10] = [
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+    ".drain(",
+    ".retain(",
+];
+
+fn feeds_output(f: &SourceFile) -> bool {
+    f.code.iter().any(|l| scan::has_token(l, "Metrics") || scan::has_token(l, "Json"))
+}
+
+/// Extract the declared identifier to the left of a map type token:
+/// `let mut stamp: FxHashMap<..>`, `stamp = FxHashMap::default()`, and
+/// struct fields / fn params (`cache: FxHashMap<..>`).  Returns `None`
+/// for type positions that declare nothing (`Vec<FxHashMap<..>>`,
+/// `-> FxHashMap<..>`, `use` paths).
+fn decl_name(before: &str) -> Option<String> {
+    let mut s = before.trim_end();
+    loop {
+        if let Some(rest) = s.strip_suffix('&') {
+            s = rest.trim_end();
+        } else if let Some(rest) = s.strip_suffix("mut") {
+            if rest.ends_with(scan::is_ident_char) {
+                break;
+            }
+            s = rest.trim_end();
+        } else {
+            break;
+        }
+    }
+    let s = if let Some(rest) = s.strip_suffix(':') {
+        // A `::` path segment declares nothing.
+        if rest.ends_with(':') {
+            return None;
+        }
+        rest
+    } else if let Some(rest) = s.strip_suffix('=') {
+        // Comparison / arrow operators are not bindings.
+        if rest.ends_with(['=', '<', '>', '!', '+', '-', '*', '/']) {
+            return None;
+        }
+        rest
+    } else {
+        return None;
+    };
+    let s = s.trim_end();
+    let tail: Vec<char> = s.chars().rev().take_while(|c| scan::is_ident_char(*c)).collect();
+    let name: String = tail.into_iter().rev().collect();
+    let first = name.chars().next()?;
+    if first.is_ascii_uppercase() || first.is_ascii_digit() {
+        return None;
+    }
+    Some(name)
+}
+
+fn map_idents(f: &SourceFile) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for line in &f.code {
+        for ty in ["FxHashMap", "FxHashSet", "HashMap", "HashSet"] {
+            for at in scan::token_positions(line, ty) {
+                if let Some(name) = decl_name(&line[..at]) {
+                    if !out.contains(&name) {
+                        out.push(name);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn r3_match(line: &str, idents: &[String]) -> Option<String> {
+    for name in idents {
+        for call in ITER_CALLS {
+            let pat = format!("{name}{call}");
+            if scan::has_token(line, &pat) {
+                return Some(pat);
+            }
+        }
+        if scan::has_token(line, "for") {
+            for prefix in ["in ", "in &", "in &mut "] {
+                let pat = format!("{prefix}{name}");
+                if scan::has_token(line, &pat) {
+                    return Some(format!("for .. {pat}"));
+                }
+            }
+        }
+    }
+    None
+}
+
+impl Rule for UnorderedIter {
+    fn id(&self) -> &'static str {
+        R3
+    }
+
+    fn summary(&self) -> &'static str {
+        "no unattested iteration over unordered maps near output"
+    }
+
+    fn explain(&self) -> &'static str {
+        "DESIGN.md, determinism rules (\"Simulator performance model\"): map iteration\n\
+         order must never feed metrics.  Fx hashing makes the order deterministic for\n\
+         one binary, but it still shifts with insertion history and rebuilds, so any\n\
+         iteration in a file that touches Metrics or Json must either be provably\n\
+         order-independent (a commutative fold) or sort before emitting.  Attest such\n\
+         lines with `lint: sorted`; collect-then-sort is the house pattern."
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
+        for f in &repo.files {
+            if !feeds_output(f) {
+                continue;
+            }
+            let idents = map_idents(f);
+            if idents.is_empty() {
+                continue;
+            }
+            for (i, line) in f.code.iter().enumerate() {
+                if f.allows(i, R3) || f.sorted_ok(i) {
+                    continue;
+                }
+                if let Some(what) = r3_match(line, &idents) {
+                    let msg = format!(
+                        "`{what}` iterates an unordered map in a file that feeds \
+                         Metrics/JSON; sort (or prove order-independence) and attest \
+                         with `lint: sorted`"
+                    );
+                    out.push(Diagnostic::new(&f.path, i + 1, R3, msg));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::lint::run;
+
+    fn check_one(rule: &dyn Rule, files: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let repo = Repo::from_fixtures(files, &[]);
+        let mut out = Vec::new();
+        rule.check(&repo, &mut out);
+        out
+    }
+
+    #[test]
+    fn r1_flags_std_collections_and_bare_ctors() {
+        let bad = "use std::collections::HashMap;\nlet m = HashMap::new();\n\
+                   let s: std::collections::HashSet<u8> = Default::default();\n";
+        let d = check_one(&RandState, &[("rust/src/x.rs", bad)]);
+        assert_eq!(d.len(), 3);
+        assert_eq!((d[0].line, d[0].rule), (1, R1));
+        assert!(d[1].message.contains("HashMap::new"));
+    }
+
+    #[test]
+    fn r1_ignores_fx_aliases_comments_and_strings() {
+        let ok = "use crate::util::hash::{FxHashMap, FxHashSet};\n\
+                  let m: FxHashMap<u64, u32> = FxHashMap::default();\n\
+                  // std::collections::HashMap is banned here\n\
+                  let s = \"std::collections::HashMap\";\n\
+                  use std::collections::VecDeque;\n";
+        assert!(check_one(&RandState, &[("rust/src/x.rs", ok)]).is_empty());
+    }
+
+    #[test]
+    fn r1_respects_the_allowlist_file() {
+        let bad = "use std::collections::{HashMap, HashSet};\n";
+        assert!(check_one(&RandState, &[("rust/src/util/hash.rs", bad)]).is_empty());
+        assert_eq!(check_one(&RandState, &[("rust/src/mem/x.rs", bad)]).len(), 1);
+    }
+
+    #[test]
+    fn r1_allow_attestation_round_trips_through_run() {
+        let with = "// lint: allow(R1): fixture justification\n\
+                    use std::collections::HashMap;\n";
+        let without = "use std::collections::HashMap;\n";
+        let clean = run(&Repo::from_fixtures(&[("rust/src/x.rs", with)], &[]));
+        assert!(clean.is_empty(), "attested site still flagged: {clean:?}");
+        let dirty = run(&Repo::from_fixtures(&[("rust/src/x.rs", without)], &[]));
+        assert_eq!(dirty.len(), 1);
+        assert!(dirty[0].to_string().starts_with("rust/src/x.rs:1: R1-rand-state"));
+    }
+
+    #[test]
+    fn r2_flags_clock_and_env_outside_allowlist() {
+        let bad = "let t = std::time::Instant::now();\nlet e = std::env::var(\"X\");\n";
+        let d = check_one(&WallClock, &[("rust/src/system/x.rs", bad)]);
+        assert_eq!(d.len(), 2);
+        assert!(d[0].message.contains("Instant::now"));
+        assert!(check_one(&WallClock, &[("rust/src/main.rs", bad)]).is_empty());
+        assert!(check_one(&WallClock, &[("benches/x.rs", bad)]).is_empty());
+        assert!(check_one(&WallClock, &[("rust/src/bin/lint.rs", bad)]).is_empty());
+    }
+
+    #[test]
+    fn r3_flags_map_iteration_only_in_output_feeding_files() {
+        let body = "let mut counts: FxHashMap<u64, u64> = FxHashMap::default();\n\
+                    for (k, v) in &counts {\n    emit(k, v);\n}\n\
+                    let ks: Vec<_> = counts.keys().collect();\n";
+        let plain = format!("fn quiet() {{\n{body}}}\n");
+        assert!(check_one(&UnorderedIter, &[("rust/src/x.rs", &plain)]).is_empty());
+        let feeds = format!("fn to_json(m: &Metrics) {{\n{body}}}\n");
+        let d = check_one(&UnorderedIter, &[("rust/src/x.rs", &feeds)]);
+        assert_eq!(d.len(), 2);
+        assert!(d[0].message.contains("for .. in &counts"));
+        assert!(d[1].message.contains("counts.keys()"));
+    }
+
+    #[test]
+    fn r3_sorted_attestation_silences_the_line() {
+        let src = "fn f() -> Json {\n\
+                   let m: FxHashMap<u64, u64> = FxHashMap::default();\n\
+                   // lint: sorted\n\
+                   let mut v: Vec<_> = m.iter().collect();\n\
+                   v.sort();\n\
+                   for (k, _) in &m {}\n\
+                   }\n";
+        let d = check_one(&UnorderedIter, &[("rust/src/x.rs", src)]);
+        assert_eq!(d.len(), 1, "only the unattested loop is flagged: {d:?}");
+        assert_eq!(d[0].line, 6);
+    }
+
+    #[test]
+    fn r3_tracks_fields_params_and_drain() {
+        let src = "struct S { cache: FxHashMap<u64, u32> }\n\
+                   fn dump(s: &mut S, out: &mut Json) {\n\
+                   s.cache.retain(|_, v| *v > 0);\n\
+                   for v in s.cache.drain() {}\n\
+                   }\n";
+        let d = check_one(&UnorderedIter, &[("rust/src/x.rs", src)]);
+        assert_eq!(d.len(), 2);
+    }
+
+    #[test]
+    fn decl_name_extraction() {
+        assert_eq!(decl_name("    let mut stamp: ").as_deref(), Some("stamp"));
+        assert_eq!(decl_name("let counts = ").as_deref(), Some("counts"));
+        assert_eq!(decl_name("pub fn f(map: &mut "), Some("map".to_string()));
+        assert_eq!(decl_name("use crate::util::hash::"), None);
+        assert_eq!(decl_name("    -> "), None);
+        assert_eq!(decl_name("Vec<"), None);
+        assert_eq!(decl_name("if x == "), None);
+    }
+}

@@ -1,0 +1,329 @@
+//! Line-level Rust source scanner for the lint rules.
+//!
+//! The rules match *tokens* on *code*, so the scanner's job is to blank
+//! out everything that is not code: line comments, (nested) block
+//! comments, string literals, raw strings, byte strings, and char
+//! literals.  Delimiters are kept so column positions stay meaningful;
+//! the blanked regions become spaces.  Comment text is collected
+//! separately, per line, because that is where `lint:` attestations
+//! live.
+//!
+//! This is a scanner, not a parser: it tracks just enough state to know
+//! whether a byte is code, comment, or literal.  The subtle cases it
+//! handles are nested `/* /* */ */` comments, `r#"…"#` raw strings with
+//! arbitrary hash counts, `b"…"`/`b'…'` byte literals, escaped quotes,
+//! and the `'a'`-char vs `'a`-lifetime ambiguity (a quote starts a char
+//! literal only if the next char is a backslash or the char after next
+//! is a closing quote).
+
+/// A file split into parallel per-line views: `code` with all comment
+/// and literal *contents* blanked to spaces, and `comments` holding the
+/// comment text of each line.
+pub struct Scanned {
+    pub code: Vec<String>,
+    pub comments: Vec<String>,
+}
+
+enum St {
+    Code,
+    LineComment,
+    /// Block comment with nesting depth.
+    Block(u32),
+    Str,
+    /// Raw string terminated by `"` followed by this many `#`s.
+    RawStr(u8),
+    Char,
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(chars[i - 1])
+}
+
+pub fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// `'` at `i` starts a char literal (vs a lifetime) iff the next char is
+/// a backslash or the char after next is the closing quote.
+fn is_char_literal(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// Parse `r"`, `r#"`, `br"`, … at `i`; returns (hash count, chars consumed).
+fn raw_str_open(chars: &[char], i: usize) -> Option<(u8, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u8;
+    while chars.get(j) == Some(&'#') && hashes < u8::MAX {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+fn hashes_after(chars: &[char], i: usize, want: u8) -> bool {
+    (0..want as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// Scan `text` into blanked code lines and comment lines.  The two
+/// vectors always have the same length as `text.lines()` would produce.
+pub fn strip(text: &str) -> Scanned {
+    let chars: Vec<char> = text.chars().collect();
+    let mut code = Vec::new();
+    let mut comments = Vec::new();
+    let mut cl = String::new();
+    let mut cm = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            code.push(std::mem::take(&mut cl));
+            comments.push(std::mem::take(&mut cm));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cl.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == '\'' && is_char_literal(&chars, i) {
+                    cl.push('\'');
+                    st = St::Char;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((hashes, skip)) = raw_str_open(&chars, i) {
+                        cl.push('"');
+                        st = St::RawStr(hashes);
+                        i += skip;
+                    } else if c == 'b' && next == Some('"') {
+                        cl.push_str("b\"");
+                        st = St::Str;
+                        i += 2;
+                    } else if c == 'b' && next == Some('\'') && is_char_literal(&chars, i + 1) {
+                        cl.push_str("b'");
+                        st = St::Char;
+                        i += 2;
+                    } else {
+                        cl.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cl.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cm.push(c);
+                i += 1;
+            }
+            St::Block(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    st = if depth == 1 { St::Code } else { St::Block(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    st = St::Block(depth + 1);
+                    i += 2;
+                } else {
+                    cm.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' && chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                    i += 2;
+                } else if c == '"' {
+                    cl.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    cl.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' && hashes_after(&chars, i + 1, hashes) {
+                    cl.push('"');
+                    st = St::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    cl.push(' ');
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' && chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                    i += 2;
+                } else if c == '\'' {
+                    cl.push('\'');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    cl.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cl.is_empty() || !cm.is_empty() {
+        code.push(cl);
+        comments.push(cm);
+    }
+    Scanned { code, comments }
+}
+
+/// First token-boundary occurrence of `pat` in `line`: the characters
+/// immediately before and after the match must not be identifier chars,
+/// so `HashMap` does not match inside `FxHashMap`.  `pat` must be
+/// non-empty ASCII.
+pub fn find_token(line: &str, pat: &str) -> Option<usize> {
+    debug_assert!(!pat.is_empty() && pat.is_ascii());
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(pat) {
+        let at = start + pos;
+        let end = at + pat.len();
+        let before_ok = at == 0 || !line[..at].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = end >= line.len() || !line[end..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        start = end;
+    }
+    None
+}
+
+pub fn has_token(line: &str, pat: &str) -> bool {
+    find_token(line, pat).is_some()
+}
+
+/// All token-boundary occurrences of `pat` in `line`.
+pub fn token_positions(line: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < line.len() {
+        match find_token(&line[start..], pat) {
+            Some(pos) => {
+                out.push(start + pos);
+                start += pos + pat.len();
+            }
+            None => break,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        strip(text).code
+    }
+
+    #[test]
+    fn line_comments_are_blanked_and_collected() {
+        let s = strip("let x = 1; // HashMap here\nlet y = 2;\n");
+        assert_eq!(s.code[0], "let x = 1; ");
+        assert_eq!(s.comments[0], " HashMap here");
+        assert_eq!(s.code[1], "let y = 2;");
+        assert_eq!(s.comments[1], "");
+    }
+
+    #[test]
+    fn nested_block_comments_span_lines() {
+        let s = strip("a /* one /* two */ still */ b\nc /* open\nmore */ d\n");
+        assert_eq!(s.code[0], "a  b");
+        assert_eq!(s.code[1], "c ");
+        assert_eq!(s.code[2], " d");
+        assert!(s.comments[1].contains("open"));
+    }
+
+    #[test]
+    fn string_contents_are_blanked() {
+        let s = strip("let s = \"HashMap // not a comment\";\n");
+        assert!(!s.code[0].contains("HashMap"));
+        assert!(s.code[0].starts_with("let s = \""));
+        assert_eq!(s.comments[0], "");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_strings() {
+        let c = code_of("let s = \"a\\\"b\"; let t = 1;\n");
+        assert!(c[0].contains("let t = 1;"));
+        assert!(!c[0].contains('a'));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let c = code_of("let s = r#\"quote \" inside HashMap\"# + r\"x\";\n");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains('+'));
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        let c = code_of("let a = b\"HashMap\"; let b = b'x'; let k = br\"y\";\n");
+        assert!(!c[0].contains("HashMap"));
+        assert!(c[0].contains("let b = b'"));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let c = code_of("fn f<'a>(x: &'a str) -> &'a str { x }\nlet c = 'z'; let n = '\\n';\n");
+        assert!(c[0].contains("&'a str"));
+        assert!(!c[1].contains('z'));
+        assert!(c[1].contains("let n = '"));
+    }
+
+    #[test]
+    fn identifier_ending_in_r_does_not_open_raw_string() {
+        let c = code_of("let hasher = mixer(\"k\");\n");
+        assert!(c[0].contains("let hasher = mixer(\"") && c[0].contains("\");"));
+    }
+
+    #[test]
+    fn line_counts_match_lines() {
+        for text in ["", "a", "a\n", "a\nb", "a\n\n", "/* x\ny */\n"] {
+            let s = strip(text);
+            assert_eq!(s.code.len(), text.lines().count(), "text {text:?}");
+            assert_eq!(s.comments.len(), text.lines().count(), "text {text:?}");
+        }
+    }
+
+    #[test]
+    fn token_boundaries() {
+        assert!(has_token("use std::collections::HashMap;", "HashMap"));
+        assert!(!has_token("use crate::util::hash::FxHashMap;", "HashMap"));
+        assert!(!has_token("let map_x = HashMapLike::new();", "HashMap"));
+        assert!(has_token("a.iter()", "a.iter()"));
+        assert_eq!(find_token("xx HashMap xx HashMap", "HashMap"), Some(3));
+        assert_eq!(token_positions("HashMap + HashMap", "HashMap"), vec![0, 10]);
+    }
+}

@@ -1,0 +1,233 @@
+//! R5: shard wire-format hygiene.
+//!
+//! The sharded sweep merges JSON produced by *other* invocations of the
+//! binary, so the `Metrics::to_json` field list and the shard version
+//! tag are a cross-build contract.  This rule compares the source
+//! against the committed golden manifest (`wire_manifest`): any drift
+//! in the field list, the read-back path, or the version constant is a
+//! diagnostic until the manifest and the version tag are updated
+//! together in the same commit.
+
+use super::wire_manifest::{METRICS_FIELDS, WIRE_FORMAT};
+use super::{Diagnostic, Repo, Rule, R5};
+
+const METRICS_PATH: &str = "rust/src/metrics.rs";
+const ORCH_PATH: &str = "rust/src/experiments/orchestrator.rs";
+
+pub struct WireDrift;
+
+/// `("name"` occurrences on a raw line: the serialization tuples of
+/// `Json::obj(vec![...])` blocks.
+fn quoted_field_names(line: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut rest = line;
+    while let Some(pos) = rest.find("(\"") {
+        let after = &rest[pos + 2..];
+        let Some(end) = after.find('"') else { break };
+        let name = &after[..end];
+        if !name.is_empty() && name.bytes().all(|b| b.is_ascii_lowercase() || b == b'_') {
+            out.push(name);
+        }
+        rest = &after[end + 1..];
+    }
+    out
+}
+
+fn find_line(raw: &[String], pat: &str) -> Option<usize> {
+    raw.iter().position(|l| l.contains(pat))
+}
+
+impl Rule for WireDrift {
+    fn id(&self) -> &'static str {
+        R5
+    }
+
+    fn summary(&self) -> &'static str {
+        "shard wire format matches the committed golden manifest"
+    }
+
+    fn explain(&self) -> &'static str {
+        "DESIGN.md \"Sharded sweeps\" / EXPERIMENTS.md: shard JSON is merged across\n\
+         separate binary invocations, so Metrics::to_json's field list and the\n\
+         SHARD_FORMAT version tag are a cross-build contract.  R5 pins both in\n\
+         rust/src/util/lint/wire_manifest.rs and flags any drift: a field added,\n\
+         removed, renamed, or reordered in to_json; a manifest field from_json stops\n\
+         reading back; or a version tag that differs from the manifest.  To change\n\
+         the format intentionally, update to_json/from_json, bump SHARD_FORMAT, and\n\
+         record both in wire_manifest.rs in the same commit."
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
+        let Some(metrics) = repo.file(METRICS_PATH) else { return };
+        let Some(to_line) = find_line(&metrics.raw, "fn to_json") else {
+            let msg = "Metrics::to_json not found; R5 cannot pin the wire format".to_string();
+            out.push(Diagnostic::new(METRICS_PATH, 1, R5, msg));
+            return;
+        };
+        let from_line = find_line(&metrics.raw, "fn from_json");
+        let body_end = from_line.unwrap_or(metrics.raw.len());
+
+        let mut fields: Vec<(String, usize)> = Vec::new();
+        for (i, line) in metrics.raw[to_line..body_end].iter().enumerate() {
+            for name in quoted_field_names(line) {
+                fields.push((name.to_string(), to_line + i + 1));
+            }
+        }
+
+        // Report only the first divergence: a single reorder would
+        // otherwise cascade into a diagnostic per trailing field.
+        let n = fields.len().max(METRICS_FIELDS.len());
+        for i in 0..n {
+            match (fields.get(i), METRICS_FIELDS.get(i)) {
+                (Some((got, line)), Some(want)) if got != want => {
+                    let msg = format!(
+                        "to_json emits `{got}` at index {i} where the manifest pins \
+                         `{want}`; update wire_manifest.rs AND bump SHARD_FORMAT"
+                    );
+                    out.push(Diagnostic::new(METRICS_PATH, *line, R5, msg));
+                    break;
+                }
+                (Some((got, line)), None) => {
+                    let msg = format!(
+                        "to_json serializes `{got}` which is not in the wire manifest; \
+                         add it to wire_manifest.rs AND bump SHARD_FORMAT"
+                    );
+                    out.push(Diagnostic::new(METRICS_PATH, *line, R5, msg));
+                    break;
+                }
+                (None, Some(want)) => {
+                    let msg = format!(
+                        "manifest field `{want}` is no longer serialized by to_json; \
+                         remove it from wire_manifest.rs AND bump SHARD_FORMAT"
+                    );
+                    out.push(Diagnostic::new(METRICS_PATH, to_line + 1, R5, msg));
+                    break;
+                }
+                _ => {}
+            }
+        }
+
+        if let Some(from) = from_line {
+            for want in METRICS_FIELDS {
+                let quoted = format!("\"{want}\"");
+                if !metrics.raw[from..].iter().any(|l| l.contains(&quoted)) {
+                    let msg = format!(
+                        "manifest field `{want}` is not read back by Metrics::from_json"
+                    );
+                    out.push(Diagnostic::new(METRICS_PATH, from + 1, R5, msg));
+                }
+            }
+        } else {
+            let msg = "Metrics::from_json not found; shards could not be merged".to_string();
+            out.push(Diagnostic::new(METRICS_PATH, 1, R5, msg));
+        }
+
+        if let Some(orch) = repo.file(ORCH_PATH) {
+            match find_line(&orch.raw, "const SHARD_FORMAT") {
+                Some(i) => {
+                    let line = &orch.raw[i];
+                    let tag = line.split('"').nth(1).unwrap_or("");
+                    if tag != WIRE_FORMAT {
+                        let msg = format!(
+                            "SHARD_FORMAT is `{tag}` but the wire manifest pins \
+                             `{WIRE_FORMAT}`; the version tag and manifest must move together"
+                        );
+                        out.push(Diagnostic::new(ORCH_PATH, i + 1, R5, msg));
+                    }
+                }
+                None => {
+                    let msg = "const SHARD_FORMAT not found in the orchestrator".to_string();
+                    out.push(Diagnostic::new(ORCH_PATH, 1, R5, msg));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics_fixture(to_fields: &[&str], from_fields: &[&str]) -> String {
+        let mut s = String::from(
+            "impl Metrics {\n    pub fn to_json(&self) -> Json {\n        Json::obj(vec![\n",
+        );
+        for f in to_fields {
+            s.push_str(&format!("            (\"{f}\", Json::num(1.0)),\n"));
+        }
+        s.push_str("        ])\n    }\n\n");
+        s.push_str("    pub fn from_json(j: &Json) -> Result<Metrics, String> {\n");
+        for f in from_fields {
+            s.push_str(&format!("        let _ = jnum(j, \"{f}\")?;\n"));
+        }
+        s.push_str("        Ok(Metrics::new())\n    }\n}\n");
+        s
+    }
+
+    fn orch_fixture(tag: &str) -> String {
+        format!("const SHARD_FORMAT: &str = \"{tag}\";\n")
+    }
+
+    fn check(files: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let repo = Repo::from_fixtures(files, &[]);
+        let mut out = Vec::new();
+        WireDrift.check(&repo, &mut out);
+        out
+    }
+
+    #[test]
+    fn manifest_matching_fixture_is_clean() {
+        let m = metrics_fixture(&METRICS_FIELDS, &METRICS_FIELDS);
+        let o = orch_fixture(WIRE_FORMAT);
+        let d = check(&[(METRICS_PATH, &m), (ORCH_PATH, &o)]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn reordered_field_is_one_diagnostic() {
+        let mut fields: Vec<&str> = METRICS_FIELDS.to_vec();
+        fields.swap(0, 1);
+        let m = metrics_fixture(&fields, &METRICS_FIELDS);
+        let d = check(&[(METRICS_PATH, &m)]);
+        assert_eq!(d.len(), 1, "first divergence only: {d:?}");
+        assert!(d[0].message.contains("bump SHARD_FORMAT"));
+        assert_eq!(d[0].line, 4, "first tuple line");
+    }
+
+    #[test]
+    fn added_and_removed_fields_are_flagged() {
+        let mut extra: Vec<&str> = METRICS_FIELDS.to_vec();
+        extra.push("bogus_counter");
+        let m = metrics_fixture(&extra, &METRICS_FIELDS);
+        let d = check(&[(METRICS_PATH, &m)]);
+        assert!(d[0].message.contains("`bogus_counter`"), "{d:?}");
+
+        let fewer = &METRICS_FIELDS[..METRICS_FIELDS.len() - 1];
+        let m = metrics_fixture(fewer, &METRICS_FIELDS);
+        let d = check(&[(METRICS_PATH, &m)]);
+        assert!(d[0].message.contains("no longer serialized"), "{d:?}");
+    }
+
+    #[test]
+    fn from_json_must_read_every_manifest_field() {
+        let from = &METRICS_FIELDS[..METRICS_FIELDS.len() - 1];
+        let m = metrics_fixture(&METRICS_FIELDS, from);
+        let d = check(&[(METRICS_PATH, &m)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("not read back"));
+    }
+
+    #[test]
+    fn version_tag_must_match_the_manifest() {
+        let m = metrics_fixture(&METRICS_FIELDS, &METRICS_FIELDS);
+        let o = orch_fixture("daemon-sim-shard-v3");
+        let d = check(&[(METRICS_PATH, &m), (ORCH_PATH, &o)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("daemon-sim-shard-v3"));
+    }
+
+    #[test]
+    fn fixture_repos_without_metrics_are_skipped() {
+        assert!(check(&[("rust/src/x.rs", "fn f() {}\n")]).is_empty());
+    }
+}

@@ -1,0 +1,47 @@
+//! Golden manifest of the shard wire format, pinned for R5.
+//!
+//! The sharded sweep writes `ShardData` JSON (tagged with
+//! `SHARD_FORMAT` in `experiments::orchestrator`) whose payload rows
+//! are `Metrics::to_json` objects.  Merging shards produced by
+//! different builds is only sound if both the field list and the
+//! version tag are what the merger expects — so both are pinned here,
+//! and R5 (`wire::WireDrift`) fails the build when the source drifts
+//! from this manifest.
+//!
+//! To change the wire format intentionally: update `Metrics::to_json`
+//! / `from_json`, bump the version in `SHARD_FORMAT`, and record both
+//! here in the same commit.  The lint makes it impossible to do one
+//! without the others.
+
+/// Must equal `orchestrator::SHARD_FORMAT`.
+pub const WIRE_FORMAT: &str = "daemon-sim-shard-v4";
+
+/// Field names of `Metrics::to_json`, in serialization order.  Every
+/// field must also be read back by `Metrics::from_json`.
+pub const METRICS_FIELDS: [&str; 25] = [
+    "instructions",
+    "cycles",
+    "stall_cycles",
+    "access_cost_n",
+    "access_cost_sum",
+    "access_cost_min",
+    "access_cost_max",
+    "local_hits",
+    "local_misses",
+    "pages_moved",
+    "pages_throttled",
+    "lines_moved",
+    "writeback_bytes",
+    "net_bytes_in",
+    "reclaimed_bytes",
+    "downtime_cycles",
+    "aborted_transfers",
+    "deferred_requests",
+    "net_utilization",
+    "net_util_series",
+    "compression_ratio",
+    "access_hist",
+    "interval_instructions",
+    "interval_local_hits",
+    "interval_local_total",
+];

@@ -1,11 +1,13 @@
 //! Shared infrastructure: PRNGs, statistics, tables, JSON, CLI parsing,
-//! fast deterministic hashing, a sharded concurrent memo and a
-//! property-test harness — all in-repo because the offline registry
-//! carries no rand/serde/clap/proptest/rustc-hash.
+//! fast deterministic hashing, a sharded concurrent memo, a
+//! property-test harness and a static-analysis rule engine (`lint`) —
+//! all in-repo because the offline registry carries no
+//! rand/serde/clap/proptest/rustc-hash.
 
 pub mod cli;
 pub mod hash;
 pub mod json;
+pub mod lint;
 pub mod memo;
 pub mod prng;
 pub mod proptest;

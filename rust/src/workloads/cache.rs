@@ -175,12 +175,12 @@ mod tests {
         // 8 workers x 3 keys x 5 rounds: every key generates exactly once
         // (misses == distinct keys), every other access is a hit, and all
         // workers observe the same Arc per key.
-        use std::collections::HashMap;
+        use crate::util::hash::FxHashMap;
         use std::sync::Mutex;
         let c = TraceCache::new();
         let keys: [(&str, u64); 3] = [("pr", 1), ("bf", 1), ("pr", 2)];
-        let seen: Mutex<HashMap<(String, u64), Arc<Trace>>> =
-            Mutex::new(HashMap::new());
+        let seen: Mutex<FxHashMap<(String, u64), Arc<Trace>>> =
+            Mutex::new(FxHashMap::default());
         std::thread::scope(|s| {
             for w in 0..8 {
                 let seen = &seen;

@@ -91,7 +91,7 @@ mod tests {
     #[test]
     fn zipf_reuse_creates_hot_pages() {
         let t = SparseLengthsSum.generate(2, Scale::Test);
-        let mut counts = std::collections::HashMap::new();
+        let mut counts = crate::util::hash::FxHashMap::default();
         for a in &t.accesses {
             *counts.entry(a.addr >> 12).or_insert(0u64) += 1;
         }

@@ -10,7 +10,7 @@
 //! *contents* are synthesized per workload profile (see `compress::synth`).
 
 use crate::compress::synth::Profile;
-use std::collections::HashSet;
+use crate::util::hash::{FxHashMap, FxHashSet};
 
 /// One memory reference.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -46,7 +46,7 @@ impl Trace {
     pub fn truncated(mut self, max_accesses: usize) -> Trace {
         if self.accesses.len() > max_accesses {
             self.accesses.truncate(max_accesses);
-            let pages: HashSet<u64> =
+            let pages: FxHashSet<u64> =
                 self.accesses.iter().map(|a| a.addr >> 12).collect();
             self.footprint_pages = pages.len();
         }
@@ -108,7 +108,7 @@ impl Recorder {
     }
 
     pub fn finish(self) -> Trace {
-        let pages: HashSet<u64> = self.accesses.iter().map(|a| a.addr >> 12).collect();
+        let pages: FxHashSet<u64> = self.accesses.iter().map(|a| a.addr >> 12).collect();
         Trace { accesses: self.accesses, footprint_pages: pages.len() }
     }
 }
@@ -165,8 +165,8 @@ pub fn page_locality(trace: &Trace) -> f64 {
 /// reuse migrated pages heavily even at small windows; poor-locality
 /// workloads touch a line or two per page and move on.
 pub fn window_hit_rate(trace: &Trace, window_pages: usize) -> f64 {
-    use std::collections::{HashMap, VecDeque};
-    let mut stamp: HashMap<u64, u64> = HashMap::new();
+    use std::collections::VecDeque;
+    let mut stamp: FxHashMap<u64, u64> = FxHashMap::default();
     let mut queue: VecDeque<(u64, u64)> = VecDeque::new();
     let mut tick = 0u64;
     let mut hits = 0u64;
@@ -199,12 +199,11 @@ pub fn window_hit_rate(trace: &Trace, window_pages: usize) -> f64 {
 /// serves 40 line accesses paid off; one that serves 1 did not — and it is
 /// robust to stream interleaving (unlike [`page_locality`]).
 pub fn lines_per_residency(trace: &Trace, window_pages: usize) -> f64 {
-    use std::collections::HashMap;
     struct Res {
-        lines: HashSet<u64>,
+        lines: FxHashSet<u64>,
         stamp: u64,
     }
-    let mut resident: HashMap<u64, Res> = HashMap::new();
+    let mut resident: FxHashMap<u64, Res> = FxHashMap::default();
     let mut tick = 0u64;
     let mut episodes = 0u64;
     let mut total_lines = 0u64;
@@ -220,6 +219,8 @@ pub fn lines_per_residency(trace: &Trace, window_pages: usize) -> f64 {
             None => {
                 if resident.len() >= window_pages {
                     // Evict LRU (linear scan is fine at test sizes).
+                    // Stamps are unique, so the min is a total order and
+                    // map iteration order cannot change the victim.
                     let victim = *resident
                         .iter()
                         .min_by_key(|(_, r)| r.stamp)
@@ -229,7 +230,7 @@ pub fn lines_per_residency(trace: &Trace, window_pages: usize) -> f64 {
                     episodes += 1;
                     total_lines += r.lines.len() as u64;
                 }
-                let mut lines = HashSet::new();
+                let mut lines = FxHashSet::default();
                 lines.insert(line);
                 resident.insert(page, Res { lines, stamp: tick });
             }
@@ -265,7 +266,7 @@ pub fn lines_per_episode(trace: &Trace) -> f64 {
     let mut episodes = 0u64;
     let mut total_lines = 0u64;
     let mut cur_page = u64::MAX;
-    let mut lines: HashSet<u64> = HashSet::new();
+    let mut lines: FxHashSet<u64> = FxHashSet::default();
     for a in &trace.accesses {
         let p = a.addr >> 12;
         if p != cur_page {
