@@ -1,0 +1,97 @@
+//! `trace-check` — validate a `--trace-out` Chrome-trace JSON document.
+//!
+//! CI smoke gate for the observability exporter: parses the file with
+//! the in-repo JSON parser and checks the trace-event invariants
+//! Perfetto relies on — a non-empty `traceEvents` array whose entries
+//! all carry `name`/`ph`/`pid`/`ts`, spans (`ph: "X"`) a non-negative
+//! `dur`, plus the exporter's own `otherData.clock = "sim-cycles"` tag.
+//!
+//! Usage: trace-check <trace.json>
+//! Exit codes: 0 valid, 1 invalid, 2 usage/IO error.
+
+use daemon_sim::util::json::Json;
+use std::process::ExitCode;
+
+fn validate(doc: &Json) -> Result<usize, String> {
+    let events = doc
+        .get_arr("traceEvents")
+        .ok_or("top-level `traceEvents` array is missing")?;
+    if events.is_empty() {
+        return Err("`traceEvents` is empty — the run produced no events".into());
+    }
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev
+            .get_str("name")
+            .ok_or_else(|| format!("event {i}: missing `name`"))?;
+        let ph = ev
+            .get_str("ph")
+            .ok_or_else(|| format!("event {i} ({name}): missing `ph`"))?;
+        if ev.get_f64("pid").is_none() {
+            return Err(format!("event {i} ({name}): missing numeric `pid`"));
+        }
+        match ph {
+            "M" => continue, // metadata events carry no timestamp
+            "X" => {
+                let dur = ev
+                    .get_f64("dur")
+                    .ok_or_else(|| format!("event {i} ({name}): span without `dur`"))?;
+                if dur < 0.0 {
+                    return Err(format!("event {i} ({name}): negative `dur` {dur}"));
+                }
+            }
+            "i" => {}
+            other => return Err(format!("event {i} ({name}): unexpected `ph` '{other}'")),
+        }
+        let ts = ev
+            .get_f64("ts")
+            .ok_or_else(|| format!("event {i} ({name}): missing numeric `ts`"))?;
+        if ts < 0.0 {
+            return Err(format!("event {i} ({name}): negative `ts` {ts}"));
+        }
+        if ev.get_f64("tid").is_none() {
+            return Err(format!("event {i} ({name}): missing numeric `tid`"));
+        }
+    }
+    match doc.get("otherData").and_then(|o| o.get_str("clock")) {
+        Some("sim-cycles") => {}
+        other => {
+            return Err(format!(
+                "`otherData.clock` should be \"sim-cycles\", got {other:?}"
+            ))
+        }
+    }
+    Ok(events.len())
+}
+
+fn main() -> ExitCode {
+    let mut paths: Vec<String> = std::env::args().skip(1).collect();
+    if paths.len() != 1 || paths[0].starts_with("--") {
+        eprintln!("usage: trace-check <trace.json>");
+        return ExitCode::from(2);
+    }
+    let path = paths.remove(0);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trace-check: {path}: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("trace-check: {path}: bad JSON: {e}");
+            return ExitCode::from(1);
+        }
+    };
+    match validate(&doc) {
+        Ok(n) => {
+            eprintln!("trace-check: {path}: valid ({n} trace events)");
+            ExitCode::SUCCESS
+        }
+        Err(msg) => {
+            eprintln!("trace-check: {path}: {msg}");
+            ExitCode::from(1)
+        }
+    }
+}

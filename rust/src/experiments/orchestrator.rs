@@ -26,6 +26,7 @@ use super::plan_for;
 use crate::config::{ClusterConfig, ScheduleSpec, SharingMode, SimConfig};
 use crate::metrics::Metrics;
 use crate::net::Disturbance;
+use crate::obs::{ObsSpec, Recorder};
 use crate::schemes::SchemeKind;
 use crate::system::fault::{FaultPlan, RecoveryPolicy};
 use crate::system::{cluster, Machine};
@@ -184,6 +185,19 @@ impl Shard {
 /// entry: a single element for machine cells, one per tenant for cluster
 /// cells.
 pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Vec<Metrics> {
+    run_cell_spec_obs(r, cache, spec, None).0
+}
+
+/// [`run_cell_spec`] with optional observability: when `obs` is set,
+/// every machine the cell instantiates gets a recorder, returned in
+/// tenant order (a single element for machine cells).  `None` runs the
+/// exact historical path — recorders are never built.
+pub fn run_cell_spec_obs(
+    r: &Runner,
+    cache: &TraceCache,
+    spec: &CellSpec,
+    obs: Option<&ObsSpec>,
+) -> (Vec<Metrics>, Vec<Recorder>) {
     let cfg = &spec.cfg;
     if let Some(cl) = &spec.cluster {
         assert!(spec.disturbance.is_none(), "disturbed cluster cells unsupported");
@@ -197,9 +211,13 @@ pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Vec<Met
             faults: cl.faults.clone(),
             recovery: cl.recovery,
         };
-        return cluster::run_cluster(&ccfg, cfg, &cl.tenants, |wl| {
-            cache.get(wl, r.scale, cfg.seed, r.max_accesses)
-        });
+        return cluster::run_cluster_obs(
+            &ccfg,
+            cfg,
+            &cl.tenants,
+            |wl| cache.get(wl, r.scale, cfg.seed, r.max_accesses),
+            obs,
+        );
     }
     if let [workload] = spec.workloads.as_slice() {
         let (trace, profile) = cache.get(workload, r.scale, cfg.seed, r.max_accesses);
@@ -210,13 +228,17 @@ pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Vec<Met
             vec![profile; cfg.cores.max(1)],
             None,
         );
+        if let Some(o) = obs {
+            m.set_obs(Recorder::new(*o));
+        }
         if let Some((load, period)) = spec.disturbance {
             m.set_disturbance(|capacity| {
                 Disturbance::square_wave(period, load, 1e12, 5_000.0, capacity)
             });
         }
         m.run(std::slice::from_ref(&*trace));
-        vec![m.metrics.clone()]
+        let recs = m.take_obs().into_iter().collect();
+        (vec![m.metrics.clone()], recs)
     } else {
         assert_eq!(spec.workloads.len(), cfg.cores, "one mix workload per core");
         assert!(spec.disturbance.is_none(), "disturbed mix cells unsupported");
@@ -229,8 +251,12 @@ pub fn run_cell_spec(r: &Runner, cache: &TraceCache, spec: &CellSpec) -> Vec<Met
         let profiles: Vec<Profile> = pairs.iter().map(|(_, p)| *p).collect();
         let traces: Vec<Arc<Trace>> = pairs.into_iter().map(|(t, _)| t).collect();
         let mut m = Machine::new(cfg.clone(), spec.kind, footprint, profiles, None);
+        if let Some(o) = obs {
+            m.set_obs(Recorder::new(*o));
+        }
         m.run(&traces);
-        vec![m.metrics.clone()]
+        let recs = m.take_obs().into_iter().collect();
+        (vec![m.metrics.clone()], recs)
     }
 }
 
@@ -245,10 +271,34 @@ pub fn run_cells_flat(
     shard: Shard,
     jobs: usize,
 ) -> Vec<Option<Vec<Metrics>>> {
+    run_cells_flat_obs(r, cache, cells, shard, jobs, None, None)
+        .into_iter()
+        .map(|slot| slot.map(|(m, _)| m))
+        .collect()
+}
+
+/// [`run_cells_flat`] with optional observability and progress
+/// reporting.  Each filled slot carries the cell's metrics plus its
+/// recorders (empty unless `obs` is set) — still keyed by global slot,
+/// so downstream ordering is independent of `jobs`.  `progress`, when
+/// given, is invoked as cells complete with `(cells done, cells owned)`;
+/// completion order is scheduling-dependent, so the callback must feed
+/// ephemeral reporting only, never a deterministic artifact.
+pub fn run_cells_flat_obs(
+    r: &Runner,
+    cache: &TraceCache,
+    cells: &[CellSpec],
+    shard: Shard,
+    jobs: usize,
+    obs: Option<&ObsSpec>,
+    progress: Option<&(dyn Fn(usize, usize) + Sync)>,
+) -> Vec<Option<(Vec<Metrics>, Vec<Recorder>)>> {
     let n = cells.len();
     let todo: Vec<usize> = (0..n).filter(|i| shard.owns(*i)).collect();
-    let slots: Vec<OnceLock<Vec<Metrics>>> = (0..n).map(|_| OnceLock::new()).collect();
+    let slots: Vec<OnceLock<(Vec<Metrics>, Vec<Recorder>)>> =
+        (0..n).map(|_| OnceLock::new()).collect();
     let next = AtomicUsize::new(0);
+    let done = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..jobs.max(1).min(todo.len().max(1)) {
             s.spawn(|| loop {
@@ -257,8 +307,11 @@ pub fn run_cells_flat(
                     break;
                 }
                 let i = todo[k];
-                let m = run_cell_spec(r, cache, &cells[i]);
+                let m = run_cell_spec_obs(r, cache, &cells[i], obs);
                 let _ = slots[i].set(m);
+                if let Some(cb) = progress {
+                    cb(done.fetch_add(1, Ordering::Relaxed) + 1, todo.len());
+                }
             });
         }
     });
@@ -429,6 +482,47 @@ pub fn sweep(
 ) -> Result<SweepResult, String> {
     let plans = plans_for(ids, r)?;
     sweep_plans(plans, ids, r, cache, shard, jobs)
+}
+
+/// Observability output of an unsharded sweep: one entry per cell in
+/// global slot order — a `"<experiment id>/<cell index>"` label plus the
+/// cell's recorders in tenant order.  This is exactly the exporter input
+/// shape (`obs::telemetry_jsonl` / `obs::chrome_trace`), and because
+/// slot order is a pure function of the requested ids, serializing it
+/// yields byte-identical files across `--jobs` counts.
+pub struct SweepObs {
+    pub cells: Vec<(String, Vec<Recorder>)>,
+}
+
+/// Unsharded sweep with observability and/or progress reporting: like
+/// `sweep` with `Shard::full()`, additionally returning every cell's
+/// label and recorders (the recorder lists are empty unless `obs` is
+/// set).  Sharded runs don't carry observability — recorders would
+/// straddle shard files; run unsharded to trace.
+pub fn sweep_obs(
+    ids: &[String],
+    r: &Runner,
+    cache: &TraceCache,
+    jobs: usize,
+    obs: Option<&ObsSpec>,
+    progress: Option<&(dyn Fn(usize, usize) + Sync)>,
+) -> Result<(Vec<(String, Vec<Table>)>, SweepObs), String> {
+    let plans = plans_for(ids, r)?;
+    let labels: Vec<String> = plans
+        .iter()
+        .flat_map(|p| (0..p.cells.len()).map(move |k| format!("{}/{k}", p.id)))
+        .collect();
+    let cells: Vec<CellSpec> =
+        plans.iter().flat_map(|p| p.cells.iter().cloned()).collect();
+    let slots = run_cells_flat_obs(r, cache, &cells, Shard::full(), jobs, obs, progress);
+    let mut all: Vec<Metrics> = Vec::new();
+    let mut obs_cells: Vec<(String, Vec<Recorder>)> = Vec::new();
+    for (label, slot) in labels.into_iter().zip(slots) {
+        let (ms, recs) = slot.expect("unsharded run must fill every slot");
+        all.extend(ms);
+        obs_cells.push((label, recs));
+    }
+    Ok((assemble_all(plans, &all), SweepObs { cells: obs_cells }))
 }
 
 /// [`sweep`] over pre-built plans (tests hand in reduced workload sets).

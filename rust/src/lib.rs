@@ -25,6 +25,7 @@ pub mod config;
 pub mod mem;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod schemes;
 pub mod sim;

@@ -6,14 +6,17 @@
 //!            [--max-accesses N] [--estimator exact|pjrt] [--json]
 //! daemon-sim experiment fig8 [fig9 ...] [--quick] [--jobs K]
 //!            [--shard I/N] [--out results/]
+//!            [--telemetry-out t.jsonl] [--telemetry-epoch 100000]
+//!            [--trace-out trace.json] [--stats] [--progress]
 //! daemon-sim experiment all [--quick]
 //! daemon-sim merge shard-0-of-2.json shard-1-of-2.json [--out results/]
 //! daemon-sim list
 //! ```
 
 use daemon_sim::config::{Replacement, SimConfig};
-use daemon_sim::experiments::orchestrator::{self, Shard, ShardData, SweepResult};
+use daemon_sim::experiments::orchestrator::{self, Shard, ShardData};
 use daemon_sim::experiments::{default_experiment_ids, Runner, REGISTRY};
+use daemon_sim::obs::{self, ObsSpec};
 use daemon_sim::runtime::{ModelRunner, NetParams, PjrtOracle};
 use daemon_sim::schemes::SchemeKind;
 use daemon_sim::system::Machine;
@@ -22,7 +25,7 @@ use daemon_sim::util::json::Json;
 use daemon_sim::util::table::Table;
 use daemon_sim::workloads::cache::TraceCache;
 use daemon_sim::workloads::{by_name, Scale, ALL};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     let args = match Args::parse(std::env::args().skip(1)) {
@@ -81,6 +84,14 @@ EXPERIMENT OPTIONS:
   --shard I/N   run only slots with slot%N==I and write a
                 shard-I-of-N.json for `merge` (CI grid splitting)
   --out DIR     write per-table CSVs + figures.json (or the shard file)
+  --telemetry-out F  write epoch-sampled telemetry snapshots as JSONL
+                (unsharded runs only; byte-identical across --jobs)
+  --telemetry-epoch C  telemetry/port sampling period, sim cycles [100000]
+  --trace-out F write structured sim-time events as Chrome-trace JSON
+                (open at https://ui.perfetto.dev; ts/dur are sim cycles)
+  --stats       end-of-run counter summary on stderr (size memo,
+                trace cache, cells) — process-global, never in artifacts
+  --progress    live cells-completed progress on stderr
 
 Cluster experiments (`cluster_contention`, `cluster_fairness`) simulate
 C tenants sharing M memory modules over the switched fabric and report
@@ -255,6 +266,33 @@ fn emit_sets(
     Ok(())
 }
 
+/// Write an observability artifact, creating parent directories as
+/// needed (obs outputs are standalone paths, not tied to `--out`).
+fn write_artifact(path: &Path, text: &str) -> Result<(), String> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, text).map_err(|e| format!("write {}: {e}", path.display()))?;
+    eprintln!("[wrote {}]", path.display());
+    Ok(())
+}
+
+/// `--stats` end-of-run summary.  These counters are process-global and
+/// scheduling-dependent, so they print to stderr only and never land in
+/// deterministic artifacts (shard files, figures.json, obs outputs).
+fn print_stats(cache: &TraceCache, cells: usize) {
+    let memo = daemon_sim::compress::global_memo_stats();
+    let tc = cache.stats();
+    eprintln!("[stats] cells completed: {cells}");
+    eprintln!(
+        "[stats] size memo: {} entries, {} full drops",
+        memo.entries, memo.full_drops
+    );
+    eprintln!("[stats] trace cache: {} hits, {} misses", tc.hits, tc.misses);
+}
+
 fn cmd_experiment(args: &Args) -> i32 {
     let inner = || -> Result<i32, String> {
         let mut runner = if args.flag("quick") {
@@ -284,23 +322,67 @@ fn cmd_experiment(args: &Args) -> i32 {
             std::fs::create_dir_all(d).map_err(|e| format!("{}: {e}", d.display()))?;
         }
 
+        // Observability: either output file switches its channel on; the
+        // epoch only matters when telemetry is being recorded.
+        let telemetry_out = args.get("telemetry-out").map(PathBuf::from);
+        let trace_out = args.get("trace-out").map(PathBuf::from);
+        let epoch = args.get_f64("telemetry-epoch", ObsSpec::DEFAULT_EPOCH_CYCLES)?;
+        if epoch <= 0.0 {
+            return Err("--telemetry-epoch must be a positive cycle count".into());
+        }
+        let obs_spec = if telemetry_out.is_some() || trace_out.is_some() {
+            let mut spec = ObsSpec::enabled().with_epoch(epoch);
+            spec.telemetry = telemetry_out.is_some();
+            spec.trace = trace_out.is_some();
+            Some(spec)
+        } else {
+            None
+        };
+        let want_stats = args.flag("stats");
+        let want_progress = args.flag("progress");
+        if shard.is_some() && (obs_spec.is_some() || want_progress) {
+            return Err(
+                "--telemetry-out/--trace-out/--progress require an unsharded run \
+                 (recorders and live progress don't straddle shard files); drop --shard"
+                    .into(),
+            );
+        }
+
         // CLI progress reporting only — never feeds simulated time.
         #[allow(clippy::disallowed_methods)]
         let t0 = std::time::Instant::now();
         let cache = TraceCache::global();
         match shard {
             None => {
-                let sets = match orchestrator::sweep(
+                let progress: Option<Box<dyn Fn(usize, usize) + Sync>> = if want_progress {
+                    Some(Box::new(move |done, total| {
+                        eprintln!("[{done}/{total} cells, {:.1}s]", t0.elapsed().as_secs_f64());
+                    }))
+                } else {
+                    None
+                };
+                let (sets, sobs) = orchestrator::sweep_obs(
                     &ids,
                     &runner,
                     cache,
-                    Shard::full(),
                     runner.threads,
-                )? {
-                    SweepResult::Tables(sets) => sets,
-                    SweepResult::Shard(_) => unreachable!("full sweep yields tables"),
-                };
+                    obs_spec.as_ref(),
+                    progress.as_deref(),
+                )?;
                 emit_sets(&sets, &out_dir)?;
+                if obs_spec.is_some() {
+                    let cells: Vec<(String, Vec<&obs::Recorder>)> = sobs
+                        .cells
+                        .iter()
+                        .map(|(label, recs)| (label.clone(), recs.iter().collect()))
+                        .collect();
+                    if let Some(p) = &telemetry_out {
+                        write_artifact(p, &obs::telemetry_jsonl(&cells))?;
+                    }
+                    if let Some(p) = &trace_out {
+                        write_artifact(p, &obs::chrome_trace(&cells).to_string())?;
+                    }
+                }
                 let stats = cache.stats();
                 eprintln!(
                     "[{} experiment(s), {:.1}s, {} jobs; traces: {} generated, {} reused]",
@@ -310,6 +392,9 @@ fn cmd_experiment(args: &Args) -> i32 {
                     stats.misses,
                     stats.hits
                 );
+                if want_stats {
+                    print_stats(cache, sobs.cells.len());
+                }
             }
             Some(shard) => {
                 let data =
@@ -327,6 +412,9 @@ fn cmd_experiment(args: &Args) -> i32 {
                     t0.elapsed().as_secs_f64(),
                     path.display()
                 );
+                if want_stats {
+                    print_stats(cache, data.results.len());
+                }
             }
         }
         Ok(0)
@@ -359,6 +447,10 @@ fn cmd_merge(args: &Args) -> i32 {
         }
         emit_sets(&sets, &out_dir)?;
         eprintln!("[merged {} shard file(s) into {} experiment(s)]", shards.len(), sets.len());
+        if args.flag("stats") {
+            let slots: usize = shards.iter().map(|s| s.results.len()).sum();
+            eprintln!("[stats] shard slots merged: {slots}");
+        }
         Ok(0)
     };
     match inner() {

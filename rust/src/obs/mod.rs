@@ -1,0 +1,214 @@
+//! Deterministic observability: epoch telemetry and sim-time event
+//! tracing (DESIGN.md §"Observability").
+//!
+//! The simulator's only online mechanism — §4.5 adaptive granularity
+//! selection — reacts to observed queue occupancies and link conditions,
+//! and the roadmap's closed-loop policy layer must be a pure function of
+//! observed state.  This module is that observation substrate: a
+//! per-machine [`Recorder`] that samples telemetry [`Snapshot`]s at a
+//! configurable sim-cycle epoch and logs structured [`Event`]s into a
+//! bounded ring, both stamped with **sim cycles only** (lint rule R2).
+//!
+//! Determinism contract:
+//!
+//! * **Off by default, byte-identity-pinned when off.**  A machine
+//!   without a recorder runs the exact historical code path (one
+//!   `Option` check per hook site).
+//! * **Observation-only when on.**  Every accessor a recorder samples
+//!   takes `&self` on the sampled component, so attaching a recorder
+//!   cannot perturb simulation state: metrics stay byte-identical with
+//!   and without one (pinned by `rust/tests/determinism.rs`).
+//! * **Jobs-invariant output.**  Recorders are machine-local; exporters
+//!   serialize them in cell/tenant order, so the files are byte-identical
+//!   across `--jobs 1` vs N and across repeat runs.  Process-global
+//!   counters (size memo, trace cache) are scheduling-dependent and are
+//!   deliberately excluded — they surface via the CLI `--stats` summary,
+//!   never in these artifacts.
+
+pub mod telemetry;
+pub mod trace;
+
+pub use telemetry::{telemetry_jsonl, ModuleSample, Snapshot, Telemetry};
+pub use trace::{chrome_trace, Event, EventKind, TraceRing};
+
+use crate::system::fault::PortState;
+
+/// Configuration for one machine's recorder.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsSpec {
+    /// Record epoch telemetry snapshots.
+    pub telemetry: bool,
+    /// Record structured trace events.
+    pub trace: bool,
+    /// Sampling epoch in sim cycles — the cadence of telemetry snapshots
+    /// and port-state edge detection.
+    pub epoch_cycles: f64,
+    /// Trace ring capacity in events; once full, the oldest event is
+    /// dropped (and counted) per push.
+    pub trace_capacity: usize,
+}
+
+impl ObsSpec {
+    pub const DEFAULT_EPOCH_CYCLES: f64 = 100_000.0;
+    pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+    /// Both channels on, default epoch and ring capacity.
+    pub fn enabled() -> ObsSpec {
+        ObsSpec {
+            telemetry: true,
+            trace: true,
+            epoch_cycles: Self::DEFAULT_EPOCH_CYCLES,
+            trace_capacity: Self::DEFAULT_TRACE_CAPACITY,
+        }
+    }
+
+    /// Override the sampling epoch (sim cycles, must be positive).
+    pub fn with_epoch(mut self, cycles: f64) -> ObsSpec {
+        assert!(cycles > 0.0, "telemetry epoch must be a positive cycle count");
+        self.epoch_cycles = cycles;
+        self
+    }
+
+    /// Override the trace ring capacity.
+    pub fn with_trace_capacity(mut self, cap: usize) -> ObsSpec {
+        self.trace_capacity = cap;
+        self
+    }
+}
+
+/// Static label for a port-state transition, for event args.
+fn edge_detail(from: PortState, to: PortState) -> &'static str {
+    match (from, to) {
+        (PortState::Up, PortState::Down) => "up->down",
+        (PortState::Up, PortState::Recovering) => "up->recovering",
+        (PortState::Down, PortState::Up) => "down->up",
+        (PortState::Down, PortState::Recovering) => "down->recovering",
+        (PortState::Recovering, PortState::Up) => "recovering->up",
+        (PortState::Recovering, PortState::Down) => "recovering->down",
+        _ => "unchanged",
+    }
+}
+
+/// Per-machine telemetry + trace recorder.
+///
+/// One recorder observes one machine (one tenant in a cluster).  The
+/// machine drives it from its stepping hot path: unconditional event
+/// hooks (page/line scheduling, throttles, re-requests) plus an
+/// epoch-gated sampling pass for snapshots and port edges.
+pub struct Recorder {
+    spec: ObsSpec,
+    pub telemetry: Telemetry,
+    pub trace: TraceRing,
+    /// Next unsampled epoch boundary (sim cycles).
+    next_epoch: f64,
+    /// Last sampled port state per module, for edge detection.  Ports
+    /// start `Up`; the vec grows lazily to the module count.
+    port_seen: Vec<PortState>,
+}
+
+impl Recorder {
+    pub fn new(spec: ObsSpec) -> Recorder {
+        assert!(spec.epoch_cycles > 0.0, "telemetry epoch must be a positive cycle count");
+        Recorder {
+            telemetry: Telemetry::new(),
+            trace: TraceRing::new(spec.trace_capacity),
+            next_epoch: spec.epoch_cycles,
+            port_seen: Vec::new(),
+            spec,
+        }
+    }
+
+    pub fn wants_telemetry(&self) -> bool {
+        self.spec.telemetry
+    }
+
+    pub fn wants_trace(&self) -> bool {
+        self.spec.trace
+    }
+
+    /// Latest unsampled epoch boundary at or before `now`, advancing the
+    /// cadence past `now`; `None` while the boundary is still ahead.
+    /// Boundaries with no machine activity in between collapse into one
+    /// sample stamped at the most recent crossed boundary (machine time
+    /// is event-driven, so an idle epoch has nothing new to report).
+    pub fn epoch_crossed(&mut self, now: f64) -> Option<f64> {
+        if now < self.next_epoch {
+            return None;
+        }
+        let e = self.spec.epoch_cycles;
+        let at = self.next_epoch + ((now - self.next_epoch) / e).floor() * e;
+        self.next_epoch = at + e;
+        Some(at)
+    }
+
+    /// Log a structured event (no-op unless tracing is enabled).
+    pub fn event(&mut self, ev: Event) {
+        if self.spec.trace {
+            self.trace.push(ev);
+        }
+    }
+
+    /// Record the sampled state of module `m`'s port, emitting a
+    /// `PortEdge` event when it changed since the previous sample.
+    pub fn port_edge(&mut self, m: usize, state: PortState, at: f64, tenant: usize) {
+        while self.port_seen.len() <= m {
+            self.port_seen.push(PortState::Up);
+        }
+        let prev = self.port_seen[m];
+        if prev != state {
+            self.port_seen[m] = state;
+            let mut ev = Event::instant(EventKind::PortEdge, tenant, Some(m), 0, at);
+            ev.detail = Some(edge_detail(prev, state));
+            self.event(ev);
+        }
+    }
+
+    /// Append a telemetry snapshot (no-op unless telemetry is enabled).
+    pub fn push_snapshot(&mut self, snap: Snapshot) {
+        if self.spec.telemetry {
+            self.telemetry.snapshots.push(snap);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_crossing_collapses_idle_boundaries() {
+        let mut r = Recorder::new(ObsSpec::enabled().with_epoch(100.0));
+        assert_eq!(r.epoch_crossed(50.0), None);
+        assert_eq!(r.epoch_crossed(100.0), Some(100.0));
+        assert_eq!(r.epoch_crossed(150.0), None);
+        // A long idle gap yields one sample at the latest boundary.
+        assert_eq!(r.epoch_crossed(1234.0), Some(1200.0));
+        assert_eq!(r.epoch_crossed(1299.0), None);
+        assert_eq!(r.epoch_crossed(1300.0), Some(1300.0));
+    }
+
+    #[test]
+    fn port_edges_fire_only_on_transitions() {
+        let mut r = Recorder::new(ObsSpec::enabled());
+        r.port_edge(0, PortState::Up, 10.0, 0);
+        assert_eq!(r.trace.len(), 0, "ports start Up; no edge");
+        r.port_edge(0, PortState::Down, 20.0, 0);
+        r.port_edge(0, PortState::Down, 30.0, 0);
+        r.port_edge(0, PortState::Recovering, 40.0, 0);
+        r.port_edge(0, PortState::Up, 50.0, 0);
+        let kinds: Vec<&str> = r.trace.events().map(|e| e.detail.unwrap()).collect();
+        assert_eq!(kinds, ["up->down", "down->recovering", "recovering->up"]);
+    }
+
+    #[test]
+    fn disabled_channels_record_nothing() {
+        let mut spec = ObsSpec::enabled();
+        spec.telemetry = false;
+        spec.trace = false;
+        let mut r = Recorder::new(spec);
+        r.event(Event::instant(EventKind::Throttle, 0, None, 7, 5.0));
+        r.push_snapshot(Snapshot::empty(0, 100.0));
+        assert_eq!(r.trace.len(), 0);
+        assert!(r.telemetry.snapshots.is_empty());
+    }
+}

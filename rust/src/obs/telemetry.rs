@@ -1,0 +1,207 @@
+//! Epoch telemetry: per-tenant / per-module snapshots of the observable
+//! state the adaptive-policy layer will consume, exported as JSONL via
+//! the zero-dependency `util::json`.
+//!
+//! A snapshot is taken at each crossed epoch boundary (see
+//! `Recorder::epoch_crossed`) plus once at the run horizon, and carries
+//! compute-engine queue depths, local-memory occupancy, cumulative
+//! movement counters, and a per-module sample of link/engine backlogs,
+//! port state, fault counters, and raw-vs-compressed egress bytes.
+//! Everything is cumulative-or-instantaneous machine-local state: no
+//! wall clock, no process-global counters.
+
+use crate::system::fault::PortState;
+use crate::util::json::Json;
+
+/// Markdown/JSON-friendly name of a port state.
+pub fn port_name(s: PortState) -> &'static str {
+    match s {
+        PortState::Up => "up",
+        PortState::Down => "down",
+        PortState::Recovering => "recovering",
+    }
+}
+
+/// One memory module's observable state at a snapshot instant, as seen
+/// from the sampling tenant's ports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModuleSample {
+    pub module: usize,
+    /// This tenant's downlink port state on the module.
+    pub port: PortState,
+    /// Fabric downlink backlog in cycles, by traffic class.
+    pub link_backlog_pages: f64,
+    pub link_backlog_lines: f64,
+    /// Memory-engine bus backlog in cycles, by traffic class.
+    pub engine_backlog_pages: f64,
+    pub engine_backlog_lines: f64,
+    /// Cumulative uncompressed bytes the module served toward this
+    /// tenant, and bytes actually sent after link compression.
+    pub egress_raw_bytes: u64,
+    pub egress_sent_bytes: u64,
+    /// Cumulative capacity served on borrowed shares (work-conserving
+    /// sharing modes only).
+    pub reclaimed_bytes: u64,
+    /// Cumulative aborted-and-replayed transfers (fabric + engine).
+    pub aborted: u64,
+    /// Cumulative fault-deferred requests (fabric + engine).
+    pub deferred: u64,
+}
+
+impl ModuleSample {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("module", Json::num(self.module as f64)),
+            ("port", Json::str(port_name(self.port))),
+            ("link_backlog_pages", Json::num(self.link_backlog_pages)),
+            ("link_backlog_lines", Json::num(self.link_backlog_lines)),
+            ("engine_backlog_pages", Json::num(self.engine_backlog_pages)),
+            ("engine_backlog_lines", Json::num(self.engine_backlog_lines)),
+            ("egress_raw_bytes", Json::num(self.egress_raw_bytes as f64)),
+            ("egress_sent_bytes", Json::num(self.egress_sent_bytes as f64)),
+            ("reclaimed_bytes", Json::num(self.reclaimed_bytes as f64)),
+            ("aborted", Json::num(self.aborted as f64)),
+            ("deferred", Json::num(self.deferred as f64)),
+        ])
+    }
+}
+
+/// One tenant-wide telemetry sample at a sim-cycle instant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    /// Sim cycle the sample is stamped with (an epoch boundary, or the
+    /// run horizon for the final sample).
+    pub cycle: f64,
+    /// Tenant index on the shared fabric (0 for a solo machine).
+    pub tenant: usize,
+    /// Compute-engine selection-unit queue depths.
+    pub inflight_pages: usize,
+    pub inflight_lines: usize,
+    pub dirty_buffered: usize,
+    /// Inflight-buffer occupancy fractions (the §4.5 selection inputs).
+    pub page_buf_util: f64,
+    pub line_buf_util: f64,
+    /// Local-memory occupancy and cumulative hit rate.
+    pub local_pages: usize,
+    pub local_capacity: usize,
+    pub local_hit_rate: f64,
+    /// Cumulative movement counters (mirrors of the run metrics).
+    pub pages_moved: u64,
+    pub lines_moved: u64,
+    pub pages_throttled: u64,
+    pub net_bytes_in: u64,
+    /// Achieved compression ratio so far (1.0 for uncompressed schemes).
+    pub compression_ratio: f64,
+    pub modules: Vec<ModuleSample>,
+}
+
+impl Snapshot {
+    /// An all-zero snapshot shell (tests and pre-wiring callers).
+    pub fn empty(tenant: usize, cycle: f64) -> Snapshot {
+        Snapshot {
+            cycle,
+            tenant,
+            inflight_pages: 0,
+            inflight_lines: 0,
+            dirty_buffered: 0,
+            page_buf_util: 0.0,
+            line_buf_util: 0.0,
+            local_pages: 0,
+            local_capacity: 0,
+            local_hit_rate: 0.0,
+            pages_moved: 0,
+            lines_moved: 0,
+            pages_throttled: 0,
+            net_bytes_in: 0,
+            compression_ratio: 1.0,
+            modules: Vec::new(),
+        }
+    }
+
+    /// One JSONL record; `cell` labels which sweep cell produced it.
+    pub fn to_json(&self, cell: &str) -> Json {
+        Json::obj(vec![
+            ("cell", Json::str(cell)),
+            ("cycle", Json::num(self.cycle)),
+            ("tenant", Json::num(self.tenant as f64)),
+            ("inflight_pages", Json::num(self.inflight_pages as f64)),
+            ("inflight_lines", Json::num(self.inflight_lines as f64)),
+            ("dirty_buffered", Json::num(self.dirty_buffered as f64)),
+            ("page_buf_util", Json::num(self.page_buf_util)),
+            ("line_buf_util", Json::num(self.line_buf_util)),
+            ("local_pages", Json::num(self.local_pages as f64)),
+            ("local_capacity", Json::num(self.local_capacity as f64)),
+            ("local_hit_rate", Json::num(self.local_hit_rate)),
+            ("pages_moved", Json::num(self.pages_moved as f64)),
+            ("lines_moved", Json::num(self.lines_moved as f64)),
+            ("pages_throttled", Json::num(self.pages_throttled as f64)),
+            ("net_bytes_in", Json::num(self.net_bytes_in as f64)),
+            ("compression_ratio", Json::num(self.compression_ratio)),
+            ("modules", Json::arr(self.modules.iter().map(ModuleSample::to_json))),
+        ])
+    }
+}
+
+/// A machine's ordered snapshot series.
+#[derive(Default)]
+pub struct Telemetry {
+    pub snapshots: Vec<Snapshot>,
+}
+
+impl Telemetry {
+    pub fn new() -> Telemetry {
+        Telemetry { snapshots: Vec::new() }
+    }
+}
+
+/// Serialize cells' telemetry as JSONL, one record per snapshot, in
+/// (cell, tenant, snapshot) order — the order is a pure function of the
+/// cell list, so the output is byte-identical across `--jobs` counts.
+pub fn telemetry_jsonl(cells: &[(String, Vec<&super::Recorder>)]) -> String {
+    let mut out = String::new();
+    for (label, recs) in cells {
+        for rec in recs {
+            for snap in &rec.telemetry.snapshots {
+                out.push_str(&snap.to_json(label).to_string());
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ObsSpec, Recorder};
+
+    #[test]
+    fn snapshot_jsonl_round_trips_through_the_parser() {
+        let mut snap = Snapshot::empty(1, 200_000.0);
+        snap.inflight_pages = 3;
+        snap.modules.push(ModuleSample {
+            module: 0,
+            port: PortState::Recovering,
+            link_backlog_pages: 12.5,
+            link_backlog_lines: 0.0,
+            engine_backlog_pages: 3.0,
+            engine_backlog_lines: 1.0,
+            egress_raw_bytes: 4096,
+            egress_sent_bytes: 1024,
+            reclaimed_bytes: 0,
+            aborted: 1,
+            deferred: 2,
+        });
+        let mut rec = Recorder::new(ObsSpec::enabled());
+        rec.push_snapshot(snap);
+        let jsonl = telemetry_jsonl(&[("fig9/0".to_string(), vec![&rec])]);
+        let line = jsonl.lines().next().unwrap();
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get_str("cell"), Some("fig9/0"));
+        assert_eq!(v.get_f64("cycle"), Some(200_000.0));
+        assert_eq!(v.get_f64("inflight_pages"), Some(3.0));
+        let m = &v.get_arr("modules").unwrap()[0];
+        assert_eq!(m.get_str("port"), Some("recovering"));
+        assert_eq!(m.get_f64("egress_sent_bytes"), Some(1024.0));
+    }
+}

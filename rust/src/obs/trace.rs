@@ -1,0 +1,353 @@
+//! Structured sim-time event log: a bounded ring buffer of machine
+//! events plus a Chrome-trace-event JSON exporter, so runs open directly
+//! in Perfetto / `chrome://tracing`.
+//!
+//! Timestamps are **sim cycles** (one trace `ts` unit per cycle), never
+//! the wall clock — lint rule R2 applies to this module like any other
+//! simulation code.  The ring is bounded: once at capacity each push
+//! drops the oldest event and counts the drop, so memory stays flat and
+//! the drop count itself is deterministic.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use crate::util::json::Json;
+
+/// Event taxonomy (DESIGN.md §"Observability" keeps the table of record).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A page migration was scheduled: a complete span from issue to
+    /// arrival in local memory (covers demand, prefetch, and replayed
+    /// requests alike).
+    PageMove,
+    /// A migrated page arrived and was installed in local memory.
+    PageInstall,
+    /// A cache-line fetch was scheduled: a span from issue to LLC fill.
+    LineFetch,
+    /// The selection unit throttled a page request (buffer pressure).
+    Throttle,
+    /// The selection unit suppressed a line request (buffer pressure).
+    Suppress,
+    /// A throttled page was re-requested after its deferred arrival.
+    Rerequest,
+    /// A fabric port changed state (fault down / recovery edges).
+    PortEdge,
+    /// A cluster tenant was killed at its configured kill cycle.
+    TenantKill,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::PageMove => "PageMove",
+            EventKind::PageInstall => "PageInstall",
+            EventKind::LineFetch => "LineFetch",
+            EventKind::Throttle => "Throttle",
+            EventKind::Suppress => "Suppress",
+            EventKind::Rerequest => "Rerequest",
+            EventKind::PortEdge => "PortEdge",
+            EventKind::TenantKill => "TenantKill",
+        }
+    }
+
+    /// Thread lane a kind renders on: one lane per (tenant, resource).
+    fn lane(self) -> (u64, &'static str) {
+        match self {
+            EventKind::PageMove
+            | EventKind::PageInstall
+            | EventKind::Throttle
+            | EventKind::Rerequest => (0, "pages"),
+            EventKind::LineFetch | EventKind::Suppress => (1, "lines"),
+            EventKind::PortEdge => (2, "port"),
+            EventKind::TenantKill => (3, "lifecycle"),
+        }
+    }
+}
+
+/// One recorded event.  Spans carry a positive `dur`; instants carry 0.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Sim cycle of issue (spans) or occurrence (instants).
+    pub at: f64,
+    /// Span length in sim cycles; 0.0 for instant events.
+    pub dur: f64,
+    /// Tenant index on the shared fabric (0 for a solo machine).
+    pub tenant: usize,
+    /// Memory module involved, when the event is module-specific.
+    pub module: Option<usize>,
+    /// Page number the event concerns (0 when not applicable).
+    pub page: u64,
+    /// Bytes on the wire for transfer spans (0 otherwise).
+    pub bytes: u64,
+    /// Static annotation, e.g. a port-edge transition label.
+    pub detail: Option<&'static str>,
+}
+
+impl Event {
+    /// A complete span from `at` lasting `dur` cycles.
+    pub fn span(
+        kind: EventKind,
+        tenant: usize,
+        module: Option<usize>,
+        page: u64,
+        bytes: u64,
+        at: f64,
+        dur: f64,
+    ) -> Event {
+        Event { kind, at, dur, tenant, module, page, bytes, detail: None }
+    }
+
+    /// An instant event at `at`.
+    pub fn instant(
+        kind: EventKind,
+        tenant: usize,
+        module: Option<usize>,
+        page: u64,
+        at: f64,
+    ) -> Event {
+        Event { kind, at, dur: 0.0, tenant, module, page, bytes: 0, detail: None }
+    }
+}
+
+/// Bounded ring buffer of events.  Pushing onto a full ring evicts the
+/// oldest event and increments the drop counter — the tail of the run is
+/// always retained, and the number of drops is itself deterministic.
+pub struct TraceRing {
+    cap: usize,
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn new(cap: usize) -> TraceRing {
+        TraceRing { cap, events: VecDeque::with_capacity(cap.min(1024)), dropped: 0 }
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        if self.cap == 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &Event> + '_ {
+        self.events.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted (or refused, for a zero-capacity ring) so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// Export cells' rings as one Chrome trace-event JSON document
+/// (<https://ui.perfetto.dev> opens it directly).
+///
+/// Layout: one trace *process* per (cell, module) — plus a per-cell
+/// "engine" process for events with no module — and one *thread* lane
+/// per (tenant, resource) within it, where the resource is the event
+/// kind's lane (pages / lines / port / lifecycle).  `ts`/`dur` are sim
+/// cycles.  Everything is emitted in (cell, recorder, ring) order with
+/// pids assigned by first sorted appearance, so the document is a pure
+/// function of the cell list: byte-identical across `--jobs` counts.
+///
+/// Ring-overflow drop counts are reported under `otherData.cells`.
+pub fn chrome_trace(cells: &[(String, Vec<&super::Recorder>)]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut summary: Vec<Json> = Vec::new();
+    let mut next_pid = 1u64;
+    for (label, recs) in cells {
+        // Stable pid per module within this cell (None = engine lane).
+        let mut modules: BTreeSet<Option<usize>> = BTreeSet::new();
+        let mut lanes: BTreeSet<(Option<usize>, usize, u64, &str)> = BTreeSet::new();
+        for rec in recs {
+            for ev in rec.trace.events() {
+                let (lane, lane_name) = ev.kind.lane();
+                modules.insert(ev.module);
+                lanes.insert((ev.module, ev.tenant, lane, lane_name));
+            }
+        }
+        let mut pids: BTreeMap<Option<usize>, u64> = BTreeMap::new();
+        for m in &modules {
+            let pid = next_pid;
+            next_pid += 1;
+            pids.insert(*m, pid);
+            let pname = match m {
+                Some(m) => format!("{label} · module{m}"),
+                None => format!("{label} · engine"),
+            };
+            events.push(meta_event("process_name", pid, None, &pname));
+        }
+        for (m, tenant, lane, lane_name) in &lanes {
+            let pid = pids[m];
+            let tid = (*tenant as u64) * 4 + lane;
+            let tname = format!("t{tenant}/{lane_name}");
+            events.push(meta_event("thread_name", pid, Some(tid), &tname));
+        }
+        let (mut count, mut dropped) = (0u64, 0u64);
+        for rec in recs {
+            for ev in rec.trace.events() {
+                events.push(trace_event(ev, pids[&ev.module]));
+                count += 1;
+            }
+            dropped += rec.trace.dropped();
+        }
+        summary.push(Json::obj(vec![
+            ("cell", Json::str(label)),
+            ("events", Json::num(count as f64)),
+            ("dropped", Json::num(dropped as f64)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::arr(events)),
+        (
+            "otherData",
+            Json::obj(vec![
+                ("clock", Json::str("sim-cycles")),
+                ("cells", Json::arr(summary)),
+            ]),
+        ),
+    ])
+}
+
+fn meta_event(name: &str, pid: u64, tid: Option<u64>, value: &str) -> Json {
+    let mut pairs = vec![
+        ("name", Json::str(name)),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid.unwrap_or(0) as f64)),
+        ("args", Json::obj(vec![("name", Json::str(value))])),
+    ];
+    if tid.is_none() {
+        pairs.retain(|(k, _)| *k != "tid");
+    }
+    Json::obj(pairs)
+}
+
+fn trace_event(ev: &Event, pid: u64) -> Json {
+    let (lane, lane_name) = ev.kind.lane();
+    let mut args = vec![("page", Json::num(ev.page as f64))];
+    if ev.bytes > 0 {
+        args.push(("bytes", Json::num(ev.bytes as f64)));
+    }
+    if let Some(d) = ev.detail {
+        args.push(("detail", Json::str(d)));
+    }
+    let mut pairs = vec![
+        ("name", Json::str(ev.kind.name())),
+        ("cat", Json::str(lane_name)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num((ev.tenant as u64 * 4 + lane) as f64)),
+        ("ts", Json::num(ev.at)),
+        ("args", Json::obj(args)),
+    ];
+    if ev.dur > 0.0 {
+        pairs.push(("ph", Json::str("X")));
+        pairs.push(("dur", Json::num(ev.dur)));
+    } else {
+        pairs.push(("ph", Json::str("i")));
+        pairs.push(("s", Json::str("t")));
+    }
+    Json::obj(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ObsSpec, Recorder};
+
+    fn ev(kind: EventKind, at: f64) -> Event {
+        Event::instant(kind, 0, Some(0), 42, at)
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let mut ring = TraceRing::new(3);
+        for i in 0..5 {
+            ring.push(ev(EventKind::Throttle, i as f64));
+        }
+        assert_eq!(ring.len(), 3);
+        assert_eq!(ring.dropped(), 2);
+        let ts: Vec<f64> = ring.events().map(|e| e.at).collect();
+        assert_eq!(ts, [2.0, 3.0, 4.0], "tail of the run is retained");
+        let mut zero = TraceRing::new(0);
+        zero.push(ev(EventKind::Throttle, 0.0));
+        assert_eq!((zero.len(), zero.dropped()), (0, 1));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_complete() {
+        let mut rec = Recorder::new(ObsSpec::enabled());
+        rec.event(Event::span(EventKind::PageMove, 1, Some(0), 7, 2048, 100.0, 50.0));
+        rec.event(Event::instant(EventKind::Throttle, 1, None, 8, 160.0));
+        let doc = chrome_trace(&[("fig9/0".to_string(), vec![&rec])]);
+        let v = Json::parse(&doc.to_string()).unwrap();
+        let evs = v.get_arr("traceEvents").unwrap();
+        // 2 process_name + 2 thread_name metadata + 2 events.
+        assert_eq!(evs.len(), 6);
+        let span = evs.iter().find(|e| e.get_str("name") == Some("PageMove")).unwrap();
+        assert_eq!(span.get_str("ph"), Some("X"));
+        assert_eq!(span.get_f64("ts"), Some(100.0));
+        assert_eq!(span.get_f64("dur"), Some(50.0));
+        let inst = evs.iter().find(|e| e.get_str("name") == Some("Throttle")).unwrap();
+        assert_eq!(inst.get_str("ph"), Some("i"));
+        assert_eq!(inst.get_str("s"), Some("t"));
+        let cells = v.get("otherData").unwrap().get_arr("cells").unwrap();
+        assert_eq!(cells[0].get_f64("events"), Some(2.0));
+        assert_eq!(cells[0].get_f64("dropped"), Some(0.0));
+    }
+
+    #[test]
+    fn export_orders_pids_by_cell_then_module() {
+        let mut a = Recorder::new(ObsSpec::enabled());
+        a.event(Event::instant(EventKind::LineFetch, 0, Some(1), 1, 5.0));
+        a.event(Event::instant(EventKind::Throttle, 0, None, 1, 6.0));
+        let mut b = Recorder::new(ObsSpec::enabled());
+        b.event(Event::instant(EventKind::LineFetch, 0, Some(0), 2, 7.0));
+        let doc = chrome_trace(&[
+            ("cellA".to_string(), vec![&a]),
+            ("cellB".to_string(), vec![&b]),
+        ]);
+        let s1 = doc.to_string();
+        let s2 = chrome_trace(&[
+            ("cellA".to_string(), vec![&a]),
+            ("cellB".to_string(), vec![&b]),
+        ])
+        .to_string();
+        assert_eq!(s1, s2, "export is a pure function of its input");
+        // cellA gets pids 1 (engine lane, None sorts first) and 2; cellB pid 3.
+        let v = Json::parse(&s1).unwrap();
+        let names: Vec<(f64, String)> = v
+            .get_arr("traceEvents")
+            .unwrap()
+            .iter()
+            .filter(|e| e.get_str("name") == Some("process_name"))
+            .map(|e| {
+                let arg = e.get("args").unwrap().get_str("name").unwrap().to_string();
+                (e.get_f64("pid").unwrap(), arg)
+            })
+            .collect();
+        assert_eq!(
+            names,
+            vec![
+                (1.0, "cellA · engine".to_string()),
+                (2.0, "cellA · module1".to_string()),
+                (3.0, "cellB · module0".to_string()),
+            ]
+        );
+    }
+}

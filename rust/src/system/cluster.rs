@@ -40,6 +40,7 @@ use crate::config::{ClusterConfig, SharingMode, SimConfig, TenantShare};
 use crate::daemon::EgressStats;
 use crate::metrics::Metrics;
 use crate::net::NetSchedule;
+use crate::obs::{Event, EventKind, ObsSpec, Recorder};
 use crate::schemes::SchemeKind;
 use crate::sim::MergeQueue;
 use crate::system::machine::{Machine, RemoteMemory, SizeOracle};
@@ -167,6 +168,16 @@ impl Cluster {
         self.states[t]
     }
 
+    /// Attach an observability recorder to tenant `t` (before `run`).
+    pub fn set_obs(&mut self, t: usize, rec: Recorder) {
+        self.tenants[t].set_obs(rec);
+    }
+
+    /// Detach tenant `t`'s recorder (after `run`), if one was attached.
+    pub fn take_obs(&mut self, t: usize) -> Option<Recorder> {
+        self.tenants[t].take_obs()
+    }
+
     /// Retire tenant `t`.  Running → {Killed, Finished} is the only legal
     /// move — both exits are terminal (asserted).
     fn transition(&mut self, t: usize, to: TenantState) {
@@ -199,7 +210,13 @@ impl Cluster {
         for i in 0..self.tenants.len() {
             match self.tenants[i].peek(&traces[i]) {
                 Some((_, at)) if at < self.kills[i] => q.push(at, i),
-                Some(_) => self.transition(i, TenantState::Killed),
+                Some(_) => {
+                    self.transition(i, TenantState::Killed);
+                    let at = self.kills[i];
+                    if let Some(rec) = self.tenants[i].obs_mut() {
+                        rec.event(Event::instant(EventKind::TenantKill, i, None, 0, at));
+                    }
+                }
                 None => self.transition(i, TenantState::Finished),
             }
         }
@@ -210,7 +227,13 @@ impl Cluster {
             self.tenants[i].step_core(&mut self.remote, &traces[i], ci);
             match self.tenants[i].peek(&traces[i]) {
                 Some((_, at)) if at < self.kills[i] => q.push(at, i),
-                Some(_) => self.transition(i, TenantState::Killed),
+                Some(_) => {
+                    self.transition(i, TenantState::Killed);
+                    let at = self.kills[i];
+                    if let Some(rec) = self.tenants[i].obs_mut() {
+                        rec.event(Event::instant(EventKind::TenantKill, i, None, 0, at));
+                    }
+                }
                 None => self.transition(i, TenantState::Finished),
             }
         }
@@ -241,6 +264,19 @@ pub fn run_cluster(
     tenants: &[(String, SchemeKind)],
     fetch: impl Fn(&str) -> (Arc<Trace>, Profile),
 ) -> Vec<Metrics> {
+    run_cluster_obs(ccfg, base_cfg, tenants, fetch, None).0
+}
+
+/// [`run_cluster`] with optional observability: when `obs` is set, every
+/// tenant gets its own recorder, returned alongside the metrics in
+/// tenant order (empty when `obs` is `None`).
+pub fn run_cluster_obs(
+    ccfg: &ClusterConfig,
+    base_cfg: &SimConfig,
+    tenants: &[(String, SchemeKind)],
+    fetch: impl Fn(&str) -> (Arc<Trace>, Profile),
+    obs: Option<&ObsSpec>,
+) -> (Vec<Metrics>, Vec<Recorder>) {
     let mut inits = Vec::new();
     let mut traces = Vec::new();
     for (wl, kind) in tenants {
@@ -254,7 +290,16 @@ pub fn run_cluster(
         });
         traces.push(vec![trace]);
     }
-    Cluster::new(ccfg, inits).run(&traces)
+    let mut cluster = Cluster::new(ccfg, inits);
+    if let Some(spec) = obs {
+        for t in 0..cluster.tenants() {
+            cluster.set_obs(t, Recorder::new(*spec));
+        }
+    }
+    let metrics = cluster.run(&traces);
+    let recorders =
+        (0..cluster.tenants()).filter_map(|t| cluster.take_obs(t)).collect();
+    (metrics, recorders)
 }
 
 #[cfg(test)]

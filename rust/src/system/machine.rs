@@ -28,6 +28,7 @@ use crate::daemon::{ComputeEngine, DirtyOutcome, MemoryEngine, PageArrival};
 use crate::mem::{Access as CacheAccess, Cache, DramBus, LocalMemory};
 use crate::metrics::Metrics;
 use crate::net::{Class, Disturbance, Fabric, ScheduleHandle};
+use crate::obs::{Event, EventKind, ModuleSample, Recorder, Snapshot};
 use crate::schemes::{Policy, SchemeKind};
 use crate::sim::{EventQueue, MergeQueue};
 use crate::system::fault::RecoveryPolicy;
@@ -196,6 +197,11 @@ pub struct Machine {
     /// meaningful when the shared fabric carries a
     /// [`crate::system::fault::FaultPlan`]; default `Stall`).
     recovery: RecoveryPolicy,
+    /// Observability recorder (telemetry epochs + event ring).  `None`
+    /// — the default — is the exact historical code path: every hook is
+    /// one `Option` check, and a recorder only ever *reads* simulation
+    /// state (see `crate::obs`).
+    obs: Option<Recorder>,
 }
 
 impl Machine {
@@ -287,6 +293,7 @@ impl Machine {
             interval_cycles,
             core_tag_shift: 40,
             recovery: RecoveryPolicy::Stall,
+            obs: None,
             cores,
             cfg,
             policy,
@@ -321,6 +328,23 @@ impl Machine {
             .expect("set_net_schedule drives a solo machine's own fabric")
             .fabric
             .set_schedule(mk);
+    }
+
+    /// Attach an observability recorder.  Attach before `prepare`/`run`;
+    /// take it back with [`Machine::take_obs`] after `finish`.
+    pub fn set_obs(&mut self, rec: Recorder) {
+        self.obs = Some(rec);
+    }
+
+    /// Detach and return the recorder (with its telemetry and trace).
+    pub fn take_obs(&mut self) -> Option<Recorder> {
+        self.obs.take()
+    }
+
+    /// The attached recorder, if any (a cluster uses this to stamp
+    /// tenant lifecycle events).
+    pub fn obs_mut(&mut self) -> Option<&mut Recorder> {
+        self.obs.as_mut()
     }
 
     #[inline]
@@ -409,6 +433,17 @@ impl Machine {
         // Write into local memory through the local DRAM bus.
         let arrive = self.local_bus.access(t4, PAGE_BYTES, Class::Page);
         self.metrics.net_bytes_in += bytes;
+        if let Some(rec) = self.obs.as_mut() {
+            rec.event(Event::span(
+                EventKind::PageMove,
+                self.id,
+                Some(m),
+                page,
+                bytes,
+                now,
+                arrive - now,
+            ));
+        }
         // Transfer enters link service at t2 (start of serialization).
         (t2, arrive)
     }
@@ -438,6 +473,17 @@ impl Machine {
         let t3 = remote.fabric.send_down(m, self.id, t2, LINE_BYTES, Class::Line);
         remote.engines[m].note_egress(self.id, LINE_BYTES, LINE_BYTES);
         self.metrics.net_bytes_in += LINE_BYTES;
+        if let Some(rec) = self.obs.as_mut() {
+            rec.event(Event::span(
+                EventKind::LineFetch,
+                self.id,
+                Some(m),
+                page,
+                LINE_BYTES,
+                now,
+                t3 - now,
+            ));
+        }
         t3
     }
 
@@ -494,6 +540,15 @@ impl Machine {
                 Arrival::Page { page } => match self.engine.page_arrived(page) {
                     PageArrival::Install { parked_dirty_lines } => {
                         self.metrics.pages_moved += 1;
+                        if let Some(rec) = self.obs.as_mut() {
+                            rec.event(Event::instant(
+                                EventKind::PageInstall,
+                                self.id,
+                                None,
+                                page,
+                                at,
+                            ));
+                        }
                         if let Some(ev) = self.local.install(page, at) {
                             if ev.dirty {
                                 self.writeback_page(remote, ev.page, at);
@@ -504,6 +559,15 @@ impl Machine {
                         }
                     }
                     PageArrival::ThrottledRerequest => {
+                        if let Some(rec) = self.obs.as_mut() {
+                            rec.event(Event::instant(
+                                EventKind::Rerequest,
+                                self.id,
+                                None,
+                                page,
+                                at,
+                            ));
+                        }
                         let (start, arrive) = self.schedule_page(remote, page, at);
                         self.engine.note_page_scheduled(page, start, arrive);
                         self.arrivals.push(arrive, Arrival::Page { page });
@@ -523,6 +587,71 @@ impl Machine {
                 }
             }
         }
+    }
+
+    /// Epoch-gated observability sampling: when `now` crosses the next
+    /// epoch boundary, capture a telemetry snapshot and check port-state
+    /// edges, stamped at the boundary cycle.  One comparison when no
+    /// recorder (or no boundary) is due.
+    fn sample_obs(&mut self, remote: &RemoteMemory, now: f64) {
+        let Some(rec) = self.obs.as_mut() else { return };
+        let Some(cycle) = rec.epoch_crossed(now) else { return };
+        self.obs_capture(remote, cycle);
+    }
+
+    /// Capture one observability sample at `cycle`.  Observation-only by
+    /// construction: every fabric/engine/local accessor used here takes
+    /// `&self`, so a recorder can never perturb simulation state.
+    fn obs_capture(&mut self, remote: &RemoteMemory, cycle: f64) {
+        let id = self.id;
+        let Some(rec) = self.obs.as_mut() else { return };
+        if rec.wants_trace() {
+            for m in 0..remote.modules() {
+                rec.port_edge(m, remote.fabric.port_state(m, id, cycle), cycle, id);
+            }
+        }
+        if !rec.wants_telemetry() {
+            return;
+        }
+        let modules = (0..remote.modules())
+            .map(|m| {
+                let egress = remote.engines[m].egress_stats(id);
+                let (fa, fd) = remote.fabric.fault_counts(m, id);
+                let (ea, ed) = remote.engines[m].fault_counts(id);
+                ModuleSample {
+                    module: m,
+                    port: remote.fabric.port_state(m, id, cycle),
+                    link_backlog_pages: remote.fabric.down_backlog(m, id, cycle, Class::Page),
+                    link_backlog_lines: remote.fabric.down_backlog(m, id, cycle, Class::Line),
+                    engine_backlog_pages: remote.engines[m].backlog(id, cycle, Class::Page),
+                    engine_backlog_lines: remote.engines[m].backlog(id, cycle, Class::Line),
+                    egress_raw_bytes: egress.raw_bytes,
+                    egress_sent_bytes: egress.sent_bytes,
+                    reclaimed_bytes: remote.fabric.reclaimed_bytes(m, id)
+                        + remote.engines[m].reclaimed_bytes(id),
+                    aborted: fa + ea,
+                    deferred: fd + ed,
+                }
+            })
+            .collect();
+        rec.push_snapshot(Snapshot {
+            cycle,
+            tenant: id,
+            inflight_pages: self.engine.inflight_pages(),
+            inflight_lines: self.engine.inflight_lines(),
+            dirty_buffered: self.engine.dirty_buffered(),
+            page_buf_util: self.engine.page_util(),
+            line_buf_util: self.engine.line_util(),
+            local_pages: self.local.len(),
+            local_capacity: self.local.capacity(),
+            local_hit_rate: self.local.hit_rate(),
+            pages_moved: self.metrics.pages_moved,
+            lines_moved: self.metrics.lines_moved,
+            pages_throttled: self.metrics.pages_throttled,
+            net_bytes_in: self.metrics.net_bytes_in,
+            compression_ratio: if self.policy.compress { self.oracle.ratio() } else { 1.0 },
+            modules,
+        });
     }
 
     /// §4.3 dirty-data handling for a dirty line evicted from the LLC.
@@ -654,6 +783,9 @@ impl Machine {
             } else {
                 self.engine.note_page_buffer_full();
                 self.metrics.pages_throttled += 1;
+                if let Some(rec) = self.obs.as_mut() {
+                    rec.event(Event::instant(EventKind::Throttle, self.id, None, page, now));
+                }
             }
         }
 
@@ -665,6 +797,9 @@ impl Machine {
                 line_arr = Some(arr);
             } else {
                 self.engine.note_line_suppressed();
+                if let Some(rec) = self.obs.as_mut() {
+                    rec.event(Event::instant(EventKind::Suppress, self.id, None, page, now));
+                }
             }
         }
 
@@ -687,6 +822,7 @@ impl Machine {
         let tagged = addr | ((ci as u64) << self.core_tag_shift);
         let now0 = self.cores[ci].time;
         self.apply_arrivals(remote, now0);
+        self.sample_obs(remote, now0);
 
         // Gap instructions + the access instruction itself.
         let instrs = gap as u64 + 1;
@@ -942,6 +1078,10 @@ impl Machine {
         } else {
             1.0
         };
+        // Final observability sample pinned at the horizon, so every
+        // enabled run carries at least one snapshot and the last
+        // port-state edge is never lost to epoch quantization.
+        self.obs_capture(remote, horizon);
     }
 
     /// Run the traces to completion (one per core, cycled if fewer).

@@ -8,7 +8,10 @@
 //! * every lifecycle state enum named in DESIGN.md's "Lifecycles and
 //!   state machines" transition tables exists in the source, and every
 //!   state named in a table's first column appears as a source
-//!   identifier.
+//!   identifier;
+//! * every event kind named in the first column of DESIGN.md's
+//!   "Observability" tables appears as a source identifier (the
+//!   `EventKind` taxonomy in `rust/src/obs/trace.rs`).
 //!
 //! The rule anchors on the registry file: fixture repos without it are
 //! skipped entirely (a real tree without it would not build), while a
@@ -18,6 +21,7 @@ use super::{scan, Diagnostic, Repo, Rule, SourceFile, R4};
 
 const REGISTRY_PATH: &str = "rust/src/experiments/mod.rs";
 const LIFECYCLE_HEADING: &str = "## Lifecycles and state machines";
+const OBSERVABILITY_HEADING: &str = "## Observability";
 
 pub struct DocDrift;
 
@@ -61,11 +65,13 @@ fn backtick_spans(line: &str) -> Vec<&str> {
     line.split('`').enumerate().filter(|(i, _)| i % 2 == 1).map(|(_, s)| s).collect()
 }
 
-fn lifecycle_section(text: &str) -> Vec<(usize, &str)> {
+/// Lines of the `heading` section (1-based numbering), up to the next
+/// `## ` heading.
+fn doc_section<'a>(text: &'a str, heading: &str) -> Vec<(usize, &'a str)> {
     let mut out = Vec::new();
     let mut inside = false;
     for (i, line) in text.lines().enumerate() {
-        if line.trim_end() == LIFECYCLE_HEADING {
+        if line.trim_end() == heading {
             inside = true;
             continue;
         }
@@ -77,6 +83,37 @@ fn lifecycle_section(text: &str) -> Vec<(usize, &str)> {
         }
     }
     out
+}
+
+/// Check that every backticked uppercase-start identifier in the first
+/// column of the section's tables appears as a source identifier.
+fn check_table_idents(
+    repo: &Repo,
+    section: &[(usize, &str)],
+    what: &str,
+    out: &mut Vec<Diagnostic>,
+) {
+    let mut seen: Vec<&str> = Vec::new();
+    for (line_no, line) in section {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let Some(first) = line.split('|').nth(1) else { continue };
+        for span in backtick_spans(first) {
+            let ok = span.starts_with(|c: char| c.is_ascii_uppercase())
+                && span.chars().all(scan::is_ident_char);
+            if ok && !seen.contains(&span) {
+                seen.push(span);
+                if !source_has_token(repo, span) {
+                    let msg = format!(
+                        "{what} `{span}` is in a DESIGN.md table but never \
+                         appears in the scanned source"
+                    );
+                    out.push(Diagnostic::new("DESIGN.md", *line_no, R4, msg));
+                }
+            }
+        }
+    }
 }
 
 fn enum_shaped(name: &str) -> bool {
@@ -107,8 +144,9 @@ impl Rule for DocDrift {
          ablation_*) in DESIGN.md/EXPERIMENTS.md names a registered experiment; (c)\n\
          every `SomethingState` enum named in the lifecycle section exists in rust/src,\n\
          and every state in a lifecycle table's first column appears as a source\n\
-         identifier.  Fix by registering the experiment, documenting it, or updating\n\
-         the stale doc."
+         identifier; (d) every event kind in the \"Observability\" section's tables\n\
+         appears as a source identifier (the EventKind taxonomy).  Fix by registering\n\
+         the experiment, documenting it, or updating the stale doc."
     }
 
     fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
@@ -149,7 +187,7 @@ impl Rule for DocDrift {
             out.push(Diagnostic::new(REGISTRY_PATH, 1, R4, msg));
             return;
         };
-        let section = lifecycle_section(design);
+        let section = doc_section(design, LIFECYCLE_HEADING);
         let mut checked: Vec<&str> = Vec::new();
         for (line_no, line) in &section {
             for span in backtick_spans(line) {
@@ -167,27 +205,13 @@ impl Rule for DocDrift {
                 }
             }
         }
-        let mut states: Vec<&str> = Vec::new();
-        for (line_no, line) in &section {
-            if !line.trim_start().starts_with('|') {
-                continue;
-            }
-            let Some(first) = line.split('|').nth(1) else { continue };
-            for span in backtick_spans(first) {
-                let ok = span.starts_with(|c: char| c.is_ascii_uppercase())
-                    && span.chars().all(scan::is_ident_char);
-                if ok && !states.contains(&span) {
-                    states.push(span);
-                    if !source_has_token(repo, span) {
-                        let msg = format!(
-                            "lifecycle state `{span}` is in a DESIGN.md transition table \
-                             but never appears in the scanned source"
-                        );
-                        out.push(Diagnostic::new("DESIGN.md", *line_no, R4, msg));
-                    }
-                }
-            }
-        }
+        check_table_idents(repo, &section, "lifecycle state", out);
+        check_table_idents(
+            repo,
+            &doc_section(design, OBSERVABILITY_HEADING),
+            "observability event kind",
+            out,
+        );
     }
 }
 
@@ -279,5 +303,27 @@ mod tests {
             no_enum.iter().any(|x| x.message.contains("`BarState`")),
             "missing enum is drift: {no_enum:?}"
         );
+    }
+
+    #[test]
+    fn observability_event_kinds_must_exist_in_source() {
+        let design = "# Doc\n\n\
+            ## Observability\n\n\
+            | event | meaning |\n\
+            |---|---|\n\
+            | `PageMove` | migration span |\n\
+            | `Vanished` | removed long ago |\n\n\
+            ## Next section\n";
+        let d = check(
+            &[
+                (REGISTRY_PATH, REGISTRY_FIXTURE),
+                ("rust/src/t.rs", "pub enum EventKind { PageMove }\n"),
+            ],
+            &[("DESIGN.md", design), ("EXPERIMENTS.md", "fig1 cluster_a\n")],
+        );
+        let msgs: Vec<String> = d.iter().map(|x| x.to_string()).collect();
+        assert_eq!(d.len(), 1, "{msgs:?}");
+        assert!(msgs[0].contains("`Vanished`"), "{msgs:?}");
+        assert!(msgs[0].contains("observability event kind"), "{msgs:?}");
     }
 }

@@ -6,15 +6,18 @@
 //! §"Simulator performance model".
 
 use daemon_sim::config::SimConfig;
-use daemon_sim::experiments::orchestrator::{run_cells_flat, CellSpec, Shard};
+use daemon_sim::experiments::orchestrator::{
+    run_cells_flat, run_cells_flat_obs, CellSpec, Shard,
+};
 use daemon_sim::experiments::Runner;
 use daemon_sim::metrics::Metrics;
+use daemon_sim::obs::{chrome_trace, telemetry_jsonl, Event, ObsSpec, Recorder};
 use daemon_sim::schemes::SchemeKind;
 use daemon_sim::system::Machine;
 use daemon_sim::workloads::cache::TraceCache;
 use daemon_sim::workloads::{by_name, Scale};
 
-fn run_once(kind: SchemeKind) -> String {
+fn run_once_obs(kind: SchemeKind, obs: Option<ObsSpec>) -> (String, Option<Recorder>) {
     let w = by_name("pr").unwrap();
     let cfg = SimConfig::test_scale().with_seed(11);
     let trace = w.generate(cfg.seed, Scale::Test);
@@ -25,8 +28,15 @@ fn run_once(kind: SchemeKind) -> String {
         vec![w.profile()],
         None,
     );
+    if let Some(spec) = obs {
+        m.set_obs(Recorder::new(spec));
+    }
     m.run(std::slice::from_ref(&trace));
-    m.metrics.to_json().to_string()
+    (m.metrics.to_json().to_string(), m.take_obs())
+}
+
+fn run_once(kind: SchemeKind) -> String {
+    run_once_obs(kind, None).0
 }
 
 #[test]
@@ -75,4 +85,92 @@ fn jobs_4_matches_jobs_1_byte_identically() {
     // And a second racing pass over the now-warm global memo.
     let warm = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 4));
     assert_eq!(serial, warm, "warm-memo rerun diverged");
+}
+
+/// The observability off/on pin: attaching a recorder must not perturb a
+/// single metric byte.  Every sampled accessor takes `&self`, so this is
+/// true by construction — this test keeps it true under refactoring.
+#[test]
+fn attaching_a_recorder_never_perturbs_metrics() {
+    for kind in [SchemeKind::Daemon, SchemeKind::Pq] {
+        let (plain, _) = run_once_obs(kind, None);
+        let spec = ObsSpec::enabled().with_epoch(5_000.0);
+        let (observed, rec) = run_once_obs(kind, Some(spec));
+        assert_eq!(plain, observed, "{kind:?}: recorder changed the metrics");
+        let rec = rec.expect("recorder survives the run");
+        assert!(
+            !rec.telemetry.snapshots.is_empty(),
+            "{kind:?}: epoch sampling (plus the forced horizon sample) \
+             must produce snapshots"
+        );
+        assert!(
+            !rec.trace.is_empty(),
+            "{kind:?}: page-moving schemes must log trace events"
+        );
+    }
+}
+
+/// Observability artifacts are part of the determinism contract: the
+/// serialized telemetry JSONL and Chrome trace must be byte-identical
+/// across `--jobs 1` vs `--jobs 4` and across repeat runs.
+#[test]
+fn obs_artifacts_are_jobs_invariant_and_repeatable() {
+    let r = Runner::test();
+    let cells: Vec<CellSpec> = ["pr", "sp"]
+        .into_iter()
+        .flat_map(|wl| {
+            [SchemeKind::Daemon, SchemeKind::Pq]
+                .into_iter()
+                .map(move |k| CellSpec::new(wl, k, SimConfig::test_scale()))
+        })
+        .collect();
+    let spec = ObsSpec::enabled().with_epoch(10_000.0);
+    let export = |jobs: usize| -> (String, String) {
+        let slots = run_cells_flat_obs(
+            &r,
+            &TraceCache::new(),
+            &cells,
+            Shard::full(),
+            jobs,
+            Some(&spec),
+            None,
+        );
+        let owned: Vec<(String, Vec<Recorder>)> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let (_, recs) = s.expect("unsharded run fills every slot");
+                (format!("cell/{i}"), recs)
+            })
+            .collect();
+        let cells_ref: Vec<(String, Vec<&Recorder>)> = owned
+            .iter()
+            .map(|(l, rs)| (l.clone(), rs.iter().collect()))
+            .collect();
+        (telemetry_jsonl(&cells_ref), chrome_trace(&cells_ref).to_string())
+    };
+    let (t1, c1) = export(1);
+    assert!(!t1.is_empty(), "telemetry must not be empty");
+    let (t4, c4) = export(4);
+    assert_eq!(t1, t4, "telemetry diverged across --jobs counts");
+    assert_eq!(c1, c4, "chrome trace diverged across --jobs counts");
+    let (t1b, c1b) = export(1);
+    assert_eq!(t1, t1b, "telemetry diverged across repeat runs");
+    assert_eq!(c1, c1b, "chrome trace diverged across repeat runs");
+}
+
+/// Ring overflow is deterministic: a tiny ring must overflow, count its
+/// drops identically on repeat runs, and retain an identical tail.
+#[test]
+fn ring_overflow_drops_are_deterministic() {
+    let spec = ObsSpec::enabled().with_trace_capacity(16);
+    let (_, ra) = run_once_obs(SchemeKind::Daemon, Some(spec));
+    let (_, rb) = run_once_obs(SchemeKind::Daemon, Some(spec));
+    let (ra, rb) = (ra.unwrap(), rb.unwrap());
+    assert!(ra.trace.dropped() > 0, "a 16-event ring must overflow");
+    assert_eq!(ra.trace.len(), 16, "ring holds exactly its capacity");
+    assert_eq!(ra.trace.dropped(), rb.trace.dropped(), "drop counts diverged");
+    let tail_a: Vec<Event> = ra.trace.events().cloned().collect();
+    let tail_b: Vec<Event> = rb.trace.events().cloned().collect();
+    assert_eq!(tail_a, tail_b, "retained tails diverged");
 }
