@@ -4,8 +4,8 @@
 //! Scans `rust/src`, `rust/tests`, and `benches` and enforces the
 //! DESIGN.md determinism rules (R1 hashing, R2 entropy, R3 iteration
 //! order) plus the drift invariants (R4 registry/lifecycle docs, R5
-//! shard wire format).  CI runs this as a required check; run it
-//! locally with `cargo run --bin daemon-lint`.
+//! shard wire format, R6 policy-registry docs).  CI runs this as a
+//! required check; run it locally with `cargo run --bin daemon-lint`.
 //!
 //! Usage:
 //!   daemon-lint [--root DIR]    scan a tree (default: current dir)

@@ -124,11 +124,9 @@ pub enum SharingMode {
 }
 
 impl SharingMode {
+    /// Registry id of this mode's [`crate::policy::SharingPolicy`].
     pub fn name(&self) -> &'static str {
-        match self {
-            SharingMode::Strict => "strict",
-            SharingMode::WorkConserving => "work-conserving",
-        }
+        crate::policy::sharing(*self).id()
     }
 }
 
@@ -268,6 +266,27 @@ impl ClusterConfig {
     /// The per-module link configurations the fabric is built from.
     pub fn nets(&self) -> Vec<NetConfig> {
         vec![self.net; self.memory_modules.max(1)]
+    }
+
+    /// Check cross-field invariants that individual setters cannot see.
+    /// Today that is one rule, sourced from the policy registry: a fault
+    /// plan requires a sharing policy with
+    /// [`supports_faults`](crate::policy::SharingPolicy::supports_faults)
+    /// — the work-conserving borrow planner would lend a down port's
+    /// capacity away, silently erasing the fault.  `Cluster::new` calls
+    /// this and panics with the message; callers assembling configs
+    /// programmatically can call it early for a descriptive error
+    /// instead.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.faults.is_some() && !crate::policy::sharing(self.sharing).supports_faults() {
+            return Err(format!(
+                "fault injection requires SharingMode::Strict (the work-conserving \
+                 borrow planner would lend a down port's capacity away), but \
+                 ClusterConfig.sharing is {:?}",
+                self.sharing
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -532,6 +551,23 @@ mod tests {
         assert_eq!(d.faults, None);
         assert_eq!(d.recovery, RecoveryPolicy::Stall);
         assert_eq!(SharingMode::WorkConserving.name(), "work-conserving");
+    }
+
+    #[test]
+    fn cluster_config_validate_gates_faults_by_sharing_capability() {
+        let plan = FaultPlan::new().module_crash(0, 1.0, 2.0);
+        // Fault-free configs validate under either sharing mode.
+        assert_eq!(ClusterConfig::new(2).validate(), Ok(()));
+        let wc = ClusterConfig::new(2).with_sharing(SharingMode::WorkConserving);
+        assert_eq!(wc.validate(), Ok(()));
+        // Faults + strict sharing is the supported combination.
+        let ok = ClusterConfig::new(2).with_faults(plan.clone());
+        assert_eq!(ok.validate(), Ok(()));
+        // Faults + work-conserving is rejected with a descriptive error.
+        let bad = wc.with_faults(plan);
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("requires SharingMode::Strict"), "got: {err}");
+        assert!(err.contains("WorkConserving"), "got: {err}");
     }
 
     #[test]

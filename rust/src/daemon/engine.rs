@@ -17,28 +17,150 @@
 //!     *throttled* — its arrival is ignored and the page re-requested.
 
 use crate::config::DaemonParams;
+use crate::lifecycle::{is_terminal, Lifecycle, StateMachine, Transition};
 use crate::util::hash::FxHashMap;
 
-/// Inflight page buffer entry states (Fig. 7b).
+/// Inflight page buffer entry lifecycle (Fig. 7b) — see the DESIGN.md
+/// §"Lifecycles and state machines" table this graph is pinned against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PageState {
+pub enum PageLifecycle {
     /// In the page queue, transfer not yet started.
     Scheduled,
     /// Transfer issued (being migrated).
     Moved,
     /// Dirty-threshold exceeded: arrival must be ignored + re-requested.
     Throttled,
+    /// Terminal: arrived clean — installed in local memory (the entry is
+    /// removed from the buffer as soon as this state is reached).
+    Installed,
+    /// Terminal: arrived stale after a throttle — data discarded and the
+    /// page re-requested (entry likewise removed immediately).
+    Rerequested,
+}
+
+/// Events driving [`PageLifecycle`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PageEvent {
+    /// The link transfer enters service (`start <= now`).
+    Start,
+    /// A dirty evicted line parks in the dirty buffer.
+    Park,
+    /// Dirty flush threshold exceeded / dirty buffer full.
+    Overflow,
+    /// The page data arrives at the compute component.
+    Arrive,
+}
+
+impl Lifecycle for PageLifecycle {
+    type Event = PageEvent;
+    const NAME: &'static str = "engine page";
+    const STATES: &'static [PageLifecycle] = &[
+        PageLifecycle::Scheduled,
+        PageLifecycle::Moved,
+        PageLifecycle::Throttled,
+        PageLifecycle::Installed,
+        PageLifecycle::Rerequested,
+    ];
+    const EVENTS: &'static [PageEvent] =
+        &[PageEvent::Start, PageEvent::Park, PageEvent::Overflow, PageEvent::Arrive];
+    const TABLE: &'static [Transition<PageLifecycle, PageEvent>] = &[
+        Transition { from: PageLifecycle::Scheduled, event: PageEvent::Start, to: PageLifecycle::Moved },
+        Transition { from: PageLifecycle::Scheduled, event: PageEvent::Park, to: PageLifecycle::Scheduled },
+        Transition { from: PageLifecycle::Moved, event: PageEvent::Park, to: PageLifecycle::Moved },
+        Transition { from: PageLifecycle::Scheduled, event: PageEvent::Overflow, to: PageLifecycle::Throttled },
+        Transition { from: PageLifecycle::Moved, event: PageEvent::Overflow, to: PageLifecycle::Throttled },
+        Transition { from: PageLifecycle::Scheduled, event: PageEvent::Arrive, to: PageLifecycle::Installed },
+        Transition { from: PageLifecycle::Moved, event: PageEvent::Arrive, to: PageLifecycle::Installed },
+        Transition { from: PageLifecycle::Throttled, event: PageEvent::Arrive, to: PageLifecycle::Rerequested },
+    ];
+
+    fn state_name(self) -> &'static str {
+        match self {
+            PageLifecycle::Scheduled => "Scheduled",
+            PageLifecycle::Moved => "Moved",
+            PageLifecycle::Throttled => "Throttled",
+            PageLifecycle::Installed => "Installed",
+            PageLifecycle::Rerequested => "Rerequested",
+        }
+    }
+    fn event_name(event: PageEvent) -> &'static str {
+        match event {
+            PageEvent::Start => "Start",
+            PageEvent::Park => "Park",
+            PageEvent::Overflow => "Overflow",
+            PageEvent::Arrive => "Arrive",
+        }
+    }
+}
+
+/// Per-line lifecycle of an inflight sub-block request.  The engine
+/// stores up to 64 of these machines per page as a dense bitmap (a set
+/// bit is a machine in `Inflight`; cleared bits have reached a terminal
+/// state and left the buffer), so the enum itself is the documentation
+/// and type-checking surface while the hot path stays bit arithmetic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineLifecycle {
+    /// Line movement issued, data not yet arrived.
+    Inflight,
+    /// Terminal: the line data arrived and was handed to the LLC.
+    Delivered,
+    /// Terminal: the whole page arrived first — any later packet for
+    /// this line is stale and ignored (§4.3 scenario i).
+    Stale,
+}
+
+/// Events driving [`LineLifecycle`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LineEvent {
+    /// The line data packet arrives.
+    Arrive,
+    /// The page containing this line arrives first.
+    Supersede,
+}
+
+impl Lifecycle for LineLifecycle {
+    type Event = LineEvent;
+    const NAME: &'static str = "engine line";
+    const STATES: &'static [LineLifecycle] =
+        &[LineLifecycle::Inflight, LineLifecycle::Delivered, LineLifecycle::Stale];
+    const EVENTS: &'static [LineEvent] = &[LineEvent::Arrive, LineEvent::Supersede];
+    const TABLE: &'static [Transition<LineLifecycle, LineEvent>] = &[
+        Transition { from: LineLifecycle::Inflight, event: LineEvent::Arrive, to: LineLifecycle::Delivered },
+        Transition { from: LineLifecycle::Inflight, event: LineEvent::Supersede, to: LineLifecycle::Stale },
+    ];
+
+    fn state_name(self) -> &'static str {
+        match self {
+            LineLifecycle::Inflight => "Inflight",
+            LineLifecycle::Delivered => "Delivered",
+            LineLifecycle::Stale => "Stale",
+        }
+    }
+    fn event_name(event: LineEvent) -> &'static str {
+        match event {
+            LineEvent::Arrive => "Arrive",
+            LineEvent::Supersede => "Supersede",
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
 pub struct PageEntry {
-    pub state: PageState,
+    /// The entry's lifecycle machine — mutable only via `transition`.
+    pub lifecycle: StateMachine<PageLifecycle>,
     /// Cycle at which the link transfer starts (enters service).
     pub start: f64,
     /// Cycle at which the page arrives at the compute component.
     pub arrive: f64,
     /// Offsets (64-bit bitmap) of dirty lines parked in the dirty buffer.
     pub dirty_mask: u64,
+}
+
+impl PageEntry {
+    /// Current lifecycle state.
+    pub fn state(&self) -> PageLifecycle {
+        self.lifecycle.state()
+    }
 }
 
 /// Inflight sub-block buffer entry (Fig. 7a): page-indexed, 64-bit offset
@@ -200,7 +322,12 @@ impl ComputeEngine {
         debug_assert!(self.pages.len() < self.params.inflight_page_buf);
         self.pages.insert(
             page,
-            PageEntry { state: PageState::Scheduled, start, arrive, dirty_mask: 0 },
+            PageEntry {
+                lifecycle: StateMachine::new(PageLifecycle::Scheduled),
+                start,
+                arrive,
+                dirty_mask: 0,
+            },
         );
         self.pages_requested += 1;
     }
@@ -223,10 +350,26 @@ impl ComputeEngine {
     #[inline]
     fn promote_moved_one(&mut self, page: u64, now: f64) {
         if let Some(e) = self.pages.get_mut(&page) {
-            if e.state == PageState::Scheduled && e.start <= now {
-                e.state = PageState::Moved;
+            if e.lifecycle.state() == PageLifecycle::Scheduled && e.start <= now {
+                e.lifecycle.transition(PageEvent::Start);
             }
         }
+    }
+
+    /// Retire `mask`'s set bits — each a [`LineLifecycle`] machine in
+    /// `Inflight` — through `event`.  All set bits take the same edge,
+    /// so one machine drive covers the batch; the edge must land in a
+    /// terminal state (the bits leave the buffer).  Returns how many
+    /// lines retired.
+    #[inline]
+    fn retire_lines(mask: u64, event: LineEvent) -> usize {
+        let n = mask.count_ones() as usize;
+        if n > 0 {
+            let mut line = StateMachine::new(LineLifecycle::Inflight);
+            line.transition(event);
+            debug_assert!(is_terminal(line.state()));
+        }
+        n
     }
 
     /// Line arrival: release its inflight entry.  Returns false if the
@@ -236,8 +379,8 @@ impl ComputeEngine {
         if let Some(e) = self.lines.get_mut(&page) {
             let bit = 1u64 << offset;
             if e.mask & bit != 0 {
+                self.line_count -= Self::retire_lines(bit, LineEvent::Arrive);
                 e.mask &= !bit;
-                self.line_count -= 1;
                 if e.mask == 0 {
                     self.lines.remove(&page);
                 }
@@ -250,18 +393,21 @@ impl ComputeEngine {
     /// Outcome of a page arrival.
     #[must_use]
     pub fn page_arrived(&mut self, page: u64) -> PageArrival {
-        let Some(entry) = self.pages.remove(&page) else {
+        let Some(mut entry) = self.pages.remove(&page) else {
             return PageArrival::Unknown;
         };
-        // §4.3 scenario (i): drop inflight line entries for this page —
-        // any later line packets are stale and will be ignored.
+        // §4.3 scenario (i): every inflight line of this page takes the
+        // Inflight -> Stale edge at once — any later line packets are
+        // stale and will be ignored.
         if let Some(le) = self.lines.remove(&page) {
-            self.line_count -= le.mask.count_ones() as usize;
+            self.line_count -= Self::retire_lines(le.mask, LineEvent::Supersede);
         }
-        if entry.state == PageState::Throttled {
+        entry.lifecycle.transition(PageEvent::Arrive);
+        if entry.lifecycle.state() == PageLifecycle::Rerequested {
             self.pages_rerequested += 1;
             return PageArrival::ThrottledRerequest;
         }
+        debug_assert_eq!(entry.lifecycle.state(), PageLifecycle::Installed);
         let parked = entry.dirty_mask.count_ones() as usize;
         self.dirty_count -= parked;
         PageArrival::Install { parked_dirty_lines: parked as u32 }
@@ -275,23 +421,29 @@ impl ComputeEngine {
         let buf_full = self.dirty_count >= self.params.dirty_data_buf;
         match self.pages.get_mut(&page) {
             None => DirtyOutcome::WriteRemote,
-            Some(e) if e.state == PageState::Throttled => DirtyOutcome::WriteRemote,
+            Some(e) if e.lifecycle.state() == PageLifecycle::Throttled => {
+                DirtyOutcome::WriteRemote
+            }
             Some(e) => {
                 let bit = 1u64 << offset;
                 let newly = e.dirty_mask & bit == 0;
                 let would_have = e.dirty_mask.count_ones() as usize + usize::from(newly);
                 if buf_full || would_have > threshold {
                     // Flush everything parked for this page + this line to
-                    // remote; mark throttled so the arriving page (with
-                    // stale data) is discarded and re-requested.
+                    // remote; the Overflow edge marks the entry throttled
+                    // so the arriving page (with stale data) is discarded
+                    // and re-requested.
                     let flushed = e.dirty_mask.count_ones() as usize;
                     self.dirty_count -= flushed;
                     e.dirty_mask = 0;
-                    e.state = PageState::Throttled;
+                    e.lifecycle.transition(PageEvent::Overflow);
                     self.dirty_flushed_threshold += 1;
                     DirtyOutcome::FlushAllAndThrottle { parked_flushed: flushed as u32 }
                 } else {
                     if newly {
+                        // Park is a self-edge: the entry stays where it is
+                        // while the dirty buffer accumulates this line.
+                        e.lifecycle.transition(PageEvent::Park);
                         e.dirty_mask |= bit;
                         self.dirty_count += 1;
                         self.dirty_parked += 1;
@@ -451,6 +603,28 @@ mod tests {
         assert!(e.line_arrived(7, 3));
         assert_eq!(e.inflight_lines(), 0);
         assert!(!e.line_arrived(7, 3), "double arrival ignored");
+    }
+
+    #[test]
+    fn page_entry_walks_the_declared_lifecycle() {
+        let mut e = small_engine(); // threshold 3
+        e.note_page_scheduled(7, 10.0, 100.0);
+        assert_eq!(e.inflight_page(7).unwrap().state(), PageLifecycle::Scheduled);
+        // A dirty eviction before `start` parks without promoting.
+        assert_eq!(e.dirty_evict(7, 1, 5.0), DirtyOutcome::Parked);
+        assert_eq!(e.inflight_page(7).unwrap().state(), PageLifecycle::Scheduled);
+        // After `start` the transfer is in service: Scheduled -> Moved.
+        assert_eq!(e.dirty_evict(7, 2, 20.0), DirtyOutcome::Parked);
+        assert_eq!(e.inflight_page(7).unwrap().state(), PageLifecycle::Moved);
+        // Exceeding the threshold takes the Overflow edge.
+        let _ = e.dirty_evict(7, 3, 21.0);
+        let out = e.dirty_evict(7, 4, 22.0);
+        assert_eq!(out, DirtyOutcome::FlushAllAndThrottle { parked_flushed: 3 });
+        assert_eq!(e.inflight_page(7).unwrap().state(), PageLifecycle::Throttled);
+        // Arrival from Throttled is the terminal Rerequested state; the
+        // entry leaves the buffer.
+        assert_eq!(e.page_arrived(7), PageArrival::ThrottledRerequest);
+        assert!(e.inflight_page(7).is_none());
     }
 
     #[test]

@@ -10,5 +10,8 @@ pub mod engine;
 pub mod hw_cost;
 pub mod mem_engine;
 
-pub use engine::{ComputeEngine, Decision, DirtyOutcome, PageArrival, PageState};
+pub use engine::{
+    ComputeEngine, Decision, DirtyOutcome, LineEvent, LineLifecycle, PageArrival, PageEvent,
+    PageLifecycle,
+};
 pub use mem_engine::{EgressStats, MemoryEngine};

@@ -22,10 +22,12 @@ pub mod compress;
 pub mod daemon;
 pub mod experiments;
 pub mod config;
+pub mod lifecycle;
 pub mod mem;
 pub mod metrics;
 pub mod net;
 pub mod obs;
+pub mod policy;
 pub mod runtime;
 pub mod schemes;
 pub mod sim;

@@ -1,0 +1,518 @@
+//! Generic transition-table lifecycle core.
+//!
+//! Every documented lifecycle in the simulator (compute-engine page and
+//! line entries, fabric ports, cluster tenants) is executed by the same
+//! zero-dependency machinery: a [`Lifecycle`] impl declares its states,
+//! events and `from --event--> to` table as associated consts, and a
+//! [`StateMachine`] holds the current state with **`transition(event)` as
+//! the only mutation path** — the state field is private to this module,
+//! so "a terminal state never reverts" is enforced by the type system
+//! rather than by asserts at call sites.
+//!
+//! Undeclared `(state, event)` pairs hit the machine's [`OnInvalid`]
+//! policy: `Panic` (an invalid edge is a simulator bug — the default
+//! posture for every production machine) or `Ignore` (the transition is
+//! refused and `transition` returns `false`).  `transition_with` invokes
+//! a hook with the `(from, event, to)` triple after a successful edge,
+//! which is how lifecycle edges feed the `obs` event ring (e.g. the
+//! cluster stamps `TenantKill` events at the exact `Running -> Killed`
+//! transition).
+//!
+//! The DESIGN.md §"Lifecycles and state machines" tables are the
+//! documentation of record; [`doc_table_edges`] parses them back out of
+//! the markdown and [`assert_graph_matches_doc`] pins table and code to
+//! each other (edge-set equality).  [`check_declaration`] and
+//! [`exercise_graph`] are the shared property-test drivers used by
+//! `rust/tests/lifecycle_graphs.rs`.
+
+use crate::util::prng::Rng;
+use crate::util::proptest;
+
+/// What a [`StateMachine`] does with an undeclared `(state, event)` pair.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OnInvalid {
+    /// Panic with the machine, state and event names (simulator bug).
+    Panic,
+    /// Refuse the edge: the state is unchanged and `transition` returns
+    /// `false`.
+    Ignore,
+}
+
+/// One declared edge of a lifecycle graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Transition<S: 'static, E: 'static> {
+    pub from: S,
+    pub event: E,
+    pub to: S,
+}
+
+/// A lifecycle: a closed set of states and events plus the declared
+/// transition table.  Implementors are plain fieldless `Copy` enums; the
+/// table lives in a `const`, so a [`StateMachine`] is exactly the size
+/// of the bare state enum and transitions compile to a scan over a
+/// handful of const entries.
+pub trait Lifecycle: Copy + Eq + Sized + 'static {
+    /// The event alphabet driving this machine.
+    type Event: Copy + Eq + 'static;
+
+    /// Short machine name used in panic messages and doc headings.
+    const NAME: &'static str;
+    /// Every declared state (exhaustive).
+    const STATES: &'static [Self];
+    /// Every declared event (exhaustive).
+    const EVENTS: &'static [Self::Event];
+    /// The declared transition table — the single source of truth that
+    /// DESIGN.md documents and the property tests pin.
+    const TABLE: &'static [Transition<Self, Self::Event>];
+    /// Policy for undeclared `(state, event)` pairs.
+    const ON_INVALID: OnInvalid = OnInvalid::Panic;
+
+    /// Display name of a state (matches the DESIGN.md table spelling).
+    fn state_name(self) -> &'static str;
+    /// Display name of an event (matches the DESIGN.md table spelling).
+    fn event_name(event: Self::Event) -> &'static str;
+}
+
+/// The declared target of `event` in state `from`, if any.
+#[inline]
+pub fn target<L: Lifecycle>(from: L, event: L::Event) -> Option<L> {
+    L::TABLE
+        .iter()
+        .find(|t| t.from == from && t.event == event)
+        .map(|t| t.to)
+}
+
+/// A state with no outgoing edges (self-loops count as outgoing): once
+/// entered, no event is declared, so the machine can never leave it.
+pub fn is_terminal<L: Lifecycle>(state: L) -> bool {
+    !L::TABLE.iter().any(|t| t.from == state)
+}
+
+/// A running lifecycle instance.  The current state is private: the only
+/// way to change it is [`StateMachine::transition`], which consults the
+/// declared table and applies the lifecycle's [`OnInvalid`] policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StateMachine<L: Lifecycle> {
+    state: L,
+}
+
+impl<L: Lifecycle> StateMachine<L> {
+    pub fn new(initial: L) -> Self {
+        Self { state: initial }
+    }
+
+    #[inline]
+    pub fn state(&self) -> L {
+        self.state
+    }
+
+    /// Drive one event.  Returns `true` iff a declared edge was taken;
+    /// an undeclared pair panics or is refused per `L::ON_INVALID`.
+    #[inline]
+    pub fn transition(&mut self, event: L::Event) -> bool {
+        match target(self.state, event) {
+            Some(to) => {
+                self.state = to;
+                true
+            }
+            None => match L::ON_INVALID {
+                OnInvalid::Panic => panic!(
+                    "invalid {} transition: event {} in state {}",
+                    L::NAME,
+                    L::event_name(event),
+                    self.state.state_name()
+                ),
+                OnInvalid::Ignore => false,
+            },
+        }
+    }
+
+    /// [`StateMachine::transition`] plus a log hook: after a declared
+    /// edge is taken, `hook(from, event, to)` fires — the seam through
+    /// which lifecycle edges emit `obs` events.
+    #[inline]
+    pub fn transition_with(
+        &mut self,
+        event: L::Event,
+        mut hook: impl FnMut(L, L::Event, L),
+    ) -> bool {
+        let from = self.state;
+        let taken = self.transition(event);
+        if taken {
+            hook(from, event, self.state);
+        }
+        taken
+    }
+}
+
+/// Parse the `| from | event | to |` transition table under `heading` in
+/// a markdown document.  `heading` is matched as a line prefix; the scan
+/// stops at the next heading of any level.  Rows qualify when all three
+/// leading columns are single backticked identifiers (the header and
+/// `|---|` separator rows are skipped by that filter).
+pub fn doc_table_edges(text: &str, heading: &str) -> Vec<(String, String, String)> {
+    fn backticked(cell: &str) -> Option<&str> {
+        let c = cell.trim();
+        let inner = c.strip_prefix('`')?.strip_suffix('`')?;
+        (!inner.is_empty() && !inner.contains('`')).then_some(inner)
+    }
+    let mut out = Vec::new();
+    let mut inside = false;
+    for line in text.lines() {
+        if line.starts_with(heading) {
+            inside = true;
+            continue;
+        }
+        if !inside {
+            continue;
+        }
+        if line.starts_with('#') {
+            break;
+        }
+        let t = line.trim();
+        if !t.starts_with('|') {
+            continue;
+        }
+        let mut cols = t.split('|').skip(1);
+        let (Some(a), Some(b), Some(c)) = (cols.next(), cols.next(), cols.next()) else {
+            continue;
+        };
+        if let (Some(from), Some(event), Some(to)) =
+            (backticked(a), backticked(b), backticked(c))
+        {
+            out.push((from.to_string(), event.to_string(), to.to_string()));
+        }
+    }
+    out
+}
+
+/// Pin `L::TABLE` to the DESIGN.md table under `heading`: same edge set,
+/// no duplicates on either side.
+pub fn assert_graph_matches_doc<L: Lifecycle>(text: &str, heading: &str) {
+    let doc = doc_table_edges(text, heading);
+    assert!(
+        !doc.is_empty(),
+        "{}: no transition table found under heading {heading:?}",
+        L::NAME
+    );
+    for (i, row) in doc.iter().enumerate() {
+        assert!(
+            !doc[..i].contains(row),
+            "{}: duplicate documented edge {row:?}",
+            L::NAME
+        );
+    }
+    let code: Vec<(String, String, String)> = L::TABLE
+        .iter()
+        .map(|t| {
+            (
+                t.from.state_name().to_string(),
+                L::event_name(t.event).to_string(),
+                t.to.state_name().to_string(),
+            )
+        })
+        .collect();
+    for row in &doc {
+        assert!(
+            code.contains(row),
+            "{}: DESIGN.md documents edge {row:?} but L::TABLE does not declare it",
+            L::NAME
+        );
+    }
+    for row in &code {
+        assert!(
+            doc.contains(row),
+            "{}: L::TABLE declares edge {row:?} but DESIGN.md does not document it",
+            L::NAME
+        );
+    }
+}
+
+/// Static sanity of a lifecycle declaration: states/events/names unique,
+/// every table endpoint declared, no duplicate `(from, event)` pair (the
+/// machine is deterministic), and terminal states absorbing by
+/// construction (zero outgoing edges).
+pub fn check_declaration<L: Lifecycle>() {
+    for (i, s) in L::STATES.iter().enumerate() {
+        assert!(
+            !L::STATES[..i].contains(s),
+            "{}: duplicate state {}",
+            L::NAME,
+            s.state_name()
+        );
+        assert!(
+            !L::STATES[..i].iter().any(|p| p.state_name() == s.state_name()),
+            "{}: duplicate state name {}",
+            L::NAME,
+            s.state_name()
+        );
+    }
+    for (i, e) in L::EVENTS.iter().enumerate() {
+        assert!(
+            !L::EVENTS[..i].contains(e),
+            "{}: duplicate event {}",
+            L::NAME,
+            L::event_name(*e)
+        );
+        assert!(
+            !L::EVENTS[..i]
+                .iter()
+                .any(|p| L::event_name(*p) == L::event_name(*e)),
+            "{}: duplicate event name {}",
+            L::NAME,
+            L::event_name(*e)
+        );
+    }
+    for (i, t) in L::TABLE.iter().enumerate() {
+        assert!(
+            L::STATES.contains(&t.from) && L::STATES.contains(&t.to),
+            "{}: table edge {} --{}--> {} uses an undeclared state",
+            L::NAME,
+            t.from.state_name(),
+            L::event_name(t.event),
+            t.to.state_name()
+        );
+        assert!(
+            L::EVENTS.contains(&t.event),
+            "{}: table edge from {} uses an undeclared event",
+            L::NAME,
+            t.from.state_name()
+        );
+        assert!(
+            !L::TABLE[..i]
+                .iter()
+                .any(|p| p.from == t.from && p.event == t.event),
+            "{}: nondeterministic table — two edges for ({}, {})",
+            L::NAME,
+            t.from.state_name(),
+            L::event_name(t.event)
+        );
+    }
+}
+
+/// Property-drive a lifecycle graph with random event traces from
+/// `initial`: every trace only ever takes declared edges (undeclared
+/// pairs are refused without mutating the shadow state), terminal states
+/// absorb every event, and — across all cases — every edge reachable
+/// from `initial` is exercised at least once.
+pub fn exercise_graph<L: Lifecycle>(seed: u64, initial: L) {
+    let mut hit = vec![false; L::TABLE.len()];
+    {
+        let hit = &mut hit;
+        proptest::check(seed, 200, |rng: &mut Rng| {
+            let mut m = StateMachine::new(initial);
+            for _ in 0..64 {
+                let event = L::EVENTS[rng.index(L::EVENTS.len())];
+                let before = m.state();
+                match target(before, event) {
+                    Some(to) => {
+                        assert!(m.transition(event));
+                        assert!(
+                            m.state() == to,
+                            "{}: transition from {} on {} landed in {}, table says {}",
+                            L::NAME,
+                            before.state_name(),
+                            L::event_name(event),
+                            m.state().state_name(),
+                            to.state_name()
+                        );
+                        for (i, t) in L::TABLE.iter().enumerate() {
+                            if t.from == before && t.event == event {
+                                hit[i] = true;
+                            }
+                        }
+                    }
+                    // Undeclared pair: don't drive the machine (the Panic
+                    // posture would abort the trace).  Terminal states
+                    // absorb by construction — zero outgoing edges means
+                    // every event of the alphabet lands here.
+                    None => {}
+                }
+            }
+        });
+    }
+    // Every edge reachable from `initial` must have been exercised.
+    let mut reachable = vec![initial];
+    let mut frontier = vec![initial];
+    while let Some(s) = frontier.pop() {
+        for t in L::TABLE {
+            if t.from == s && !reachable.contains(&t.to) {
+                reachable.push(t.to);
+                frontier.push(t.to);
+            }
+        }
+    }
+    for (i, t) in L::TABLE.iter().enumerate() {
+        if reachable.contains(&t.from) {
+            assert!(
+                hit[i],
+                "{}: reachable edge {} --{}--> {} never exercised by any generated trace",
+                L::NAME,
+                t.from.state_name(),
+                L::event_name(t.event),
+                t.to.state_name()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum Door {
+        Open,
+        Shut,
+        Locked,
+    }
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    enum DoorEvent {
+        Close,
+        Lock,
+    }
+
+    impl Lifecycle for Door {
+        type Event = DoorEvent;
+        const NAME: &'static str = "door";
+        const STATES: &'static [Door] = &[Door::Open, Door::Shut, Door::Locked];
+        const EVENTS: &'static [DoorEvent] = &[DoorEvent::Close, DoorEvent::Lock];
+        const TABLE: &'static [Transition<Door, DoorEvent>] = &[
+            Transition { from: Door::Open, event: DoorEvent::Close, to: Door::Shut },
+            Transition { from: Door::Shut, event: DoorEvent::Lock, to: Door::Locked },
+        ];
+
+        fn state_name(self) -> &'static str {
+            match self {
+                Door::Open => "Open",
+                Door::Shut => "Shut",
+                Door::Locked => "Locked",
+            }
+        }
+        fn event_name(event: DoorEvent) -> &'static str {
+            match event {
+                DoorEvent::Close => "Close",
+                DoorEvent::Lock => "Lock",
+            }
+        }
+    }
+
+    /// Same graph, `Ignore` posture, for the refusal paths.
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    struct Lax(Door);
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    struct LaxEvent(DoorEvent);
+
+    impl Lifecycle for Lax {
+        type Event = LaxEvent;
+        const NAME: &'static str = "door-lax";
+        const STATES: &'static [Lax] =
+            &[Lax(Door::Open), Lax(Door::Shut), Lax(Door::Locked)];
+        const EVENTS: &'static [LaxEvent] =
+            &[LaxEvent(DoorEvent::Close), LaxEvent(DoorEvent::Lock)];
+        const TABLE: &'static [Transition<Lax, LaxEvent>] = &[
+            Transition {
+                from: Lax(Door::Open),
+                event: LaxEvent(DoorEvent::Close),
+                to: Lax(Door::Shut),
+            },
+            Transition {
+                from: Lax(Door::Shut),
+                event: LaxEvent(DoorEvent::Lock),
+                to: Lax(Door::Locked),
+            },
+        ];
+        const ON_INVALID: OnInvalid = OnInvalid::Ignore;
+
+        fn state_name(self) -> &'static str {
+            self.0.state_name()
+        }
+        fn event_name(event: LaxEvent) -> &'static str {
+            Door::event_name(event.0)
+        }
+    }
+
+    #[test]
+    fn declared_edges_transition_and_fire_the_hook() {
+        let mut m = StateMachine::new(Door::Open);
+        let mut seen = Vec::new();
+        assert!(m.transition_with(DoorEvent::Close, |from, ev, to| {
+            seen.push((from, ev, to));
+        }));
+        assert_eq!(m.state(), Door::Shut);
+        assert_eq!(seen, vec![(Door::Open, DoorEvent::Close, Door::Shut)]);
+        assert!(m.transition(DoorEvent::Lock));
+        assert_eq!(m.state(), Door::Locked);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid door transition: event Lock in state Open")]
+    fn undeclared_edge_panics_under_panic_policy() {
+        let mut m = StateMachine::new(Door::Open);
+        m.transition(DoorEvent::Lock);
+    }
+
+    #[test]
+    fn undeclared_edge_is_refused_under_ignore_policy() {
+        let mut m = StateMachine::new(Lax(Door::Open));
+        let mut fired = false;
+        assert!(!m.transition_with(LaxEvent(DoorEvent::Lock), |_, _, _| fired = true));
+        assert_eq!(m.state(), Lax(Door::Open));
+        assert!(!fired);
+    }
+
+    #[test]
+    fn target_and_terminal_follow_the_table() {
+        assert_eq!(target(Door::Open, DoorEvent::Close), Some(Door::Shut));
+        assert_eq!(target(Door::Open, DoorEvent::Lock), None);
+        assert!(!is_terminal(Door::Open));
+        assert!(!is_terminal(Door::Shut));
+        assert!(is_terminal(Door::Locked));
+    }
+
+    #[test]
+    fn doc_table_parser_reads_edges_and_skips_headers() {
+        let doc = "\
+# sample
+
+### door lifecycle
+
+| from | event | to |
+|---|---|---|
+| `Open` | `Close` | `Shut` |
+| `Shut` | `Lock` | `Locked` |
+
+prose after the table
+
+### next heading
+
+| `Bogus` | `Row` | `Ignored` |
+";
+        let edges = doc_table_edges(doc, "### door lifecycle");
+        assert_eq!(
+            edges,
+            vec![
+                ("Open".into(), "Close".into(), "Shut".into()),
+                ("Shut".into(), "Lock".into(), "Locked".into()),
+            ]
+        );
+        assert_graph_matches_doc::<Door>(doc, "### door lifecycle");
+    }
+
+    #[test]
+    #[should_panic(expected = "does not document it")]
+    fn doc_mismatch_is_reported() {
+        let doc = "### door lifecycle\n| `Open` | `Close` | `Shut` |\n";
+        assert_graph_matches_doc::<Door>(doc, "### door lifecycle");
+    }
+
+    #[test]
+    fn declaration_and_graph_properties_hold_for_the_sample() {
+        check_declaration::<Door>();
+        exercise_graph::<Door>(0xD00_12, Door::Open);
+        check_declaration::<Lax>();
+        exercise_graph::<Lax>(0xD00_13, Lax(Door::Open));
+    }
+}

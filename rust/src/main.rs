@@ -115,9 +115,9 @@ fn parse_scale(s: &str) -> Result<Scale, String> {
 
 fn cmd_list() -> i32 {
     println!("workloads: {}", ALL.join(" "));
-    println!(
-        "schemes:   local cache-line remote page-free cache-line+page lc bp pq daemon"
-    );
+    // Scheme ids come straight from the policy registry, so `list` can
+    // never drift from what `--scheme` actually resolves.
+    println!("schemes:   {}", daemon_sim::policy::scheme_ids().join(" "));
     println!("experiments:");
     for d in REGISTRY.iter() {
         let extra = if d.in_all { "" } else { "  [extra; not in `all`]" };

@@ -294,7 +294,7 @@ impl Fabric {
     /// idle and lend its capacity away.
     pub fn set_faults(&mut self, plan: &FaultPlan) {
         assert!(
-            self.sharing == SharingMode::Strict,
+            crate::policy::sharing(self.sharing).supports_faults(),
             "fault injection requires strict sharing (SharingMode::Strict)"
         );
         for (m, module) in self.modules.iter_mut().enumerate() {
@@ -306,16 +306,13 @@ impl Fabric {
 
     /// Lifecycle state of tenant `t`'s port on module `m` at `now`:
     /// `Down` inside a fault window, `Recovering` while draining
-    /// fault-deferred/replayed transfers, `Up` otherwise.
+    /// fault-deferred/replayed transfers, `Up` otherwise.  Derived by
+    /// replaying the port's fault timeline through the declared
+    /// [`PortState`] lifecycle machine
+    /// ([`FaultTimeline::port_state`](crate::system::fault::FaultTimeline::port_state)).
     pub fn port_state(&self, m: usize, t: usize, now: f64) -> PortState {
         let p = &self.modules[m].ports[t];
-        if p.faults.is_down(now) {
-            PortState::Down
-        } else if now < p.recovering_until {
-            PortState::Recovering
-        } else {
-            PortState::Up
-        }
+        p.faults.port_state(p.recovering_until, now)
     }
 
     /// Whether tenant `t` can reach module `m` at `now` (not inside a

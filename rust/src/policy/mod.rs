@@ -1,0 +1,422 @@
+//! Pluggable policy registry: movement schemes, recovery routes and
+//! sharing disciplines as trait objects behind id lookup.
+//!
+//! Mirrors `experiments::REGISTRY`: every policy the simulator knows is
+//! a literal entry in one of the three tables below (`REGISTRY`,
+//! `RECOVERY`, `SHARING`), carrying a greppable `id: "..."` field —
+//! daemon-lint R6 cross-checks those ids against the DESIGN.md §"Policy
+//! registry" tables in both directions, so a new policy registers itself
+//! in this one file plus one doc row.  `SchemeKind::{name, by_name,
+//! policy}`, `RecoveryPolicy::name`, `SharingMode::name` and the CLI
+//! `--scheme` resolution all delegate here; there is no second hand-kept
+//! alias list.
+//!
+//! To add a policy: add a def literal to the matching table (ids are
+//! lowercase, the CLI spelling), document it in DESIGN.md's policy
+//! table (R6 enforces the pairing), and — for movement schemes — extend
+//! the closed `SchemeKind` enum it drives.
+
+use crate::config::SharingMode;
+use crate::schemes::{Policy, SchemeKind};
+use crate::system::fault::RecoveryPolicy;
+
+/// A data-movement scheme (`--scheme`): everything the machine builder
+/// needs to instantiate it, keyed by canonical id.
+pub trait MovementPolicy: Sync {
+    /// Canonical lowercase id — the `--scheme` spelling.
+    fn id(&self) -> &'static str;
+    /// Display name used in tables and plot legends.
+    fn display(&self) -> &'static str;
+    /// Accepted alternate spellings (lowercase).
+    fn aliases(&self) -> &'static [&'static str];
+    /// The closed enum variant this policy drives.
+    fn kind(&self) -> SchemeKind;
+    /// Decomposed machine-driver flags.
+    fn flags(&self) -> Policy;
+}
+
+/// §4.6 recovery: how the compute side routes a request whose home
+/// module's port is down.
+pub trait RecoveryRoute: Sync {
+    /// Canonical lowercase id (`RecoveryPolicy::name` spelling).
+    fn id(&self) -> &'static str;
+    /// The enum variant this route implements.
+    fn policy(&self) -> RecoveryPolicy;
+    /// Choose the module serving a request homed at `home` out of
+    /// `modules`; `port_up(m)` reports reachability at issue time.
+    fn route(&self, home: usize, modules: usize, port_up: &dyn Fn(usize) -> bool) -> usize;
+}
+
+/// Fabric bandwidth-sharing discipline: identity plus the capability
+/// surface the rest of the system keys decisions off.
+pub trait SharingPolicy: Sync {
+    /// Canonical lowercase id (`SharingMode::name` spelling).
+    fn id(&self) -> &'static str;
+    /// The enum variant this discipline implements.
+    fn mode(&self) -> SharingMode;
+    /// Idle peer/sibling capacity is borrowed at request time.
+    fn borrows_idle(&self) -> bool;
+    /// Fault injection composes with this discipline.  The
+    /// work-conserving borrow planner reads a down port as merely idle
+    /// and lends its capacity away, so only strict sharing supports
+    /// `FaultPlan`s — `ClusterConfig::validate` enforces this.
+    fn supports_faults(&self) -> bool;
+}
+
+/// One registered movement policy.
+pub struct MovementDef {
+    pub id: &'static str,
+    pub display: &'static str,
+    pub aliases: &'static [&'static str],
+    pub kind: SchemeKind,
+    pub flags: Policy,
+}
+
+impl MovementPolicy for MovementDef {
+    fn id(&self) -> &'static str {
+        self.id
+    }
+    fn display(&self) -> &'static str {
+        self.display
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        self.aliases
+    }
+    fn kind(&self) -> SchemeKind {
+        self.kind
+    }
+    fn flags(&self) -> Policy {
+        self.flags
+    }
+}
+
+/// One registered recovery route.
+pub struct RecoveryDef {
+    pub id: &'static str,
+    pub policy: RecoveryPolicy,
+    pub route: fn(usize, usize, &dyn Fn(usize) -> bool) -> usize,
+}
+
+impl RecoveryRoute for RecoveryDef {
+    fn id(&self) -> &'static str {
+        self.id
+    }
+    fn policy(&self) -> RecoveryPolicy {
+        self.policy
+    }
+    fn route(&self, home: usize, modules: usize, port_up: &dyn Fn(usize) -> bool) -> usize {
+        (self.route)(home, modules, port_up)
+    }
+}
+
+/// One registered sharing discipline.
+pub struct SharingDef {
+    pub id: &'static str,
+    pub mode: SharingMode,
+    pub borrows_idle: bool,
+    pub supports_faults: bool,
+}
+
+impl SharingPolicy for SharingDef {
+    fn id(&self) -> &'static str {
+        self.id
+    }
+    fn mode(&self) -> SharingMode {
+        self.mode
+    }
+    fn borrows_idle(&self) -> bool {
+        self.borrows_idle
+    }
+    fn supports_faults(&self) -> bool {
+        self.supports_faults
+    }
+}
+
+/// The nine movement schemes (§2.2 motivation + §6 evaluation sets), in
+/// historical `by_name` order.  Display names are the exact spellings
+/// every table/legend has always used.
+pub static REGISTRY: [MovementDef; 9] = [
+    MovementDef {
+        id: "local",
+        display: "Local",
+        aliases: &[],
+        kind: SchemeKind::Local,
+        flags: Policy { local_only: true, ..Policy::none() },
+    },
+    MovementDef {
+        id: "cache-line",
+        display: "cache-line",
+        aliases: &["cacheline", "cl"],
+        kind: SchemeKind::CacheLine,
+        flags: Policy { move_lines: true, install_pages: false, ..Policy::none() },
+    },
+    MovementDef {
+        id: "remote",
+        display: "Remote",
+        aliases: &[],
+        kind: SchemeKind::Remote,
+        flags: Policy { move_pages: true, blocking_pages: true, ..Policy::none() },
+    },
+    MovementDef {
+        id: "page-free",
+        display: "page-free",
+        aliases: &["pagefree"],
+        kind: SchemeKind::PageFree,
+        flags: Policy {
+            move_pages: true,
+            free_pages: true,
+            move_lines: true,
+            ..Policy::none()
+        },
+    },
+    MovementDef {
+        id: "cache-line+page",
+        display: "cache-line+page",
+        aliases: &["clp", "naive"],
+        kind: SchemeKind::CacheLinePage,
+        flags: Policy { move_pages: true, move_lines: true, ..Policy::none() },
+    },
+    MovementDef {
+        id: "lc",
+        display: "LC",
+        aliases: &[],
+        kind: SchemeKind::Lc,
+        flags: Policy {
+            move_pages: true,
+            blocking_pages: true,
+            compress: true,
+            ..Policy::none()
+        },
+    },
+    MovementDef {
+        id: "bp",
+        display: "BP",
+        aliases: &[],
+        kind: SchemeKind::Bp,
+        flags: Policy {
+            move_pages: true,
+            move_lines: true,
+            partitioned: true,
+            ..Policy::none()
+        },
+    },
+    MovementDef {
+        id: "pq",
+        display: "PQ",
+        aliases: &[],
+        kind: SchemeKind::Pq,
+        flags: Policy {
+            move_pages: true,
+            move_lines: true,
+            partitioned: true,
+            selection: true,
+            ..Policy::none()
+        },
+    },
+    MovementDef {
+        id: "daemon",
+        display: "DaeMon",
+        aliases: &[],
+        kind: SchemeKind::Daemon,
+        flags: Policy {
+            move_pages: true,
+            move_lines: true,
+            partitioned: true,
+            selection: true,
+            compress: true,
+            ..Policy::none()
+        },
+    },
+];
+
+fn route_stall(home: usize, _modules: usize, _port_up: &dyn Fn(usize) -> bool) -> usize {
+    home
+}
+
+fn route_refetch(home: usize, modules: usize, port_up: &dyn Fn(usize) -> bool) -> usize {
+    for k in 0..modules {
+        let m = (home + k) % modules;
+        if port_up(m) {
+            return m;
+        }
+    }
+    home
+}
+
+/// The two §4.6 recovery routes.  `stall` waits on the home module
+/// (historical routing, byte-identical); `refetch` walks to the next
+/// surviving module and falls back to home when everything is down.
+pub static RECOVERY: [RecoveryDef; 2] = [
+    RecoveryDef {
+        id: "stall",
+        policy: RecoveryPolicy::Stall,
+        route: route_stall,
+    },
+    RecoveryDef {
+        id: "refetch",
+        policy: RecoveryPolicy::Refetch,
+        route: route_refetch,
+    },
+];
+
+/// The two fabric sharing disciplines.
+pub static SHARING: [SharingDef; 2] = [
+    SharingDef {
+        id: "strict",
+        mode: SharingMode::Strict,
+        borrows_idle: false,
+        supports_faults: true,
+    },
+    SharingDef {
+        id: "work-conserving",
+        mode: SharingMode::WorkConserving,
+        borrows_idle: true,
+        supports_faults: false,
+    },
+];
+
+/// Resolve a movement policy by canonical id or alias (the `--scheme`
+/// argument, case-insensitive).
+pub fn movement(name: &str) -> Option<&'static dyn MovementPolicy> {
+    let lower = name.to_ascii_lowercase();
+    REGISTRY
+        .iter()
+        .find(|d| d.id == lower || d.aliases.contains(&lower.as_str()))
+        .map(|d| d as &dyn MovementPolicy)
+}
+
+/// The registered policy driving `kind`.  Panics if a `SchemeKind`
+/// variant was added without a registry entry — the drift test and the
+/// first `Machine::new` both catch that immediately.
+pub fn movement_for(kind: SchemeKind) -> &'static dyn MovementPolicy {
+    REGISTRY
+        .iter()
+        .find(|d| d.kind == kind)
+        .map(|d| d as &dyn MovementPolicy)
+        .unwrap_or_else(|| panic!("SchemeKind {kind:?} has no policy::REGISTRY entry"))
+}
+
+/// Canonical `--scheme` ids in registry order (what `daemon-sim list`
+/// prints and EXPERIMENTS.md documents).
+pub fn scheme_ids() -> Vec<&'static str> {
+    REGISTRY.iter().map(|d| d.id).collect()
+}
+
+/// The registered route implementing `policy`.
+#[inline]
+pub fn recovery(policy: RecoveryPolicy) -> &'static dyn RecoveryRoute {
+    // Indexed, not searched: this sits on the per-request routing path.
+    match policy {
+        RecoveryPolicy::Stall => &RECOVERY[0],
+        RecoveryPolicy::Refetch => &RECOVERY[1],
+    }
+}
+
+/// Resolve a recovery route by id.
+pub fn recovery_by_id(id: &str) -> Option<&'static dyn RecoveryRoute> {
+    let lower = id.to_ascii_lowercase();
+    RECOVERY
+        .iter()
+        .find(|d| d.id == lower)
+        .map(|d| d as &dyn RecoveryRoute)
+}
+
+/// The registered discipline implementing `mode`.
+#[inline]
+pub fn sharing(mode: SharingMode) -> &'static dyn SharingPolicy {
+    match mode {
+        SharingMode::Strict => &SHARING[0],
+        SharingMode::WorkConserving => &SHARING[1],
+    }
+}
+
+/// Resolve a sharing discipline by id.
+pub fn sharing_by_id(id: &str) -> Option<&'static dyn SharingPolicy> {
+    let lower = id.to_ascii_lowercase();
+    SHARING
+        .iter()
+        .find(|d| d.id == lower)
+        .map(|d| d as &dyn SharingPolicy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_the_single_source_of_truth() {
+        // Ids unique, lowercase, and the CLI round-trip holds.
+        for (i, d) in REGISTRY.iter().enumerate() {
+            assert!(!d.id.is_empty() && d.id == d.id.to_ascii_lowercase(), "{}", d.id);
+            assert!(
+                !REGISTRY[..i].iter().any(|p| p.id == d.id),
+                "duplicate id {}",
+                d.id
+            );
+            assert!(
+                !REGISTRY[..i].iter().any(|p| p.kind == d.kind),
+                "duplicate kind {:?}",
+                d.kind
+            );
+            let hit = movement(d.id).expect(d.id);
+            assert_eq!(hit.kind(), d.kind);
+            for a in d.aliases {
+                assert_eq!(movement(a).expect(a).kind(), d.kind, "alias {a}");
+                assert!(
+                    !REGISTRY.iter().any(|p| p.id == *a),
+                    "alias {a} shadows a canonical id"
+                );
+            }
+            assert_eq!(movement_for(d.kind).id(), d.id);
+        }
+        assert!(movement("nope").is_none());
+        assert_eq!(scheme_ids().len(), REGISTRY.len());
+    }
+
+    #[test]
+    fn recovery_routes_match_their_enum_and_walk_correctly() {
+        for d in &RECOVERY {
+            assert_eq!(recovery(d.policy).id(), d.id);
+            assert_eq!(
+                recovery_by_id(d.id).expect(d.id).policy(),
+                d.policy
+            );
+            assert_eq!(d.id, d.policy.name());
+        }
+        let all_up = |_: usize| true;
+        assert_eq!(recovery(RecoveryPolicy::Stall).route(1, 4, &all_up), 1);
+        // Stall never consults reachability — historical routing.
+        let boom = |_: usize| panic!("stall must not probe ports");
+        assert_eq!(recovery(RecoveryPolicy::Stall).route(2, 4, &boom), 2);
+        // Refetch walks round-robin from home to the first up port.
+        let only_3 = |m: usize| m == 3;
+        assert_eq!(recovery(RecoveryPolicy::Refetch).route(1, 4, &only_3), 3);
+        // ...and falls back to home when everything is down.
+        let none_up = |_: usize| false;
+        assert_eq!(recovery(RecoveryPolicy::Refetch).route(1, 4, &none_up), 1);
+    }
+
+    #[test]
+    fn sharing_capabilities_gate_fault_injection() {
+        for d in &SHARING {
+            assert_eq!(sharing(d.mode).id(), d.id);
+            assert_eq!(sharing_by_id(d.id).expect(d.id).mode(), d.mode);
+            assert_eq!(d.id, d.mode.name());
+        }
+        assert!(sharing(SharingMode::Strict).supports_faults());
+        assert!(!sharing(SharingMode::Strict).borrows_idle());
+        assert!(!sharing(SharingMode::WorkConserving).supports_faults());
+        assert!(sharing(SharingMode::WorkConserving).borrows_idle());
+        assert!(sharing_by_id("bogus").is_none());
+    }
+
+    #[test]
+    fn flags_match_the_documented_technique_stack() {
+        // DaeMon = PQ + compression; BP = PQ - selection (§6 ablation).
+        let pq = movement("pq").unwrap().flags();
+        let dm = movement("daemon").unwrap().flags();
+        assert_eq!(Policy { compress: true, ..pq }, dm);
+        let bp = movement("bp").unwrap().flags();
+        assert_eq!(Policy { selection: true, ..bp }, pq);
+    }
+}

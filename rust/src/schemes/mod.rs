@@ -29,77 +29,40 @@ pub enum SchemeKind {
 }
 
 impl SchemeKind {
+    /// All nine variants, in `policy::REGISTRY` (historical `by_name`)
+    /// order.
+    pub const ALL: [SchemeKind; 9] = [
+        SchemeKind::Local,
+        SchemeKind::CacheLine,
+        SchemeKind::Remote,
+        SchemeKind::PageFree,
+        SchemeKind::CacheLinePage,
+        SchemeKind::Lc,
+        SchemeKind::Bp,
+        SchemeKind::Pq,
+        SchemeKind::Daemon,
+    ];
+
+    /// Display name — delegates to the registered `MovementPolicy`.
     pub fn name(&self) -> &'static str {
-        match self {
-            SchemeKind::Local => "Local",
-            SchemeKind::CacheLine => "cache-line",
-            SchemeKind::Remote => "Remote",
-            SchemeKind::PageFree => "page-free",
-            SchemeKind::CacheLinePage => "cache-line+page",
-            SchemeKind::Lc => "LC",
-            SchemeKind::Bp => "BP",
-            SchemeKind::Pq => "PQ",
-            SchemeKind::Daemon => "DaeMon",
-        }
+        crate::policy::movement_for(*self).display()
     }
 
+    /// Canonical `--scheme` id — delegates to the registered policy.
+    pub fn id(&self) -> &'static str {
+        crate::policy::movement_for(*self).id()
+    }
+
+    /// Resolve by canonical id or alias (case-insensitive).  The
+    /// `policy::REGISTRY` is the single source of ids and aliases.
     pub fn by_name(name: &str) -> Option<SchemeKind> {
-        Some(match name.to_ascii_lowercase().as_str() {
-            "local" => SchemeKind::Local,
-            "cache-line" | "cacheline" | "cl" => SchemeKind::CacheLine,
-            "remote" => SchemeKind::Remote,
-            "page-free" | "pagefree" => SchemeKind::PageFree,
-            "cache-line+page" | "clp" | "naive" => SchemeKind::CacheLinePage,
-            "lc" => SchemeKind::Lc,
-            "bp" => SchemeKind::Bp,
-            "pq" => SchemeKind::Pq,
-            "daemon" => SchemeKind::Daemon,
-            _ => return None,
-        })
+        crate::policy::movement(name).map(|p| p.kind())
     }
 
-    /// Policy flags the machine driver consumes.
+    /// Policy flags the machine driver consumes — delegates to the
+    /// registered `MovementPolicy`.
     pub fn policy(&self) -> Policy {
-        use SchemeKind::*;
-        match self {
-            Local => Policy { local_only: true, ..Policy::none() },
-            CacheLine => Policy { move_lines: true, install_pages: false, ..Policy::none() },
-            Remote => Policy { move_pages: true, blocking_pages: true, ..Policy::none() },
-            PageFree => Policy {
-                move_pages: true,
-                free_pages: true,
-                move_lines: true,
-                ..Policy::none()
-            },
-            CacheLinePage => Policy { move_pages: true, move_lines: true, ..Policy::none() },
-            Lc => Policy {
-                move_pages: true,
-                blocking_pages: true,
-                compress: true,
-                ..Policy::none()
-            },
-            Bp => Policy {
-                move_pages: true,
-                move_lines: true,
-                partitioned: true,
-                ..Policy::none()
-            },
-            Pq => Policy {
-                move_pages: true,
-                move_lines: true,
-                partitioned: true,
-                selection: true,
-                ..Policy::none()
-            },
-            Daemon => Policy {
-                move_pages: true,
-                move_lines: true,
-                partitioned: true,
-                selection: true,
-                compress: true,
-                ..Policy::none()
-            },
-        }
+        crate::policy::movement_for(*self).flags()
     }
 
     /// The §6 evaluation set (Fig. 8) in plot order.
@@ -146,7 +109,9 @@ pub struct Policy {
 }
 
 impl Policy {
-    fn none() -> Policy {
+    /// The all-off baseline the registry entries build on (`const` so
+    /// `policy::REGISTRY` statics can use struct-update syntax).
+    pub(crate) const fn none() -> Policy {
         Policy {
             local_only: false,
             move_pages: false,
@@ -166,21 +131,46 @@ mod tests {
     use super::*;
 
     #[test]
-    fn names_roundtrip() {
-        for k in [
-            SchemeKind::Local,
-            SchemeKind::CacheLine,
-            SchemeKind::Remote,
-            SchemeKind::PageFree,
-            SchemeKind::CacheLinePage,
-            SchemeKind::Lc,
-            SchemeKind::Bp,
-            SchemeKind::Pq,
-            SchemeKind::Daemon,
-        ] {
-            assert_eq!(SchemeKind::by_name(k.name()), Some(k), "{k:?}");
+    fn names_roundtrip_exhaustively() {
+        // `ALL` covers every variant exactly once (the match below fails
+        // to compile if a tenth variant appears without being listed).
+        assert_eq!(SchemeKind::ALL.len(), 9);
+        for (i, k) in SchemeKind::ALL.iter().enumerate() {
+            assert!(!SchemeKind::ALL[..i].contains(k), "{k:?} listed twice");
+            let _covered = match k {
+                SchemeKind::Local
+                | SchemeKind::CacheLine
+                | SchemeKind::Remote
+                | SchemeKind::PageFree
+                | SchemeKind::CacheLinePage
+                | SchemeKind::Lc
+                | SchemeKind::Bp
+                | SchemeKind::Pq
+                | SchemeKind::Daemon => (),
+            };
+            // Display name, canonical id and case-folding all round-trip.
+            assert_eq!(SchemeKind::by_name(k.name()), Some(*k), "{k:?}");
+            assert_eq!(SchemeKind::by_name(k.id()), Some(*k), "{k:?}");
+            assert_eq!(
+                SchemeKind::by_name(&k.name().to_ascii_uppercase()),
+                Some(*k),
+                "{k:?}"
+            );
         }
         assert_eq!(SchemeKind::by_name("nope"), None);
+    }
+
+    #[test]
+    fn historical_aliases_resolve() {
+        for (alias, k) in [
+            ("cacheline", SchemeKind::CacheLine),
+            ("cl", SchemeKind::CacheLine),
+            ("pagefree", SchemeKind::PageFree),
+            ("clp", SchemeKind::CacheLinePage),
+            ("naive", SchemeKind::CacheLinePage),
+        ] {
+            assert_eq!(SchemeKind::by_name(alias), Some(k), "{alias}");
+        }
     }
 
     #[test]

@@ -36,8 +36,9 @@
 //! byte-identically (pinned by `tenant_kill_isolates_the_survivors`).
 
 use crate::compress::synth::Profile;
-use crate::config::{ClusterConfig, SharingMode, SimConfig, TenantShare};
+use crate::config::{ClusterConfig, SimConfig, TenantShare};
 use crate::daemon::EgressStats;
+use crate::lifecycle::{Lifecycle, StateMachine, Transition};
 use crate::metrics::Metrics;
 use crate::net::NetSchedule;
 use crate::obs::{Event, EventKind, ObsSpec, Recorder};
@@ -72,6 +73,49 @@ pub enum TenantState {
     Finished,
 }
 
+/// Edge labels for the tenant machine: the fault plan's kill cycle
+/// arriving first (`Kill`) or the trace draining (`Finish`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TenantEvent {
+    Kill,
+    Finish,
+}
+
+impl Lifecycle for TenantState {
+    type Event = TenantEvent;
+    const NAME: &'static str = "cluster tenant";
+    const STATES: &'static [TenantState] =
+        &[TenantState::Running, TenantState::Killed, TenantState::Finished];
+    const EVENTS: &'static [TenantEvent] = &[TenantEvent::Kill, TenantEvent::Finish];
+    const TABLE: &'static [Transition<TenantState, TenantEvent>] = &[
+        Transition {
+            from: TenantState::Running,
+            event: TenantEvent::Kill,
+            to: TenantState::Killed,
+        },
+        Transition {
+            from: TenantState::Running,
+            event: TenantEvent::Finish,
+            to: TenantState::Finished,
+        },
+    ];
+
+    fn state_name(self) -> &'static str {
+        match self {
+            TenantState::Running => "Running",
+            TenantState::Killed => "Killed",
+            TenantState::Finished => "Finished",
+        }
+    }
+
+    fn event_name(event: TenantEvent) -> &'static str {
+        match event {
+            TenantEvent::Kill => "Kill",
+            TenantEvent::Finish => "Finish",
+        }
+    }
+}
+
 pub struct Cluster {
     tenants: Vec<Machine>,
     remote: RemoteMemory,
@@ -79,9 +123,11 @@ pub struct Cluster {
     /// tenant is never killed): the driver issues no access at or after
     /// a tenant's kill cycle.
     kills: Vec<f64>,
-    /// Per-tenant lifecycle, updated by [`Cluster::run`] as tenants
-    /// leave the merge queue.
-    states: Vec<TenantState>,
+    /// Per-tenant lifecycle machine, driven by [`Cluster::run`] as
+    /// tenants leave the merge queue.  Every retirement flows through
+    /// [`StateMachine::transition_with`], so terminal-never-reverts is
+    /// structural rather than asserted at each call site.
+    states: Vec<StateMachine<TenantState>>,
 }
 
 impl Cluster {
@@ -128,12 +174,10 @@ impl Cluster {
             let sched = Arc::new(NetSchedule::from_spec(spec));
             remote.fabric.set_schedule(|_, _| Some(sched.clone()));
         }
+        if let Err(e) = ccfg.validate() {
+            panic!("{e}");
+        }
         if let Some(plan) = &ccfg.faults {
-            assert!(
-                ccfg.sharing == SharingMode::Strict,
-                "fault injection requires SharingMode::Strict (the work-conserving \
-                 borrow planner would lend a down port's capacity away)"
-            );
             plan.validate(ccfg.memory_modules.max(1), inits.len());
             remote.fabric.set_faults(plan);
             for (m, e) in remote.engines.iter_mut().enumerate() {
@@ -153,7 +197,7 @@ impl Cluster {
                 m
             })
             .collect();
-        let states = vec![TenantState::Running; tenants.len()];
+        let states = vec![StateMachine::new(TenantState::Running); tenants.len()];
         Cluster { tenants, remote, kills, states }
     }
 
@@ -165,7 +209,7 @@ impl Cluster {
     /// Lifecycle state of tenant `t` (`Running` until [`Cluster::run`]
     /// retires it).
     pub fn tenant_state(&self, t: usize) -> TenantState {
-        self.states[t]
+        self.states[t].state()
     }
 
     /// Attach an observability recorder to tenant `t` (before `run`).
@@ -178,15 +222,23 @@ impl Cluster {
         self.tenants[t].take_obs()
     }
 
-    /// Retire tenant `t`.  Running → {Killed, Finished} is the only legal
-    /// move — both exits are terminal (asserted).
-    fn transition(&mut self, t: usize, to: TenantState) {
-        assert_eq!(
-            self.states[t],
-            TenantState::Running,
-            "tenant {t} retired twice (to {to:?})"
-        );
-        self.states[t] = to;
+    /// Retire tenant `t` by driving its lifecycle machine.  The declared
+    /// table has exactly two edges — Running −Kill→ Killed and
+    /// Running −Finish→ Finished — so retiring a terminal tenant panics
+    /// inside [`StateMachine::transition`] rather than silently
+    /// reverting.  A kill also emits the `TenantKill` observability
+    /// event (stamped with the tenant's kill cycle) from the transition
+    /// hook, keeping the event tied to the state change itself.
+    fn retire(&mut self, t: usize, event: TenantEvent) {
+        let at = self.kills[t];
+        let tenant = &mut self.tenants[t];
+        self.states[t].transition_with(event, |_, _, to| {
+            if to == TenantState::Killed {
+                if let Some(rec) = tenant.obs_mut() {
+                    rec.event(Event::instant(EventKind::TenantKill, t, None, 0, at));
+                }
+            }
+        });
     }
 
     /// Run every tenant to completion over the shared fabric; one trace
@@ -205,19 +257,13 @@ impl Cluster {
         // stale; a tenant is dropped (not re-pushed) once its trace
         // drains or its next issue would be at/after its kill cycle —
         // clocks are monotone, so neither condition can reverse.
-        self.states = vec![TenantState::Running; self.tenants.len()];
+        self.states = vec![StateMachine::new(TenantState::Running); self.tenants.len()];
         let mut q = MergeQueue::with_capacity(self.tenants.len());
         for i in 0..self.tenants.len() {
             match self.tenants[i].peek(&traces[i]) {
                 Some((_, at)) if at < self.kills[i] => q.push(at, i),
-                Some(_) => {
-                    self.transition(i, TenantState::Killed);
-                    let at = self.kills[i];
-                    if let Some(rec) = self.tenants[i].obs_mut() {
-                        rec.event(Event::instant(EventKind::TenantKill, i, None, 0, at));
-                    }
-                }
-                None => self.transition(i, TenantState::Finished),
+                Some(_) => self.retire(i, TenantEvent::Kill),
+                None => self.retire(i, TenantEvent::Finish),
             }
         }
         while let Some((i, _)) = q.pop() {
@@ -227,14 +273,8 @@ impl Cluster {
             self.tenants[i].step_core(&mut self.remote, &traces[i], ci);
             match self.tenants[i].peek(&traces[i]) {
                 Some((_, at)) if at < self.kills[i] => q.push(at, i),
-                Some(_) => {
-                    self.transition(i, TenantState::Killed);
-                    let at = self.kills[i];
-                    if let Some(rec) = self.tenants[i].obs_mut() {
-                        rec.event(Event::instant(EventKind::TenantKill, i, None, 0, at));
-                    }
-                }
-                None => self.transition(i, TenantState::Finished),
+                Some(_) => self.retire(i, TenantEvent::Kill),
+                None => self.retire(i, TenantEvent::Finish),
             }
         }
         for t in self.tenants.iter_mut() {

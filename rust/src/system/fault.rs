@@ -29,6 +29,8 @@
 //! the default `Stall` policy leave the no-fault timing byte-identical
 //! (pinned by tests at every layer).
 
+use crate::lifecycle::{Lifecycle, StateMachine, Transition};
+
 /// What a fault window applies to.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FaultTarget {
@@ -222,23 +224,78 @@ pub enum RecoveryPolicy {
 }
 
 impl RecoveryPolicy {
+    /// Canonical id — delegates to the registered
+    /// [`RecoveryRoute`](crate::policy::RecoveryRoute), the single
+    /// source of policy ids.
     pub fn name(&self) -> &'static str {
-        match self {
-            RecoveryPolicy::Stall => "stall",
-            RecoveryPolicy::Refetch => "refetch",
-        }
+        crate::policy::recovery(*self).id()
     }
 }
 
 /// Observable lifecycle of a fabric port under fault injection (the
-/// Up/Down/Recovering state machine documented in DESIGN.md): `Down`
-/// inside a fault window; `Recovering` when up again but still draining
-/// transfers a fault deferred or replayed; `Up` otherwise.
+/// Up/Down/Recovering machine documented in DESIGN.md §"Lifecycles and
+/// state machines"): `Down` inside a fault window; `Recovering` when up
+/// again but still draining transfers a fault deferred or replayed;
+/// `Up` otherwise.  Derived at query time by replaying the port's
+/// [`FaultTimeline`] through the declared transition table
+/// ([`FaultTimeline::port_state`]) — not recomputed ad hoc at call
+/// sites.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PortState {
     Up,
     Down,
     Recovering,
+}
+
+/// Events driving [`PortState`] — the edges a [`FaultTimeline`] replay
+/// generates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PortEvent {
+    /// A fault window opens (`from_cycle`).
+    GoDown,
+    /// A fault window closes (`to_cycle`) with no backlog outstanding.
+    Recover,
+    /// Deferred/replayed transfers are still draining after recovery
+    /// (`now < recovering_until`).
+    Backlog,
+    /// The fault backlog finishes draining (`recovering_until` passes).
+    Drained,
+}
+
+impl Lifecycle for PortState {
+    type Event = PortEvent;
+    const NAME: &'static str = "fabric port";
+    const STATES: &'static [PortState] =
+        &[PortState::Up, PortState::Down, PortState::Recovering];
+    const EVENTS: &'static [PortEvent] = &[
+        PortEvent::GoDown,
+        PortEvent::Recover,
+        PortEvent::Backlog,
+        PortEvent::Drained,
+    ];
+    const TABLE: &'static [Transition<PortState, PortEvent>] = &[
+        Transition { from: PortState::Up, event: PortEvent::GoDown, to: PortState::Down },
+        Transition { from: PortState::Down, event: PortEvent::Recover, to: PortState::Up },
+        Transition { from: PortState::Up, event: PortEvent::Backlog, to: PortState::Recovering },
+        Transition { from: PortState::Recovering, event: PortEvent::Drained, to: PortState::Up },
+        Transition { from: PortState::Recovering, event: PortEvent::GoDown, to: PortState::Down },
+    ];
+
+    fn state_name(self) -> &'static str {
+        match self {
+            PortState::Up => "Up",
+            PortState::Down => "Down",
+            PortState::Recovering => "Recovering",
+        }
+    }
+    fn event_name(event: PortEvent) -> &'static str {
+        match event {
+            PortEvent::GoDown => "GoDown",
+            PortEvent::Recover => "Recover",
+            PortEvent::Backlog => "Backlog",
+            PortEvent::Drained => "Drained",
+        }
+    }
 }
 
 /// Fault bookkeeping of one resource: attempts lost to a mid-flight
@@ -337,6 +394,32 @@ impl FaultTimeline {
                 None => return (done, at),
             }
         }
+    }
+
+    /// The port's [`PortState`] at `now`, derived by replaying this
+    /// timeline's edges through the declared lifecycle machine: every
+    /// window with `from <= now` drives `GoDown` (returning mid-window),
+    /// then `Recover`; after the walk, a booked fault backlog
+    /// (`recovering_until` — the max deferred/replayed arrival the
+    /// resource owner tracks) drives `Backlog`, and `Drained` once `now`
+    /// passes it.
+    pub fn port_state(&self, recovering_until: f64, now: f64) -> PortState {
+        let mut m = StateMachine::new(PortState::Up);
+        for w in self.windows.iter().take_while(|w| w.0 <= now) {
+            m.transition(PortEvent::GoDown);
+            if now < w.1 {
+                return m.state();
+            }
+            m.transition(PortEvent::Recover);
+        }
+        if now < recovering_until {
+            m.transition(PortEvent::Backlog);
+        } else if recovering_until > 0.0 {
+            // A backlog was booked at some point and has fully drained.
+            m.transition(PortEvent::Backlog);
+            m.transition(PortEvent::Drained);
+        }
+        m.state()
     }
 
     /// Total down time within `[0, horizon)`, cycles.
@@ -461,5 +544,29 @@ mod tests {
         assert_eq!(RecoveryPolicy::default(), RecoveryPolicy::Stall);
         assert_eq!(RecoveryPolicy::Stall.name(), "stall");
         assert_eq!(RecoveryPolicy::Refetch.name(), "refetch");
+    }
+
+    #[test]
+    fn port_state_replays_the_declared_machine() {
+        let t = FaultTimeline::new(vec![(100.0, 200.0), (400.0, 500.0)]);
+        // No backlog booked: Up outside windows, Down inside.
+        assert_eq!(t.port_state(0.0, 50.0), PortState::Up);
+        assert_eq!(t.port_state(0.0, 100.0), PortState::Down);
+        assert_eq!(t.port_state(0.0, 199.0), PortState::Down);
+        assert_eq!(t.port_state(0.0, 300.0), PortState::Up);
+        assert_eq!(t.port_state(0.0, 450.0), PortState::Down);
+        // Backlog booked to 700: Recovering between recovery and drain,
+        // Up once drained, and Down still wins inside a window.
+        assert_eq!(t.port_state(700.0, 600.0), PortState::Recovering);
+        assert_eq!(t.port_state(700.0, 700.0), PortState::Up);
+        assert_eq!(t.port_state(700.0, 450.0), PortState::Down);
+        // A booked backlog reads Recovering even before the first window
+        // (the historical `recovering_until` quirk, kept bit-for-bit).
+        assert_eq!(t.port_state(80.0, 60.0), PortState::Recovering);
+        // Empty timeline with a booked backlog behaves the same way.
+        let none = FaultTimeline::default();
+        assert_eq!(none.port_state(0.0, 10.0), PortState::Up);
+        assert_eq!(none.port_state(50.0, 10.0), PortState::Recovering);
+        assert_eq!(none.port_state(50.0, 50.0), PortState::Up);
     }
 }

@@ -376,16 +376,9 @@ impl Machine {
     #[inline]
     fn route(&self, remote: &RemoteMemory, page: u64, now: f64) -> usize {
         let home = self.placement(remote, page);
-        if self.recovery == RecoveryPolicy::Refetch {
-            let n = remote.modules();
-            for k in 0..n {
-                let m = (home + k) % n;
-                if remote.fabric.port_up(m, self.id, now) {
-                    return m;
-                }
-            }
-        }
-        home
+        crate::policy::recovery(self.recovery).route(home, remote.modules(), &|m| {
+            remote.fabric.port_up(m, self.id, now)
+        })
     }
 
     #[inline]

@@ -7,7 +7,7 @@ pub mod fault;
 pub mod machine;
 pub mod sweep;
 
-pub use cluster::{run_cluster, Cluster, TenantInit, TenantState};
+pub use cluster::{run_cluster, Cluster, TenantEvent, TenantInit, TenantState};
 pub use fault::{
     FaultCounters, FaultPlan, FaultTarget, FaultTimeline, FaultWindow, PortState, RecoveryPolicy,
 };

@@ -7,8 +7,9 @@
 //!   DESIGN.md / EXPERIMENTS.md names a registered experiment;
 //! * every lifecycle state enum named in DESIGN.md's "Lifecycles and
 //!   state machines" transition tables exists in the source, and every
-//!   state named in a table's first column appears as a source
-//!   identifier;
+//!   state or event named in any column of those tables appears as a
+//!   source identifier (the `lifecycle::Lifecycle` enums and their
+//!   event types);
 //! * every event kind named in the first column of DESIGN.md's
 //!   "Observability" tables appears as a source identifier (the
 //!   `EventKind` taxonomy in `rust/src/obs/trace.rs`).
@@ -25,7 +26,9 @@ const OBSERVABILITY_HEADING: &str = "## Observability";
 
 pub struct DocDrift;
 
-fn registry_ids(f: &SourceFile) -> Vec<(String, usize)> {
+/// `(id, 1-based line)` for every literal `id: "..."` field in a
+/// registry source file (shared with R6's policy-registry scan).
+pub(crate) fn registry_ids(f: &SourceFile) -> Vec<(String, usize)> {
     let mut out = Vec::new();
     for (i, line) in f.raw.iter().enumerate() {
         if let Some(rest) = line.trim_start().strip_prefix("id: \"") {
@@ -61,13 +64,13 @@ fn doc_has_token(text: &str, tok: &str) -> bool {
 
 /// Backticked spans of a markdown line: odd-indexed pieces of a split
 /// on the backtick character.
-fn backtick_spans(line: &str) -> Vec<&str> {
+pub(crate) fn backtick_spans(line: &str) -> Vec<&str> {
     line.split('`').enumerate().filter(|(i, _)| i % 2 == 1).map(|(_, s)| s).collect()
 }
 
 /// Lines of the `heading` section (1-based numbering), up to the next
 /// `## ` heading.
-fn doc_section<'a>(text: &'a str, heading: &str) -> Vec<(usize, &'a str)> {
+pub(crate) fn doc_section<'a>(text: &'a str, heading: &str) -> Vec<(usize, &'a str)> {
     let mut out = Vec::new();
     let mut inside = false;
     for (i, line) in text.lines().enumerate() {
@@ -85,12 +88,16 @@ fn doc_section<'a>(text: &'a str, heading: &str) -> Vec<(usize, &'a str)> {
     out
 }
 
-/// Check that every backticked uppercase-start identifier in the first
-/// column of the section's tables appears as a source identifier.
+/// Check that every backticked uppercase-start identifier in the
+/// section's tables appears as a source identifier.  `all_columns`
+/// widens the scan from the first column to every cell — the lifecycle
+/// transition tables carry states in the `from`/`to` columns and events
+/// in the middle one, and all three kinds must exist in source.
 fn check_table_idents(
     repo: &Repo,
     section: &[(usize, &str)],
     what: &str,
+    all_columns: bool,
     out: &mut Vec<Diagnostic>,
 ) {
     let mut seen: Vec<&str> = Vec::new();
@@ -98,8 +105,9 @@ fn check_table_idents(
         if !line.trim_start().starts_with('|') {
             continue;
         }
-        let Some(first) = line.split('|').nth(1) else { continue };
-        for span in backtick_spans(first) {
+        let cells = line.split('|').skip(1);
+        let cells: Vec<&str> = if all_columns { cells.collect() } else { cells.take(1).collect() };
+        for span in cells.iter().flat_map(|c| backtick_spans(c)) {
             let ok = span.starts_with(|c: char| c.is_ascii_uppercase())
                 && span.chars().all(scan::is_ident_char);
             if ok && !seen.contains(&span) {
@@ -143,8 +151,9 @@ impl Rule for DocDrift {
          EXPERIMENTS.md; (b) every id-shaped token (fig<N>, table<N>, cluster_*,\n\
          ablation_*) in DESIGN.md/EXPERIMENTS.md names a registered experiment; (c)\n\
          every `SomethingState` enum named in the lifecycle section exists in rust/src,\n\
-         and every state in a lifecycle table's first column appears as a source\n\
-         identifier; (d) every event kind in the \"Observability\" section's tables\n\
+         and every state and event in a lifecycle transition table (all columns)\n\
+         appears as a source identifier; (d) every event kind in the \"Observability\"\n\
+         section's tables (first column)\n\
          appears as a source identifier (the EventKind taxonomy).  Fix by registering\n\
          the experiment, documenting it, or updating the stale doc."
     }
@@ -205,11 +214,12 @@ impl Rule for DocDrift {
                 }
             }
         }
-        check_table_idents(repo, &section, "lifecycle state", out);
+        check_table_idents(repo, &section, "lifecycle state/event", true, out);
         check_table_idents(
             repo,
             &doc_section(design, OBSERVABILITY_HEADING),
             "observability event kind",
+            false,
             out,
         );
     }
@@ -303,6 +313,26 @@ mod tests {
             no_enum.iter().any(|x| x.message.contains("`BarState`")),
             "missing enum is drift: {no_enum:?}"
         );
+    }
+
+    #[test]
+    fn lifecycle_event_columns_are_checked_too() {
+        // `from`/`to` states exist; the `Zap` event in the middle column
+        // does not — all columns of a transition table are live.
+        let design = "# Doc\n\n\
+            ## Lifecycles and state machines\n\n\
+            | from | event | to |\n\
+            |---|---|---|\n\
+            | `Alpha` | `Zap` | `Alpha` |\n\n\
+            ## Next section\n";
+        let d = check(
+            &[(REGISTRY_PATH, REGISTRY_FIXTURE), ("rust/src/e.rs", ENUM_FIXTURE)],
+            &[("DESIGN.md", design), ("EXPERIMENTS.md", "fig1 cluster_a\n")],
+        );
+        let msgs: Vec<String> = d.iter().map(|x| x.to_string()).collect();
+        assert_eq!(d.len(), 1, "{msgs:?}");
+        assert!(msgs[0].contains("`Zap`"), "{msgs:?}");
+        assert!(msgs[0].contains("lifecycle state/event"), "{msgs:?}");
     }
 
     #[test]

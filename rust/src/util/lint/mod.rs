@@ -12,10 +12,14 @@
 //!   simulation code (`rules::WallClock`);
 //! * `R3-unordered-iter` — no unattested iteration over unordered maps
 //!   in files that feed `Metrics` or JSON (`rules::UnorderedIter`);
-//! * `R4-doc-drift` — registry ids and lifecycle enums stay in sync
-//!   with EXPERIMENTS.md / DESIGN.md (`drift::DocDrift`);
+//! * `R4-doc-drift` — registry ids, lifecycle enums and transition-table
+//!   states/events stay in sync with EXPERIMENTS.md / DESIGN.md
+//!   (`drift::DocDrift`);
 //! * `R5-wire-drift` — the shard wire format matches the committed
-//!   golden manifest (`wire::WireDrift`).
+//!   golden manifest (`wire::WireDrift`);
+//! * `R6-policy-drift` — every `policy::REGISTRY` id is documented in
+//!   DESIGN.md's "Policy registry" tables and vice versa
+//!   (`policy_drift::PolicyDrift`).
 //!
 //! Violations can be waived in place with comment attestations:
 //! `// lint: sorted` attests that an iteration on the next (or same)
@@ -31,6 +35,7 @@
 //! enforcement" for the policy discussion.
 
 pub mod drift;
+pub mod policy_drift;
 pub mod rules;
 pub mod scan;
 pub mod wire;
@@ -46,10 +51,11 @@ pub const R2: &str = "R2-wall-clock";
 pub const R3: &str = "R3-unordered-iter";
 pub const R4: &str = "R4-doc-drift";
 pub const R5: &str = "R5-wire-drift";
+pub const R6: &str = "R6-policy-drift";
 /// Pseudo-rule id for malformed attestation directives.
 pub const ATTEST: &str = "attest";
 
-const RULE_IDS: [&str; 5] = [R1, R2, R3, R4, R5];
+const RULE_IDS: [&str; 6] = [R1, R2, R3, R4, R5, R6];
 
 /// Directories scanned for `.rs` files, relative to the repo root.
 pub const SCAN_ROOTS: [&str; 3] = ["rust/src", "rust/tests", "benches"];
@@ -293,6 +299,7 @@ pub fn all_rules() -> Vec<Box<dyn Rule>> {
         Box::new(rules::UnorderedIter),
         Box::new(drift::DocDrift),
         Box::new(wire::WireDrift),
+        Box::new(policy_drift::PolicyDrift),
     ]
 }
 

@@ -1,0 +1,183 @@
+//! R6: policy-registry/doc drift.
+//!
+//! `rust/src/policy/mod.rs` holds the three policy tables (`REGISTRY`,
+//! `RECOVERY`, `SHARING`), each entry carrying a literal `id: "..."`
+//! field; DESIGN.md's "Policy registry" section documents every id in
+//! its tables' first columns.  R6 keeps the two in sync in both
+//! directions:
+//!
+//! * every id registered in the policy file appears backticked in the
+//!   first column of a table row under the "Policy registry" heading;
+//! * every id-shaped backticked token in those first columns names a
+//!   registered policy (stale doc rows are drift too).
+//!
+//! Like R4, the rule anchors on its registry file: fixture repos
+//! without `rust/src/policy/mod.rs` are skipped entirely.
+
+use super::drift::{backtick_spans, doc_section, registry_ids};
+use super::{Diagnostic, Repo, Rule, R6};
+
+const POLICY_PATH: &str = "rust/src/policy/mod.rs";
+const POLICY_HEADING: &str = "## Policy registry";
+
+pub struct PolicyDrift;
+
+/// Does `tok` look like a policy id?  Ids are lowercase CLI spellings
+/// (`daemon`, `cache-line+page`, `work-conserving`); anything starting
+/// with an ASCII lowercase letter and built from `[a-z0-9+-]` is
+/// claimed, which skips flag spellings like `--scheme` and code paths.
+fn id_like(tok: &str) -> bool {
+    tok.starts_with(|c: char| c.is_ascii_lowercase())
+        && tok
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '-' || c == '+')
+}
+
+/// `(span, 1-based line)` for every id-like backticked token in the
+/// first column of the section's table rows.
+fn doc_ids<'a>(section: &[(usize, &'a str)]) -> Vec<(&'a str, usize)> {
+    let mut out = Vec::new();
+    for (line_no, line) in section {
+        if !line.trim_start().starts_with('|') {
+            continue;
+        }
+        let Some(first) = line.split('|').nth(1) else { continue };
+        for span in backtick_spans(first) {
+            if id_like(span) {
+                out.push((span, *line_no));
+            }
+        }
+    }
+    out
+}
+
+impl Rule for PolicyDrift {
+    fn id(&self) -> &'static str {
+        R6
+    }
+
+    fn summary(&self) -> &'static str {
+        "policy registry ids and the DESIGN.md policy tables stay in sync"
+    }
+
+    fn explain(&self) -> &'static str {
+        "rust/src/policy/mod.rs is the single source of movement / recovery / sharing\n\
+         policies, and DESIGN.md \"Policy registry\" is their user-facing contract.  R6\n\
+         checks both directions: every `id: \"...\"` literal in the policy file must\n\
+         appear backticked in the first column of a table row under the \"Policy\n\
+         registry\" heading, and every id-shaped backticked token in those first\n\
+         columns must name a registered policy.  Fix by adding the missing doc row,\n\
+         registering the policy, or deleting the stale row."
+    }
+
+    fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
+        let Some(reg) = repo.file(POLICY_PATH) else { return };
+        let ids = registry_ids(reg);
+
+        let Some(design) = repo.doc("DESIGN.md") else {
+            let msg = "DESIGN.md is missing".to_string();
+            out.push(Diagnostic::new(POLICY_PATH, 1, R6, msg));
+            return;
+        };
+        let section = doc_section(design, POLICY_HEADING);
+        if section.is_empty() {
+            let msg = format!("DESIGN.md has no `{POLICY_HEADING}` section");
+            out.push(Diagnostic::new(POLICY_PATH, 1, R6, msg));
+            return;
+        }
+        let documented = doc_ids(&section);
+        for (id, line) in &ids {
+            if !documented.iter().any(|(d, _)| d == id) {
+                let msg = format!(
+                    "policy id `{id}` is not documented in DESIGN.md's policy tables"
+                );
+                out.push(Diagnostic::new(POLICY_PATH, *line, R6, msg));
+            }
+        }
+        for (doc_id, line) in &documented {
+            if !ids.iter().any(|(id, _)| id == doc_id) {
+                let msg = format!(
+                    "`{doc_id}` is in a DESIGN.md policy table but not in the policy \
+                     registry"
+                );
+                out.push(Diagnostic::new("DESIGN.md", *line, R6, msg));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const POLICY_FIXTURE: &str = "pub static REGISTRY: [MovementDef; 2] = [\n\
+        MovementDef {\n\
+        id: \"local\",\n\
+        },\n\
+        MovementDef {\n\
+        id: \"cache-line+page\",\n\
+        },\n\
+        ];\n";
+
+    const DESIGN_FIXTURE: &str = "# Doc\n\n\
+        ## Policy registry\n\n\
+        | id | scheme |\n\
+        |---|---|\n\
+        | `local` | Local |\n\
+        | `cache-line+page` | both granularities, `naive` alias aside |\n\n\
+        ## Next section\n";
+
+    fn check(files: &[(&str, &str)], docs: &[(&str, &str)]) -> Vec<Diagnostic> {
+        let repo = Repo::from_fixtures(files, docs);
+        let mut out = Vec::new();
+        PolicyDrift.check(&repo, &mut out);
+        out
+    }
+
+    #[test]
+    fn clean_fixture_passes() {
+        let d = check(&[(POLICY_PATH, POLICY_FIXTURE)], &[("DESIGN.md", DESIGN_FIXTURE)]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn repos_without_the_policy_file_are_skipped() {
+        let d = check(&[("rust/src/other.rs", "fn f() {}\n")], &[]);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn undocumented_registry_id_is_flagged_at_its_source_line() {
+        let design = "## Policy registry\n\n| id |\n|---|\n| `local` |\n";
+        let d = check(&[(POLICY_PATH, POLICY_FIXTURE)], &[("DESIGN.md", design)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].rule, R6);
+        assert_eq!(d[0].path, POLICY_PATH);
+        assert_eq!(d[0].line, 6, "`cache-line+page`'s id: line");
+        assert!(d[0].message.contains("`cache-line+page`"), "{d:?}");
+    }
+
+    #[test]
+    fn stale_doc_row_is_flagged_at_the_doc_line() {
+        let design = "## Policy registry\n\n\
+            | id |\n|---|\n| `local` |\n| `cache-line+page` |\n| `ghost` |\n";
+        let d = check(&[(POLICY_PATH, POLICY_FIXTURE)], &[("DESIGN.md", design)]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].path, "DESIGN.md");
+        assert_eq!(d[0].line, 7);
+        assert!(d[0].message.contains("`ghost`"), "{d:?}");
+        // Non-id spans in later columns (prose, `naive` alias notes) and
+        // uppercase names are never claimed as ids.
+        assert!(!DESIGN_FIXTURE.is_empty());
+    }
+
+    #[test]
+    fn missing_doc_or_section_is_drift_when_the_registry_exists() {
+        let d = check(&[(POLICY_PATH, POLICY_FIXTURE)], &[]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("DESIGN.md is missing"), "{d:?}");
+        let d = check(&[(POLICY_PATH, POLICY_FIXTURE)], &[("DESIGN.md", "# Doc\nno tables\n")]);
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert!(d[0].message.contains("has no `## Policy registry` section"), "{d:?}");
+    }
+}

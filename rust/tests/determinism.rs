@@ -159,6 +159,58 @@ fn obs_artifacts_are_jobs_invariant_and_repeatable() {
     assert_eq!(c1, c1b, "chrome trace diverged across repeat runs");
 }
 
+/// Repeat-run byte-identity pins on the two cluster scenario sweeps the
+/// lifecycle/policy refactor leans on most: a faulted `resilience` cell
+/// (fault timeline replayed through the `PortState` machine, `Refetch`
+/// routing resolved via the policy registry, a tenant kill driven
+/// through the `TenantState` machine) and a `variability` cell (sharing
+/// discipline looked up from `policy::SHARING` on the work-conserving
+/// borrow path).
+#[test]
+fn resilience_and_variability_cells_repeat_byte_identically() {
+    use daemon_sim::config::{ScheduleSpec, SharingMode};
+    use daemon_sim::experiments::{resilience, variability};
+    use daemon_sim::system::fault::{FaultPlan, RecoveryPolicy};
+
+    let r = Runner::test();
+    let plan = FaultPlan::new().module_crash(1, 2e5, 6e5).tenant_kill(3, 8e5);
+    let sched = ScheduleSpec {
+        period_cycles: 1e5,
+        rate_scale: 0.5,
+        extra_latency_ns: 100.0,
+        horizon_cycles: 1e9,
+    };
+    let cells = vec![
+        resilience::cell(
+            SchemeKind::Daemon,
+            Some(plan),
+            RecoveryPolicy::Refetch,
+            SimConfig::test_scale(),
+        ),
+        variability::cell(
+            SchemeKind::Pq,
+            SharingMode::WorkConserving,
+            Some(sched),
+            SimConfig::test_scale(),
+        ),
+    ];
+    let fmt = |slots: Vec<Option<Vec<Metrics>>>| -> Vec<String> {
+        slots
+            .into_iter()
+            .map(|s| {
+                s.expect("unsharded run fills every slot")
+                    .iter()
+                    .map(|m| m.to_json().to_string())
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            })
+            .collect()
+    };
+    let a = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 1));
+    let b = fmt(run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), 1));
+    assert_eq!(a, b, "scenario cells diverged across repeat runs");
+}
+
 /// Ring overflow is deterministic: a tiny ring must overflow, count its
 /// drops identically on repeat runs, and retain an identical tail.
 #[test]
