@@ -145,6 +145,44 @@ pub struct ScheduleSpec {
     pub horizon_cycles: f64,
 }
 
+/// Closed-loop controller configuration (ROADMAP item 3 / DaeMon §4.5
+/// taken online): which control laws run and at what observation epoch.
+/// The controller is a pure function of sampled state — see
+/// [`crate::system::controller::AdaptiveController`] and the registry in
+/// [`crate::policy::adaptive`].  `epoch_cycles == 0.0` (or all laws off)
+/// makes the controller fully inert: no observation, no actuation, and
+/// the run stays byte-identical to the same config without a controller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ControllerSpec {
+    /// Observation/actuation cadence in sim cycles (0.0 = inert).
+    pub epoch_cycles: f64,
+    /// Enable the `ratio-tune` law (migration-ratio retuning).
+    pub tune_ratio: bool,
+    /// Enable the `recovery-switch` law (Stall↔Refetch switching).
+    pub switch_recovery: bool,
+    /// Enable the `share-rebalance` law (idle-share reclamation under
+    /// work-conserving sharing; inert under strict sharing).
+    pub rebalance_shares: bool,
+}
+
+impl ControllerSpec {
+    /// All three control laws at the given epoch.
+    pub fn all(epoch_cycles: f64) -> ControllerSpec {
+        ControllerSpec {
+            epoch_cycles,
+            tune_ratio: true,
+            switch_recovery: true,
+            rebalance_shares: true,
+        }
+    }
+
+    /// True when this spec can never observe or actuate.
+    pub fn is_inert(&self) -> bool {
+        self.epoch_cycles <= 0.0
+            || !(self.tune_ratio || self.switch_recovery || self.rebalance_shares)
+    }
+}
+
 /// One tenant's share of every shared memory-module resource (fabric port
 /// + DRAM bus): a bandwidth weight, plus that tenant's own §4.1 class
 /// partitioning applied *within* its share.  Shares are strict (reserved
@@ -206,6 +244,9 @@ pub struct ClusterConfig {
     pub faults: Option<FaultPlan>,
     /// Degraded-mode policy tenants use while a home module is down.
     pub recovery: RecoveryPolicy,
+    /// Closed-loop controller (`None` or an inert spec = today's static
+    /// behavior, byte-identical).
+    pub controller: Option<ControllerSpec>,
 }
 
 impl Default for ClusterConfig {
@@ -219,6 +260,7 @@ impl Default for ClusterConfig {
             schedule: None,
             faults: None,
             recovery: RecoveryPolicy::Stall,
+            controller: None,
         }
     }
 }
@@ -260,6 +302,11 @@ impl ClusterConfig {
 
     pub fn with_recovery(mut self, recovery: RecoveryPolicy) -> Self {
         self.recovery = recovery;
+        self
+    }
+
+    pub fn with_controller(mut self, controller: ControllerSpec) -> Self {
+        self.controller = Some(controller);
         self
     }
 
@@ -551,6 +598,24 @@ mod tests {
         assert_eq!(d.faults, None);
         assert_eq!(d.recovery, RecoveryPolicy::Stall);
         assert_eq!(SharingMode::WorkConserving.name(), "work-conserving");
+    }
+
+    #[test]
+    fn controller_spec_inertness_and_builder() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.controller, None, "no controller by default");
+        let spec = ControllerSpec::all(25_000.0);
+        assert!(!spec.is_inert());
+        assert!(ControllerSpec::all(0.0).is_inert(), "epoch 0 is inert");
+        let laws_off = ControllerSpec {
+            epoch_cycles: 25_000.0,
+            tune_ratio: false,
+            switch_recovery: false,
+            rebalance_shares: false,
+        };
+        assert!(laws_off.is_inert(), "all laws off is inert");
+        let c = ClusterConfig::new(2).with_controller(spec);
+        assert_eq!(c.controller, Some(spec));
     }
 
     #[test]

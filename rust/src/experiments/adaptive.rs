@@ -1,0 +1,373 @@
+//! `adaptive` — the closed control loop evaluated against every static
+//! configuration it generalizes: {static PQ, static DaeMon, each
+//! single-knob static setting, closed loop} × a disturbance grid
+//! (steady, bandwidth bursts, bandwidth + latency bursts, module
+//! crash), over the canonical 4-tenant × 2-module cluster.
+//!
+//! The headline figure: the closed loop (all three control laws of
+//! [`crate::policy::adaptive`] at one epoch cadence) matches the best
+//! static arm in every disturbance cell and strictly beats every static
+//! arm where conditions actually vary — no single static knob setting
+//! wins both the degraded and the nominal phases, while the controller
+//! retunes between them.  The static single-knob arms sit exactly on
+//! the `ratio-tune` law's registry-declared bounds, so the sweep also
+//! demonstrates that the controller's actuation range covers the static
+//! design space.  Cells batch/shard/merge through the orchestrator like
+//! any figure.
+
+use super::cluster::{tenant_cfg, MODULES, TENANT_MIX};
+use super::common::Runner;
+use super::orchestrator::{CellSpec, Plan};
+use super::resilience::crash_window;
+use crate::config::{ns_to_cycles, ControllerSpec, ScheduleSpec, SharingMode, SimConfig};
+use crate::metrics::Metrics;
+use crate::policy::adaptive::control_law;
+use crate::schemes::SchemeKind;
+use crate::system::fault::{FaultPlan, RecoveryPolicy};
+use crate::util::table::Table;
+
+/// Controller observation/actuation cadence: well under the 2 ms burst
+/// period (hundreds of epochs per phase), well over per-access noise.
+pub const EPOCH_CYCLES: f64 = 25_000.0;
+
+/// One disturbance-grid condition: link schedule and/or fault plan.
+pub fn conditions() -> Vec<(&'static str, Option<ScheduleSpec>, Option<FaultPlan>)> {
+    let mk = |rate_scale: f64, extra_latency_ns: f64| ScheduleSpec {
+        period_cycles: ns_to_cycles(2_000_000.0),
+        rate_scale,
+        extra_latency_ns,
+        horizon_cycles: 1e11,
+    };
+    let (from, to) = crash_window();
+    vec![
+        ("steady", None, None),
+        ("bw-burst", Some(mk(0.25, 0.0)), None),
+        ("bw+lat-burst", Some(mk(0.25, 300.0)), None),
+        ("module-crash", None, Some(FaultPlan::new().module_crash(1, from, to))),
+    ]
+}
+
+/// One configuration arm of the sweep.
+#[derive(Clone, Copy)]
+pub struct Arm {
+    pub name: &'static str,
+    pub kind: SchemeKind,
+    /// Static §4.1 partition-ratio override (`None` = scheme default).
+    pub ratio: Option<f64>,
+    /// Run work-conserving where legal (faulted cells require strict).
+    pub work_conserving: bool,
+    pub recovery: RecoveryPolicy,
+    /// Attach the closed-loop controller (all three laws).
+    pub closed_loop: bool,
+}
+
+/// The swept arms: two full-static baselines, one static arm per control
+/// knob (the ratio arms sit exactly on the `ratio-tune` law's bounds),
+/// and the closed loop.  The closed loop gets every knob the statics
+/// get — work-conserving sharing where legal, strict under faults — so
+/// wins come from feedback, not from a capability gap.
+pub fn arms() -> Vec<Arm> {
+    let ratio = control_law("ratio-tune").expect("registered law");
+    let stat = |name, kind| Arm {
+        name,
+        kind,
+        ratio: None,
+        work_conserving: false,
+        recovery: RecoveryPolicy::Stall,
+        closed_loop: false,
+    };
+    vec![
+        stat("pq", SchemeKind::Pq),
+        stat("daemon", SchemeKind::Daemon),
+        Arm { name: "daemon/ratio-lo", ratio: Some(ratio.min), ..stat("", SchemeKind::Daemon) },
+        Arm { name: "daemon/ratio-hi", ratio: Some(ratio.max), ..stat("", SchemeKind::Daemon) },
+        Arm {
+            name: "daemon/refetch",
+            recovery: RecoveryPolicy::Refetch,
+            ..stat("", SchemeKind::Daemon)
+        },
+        Arm { name: "daemon/wc", work_conserving: true, ..stat("", SchemeKind::Daemon) },
+        Arm {
+            name: "closed-loop",
+            work_conserving: true,
+            closed_loop: true,
+            ..stat("", SchemeKind::Daemon)
+        },
+    ]
+}
+
+/// The `daemon/wc` static arm duplicates `daemon` exactly in faulted
+/// cells (faults require strict sharing), so the grid drops it there.
+pub fn arm_runs_in(arm: &Arm, faulted: bool) -> bool {
+    !(faulted && arm.name == "daemon/wc")
+}
+
+/// One cluster cell: the canonical tenant mix under `arm`, with the
+/// given link schedule and fault plan.
+pub fn cell(
+    arm: &Arm,
+    sched: Option<ScheduleSpec>,
+    faults: Option<FaultPlan>,
+    mut cfg: SimConfig,
+) -> CellSpec {
+    if let Some(ratio) = arm.ratio {
+        cfg.daemon.partition_ratio = ratio;
+    }
+    let tenants: Vec<(&str, SchemeKind)> = TENANT_MIX.iter().map(|w| (*w, arm.kind)).collect();
+    let mut spec = CellSpec::cluster(&tenants, MODULES, cfg);
+    let cl = spec.cluster.as_mut().expect("cluster cell");
+    let faulted = faults.is_some();
+    cl.schedule = sched;
+    cl.faults = faults;
+    cl.recovery = arm.recovery;
+    cl.sharing = if arm.work_conserving && !faulted {
+        SharingMode::WorkConserving
+    } else {
+        SharingMode::Strict
+    };
+    if arm.closed_loop {
+        cl.controller = Some(ControllerSpec::all(EPOCH_CYCLES));
+    }
+    spec
+}
+
+/// `adaptive` — condition × arm grid (arms innermost; `daemon/wc`
+/// dropped in faulted conditions).
+pub fn adaptive_plan(r: &Runner) -> Plan {
+    let cfg = tenant_cfg(r);
+    let mut cells = Vec::new();
+    let mut labels = Vec::new();
+    for (cname, sched, faults) in conditions() {
+        for arm in arms() {
+            if !arm_runs_in(&arm, faults.is_some()) {
+                continue;
+            }
+            cells.push(cell(&arm, sched, faults.clone(), cfg.clone()));
+            labels.push((cname, arm.name, arm.closed_loop));
+        }
+    }
+    let assemble = Box::new(move |ms: &[Metrics]| {
+        let t = TENANT_MIX.len();
+        assert_eq!(ms.len(), labels.len() * t, "adaptive layout mismatch");
+        let cell_ms = |i: usize| &ms[i * t..(i + 1) * t];
+        let goodput = |i: usize| cell_ms(i).iter().map(Metrics::goodput).sum::<f64>();
+
+        let mut table = Table::new(
+            "Adaptive: condition x configuration, 4 tenants x 2 modules",
+            &["cell", "agg-goodput-B/cyc", "agg-IPC", "max-p99-cycles", "actuations"],
+        );
+        for (i, (cname, aname, _)) in labels.iter().enumerate() {
+            let block = cell_ms(i);
+            let ipc: f64 = block.iter().map(Metrics::ipc).sum();
+            let p99 = block
+                .iter()
+                .map(Metrics::p99_access_cost)
+                .fold(f64::NEG_INFINITY, f64::max);
+            let acts: u64 = block.iter().map(|m| m.controller_actuations).sum();
+            table.row_f(
+                &format!("{cname}/{aname}"),
+                &[goodput(i), ipc, p99, acts as f64],
+            );
+        }
+
+        // The acceptance figure: per condition, closed loop vs the best
+        // static arm on aggregate goodput.
+        let mut verdict = Table::new(
+            "Adaptive verdict: closed loop vs best static, per condition",
+            &["condition", "closed-goodput", "best-static-goodput", "closed/static"],
+        );
+        let mut i = 0;
+        while i < labels.len() {
+            let cname = labels[i].0;
+            let mut closed = f64::NAN;
+            let mut best = f64::NEG_INFINITY;
+            while i < labels.len() && labels[i].0 == cname {
+                if labels[i].2 {
+                    closed = goodput(i);
+                } else {
+                    best = best.max(goodput(i));
+                }
+                i += 1;
+            }
+            verdict.row_f(cname, &[closed, best, closed / best]);
+        }
+        vec![table, verdict]
+    });
+    Plan { id: "adaptive".into(), cells, assemble }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::orchestrator::{
+        self, merge_with_plans, run_plan_metrics, sweep_plans, Shard, ShardData,
+        SweepResult,
+    };
+    use crate::util::json::Json;
+    use crate::workloads::cache::TraceCache;
+
+    #[test]
+    fn adaptive_plan_layout() {
+        let r = Runner::test();
+        let p = adaptive_plan(&r);
+        // 4 conditions x 7 arms, minus the wc arm in the faulted cell.
+        assert_eq!(p.cells.len(), 4 * arms().len() - 1);
+        let metrics: usize = p.cells.iter().map(CellSpec::metrics_len).sum();
+        assert_eq!(metrics, p.cells.len() * TENANT_MIX.len());
+        // Only closed-loop cells carry a controller, and it is live.
+        let with_ctl = p
+            .cells
+            .iter()
+            .filter(|c| c.cluster.as_ref().unwrap().controller.is_some())
+            .count();
+        assert_eq!(with_ctl, conditions().len(), "one closed-loop cell per condition");
+        for c in &p.cells {
+            let cl = c.cluster.as_ref().unwrap();
+            if let Some(spec) = cl.controller {
+                assert!(!spec.is_inert());
+            }
+            if cl.faults.is_some() {
+                assert_eq!(cl.sharing, SharingMode::Strict, "faults require strict");
+            }
+        }
+    }
+
+    #[test]
+    fn static_ratio_arms_sit_on_the_law_bounds() {
+        let law = control_law("ratio-tune").unwrap();
+        let arms = arms();
+        let lo = arms.iter().find(|a| a.name == "daemon/ratio-lo").unwrap();
+        let hi = arms.iter().find(|a| a.name == "daemon/ratio-hi").unwrap();
+        assert_eq!(lo.ratio, Some(law.min));
+        assert_eq!(hi.ratio, Some(law.max));
+        let cfg = SimConfig::test_scale();
+        let spec = cell(hi, None, None, cfg);
+        assert_eq!(spec.cfg.daemon.partition_ratio, law.max, "ratio override plumbed");
+    }
+
+    /// The acceptance criterion: on aggregate goodput the closed loop is
+    /// at least as good as every static configuration in every
+    /// disturbance cell, and strictly better where conditions vary
+    /// (bw-burst) and where a module crashes.
+    #[test]
+    fn closed_loop_beats_every_static_configuration() {
+        let r = Runner::test();
+        let p = adaptive_plan(&r);
+        // Rebuild the same labeling the plan used.
+        let mut labels = Vec::new();
+        for (cname, _, faults) in conditions() {
+            for arm in arms() {
+                if arm_runs_in(&arm, faults.is_some()) {
+                    labels.push((cname, arm.name, arm.closed_loop));
+                }
+            }
+        }
+        let ms = run_plan_metrics(&r, &p.cells);
+        let t = TENANT_MIX.len();
+        assert_eq!(ms.len(), labels.len() * t);
+        let goodput =
+            |i: usize| ms[i * t..(i + 1) * t].iter().map(Metrics::goodput).sum::<f64>();
+        for cond in ["steady", "bw-burst", "bw+lat-burst", "module-crash"] {
+            let idx: Vec<usize> =
+                (0..labels.len()).filter(|&i| labels[i].0 == cond).collect();
+            let closed = idx
+                .iter()
+                .copied()
+                .find(|&i| labels[i].2)
+                .map(goodput)
+                .expect("closed-loop cell present");
+            for &i in idx.iter().filter(|&&i| !labels[i].2) {
+                let s = goodput(i);
+                assert!(
+                    closed >= s,
+                    "{cond}: closed loop {closed} lost to static {} {s}",
+                    labels[i].1
+                );
+                if cond == "bw-burst" || cond == "module-crash" {
+                    assert!(
+                        closed > s,
+                        "{cond}: closed loop {closed} must strictly beat static {} {s}",
+                        labels[i].1
+                    );
+                }
+            }
+            // The closed loop actually closed the loop where it won.
+            let acts: u64 = idx
+                .iter()
+                .copied()
+                .filter(|&i| labels[i].2)
+                .flat_map(|i| ms[i * t..(i + 1) * t].iter())
+                .map(|m| m.controller_actuations)
+                .sum();
+            if cond != "steady" {
+                assert!(acts > 0, "{cond}: closed-loop cell never actuated");
+            }
+        }
+    }
+
+    /// Reduced 2-cell plan for the shard byte-identity test (the full
+    /// sweep rides CI's 2-shard merge check).
+    fn mini_plan(r: &Runner) -> Plan {
+        let cfg = tenant_cfg(r);
+        let (_, sched, _) = conditions().remove(1);
+        let all = arms();
+        let closed = *all.iter().find(|a| a.closed_loop).unwrap();
+        let daemon = *all.iter().find(|a| a.name == "daemon").unwrap();
+        let cells = vec![
+            cell(&daemon, sched, None, cfg.clone()),
+            cell(&closed, sched, None, cfg),
+        ];
+        let assemble = Box::new(move |ms: &[Metrics]| {
+            let mut t = Table::new("adaptive mini", &["tenant", "goodput", "actuations"]);
+            for (i, m) in ms.iter().enumerate() {
+                t.row_f(&format!("{i}"), &[m.goodput(), m.controller_actuations as f64]);
+            }
+            vec![t]
+        });
+        Plan { id: "adaptive_mini".into(), cells, assemble }
+    }
+
+    #[test]
+    fn adaptive_cells_shard_byte_identically() {
+        let r = Runner::test();
+        let ids = vec!["adaptive_mini".to_string()];
+        let full = match sweep_plans(
+            vec![mini_plan(&r)],
+            &ids,
+            &r,
+            &TraceCache::new(),
+            Shard::full(),
+            2,
+        )
+        .unwrap()
+        {
+            SweepResult::Tables(sets) => sets,
+            SweepResult::Shard(_) => panic!("unsharded run produced a shard"),
+        };
+        let shards: Vec<ShardData> = (0..2)
+            .map(|index| {
+                let d = match sweep_plans(
+                    vec![mini_plan(&r)],
+                    &ids,
+                    &r,
+                    &TraceCache::new(),
+                    Shard { index, total: 2 },
+                    2,
+                )
+                .unwrap()
+                {
+                    SweepResult::Shard(d) => d,
+                    SweepResult::Tables(_) => panic!("sharded run produced tables"),
+                };
+                ShardData::from_json(&Json::parse(&d.to_json().to_string()).unwrap())
+                    .unwrap()
+            })
+            .collect();
+        let merged = merge_with_plans(vec![mini_plan(&r)], &shards).unwrap();
+        assert_eq!(
+            orchestrator::figures_json(&full).to_string(),
+            orchestrator::figures_json(&merged).to_string(),
+            "adaptive cells must shard/merge byte-identically"
+        );
+    }
+}

@@ -11,6 +11,7 @@
 //! `registry_is_the_single_source_of_truth`).
 
 pub mod ablations;
+pub mod adaptive;
 pub mod cluster;
 pub mod common;
 pub mod disturbance;
@@ -42,7 +43,7 @@ pub struct ExperimentDef {
 /// The experiment registry — the single source of truth for experiment
 /// ids (paper figures/tables in paper order, then the scenario
 /// experiments, then aliases/extras).
-pub static REGISTRY: [ExperimentDef; 24] = [
+pub static REGISTRY: [ExperimentDef; 25] = [
     ExperimentDef {
         id: "fig3",
         about: "motivation: IPC normalized to Local, 6 schemes",
@@ -170,6 +171,12 @@ pub static REGISTRY: [ExperimentDef; 24] = [
         build: resilience::resilience_plan,
     },
     ExperimentDef {
+        id: "adaptive",
+        about: "closed-loop controller vs every static configuration",
+        in_all: true,
+        build: adaptive::adaptive_plan,
+    },
+    ExperimentDef {
         id: "fig14",
         about: "alias of fig13 (same plan, requested id kept)",
         in_all: false,
@@ -230,6 +237,7 @@ mod tests {
         let all = default_experiment_ids();
         assert_eq!(all.len(), REGISTRY.iter().filter(|d| d.in_all).count());
         assert!(all.contains(&"resilience"));
+        assert!(all.contains(&"adaptive"));
         assert!(!all.contains(&"fig14"), "aliases stay out of `all`");
         assert!(!all.contains(&"ablation_dirty_threshold"));
     }

@@ -23,7 +23,7 @@
 
 use super::common::Runner;
 use super::plan_for;
-use crate::config::{ClusterConfig, ScheduleSpec, SharingMode, SimConfig};
+use crate::config::{ClusterConfig, ControllerSpec, ScheduleSpec, SharingMode, SimConfig};
 use crate::metrics::Metrics;
 use crate::net::Disturbance;
 use crate::obs::{ObsSpec, Recorder};
@@ -59,6 +59,9 @@ pub struct ClusterCell {
     pub faults: Option<FaultPlan>,
     /// Degraded-mode policy while a home module is down (default stall).
     pub recovery: RecoveryPolicy,
+    /// Closed-loop controller (default none = static policies; inert
+    /// specs are equivalent to none, byte for byte).
+    pub controller: Option<ControllerSpec>,
 }
 
 /// One simulation cell in the flat job list.
@@ -138,6 +141,7 @@ impl CellSpec {
                 schedule: None,
                 faults: None,
                 recovery: RecoveryPolicy::Stall,
+                controller: None,
             }),
         }
     }
@@ -210,6 +214,7 @@ pub fn run_cell_spec_obs(
             schedule: cl.schedule,
             faults: cl.faults.clone(),
             recovery: cl.recovery,
+            controller: cl.controller,
         };
         return cluster::run_cluster_obs(
             &ccfg,
@@ -359,12 +364,13 @@ pub struct ShardData {
     pub results: Vec<(usize, Vec<Metrics>)>,
 }
 
-/// v4: `Metrics` gained the fault counters (`downtime_cycles`,
-/// `aborted_transfers`, `deferred_requests`) for the resilience
-/// experiment; v3 added `reclaimed_bytes` + `net_util_series`; v2
-/// carried per-slot metrics arrays + `access_hist`.  Older files are
-/// rejected with a clear regenerate message.
-const SHARD_FORMAT: &str = "daemon-sim-shard-v4";
+/// v5: `Metrics` gained `controller_actuations` for the closed-loop
+/// `adaptive` experiment; v4 added the fault counters
+/// (`downtime_cycles`, `aborted_transfers`, `deferred_requests`); v3
+/// added `reclaimed_bytes` + `net_util_series`; v2 carried per-slot
+/// metrics arrays + `access_hist`.  Older files are rejected with a
+/// clear regenerate message.
+const SHARD_FORMAT: &str = "daemon-sim-shard-v5";
 
 fn scale_name(s: Scale) -> &'static str {
     match s {

@@ -101,8 +101,12 @@ sharing-mode (strict vs work-conserving) x link-condition schedule
 cluster; `resilience` sweeps scheme x fault pattern (module crash, link
 flaps, tenant kill) x recovery policy (stall-until-recovery vs re-fetch
 from a surviving module) and reports downtime, aborted/deferred
-requests, and per-tenant slowdown vs the no-fault run.  All of them
-batch/shard like any figure; `list` prints the full registry.
+requests, and per-tenant slowdown vs the no-fault run; `adaptive` runs
+the closed-loop controller (per-epoch migration-ratio retuning,
+recovery switching, idle-share rebalancing) against every static
+configuration across a disturbance grid and reports goodput plus
+controller actuation counts.  All of them batch/shard like any figure;
+`list` prints the full registry.
 ";
 
 fn parse_scale(s: &str) -> Result<Scale, String> {

@@ -46,6 +46,10 @@ pub struct Metrics {
     /// Requests issued while their target component was down, deferred
     /// to the recovery edge (stall-until-recovery).
     pub deferred_requests: u64,
+    /// Closed-loop controller actions applied to this tenant (ratio
+    /// retunes, recovery switches, share rebalances) — 0 for static and
+    /// no-op-controller runs by construction.
+    pub controller_actuations: u64,
     /// Mean network utilization over the run, [0,1].
     pub net_utilization: f64,
     /// Per-interval downlink utilization, horizon-clipped (variability
@@ -180,6 +184,7 @@ impl Metrics {
             ("downtime_cycles", Json::num(self.downtime_cycles)),
             ("aborted_transfers", Json::num(self.aborted_transfers as f64)),
             ("deferred_requests", Json::num(self.deferred_requests as f64)),
+            ("controller_actuations", Json::num(self.controller_actuations as f64)),
             ("net_utilization", Json::num(self.net_utilization)),
             ("net_util_series", f64s(&self.net_util_series)),
             ("compression_ratio", Json::num(self.compression_ratio)),
@@ -213,6 +218,7 @@ impl Metrics {
         m.downtime_cycles = jnum(j, "downtime_cycles")?;
         m.aborted_transfers = jint(j, "aborted_transfers")?;
         m.deferred_requests = jint(j, "deferred_requests")?;
+        m.controller_actuations = jint(j, "controller_actuations")?;
         m.net_utilization = jnum(j, "net_utilization")?;
         m.net_util_series = jvec_f64(j, "net_util_series")?;
         m.compression_ratio = jnum(j, "compression_ratio")?;
@@ -343,6 +349,7 @@ mod tests {
         assert_eq!(m.downtime_cycles, 0.0);
         assert_eq!(m.aborted_transfers, 0);
         assert_eq!(m.deferred_requests, 0);
+        assert_eq!(m.controller_actuations, 0);
         assert!(m.net_util_series.is_empty());
     }
 
@@ -365,6 +372,7 @@ mod tests {
         m.downtime_cycles = 0.1 + 0.7; // not exactly representable
         m.aborted_transfers = 17;
         m.deferred_requests = 29;
+        m.controller_actuations = 5;
         m.net_utilization = 1.0 / 3.0;
         m.net_util_series = vec![0.25, 1.0 / 7.0, 0.0, 0.99];
         m.compression_ratio = 2.39;
@@ -384,6 +392,7 @@ mod tests {
         assert_eq!(back.downtime_cycles.to_bits(), m.downtime_cycles.to_bits());
         assert_eq!(back.aborted_transfers, m.aborted_transfers);
         assert_eq!(back.deferred_requests, m.deferred_requests);
+        assert_eq!(back.controller_actuations, m.controller_actuations);
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&back.net_util_series), bits(&m.net_util_series));
         assert_eq!(back.goodput().to_bits(), m.goodput().to_bits());

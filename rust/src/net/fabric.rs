@@ -335,6 +335,45 @@ impl Fabric {
         (c.aborted, c.deferred)
     }
 
+    /// Schedule rate multiplier on tenant `t`'s downlink at module `m`
+    /// (1.0 = nominal conditions) — the closed loop's distress signal.
+    pub fn down_rate_scale(&self, m: usize, t: usize, now: f64) -> f64 {
+        self.modules[m].ports[t].down.rate_scale_at(now)
+    }
+
+    /// Closed-loop `ratio-tune` actuation: re-split tenant `t`'s
+    /// partitioned port capacity on every module so `ratio` of it serves
+    /// cache lines (both directions).  Unpartitioned (shared-channel)
+    /// ports are untouched — they have no class split to retune.  Only
+    /// transfers issued after the call see the new rates.
+    pub fn retune_tenant_ratio(&mut self, t: usize, ratio: f64) {
+        for module in self.modules.iter_mut() {
+            let p = &mut module.ports[t];
+            p.down.retune_partition(p.capacity, ratio);
+            p.up.retune_partition(p.capacity, ratio);
+        }
+    }
+
+    /// Closed-loop `share-rebalance` actuation: re-carve every module's
+    /// total port capacity across tenants by `weights` (normalized here),
+    /// preserving each port's internal class split.  Each port's
+    /// disturbance-injection base (`capacity`) moves with it so future
+    /// injector installs see the rebalanced shares.
+    pub fn retune_weights(&mut self, weights: &[f64]) {
+        assert_eq!(weights.len(), self.tenants(), "one weight per tenant");
+        let wsum: f64 = weights.iter().sum();
+        assert!(wsum > 0.0 && wsum.is_finite(), "weights must sum positive");
+        for module in self.modules.iter_mut() {
+            let total: f64 = module.ports.iter().map(|p| p.capacity).sum();
+            for (p, &w) in module.ports.iter_mut().zip(weights) {
+                let cap = total * (w / wsum);
+                p.capacity = cap;
+                p.down.set_capacity(cap);
+                p.up.set_capacity(cap);
+            }
+        }
+    }
+
     pub fn down_utilization(&self, m: usize, t: usize, horizon: f64) -> f64 {
         self.modules[m].ports[t].down.utilization(horizon)
     }
@@ -568,6 +607,59 @@ mod tests {
         let mut f =
             Fabric::new(&[net], 7.2, &[share(1.0)], 0.0, 1e6, SharingMode::WorkConserving);
         f.set_faults(&FaultPlan::new().module_crash(0, 0.0, 10.0));
+    }
+
+    #[test]
+    fn retune_tenant_ratio_resplits_partitioned_ports_only() {
+        let net = NetConfig::new(0.0, 1.0);
+        let part = TenantShare { weight: 1.0, partitioned: true, line_ratio: 0.25 };
+        let flat = share(1.0);
+        let mut f = strict(&[net, net], 14.4, &[part, flat], 0.0, 1e4);
+        // Tenant 0: 2 B/cyc per module, 25% lines.
+        assert!((f.down_rate(0, 0, Class::Line) - 0.5).abs() < 1e-12);
+        f.retune_tenant_ratio(0, 0.6);
+        for m in 0..2 {
+            assert!((f.down_rate(m, 0, Class::Line) - 1.2).abs() < 1e-12);
+            assert!((f.down_rate(m, 0, Class::Page) - 0.8).abs() < 1e-12);
+        }
+        // Tenant 1's shared-channel port is untouched.
+        assert!((f.down_rate(0, 1, Class::Line) - 2.0).abs() < 1e-12);
+        // Retuning back restores the original rates exactly.
+        f.retune_tenant_ratio(0, 0.25);
+        assert!((f.down_rate(0, 0, Class::Line) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retune_weights_recarves_total_capacity() {
+        let net = NetConfig::new(0.0, 1.0);
+        let part = TenantShare { weight: 1.0, partitioned: true, line_ratio: 0.25 };
+        let mut f = strict(&[net], 14.4, &[part, part], 0.0, 1e4);
+        // 4 B/cyc port split 2/2; rebalance to 3:1.
+        f.retune_weights(&[3.0, 1.0]);
+        assert!((f.down_rate(0, 0, Class::Line) - 0.75).abs() < 1e-12);
+        assert!((f.down_rate(0, 0, Class::Page) - 2.25).abs() < 1e-12);
+        assert!((f.down_rate(0, 1, Class::Line) - 0.25).abs() < 1e-12);
+        // Total capacity is conserved regardless of the weights.
+        let total = f.down_rate(0, 0, Class::Line)
+            + f.down_rate(0, 0, Class::Page)
+            + f.down_rate(0, 1, Class::Line)
+            + f.down_rate(0, 1, Class::Page);
+        assert!((total - 4.0).abs() < 1e-12, "{total}");
+        // Equal weights restore the original carve exactly.
+        f.retune_weights(&[1.0, 1.0]);
+        assert!((f.down_rate(0, 0, Class::Line) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn down_rate_scale_tracks_schedule_per_port() {
+        let net = NetConfig::new(0.0, 1.0);
+        let mut f = strict(&[net, net], 7.2, &[share(1.0)], 0.0, 1e6);
+        assert_eq!(f.down_rate_scale(0, 0, 0.0), 1.0, "unscheduled = nominal");
+        let sched = Arc::new(NetSchedule::square_wave(100.0, 0.25, 0.0, 400.0));
+        f.set_schedule(|m, _| if m == 0 { Some(sched.clone()) } else { None });
+        assert!((f.down_rate_scale(0, 0, 50.0) - 0.25).abs() < 1e-12);
+        assert!((f.down_rate_scale(0, 0, 150.0) - 1.0).abs() < 1e-12);
+        assert_eq!(f.down_rate_scale(1, 0, 50.0), 1.0, "other module nominal");
     }
 
     #[test]

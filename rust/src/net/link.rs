@@ -62,6 +62,18 @@ impl BwChannel {
         self.schedule = schedule;
     }
 
+    /// Retune the nominal service rate.  Applies only to transfers issued
+    /// after the call — `next_free` and accumulated busy accounting are
+    /// untouched, so already-scheduled transfers keep the timing they were
+    /// issued with and the change is deterministic at any actuation cycle.
+    pub fn set_rate(&mut self, bytes_per_cycle: f64) {
+        assert!(
+            bytes_per_cycle > 0.0 && bytes_per_cycle.is_finite(),
+            "channel rate must be positive and finite, got {bytes_per_cycle}"
+        );
+        self.bytes_per_cycle = bytes_per_cycle;
+    }
+
     /// Queue occupancy ahead of a request issued at `now`, in cycles.
     pub fn backlog(&self, now: f64) -> f64 {
         (self.next_free - now).max(0.0)
@@ -283,6 +295,56 @@ impl Link {
     /// Service rate of the channel carrying `class`, bytes/cycle.
     pub fn rate(&self, class: Class) -> f64 {
         self.chan(class).bytes_per_cycle()
+    }
+
+    /// Total nominal capacity across channels, bytes/cycle.
+    pub fn total_rate(&self) -> f64 {
+        match &self.shared {
+            Some(c) => c.bytes_per_cycle(),
+            None => {
+                self.line_chan.as_ref().unwrap().bytes_per_cycle()
+                    + self.page_chan.as_ref().unwrap().bytes_per_cycle()
+            }
+        }
+    }
+
+    /// Re-split a partitioned link's `total` capacity so `ratio` of it is
+    /// reserved for lines (closed-loop `ratio-tune` actuation).  No-op on
+    /// a shared link, which has no class partition to retune.  Like
+    /// [`BwChannel::set_rate`], affects only subsequently issued
+    /// transfers.
+    pub fn retune_partition(&mut self, total: f64, ratio: f64) {
+        assert!((0.0..1.0).contains(&ratio) && ratio > 0.0, "bad line ratio {ratio}");
+        if self.shared.is_some() {
+            return;
+        }
+        self.line_chan.as_mut().unwrap().set_rate(total * ratio);
+        self.page_chan.as_mut().unwrap().set_rate(total * (1.0 - ratio));
+    }
+
+    /// Rescale the link to a new total capacity, preserving the current
+    /// line/page split on a partitioned link (closed-loop
+    /// `share-rebalance` actuation).
+    pub fn set_capacity(&mut self, total: f64) {
+        match &mut self.shared {
+            Some(c) => c.set_rate(total),
+            None => {
+                let lr = self.line_chan.as_ref().unwrap().bytes_per_cycle();
+                let pr = self.page_chan.as_ref().unwrap().bytes_per_cycle();
+                let ratio = lr / (lr + pr);
+                self.line_chan.as_mut().unwrap().set_rate(total * ratio);
+                self.page_chan.as_mut().unwrap().set_rate(total * (1.0 - ratio));
+            }
+        }
+    }
+
+    /// The schedule's bandwidth multiplier at `now` (1.0 when nominal or
+    /// unscheduled) — the closed loop's link-condition distress signal.
+    /// Deliberately the *scale*, not the absolute rate: it is invariant
+    /// under controller rate actuation, so observation cannot feed back
+    /// on actuation.
+    pub fn rate_scale_at(&self, now: f64) -> f64 {
+        self.schedule.as_ref().map_or(1.0, |s| s.rate_scale_at(now))
     }
 
     /// Disturbance injection on all channels proportionally.
@@ -656,6 +718,53 @@ mod tests {
         l.send(0.0, 100, Class::Line);
         let u = l.utilization(100.0);
         assert!((u - 0.25).abs() < 1e-9, "{u}");
+    }
+
+    #[test]
+    fn retune_affects_only_future_transfers() {
+        let mut c = BwChannel::new(1.0, 1000.0);
+        let a = c.transfer(0.0, 100); // 100 cycles at 1 B/c
+        assert_eq!(a, Transfer { start: 0.0, end: 100.0 });
+        c.set_rate(2.0);
+        // Queued behind `a` but served at the new rate.
+        let b = c.transfer(0.0, 100);
+        assert_eq!(b, Transfer { start: 100.0, end: 150.0 });
+    }
+
+    #[test]
+    fn link_retune_partition_and_capacity() {
+        let mut l = Link::partitioned(0.0, 4.0, 0.25, 1000.0);
+        assert!((l.total_rate() - 4.0).abs() < 1e-9);
+        assert!((l.rate(Class::Line) - 1.0).abs() < 1e-9);
+        l.retune_partition(4.0, 0.5);
+        assert!((l.rate(Class::Line) - 2.0).abs() < 1e-9);
+        assert!((l.rate(Class::Page) - 2.0).abs() < 1e-9);
+        // Capacity rescale preserves the current 50/50 split.
+        l.set_capacity(8.0);
+        assert!((l.rate(Class::Line) - 4.0).abs() < 1e-9);
+        assert!((l.rate(Class::Page) - 4.0).abs() < 1e-9);
+        assert!((l.total_rate() - 8.0).abs() < 1e-9);
+        // Shared links rescale their single channel; retune is a no-op.
+        let mut s = Link::shared(0.0, 4.0, 1000.0);
+        s.retune_partition(4.0, 0.5);
+        assert!((s.total_rate() - 4.0).abs() < 1e-9);
+        s.set_capacity(2.0);
+        assert!((s.rate(Class::Line) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_scale_reports_schedule_phase() {
+        use crate::net::disturbance::NetSchedule;
+        use std::sync::Arc;
+        let mut l = Link::shared(0.0, 1.0, 1000.0);
+        assert_eq!(l.rate_scale_at(0.0), 1.0, "unscheduled links are nominal");
+        let sched = Arc::new(NetSchedule::square_wave(100.0, 0.5, 0.0, 400.0));
+        l.set_schedule(Some(sched));
+        assert!((l.rate_scale_at(50.0) - 0.5).abs() < 1e-9, "degraded phase");
+        assert!((l.rate_scale_at(150.0) - 1.0).abs() < 1e-9, "nominal phase");
+        // Rate actuation does not leak into the observed scale.
+        l.set_capacity(0.25);
+        assert!((l.rate_scale_at(50.0) - 0.5).abs() < 1e-9);
     }
 
     #[test]

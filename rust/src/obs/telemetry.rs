@@ -46,6 +46,12 @@ pub struct ModuleSample {
     pub aborted: u64,
     /// Cumulative fault-deferred requests (fabric + engine).
     pub deferred: u64,
+    /// Link-condition scale from the module's downlink schedule at the
+    /// sample instant: 1.0 = nominal, < 1.0 = degraded bandwidth.  This
+    /// is the *schedule's* multiplier, not the absolute rate, so it is
+    /// invariant under controller weight rebalancing — the closed-loop
+    /// distress signal cannot feed back on its own actuation.
+    pub link_rate_scale: f64,
 }
 
 impl ModuleSample {
@@ -62,6 +68,7 @@ impl ModuleSample {
             ("reclaimed_bytes", Json::num(self.reclaimed_bytes as f64)),
             ("aborted", Json::num(self.aborted as f64)),
             ("deferred", Json::num(self.deferred as f64)),
+            ("link_rate_scale", Json::num(self.link_rate_scale)),
         ])
     }
 }
@@ -191,6 +198,7 @@ mod tests {
             reclaimed_bytes: 0,
             aborted: 1,
             deferred: 2,
+            link_rate_scale: 0.25,
         });
         let mut rec = Recorder::new(ObsSpec::enabled());
         rec.push_snapshot(snap);
@@ -203,5 +211,6 @@ mod tests {
         let m = &v.get_arr("modules").unwrap()[0];
         assert_eq!(m.get_str("port"), Some("recovering"));
         assert_eq!(m.get_f64("egress_sent_bytes"), Some(1024.0));
+        assert_eq!(m.get_f64("link_rate_scale"), Some(0.25));
     }
 }

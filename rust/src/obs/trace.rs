@@ -33,6 +33,10 @@ pub enum EventKind {
     PortEdge,
     /// A cluster tenant was killed at its configured kill cycle.
     TenantKill,
+    /// The closed-loop controller applied a bounded actuation to this
+    /// tenant at an observation-epoch boundary (`detail` carries the
+    /// control-law id).
+    Actuate,
 }
 
 impl EventKind {
@@ -46,6 +50,7 @@ impl EventKind {
             EventKind::Rerequest => "Rerequest",
             EventKind::PortEdge => "PortEdge",
             EventKind::TenantKill => "TenantKill",
+            EventKind::Actuate => "Actuate",
         }
     }
 
@@ -58,7 +63,7 @@ impl EventKind {
             | EventKind::Rerequest => (0, "pages"),
             EventKind::LineFetch | EventKind::Suppress => (1, "lines"),
             EventKind::PortEdge => (2, "port"),
-            EventKind::TenantKill => (3, "lifecycle"),
+            EventKind::TenantKill | EventKind::Actuate => (3, "lifecycle"),
         }
     }
 }

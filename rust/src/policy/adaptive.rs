@@ -1,0 +1,110 @@
+//! Closed-loop control-law registry (ROADMAP item 3; DaeMon §4.5 taken
+//! online).
+//!
+//! Each law the [`AdaptiveController`](crate::system::controller::AdaptiveController)
+//! may run is a literal def in `CONTROL_LAWS`, carrying its actuation
+//! bounds — the controller clamps every emitted action to its law's
+//! declared range, and the fuzz tests in `system::controller` assert the
+//! clamp can never be escaped.  daemon-lint R6 cross-checks these ids
+//! against the DESIGN.md §"Policy registry" table in both directions,
+//! exactly like the movement/recovery/sharing registries in
+//! [`super`] — a new control law registers itself here plus one doc row.
+
+/// One registered control law: identity plus the bounds every actuation
+/// it emits must satisfy.
+pub struct ControlLawDef {
+    /// Canonical lowercase id (DESIGN.md table spelling).
+    pub id: &'static str,
+    /// One-line description for docs and diagnostics.
+    pub about: &'static str,
+    /// Inclusive lower bound of the actuated quantity.
+    pub min: f64,
+    /// Inclusive upper bound of the actuated quantity.
+    pub max: f64,
+    /// Largest per-epoch change of the actuated quantity (damping; the
+    /// recovery switch is binary, so its step spans the full range).
+    pub max_step: f64,
+}
+
+/// The three closed-loop control laws.
+///
+/// * `ratio-tune` actuates the §4.1 line/page partition ratio of a
+///   tenant's fabric ports: toward `max` under observed link distress
+///   (critical lines keep flowing when page bandwidth collapses), back
+///   toward the scheme's static default when conditions are nominal.
+/// * `recovery-switch` actuates the §4.6 degraded-mode policy between
+///   `Stall` (0.0) and `Refetch` (1.0) from observed port distress,
+///   with a clean-dwell hysteresis before relaxing to `Stall`.
+/// * `share-rebalance` actuates per-tenant fabric weights under
+///   work-conserving sharing: tenants observed idle through the
+///   controller's idle dwell drop to the `min` weight floor and the
+///   slack goes to active tenants; weights always renormalize to sum
+///   exactly 1.0.
+pub static CONTROL_LAWS: [ControlLawDef; 3] = [
+    ControlLawDef {
+        id: "ratio-tune",
+        about: "migration-ratio retuning from observed link conditions",
+        min: 0.10,
+        max: 0.60,
+        max_step: 0.20,
+    },
+    ControlLawDef {
+        id: "recovery-switch",
+        about: "Stall<->Refetch switching from observed port distress",
+        min: 0.0,
+        max: 1.0,
+        max_step: 1.0,
+    },
+    ControlLawDef {
+        id: "share-rebalance",
+        about: "idle-share reclamation under work-conserving sharing",
+        min: 0.05,
+        max: 1.0,
+        max_step: 1.0,
+    },
+];
+
+/// Resolve a control law by id.
+pub fn control_law(id: &str) -> Option<&'static ControlLawDef> {
+    let lower = id.to_ascii_lowercase();
+    CONTROL_LAWS.iter().find(|d| d.id == lower)
+}
+
+/// Canonical control-law ids in registry order.
+pub fn control_law_ids() -> Vec<&'static str> {
+    CONTROL_LAWS.iter().map(|d| d.id).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_law_registry_is_consistent() {
+        for (i, d) in CONTROL_LAWS.iter().enumerate() {
+            assert!(!d.id.is_empty() && d.id == d.id.to_ascii_lowercase(), "{}", d.id);
+            assert!(
+                !CONTROL_LAWS[..i].iter().any(|p| p.id == d.id),
+                "duplicate id {}",
+                d.id
+            );
+            assert!(d.min < d.max, "{}: degenerate bounds", d.id);
+            assert!(d.max_step > 0.0 && d.max_step <= d.max - d.min, "{}", d.id);
+            assert!(!d.about.is_empty(), "{}", d.id);
+            let hit = control_law(d.id).expect(d.id);
+            assert_eq!(hit.id, d.id);
+        }
+        assert!(control_law("nope").is_none());
+        assert_eq!(control_law_ids(), ["ratio-tune", "recovery-switch", "share-rebalance"]);
+    }
+
+    #[test]
+    fn ratio_tune_bounds_cover_the_static_sweep_points() {
+        // The `adaptive` experiment's static single-knob arms sit exactly
+        // on this law's bounds; the default 0.25 lies inside them.
+        let d = control_law("ratio-tune").unwrap();
+        assert_eq!(d.min, 0.10);
+        assert_eq!(d.max, 0.60);
+        assert!((d.min..=d.max).contains(&0.25));
+    }
+}

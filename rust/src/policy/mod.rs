@@ -16,6 +16,8 @@
 //! table (R6 enforces the pairing), and — for movement schemes — extend
 //! the closed `SchemeKind` enum it drives.
 
+pub mod adaptive;
+
 use crate::config::SharingMode;
 use crate::schemes::{Policy, SchemeKind};
 use crate::system::fault::RecoveryPolicy;

@@ -41,9 +41,10 @@ use crate::daemon::EgressStats;
 use crate::lifecycle::{Lifecycle, StateMachine, Transition};
 use crate::metrics::Metrics;
 use crate::net::NetSchedule;
-use crate::obs::{Event, EventKind, ObsSpec, Recorder};
+use crate::obs::{Event, EventKind, ObsSpec, Recorder, Snapshot};
 use crate::schemes::SchemeKind;
 use crate::sim::MergeQueue;
+use crate::system::controller::{Action, AdaptiveController};
 use crate::system::machine::{Machine, RemoteMemory, SizeOracle};
 use crate::workloads::Trace;
 use std::sync::Arc;
@@ -128,6 +129,13 @@ pub struct Cluster {
     /// [`StateMachine::transition_with`], so terminal-never-reverts is
     /// structural rather than asserted at each call site.
     states: Vec<StateMachine<TenantState>>,
+    /// Closed-loop feedback controller (`None` for every static
+    /// configuration and for inert [`ControllerSpec`]s — inert specs
+    /// never construct a controller, so static runs take the exact
+    /// historical code path, byte for byte).
+    ///
+    /// [`ControllerSpec`]: crate::config::ControllerSpec
+    controller: Option<AdaptiveController>,
 }
 
 impl Cluster {
@@ -198,7 +206,11 @@ impl Cluster {
             })
             .collect();
         let states = vec![StateMachine::new(TenantState::Running); tenants.len()];
-        Cluster { tenants, remote, kills, states }
+        let controller = ccfg
+            .controller
+            .filter(|s| !s.is_inert())
+            .map(|spec| AdaptiveController::new(spec, ccfg.sharing, &shares));
+        Cluster { tenants, remote, kills, states, controller }
     }
 
     /// Number of tenants in the cluster.
@@ -241,11 +253,75 @@ impl Cluster {
         });
     }
 
+    /// One closed-loop control step, fired when the driver's global
+    /// clock crosses an observation-epoch boundary: sample every
+    /// tenant's observation vector (the same [`Machine::observe`] the
+    /// telemetry recorder uses), let the controller plan, apply the
+    /// bounded actions.  Uses take/put-back on the controller so the
+    /// tenant observations can borrow `self` freely.
+    fn control_epoch(&mut self, now: f64) {
+        let Some(mut ctl) = self.controller.take() else { return };
+        if let Some(cycle) = ctl.epoch_crossed(now) {
+            let obs: Vec<Snapshot> = self
+                .tenants
+                .iter()
+                .map(|t| t.observe(&self.remote, cycle))
+                .collect();
+            for action in ctl.plan(&obs) {
+                self.apply_action(&action, cycle);
+            }
+        }
+        self.controller = Some(ctl);
+    }
+
+    /// Apply one controller action to the live system.  Actuation is
+    /// fabric-side only (partition ratios, capacity weights) plus the
+    /// per-tenant recovery-policy switch; rate changes affect only
+    /// future transfers, so mid-run retuning stays deterministic.
+    fn apply_action(&mut self, action: &Action, at: f64) {
+        match action {
+            Action::SetRatio { tenant, ratio } => {
+                self.remote.fabric.retune_tenant_ratio(*tenant, *ratio);
+                self.actuated(*tenant, action.law(), at);
+            }
+            Action::SetRecovery { tenant, policy } => {
+                self.tenants[*tenant].set_recovery(*policy);
+                self.actuated(*tenant, action.law(), at);
+            }
+            Action::SetWeights { weights } => {
+                self.remote.fabric.retune_weights(weights);
+                for t in 0..self.tenants.len() {
+                    self.actuated(t, action.law(), at);
+                }
+            }
+        }
+    }
+
+    /// Book one actuation against tenant `t`: bump its metrics counter
+    /// and emit the `Actuate` observability event when a recorder is
+    /// attached (the event's `detail` names the control law).
+    fn actuated(&mut self, t: usize, law: &'static str, at: f64) {
+        self.tenants[t].metrics.controller_actuations += 1;
+        if let Some(rec) = self.tenants[t].obs_mut() {
+            let mut ev = Event::instant(EventKind::Actuate, t, None, 0, at);
+            ev.detail = Some(law);
+            rec.event(ev);
+        }
+    }
+
     /// Run every tenant to completion over the shared fabric; one trace
     /// list per tenant (a tenant's cores cycle over its list exactly as
     /// in `Machine::run`).  Returns per-tenant metrics in tenant order.
     pub fn run(&mut self, traces: &[Vec<Arc<Trace>>]) -> Vec<Metrics> {
         assert_eq!(traces.len(), self.tenants.len(), "one trace list per tenant");
+        // Under the recovery-switch law every tenant starts on Refetch
+        // (the only reactive-safe initial state — see the controller
+        // docs); the law relaxes it to Stall after a clean dwell.
+        if let Some(p) = self.controller.as_ref().and_then(|c| c.initial_recovery()) {
+            for t in self.tenants.iter_mut() {
+                t.set_recovery(p);
+            }
+        }
         for (t, tr) in self.tenants.iter_mut().zip(traces) {
             t.prepare(tr);
         }
@@ -266,7 +342,12 @@ impl Cluster {
                 None => self.retire(i, TenantEvent::Finish),
             }
         }
-        while let Some((i, _)) = q.pop() {
+        while let Some((i, at)) = q.pop() {
+            // Pop times are globally non-decreasing (min-queue; only the
+            // popped tenant's clock advances), so crossing an epoch here
+            // fires the controller exactly once per boundary, at a
+            // deterministic point in the access order.
+            self.control_epoch(at);
             let (ci, _) = self.tenants[i]
                 .peek(&traces[i])
                 .expect("queued tenant must have work left");
@@ -680,6 +761,112 @@ mod tests {
                 oracle: None,
             }],
         );
+    }
+
+    #[test]
+    fn inert_controller_specs_run_the_historical_path() {
+        // The no-op-controller pin at the unit level: epoch 0 and
+        // all-laws-off specs never construct a controller, so the run is
+        // byte-identical to the same config with no controller at all.
+        use crate::config::ControllerSpec;
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let run = |ccfg: ClusterConfig| {
+            let mut cluster = Cluster::new(
+                &ccfg,
+                vec![TenantInit {
+                    cfg: cfg.clone(),
+                    kind: SchemeKind::Daemon,
+                    footprint_pages: trace.footprint_pages,
+                    profiles: vec![profile],
+                    oracle: None,
+                }],
+            );
+            cluster.run(&[vec![trace.clone()]]).remove(0).to_json().to_string()
+        };
+        let baseline = run(ClusterConfig::new(2));
+        let zero_epoch =
+            run(ClusterConfig::new(2).with_controller(ControllerSpec::all(0.0)));
+        let laws_off = run(ClusterConfig::new(2).with_controller(ControllerSpec {
+            epoch_cycles: 25_000.0,
+            tune_ratio: false,
+            switch_recovery: false,
+            rebalance_shares: false,
+        }));
+        assert_eq!(baseline, zero_epoch, "epoch-0 controller perturbed the run");
+        assert_eq!(baseline, laws_off, "all-laws-off controller perturbed the run");
+    }
+
+    #[test]
+    fn closed_loop_controller_actuates_under_degraded_conditions() {
+        // A live controller over a persistently degraded schedule must
+        // observe distress and actuate (ratio-tune steps the daemon
+        // tenant's partition toward the law max), booking the actuations
+        // in the metrics counter; work is preserved either way.
+        use crate::config::{ControllerSpec, ScheduleSpec};
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let run = |ctl: Option<ControllerSpec>| {
+            let mut ccfg = ClusterConfig::new(2).with_schedule(ScheduleSpec {
+                period_cycles: 1e12,
+                rate_scale: 0.25,
+                extra_latency_ns: 0.0,
+                horizon_cycles: 1e12,
+            });
+            if let Some(s) = ctl {
+                ccfg = ccfg.with_controller(s);
+            }
+            let mut cluster = Cluster::new(
+                &ccfg,
+                vec![TenantInit {
+                    cfg: cfg.clone(),
+                    kind: SchemeKind::Daemon,
+                    footprint_pages: trace.footprint_pages,
+                    profiles: vec![profile],
+                    oracle: None,
+                }],
+            );
+            cluster.run(&[vec![trace.clone()]]).remove(0)
+        };
+        let fixed = run(None);
+        let closed = run(Some(ControllerSpec::all(25_000.0)));
+        assert_eq!(fixed.instructions, closed.instructions, "same work either way");
+        assert_eq!(fixed.controller_actuations, 0, "static runs never actuate");
+        assert!(
+            closed.controller_actuations >= 2,
+            "persistent distress must drive at least the two ratio-tune steps \
+             toward the law max, got {}",
+            closed.controller_actuations
+        );
+    }
+
+    #[test]
+    fn closed_loop_runs_repeat_byte_identically() {
+        use crate::config::{ControllerSpec, ScheduleSpec};
+        let cfg = SimConfig::test_scale();
+        let (trace, profile) = fetch_test("pr", cfg.seed);
+        let run = || {
+            let ccfg = ClusterConfig::new(2)
+                .with_schedule(ScheduleSpec {
+                    period_cycles: 2e5,
+                    rate_scale: 0.25,
+                    extra_latency_ns: 0.0,
+                    horizon_cycles: 1e12,
+                })
+                .with_controller(ControllerSpec::all(25_000.0));
+            let mut cluster = Cluster::new(
+                &ccfg,
+                vec![TenantInit {
+                    cfg: cfg.clone(),
+                    kind: SchemeKind::Daemon,
+                    footprint_pages: trace.footprint_pages,
+                    profiles: vec![profile],
+                    oracle: None,
+                }],
+            );
+            cluster.run(&[vec![trace.clone()]]).remove(0).to_json().to_string()
+        };
+        assert_eq!(run(), run(), "closed-loop run is not deterministic");
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! Closed-loop adaptive controller (ROADMAP item 3): a deterministic
+//! per-epoch feedback loop over the per-tenant observation vector the
+//! telemetry layer already samples ([`Machine::observe`]).
+//!
+//! Control model: at every crossed observation epoch (the same collapsing
+//! boundary rule as `obs::Recorder::epoch_crossed`, so controller runs
+//! ride the PR-7 sampling cadence) the cluster driver hands the
+//! controller one [`Snapshot`] per tenant; [`AdaptiveController::plan`]
+//! returns the bounded [`Action`]s to apply.  `plan` is a **pure
+//! function of (internal state, observations)** — no clocks, no
+//! randomness, no map-iteration order — so identical observation streams
+//! produce identical action sequences (fuzz-pinned below), and runs stay
+//! byte-identical across `--jobs` counts and repeats.
+//!
+//! The three laws are registered in [`crate::policy::adaptive`] with
+//! their actuation bounds; every action is clamped to its law's declared
+//! range before it is emitted:
+//!
+//! * **`ratio-tune`** — steps each partitioned tenant's §4.1 line/page
+//!   ratio toward the law maximum under observed link distress (degraded
+//!   schedule phase or a non-Up port) and back toward the scheme's
+//!   static default when clean, damped by the law's `max_step` per
+//!   epoch.
+//! * **`recovery-switch`** — holds tenants on `Refetch` while any
+//!   distress is observed (routing around a dead module is decided at
+//!   issue time, so switching *into* `Refetch` after a crash cannot
+//!   un-strand already-deferred accesses; starting there is the only
+//!   reactive-safe initial state — see DESIGN.md §"Closed-loop
+//!   control") and relaxes to `Stall` only after a full clean dwell of
+//!   [`CLEAN_DWELL_EPOCHS`] consecutive distress-free samples.
+//! * **`share-rebalance`** — under work-conserving sharing, drops
+//!   tenants observed idle (no new downlink bytes and empty in-flight
+//!   buffers) for [`IDLE_DWELL_EPOCHS`] consecutive epochs to the law's
+//!   weight floor and hands the slack to active tenants proportionally
+//!   to their configured base weights; emitted weight vectors always
+//!   sum to 1.0.  The dwell keeps one quiet epoch (a burst gap, a
+//!   high-hit-rate phase) from being misread as retirement; a tenant
+//!   that moves bytes again is restored to its base weight at the next
+//!   epoch.
+//!
+//! Actuation is fabric-side only: port partition ratios and port
+//! capacity weights.  The memory-engine DRAM bus keeps its static
+//! carve — the fabric link is `bandwidth_factor`× scarcer and is the
+//! binding resource, and retuning one timeline keeps the actuation
+//! surface small (documented simplification).
+
+use crate::config::{ControllerSpec, SharingMode, TenantShare};
+use crate::obs::Snapshot;
+use crate::policy::adaptive::{control_law, ControlLawDef};
+use crate::system::fault::{PortState, RecoveryPolicy};
+
+/// Clean observation epochs required before `recovery-switch` relaxes a
+/// tenant from `Refetch` back to `Stall` (dwell hysteresis: distress
+/// resets the count).  At the default controller epoch this is on the
+/// order of 10^6 cycles of continuously nominal conditions.
+pub const CLEAN_DWELL_EPOCHS: u32 = 40;
+
+/// Consecutive quiet observation epochs (zero downlink-byte delta and
+/// empty in-flight buffers) before `share-rebalance` treats a tenant as
+/// idle and floors its weight.
+pub const IDLE_DWELL_EPOCHS: u32 = 2;
+
+/// One bounded actuation emitted by [`AdaptiveController::plan`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// Re-split `tenant`'s partitioned fabric ports to reserve `ratio`
+    /// for cache lines (`ratio-tune`).
+    SetRatio { tenant: usize, ratio: f64 },
+    /// Switch `tenant`'s degraded-mode policy (`recovery-switch`).
+    SetRecovery { tenant: usize, policy: RecoveryPolicy },
+    /// Re-carve fabric port capacity across all tenants
+    /// (`share-rebalance`); normalized, sums to 1.0.
+    SetWeights { weights: Vec<f64> },
+}
+
+impl Action {
+    /// Registry id of the control law that produced this action.
+    pub fn law(&self) -> &'static str {
+        match self {
+            Action::SetRatio { .. } => "ratio-tune",
+            Action::SetRecovery { .. } => "recovery-switch",
+            Action::SetWeights { .. } => "share-rebalance",
+        }
+    }
+}
+
+/// Deterministic per-epoch feedback controller — see the module docs.
+pub struct AdaptiveController {
+    spec: ControllerSpec,
+    sharing: SharingMode,
+    /// Configured base weights, normalized to sum 1.0.
+    base_weights: Vec<f64>,
+    /// Each tenant's static partition ratio (the clean-conditions target).
+    default_ratio: Vec<f64>,
+    /// Which tenants have class-partitioned ports (ratio-tunable).
+    partitioned: Vec<bool>,
+    /// Next unsampled epoch boundary (same collapsing rule as the
+    /// telemetry recorder).
+    next_epoch: f64,
+    /// Current actuated state, mirrored so `plan` emits only changes.
+    ratio: Vec<f64>,
+    recovery: Vec<RecoveryPolicy>,
+    clean_epochs: Vec<u32>,
+    /// Consecutive quiet epochs per tenant (idle-dwell counter).
+    idle_epochs: Vec<u32>,
+    weights: Vec<f64>,
+    /// Downlink byte counters at the previous epoch (idle detection).
+    prev_bytes: Vec<u64>,
+}
+
+fn law(id: &str) -> &'static ControlLawDef {
+    control_law(id).expect("control law registered")
+}
+
+/// A tenant observes distress when any of its module ports is not `Up`
+/// or any downlink schedule is in a degraded phase.  The schedule signal
+/// is the *scale* (1.0 = nominal), deliberately invariant under the
+/// controller's own rate actuation.
+fn distressed(s: &Snapshot) -> bool {
+    s.modules
+        .iter()
+        .any(|m| m.port != PortState::Up || m.link_rate_scale < 0.999)
+}
+
+impl AdaptiveController {
+    /// Build a controller for `shares.len()` tenants.  `spec` must not
+    /// be inert (the cluster driver gates on [`ControllerSpec::is_inert`]
+    /// so inert configs never construct a controller at all and stay on
+    /// the exact historical code path).
+    pub fn new(spec: ControllerSpec, sharing: SharingMode, shares: &[TenantShare]) -> Self {
+        assert!(!spec.is_inert(), "inert controller specs must not be constructed");
+        assert!(!shares.is_empty(), "controller needs at least one tenant");
+        let wsum: f64 = shares.iter().map(|s| s.weight).sum();
+        let base_weights: Vec<f64> = shares.iter().map(|s| s.weight / wsum).collect();
+        let default_ratio: Vec<f64> = shares.iter().map(|s| s.line_ratio).collect();
+        let partitioned: Vec<bool> = shares.iter().map(|s| s.partitioned).collect();
+        let n = shares.len();
+        AdaptiveController {
+            spec,
+            sharing,
+            ratio: default_ratio.clone(),
+            recovery: vec![Self::initial_recovery_for(&spec); n],
+            clean_epochs: vec![0; n],
+            idle_epochs: vec![0; n],
+            weights: base_weights.clone(),
+            prev_bytes: vec![0; n],
+            next_epoch: spec.epoch_cycles,
+            base_weights,
+            default_ratio,
+            partitioned,
+        }
+    }
+
+    fn initial_recovery_for(spec: &ControllerSpec) -> RecoveryPolicy {
+        if spec.switch_recovery {
+            // Refetch probes the home port first, so it is byte-identical
+            // to Stall while conditions are clean — and it is the only
+            // state that still routes around a module that dies before
+            // the first distressed sample (stall-deferred accesses park
+            // until recovery regardless of later switches).
+            RecoveryPolicy::Refetch
+        } else {
+            RecoveryPolicy::Stall
+        }
+    }
+
+    /// The recovery policy every tenant should start under when this
+    /// controller runs the `recovery-switch` law (`None` = leave the
+    /// configured static policy alone).
+    pub fn initial_recovery(&self) -> Option<RecoveryPolicy> {
+        self.spec.switch_recovery.then_some(RecoveryPolicy::Refetch)
+    }
+
+    /// Number of tenants under control.
+    pub fn tenants(&self) -> usize {
+        self.base_weights.len()
+    }
+
+    /// Latest unsampled epoch boundary at or before `now`, advancing the
+    /// cadence past `now` — the exact collapsing rule of
+    /// `obs::Recorder::epoch_crossed`, so controller epochs ride the
+    /// telemetry sampling boundary.
+    pub fn epoch_crossed(&mut self, now: f64) -> Option<f64> {
+        if now < self.next_epoch {
+            return None;
+        }
+        let e = self.spec.epoch_cycles;
+        let at = self.next_epoch + ((now - self.next_epoch) / e).floor() * e;
+        self.next_epoch = at + e;
+        Some(at)
+    }
+
+    /// One control step: observations in (tenant order), bounded actions
+    /// out.  Pure function of `(self, obs)`; emits only *changes*, so a
+    /// steady system converges to an empty action stream.  Action order
+    /// is fixed (ratio per tenant asc, recovery per tenant asc, weights
+    /// last) — part of the determinism contract.
+    pub fn plan(&mut self, obs: &[Snapshot]) -> Vec<Action> {
+        assert_eq!(obs.len(), self.tenants(), "one snapshot per tenant");
+        let mut actions = Vec::new();
+        if self.spec.tune_ratio {
+            let l = law("ratio-tune");
+            for (t, s) in obs.iter().enumerate() {
+                if !self.partitioned[t] {
+                    continue;
+                }
+                let target = if distressed(s) {
+                    l.max
+                } else {
+                    self.default_ratio[t].clamp(l.min, l.max)
+                };
+                let step = (target - self.ratio[t]).clamp(-l.max_step, l.max_step);
+                let next = (self.ratio[t] + step).clamp(l.min, l.max);
+                if next != self.ratio[t] {
+                    self.ratio[t] = next;
+                    actions.push(Action::SetRatio { tenant: t, ratio: next });
+                }
+            }
+        }
+        if self.spec.switch_recovery {
+            for (t, s) in obs.iter().enumerate() {
+                if distressed(s) {
+                    self.clean_epochs[t] = 0;
+                    if self.recovery[t] != RecoveryPolicy::Refetch {
+                        self.recovery[t] = RecoveryPolicy::Refetch;
+                        actions.push(Action::SetRecovery {
+                            tenant: t,
+                            policy: RecoveryPolicy::Refetch,
+                        });
+                    }
+                } else {
+                    self.clean_epochs[t] = self.clean_epochs[t].saturating_add(1);
+                    if self.clean_epochs[t] >= CLEAN_DWELL_EPOCHS
+                        && self.recovery[t] != RecoveryPolicy::Stall
+                    {
+                        self.recovery[t] = RecoveryPolicy::Stall;
+                        actions.push(Action::SetRecovery {
+                            tenant: t,
+                            policy: RecoveryPolicy::Stall,
+                        });
+                    }
+                }
+            }
+        }
+        if self.spec.rebalance_shares && self.sharing == SharingMode::WorkConserving {
+            let l = law("share-rebalance");
+            for (t, s) in obs.iter().enumerate() {
+                let quiet = s.net_bytes_in == self.prev_bytes[t]
+                    && s.inflight_pages == 0
+                    && s.inflight_lines == 0;
+                self.idle_epochs[t] =
+                    if quiet { self.idle_epochs[t].saturating_add(1) } else { 0 };
+            }
+            let idle: Vec<bool> =
+                self.idle_epochs.iter().map(|&e| e >= IDLE_DWELL_EPOCHS).collect();
+            let n_idle = idle.iter().filter(|&&b| b).count();
+            let slack = 1.0 - l.min * n_idle as f64;
+            let mut w = self.base_weights.clone();
+            if n_idle > 0 && n_idle < w.len() && slack > 0.0 {
+                let active_base: f64 = self
+                    .base_weights
+                    .iter()
+                    .zip(&idle)
+                    .filter(|(_, &i)| !i)
+                    .map(|(b, _)| b)
+                    .sum();
+                for t in 0..w.len() {
+                    w[t] = if idle[t] {
+                        l.min
+                    } else {
+                        slack * self.base_weights[t] / active_base
+                    };
+                }
+            }
+            if w != self.weights {
+                self.weights = w.clone();
+                actions.push(Action::SetWeights { weights: w });
+            }
+        }
+        for (t, s) in obs.iter().enumerate() {
+            self.prev_bytes[t] = s.net_bytes_in;
+        }
+        actions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{ModuleSample, Snapshot};
+
+    fn shares(n: usize) -> Vec<TenantShare> {
+        (0..n)
+            .map(|_| TenantShare { weight: 1.0, partitioned: true, line_ratio: 0.25 })
+            .collect()
+    }
+
+    fn spec() -> ControllerSpec {
+        ControllerSpec::all(25_000.0)
+    }
+
+    fn sample(port: PortState, scale: f64) -> ModuleSample {
+        ModuleSample {
+            module: 0,
+            port,
+            link_backlog_pages: 0.0,
+            link_backlog_lines: 0.0,
+            engine_backlog_pages: 0.0,
+            engine_backlog_lines: 0.0,
+            egress_raw_bytes: 0,
+            egress_sent_bytes: 0,
+            reclaimed_bytes: 0,
+            aborted: 0,
+            deferred: 0,
+            link_rate_scale: scale,
+        }
+    }
+
+    fn snap(tenant: usize, cycle: f64, port: PortState, scale: f64, bytes: u64) -> Snapshot {
+        let mut s = Snapshot::empty(tenant, cycle);
+        s.net_bytes_in = bytes;
+        s.modules.push(sample(port, scale));
+        s
+    }
+
+    fn clean(tenant: usize, cycle: f64, bytes: u64) -> Snapshot {
+        snap(tenant, cycle, PortState::Up, 1.0, bytes)
+    }
+
+    #[test]
+    fn epoch_crossing_matches_the_recorder_rule() {
+        let mut c = AdaptiveController::new(
+            ControllerSpec::all(100.0),
+            SharingMode::Strict,
+            &shares(1),
+        );
+        assert_eq!(c.epoch_crossed(50.0), None);
+        assert_eq!(c.epoch_crossed(100.0), Some(100.0));
+        assert_eq!(c.epoch_crossed(150.0), None);
+        assert_eq!(c.epoch_crossed(1234.0), Some(1200.0));
+        assert_eq!(c.epoch_crossed(1299.0), None);
+        assert_eq!(c.epoch_crossed(1300.0), Some(1300.0));
+    }
+
+    #[test]
+    fn ratio_tune_is_damped_clamped_and_reverts() {
+        let mut c = AdaptiveController::new(spec(), SharingMode::Strict, &shares(1));
+        let distress = |cy: f64, b| vec![snap(0, cy, PortState::Up, 0.25, b)];
+        // 0.25 -> 0.45 -> 0.60 under persistent distress (max_step 0.2).
+        assert_eq!(
+            c.plan(&distress(1e4, 10)),
+            vec![Action::SetRatio { tenant: 0, ratio: 0.45 }]
+        );
+        assert_eq!(
+            c.plan(&distress(2e4, 20)),
+            vec![Action::SetRatio { tenant: 0, ratio: 0.6 }]
+        );
+        // Saturated at the law max: no further action.
+        assert_eq!(c.plan(&distress(3e4, 30)), vec![]);
+        // Clean conditions step back toward the static default and stop.
+        assert_eq!(
+            c.plan(&[clean(0, 4e4, 40)]),
+            vec![Action::SetRatio { tenant: 0, ratio: 0.4 }]
+        );
+        let back = c.plan(&[clean(0, 5e4, 50)]);
+        assert_eq!(back, vec![Action::SetRatio { tenant: 0, ratio: 0.25 }]);
+        assert_eq!(c.plan(&[clean(0, 6e4, 60)]), vec![], "converged = silent");
+    }
+
+    #[test]
+    fn unpartitioned_tenants_are_never_ratio_tuned() {
+        let sh =
+            vec![TenantShare { weight: 1.0, partitioned: false, line_ratio: 0.25 }];
+        let mut c = AdaptiveController::new(spec(), SharingMode::Strict, &sh);
+        let acts = c.plan(&[snap(0, 1e4, PortState::Up, 0.25, 10)]);
+        assert!(
+            !acts.iter().any(|a| matches!(a, Action::SetRatio { .. })),
+            "{acts:?}"
+        );
+    }
+
+    #[test]
+    fn recovery_switch_starts_refetch_with_dwell_hysteresis() {
+        let mut c = AdaptiveController::new(spec(), SharingMode::Strict, &shares(1));
+        assert_eq!(c.initial_recovery(), Some(RecoveryPolicy::Refetch));
+        // Distress: already Refetch, nothing to emit.
+        let acts = c.plan(&[snap(0, 1e4, PortState::Down, 1.0, 0)]);
+        assert!(!acts.iter().any(|a| matches!(a, Action::SetRecovery { .. })));
+        // One epoch short of the dwell: still Refetch.
+        let mut bytes = 0;
+        for k in 0..CLEAN_DWELL_EPOCHS - 1 {
+            bytes += 10;
+            let acts = c.plan(&[clean(0, 2e4 + k as f64 * 1e4, bytes)]);
+            assert!(
+                !acts.iter().any(|a| matches!(a, Action::SetRecovery { .. })),
+                "epoch {k}: {acts:?}"
+            );
+        }
+        // The dwell completes: relax to Stall exactly once.
+        let acts = c.plan(&[clean(0, 9e5, bytes + 10)]);
+        assert_eq!(
+            acts,
+            vec![Action::SetRecovery { tenant: 0, policy: RecoveryPolicy::Stall }]
+        );
+        // Any distress snaps straight back to Refetch (ratio-tune also
+        // reacts to the same distress; recovery actions order after it).
+        let acts = c.plan(&[snap(0, 1e6, PortState::Recovering, 1.0, bytes + 10)]);
+        assert!(
+            acts.contains(&Action::SetRecovery {
+                tenant: 0,
+                policy: RecoveryPolicy::Refetch
+            }),
+            "{acts:?}"
+        );
+    }
+
+    #[test]
+    fn share_rebalance_floors_idle_tenants_after_the_dwell() {
+        let mut c = AdaptiveController::new(spec(), SharingMode::WorkConserving, &shares(2));
+        // Epoch 1: both moved bytes since the (zero) baseline — no change.
+        assert_eq!(c.plan(&[clean(0, 1e4, 100), clean(1, 1e4, 100)]), vec![]);
+        // Epoch 2: tenant 1 quiet, but the 2-epoch idle dwell holds fire.
+        assert_eq!(c.plan(&[clean(0, 2e4, 200), clean(1, 2e4, 100)]), vec![]);
+        // Epoch 3: still quiet — floored, actives take the slack.
+        let acts = c.plan(&[clean(0, 3e4, 300), clean(1, 3e4, 100)]);
+        assert_eq!(acts, vec![Action::SetWeights { weights: vec![0.95, 0.05] }]);
+        // Tenant 1 wakes up: base weights restored immediately.
+        let acts = c.plan(&[clean(0, 4e4, 400), clean(1, 4e4, 150)]);
+        assert_eq!(acts, vec![Action::SetWeights { weights: vec![0.5, 0.5] }]);
+        // Everyone idle past the dwell: base weights kept (nothing to
+        // reclaim toward), so the converged loop goes silent.
+        for k in 5..8 {
+            let cy = k as f64 * 1e4;
+            assert_eq!(c.plan(&[clean(0, cy, 400), clean(1, cy, 150)]), vec![]);
+        }
+    }
+
+    #[test]
+    fn share_rebalance_is_inert_under_strict_sharing() {
+        let mut c = AdaptiveController::new(spec(), SharingMode::Strict, &shares(2));
+        let acts = c.plan(&[clean(0, 1e4, 100), clean(1, 1e4, 100)]);
+        let acts2 = c.plan(&[clean(0, 2e4, 200), clean(1, 2e4, 100)]);
+        for a in acts.iter().chain(&acts2) {
+            assert!(!matches!(a, Action::SetWeights { .. }), "{a:?}");
+        }
+    }
+
+    /// Satellite: randomized observation streams through the seed-replay
+    /// harness.  Identical streams must produce identical action
+    /// sequences (determinism), and no action may ever leave its law's
+    /// registry-declared bounds.
+    #[test]
+    fn fuzz_controller_is_deterministic_and_bounded() {
+        use crate::policy::adaptive::control_law;
+        let ratio_law = control_law("ratio-tune").unwrap();
+        let share_law = control_law("share-rebalance").unwrap();
+        crate::util::proptest::check(0xC0_11, 60, |rng| {
+            let n = 2 + rng.index(3); // 2..=4 tenants
+            let modules = 1 + rng.index(2);
+            let epochs = 5 + rng.index(40);
+            let sharing = if rng.below(2) == 0 {
+                SharingMode::Strict
+            } else {
+                SharingMode::WorkConserving
+            };
+            // Pre-generate the whole observation stream so two fresh
+            // controllers replay the exact same inputs.
+            let mut bytes = vec![0u64; n];
+            let stream: Vec<Vec<Snapshot>> = (0..epochs)
+                .map(|e| {
+                    (0..n)
+                        .map(|t| {
+                            bytes[t] += rng.below(3) * (1 + rng.below(5000));
+                            let mut s =
+                                Snapshot::empty(t, (e + 1) as f64 * 25_000.0);
+                            s.net_bytes_in = bytes[t];
+                            s.inflight_pages = rng.index(3);
+                            s.inflight_lines = rng.index(3);
+                            for m in 0..modules {
+                                let port = match rng.index(4) {
+                                    0 => PortState::Down,
+                                    1 => PortState::Recovering,
+                                    _ => PortState::Up,
+                                };
+                                let scale =
+                                    if rng.below(3) == 0 { 0.25 } else { 1.0 };
+                                let mut ms = sample(port, scale);
+                                ms.module = m;
+                                s.modules.push(ms);
+                            }
+                            s
+                        })
+                        .collect()
+                })
+                .collect();
+            let run = |stream: &[Vec<Snapshot>]| -> Vec<Vec<Action>> {
+                let mut c = AdaptiveController::new(spec(), sharing, &shares(n));
+                stream.iter().map(|obs| c.plan(obs)).collect()
+            };
+            let a = run(&stream);
+            let b = run(&stream);
+            assert_eq!(a, b, "identical streams must replay identical actions");
+            // Bounds: every action inside its law's declared range.
+            let mut ratio = vec![0.25; n];
+            for acts in &a {
+                for act in acts {
+                    match act {
+                        Action::SetRatio { tenant, ratio: r } => {
+                            assert!(
+                                (ratio_law.min..=ratio_law.max).contains(r),
+                                "ratio {r} outside [{}, {}]",
+                                ratio_law.min,
+                                ratio_law.max
+                            );
+                            assert!(
+                                (r - ratio[*tenant]).abs()
+                                    <= ratio_law.max_step + 1e-12,
+                                "ratio step {} exceeds {}",
+                                (r - ratio[*tenant]).abs(),
+                                ratio_law.max_step
+                            );
+                            ratio[*tenant] = *r;
+                        }
+                        Action::SetRecovery { .. } => {}
+                        Action::SetWeights { weights } => {
+                            assert_eq!(weights.len(), n);
+                            let sum: f64 = weights.iter().sum();
+                            assert!(
+                                (sum - 1.0).abs() < 1e-9,
+                                "weights sum {sum} != 1.0"
+                            );
+                            for w in weights {
+                                assert!(
+                                    *w >= share_law.min - 1e-12 && *w <= 1.0,
+                                    "weight {w} outside [{}, 1.0]",
+                                    share_law.min
+                                );
+                            }
+                            assert_eq!(
+                                sharing,
+                                SharingMode::WorkConserving,
+                                "share-rebalance actuated under strict sharing"
+                            );
+                        }
+                    }
+                }
+            }
+        });
+    }
+}

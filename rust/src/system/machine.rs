@@ -594,18 +594,29 @@ impl Machine {
 
     /// Capture one observability sample at `cycle`.  Observation-only by
     /// construction: every fabric/engine/local accessor used here takes
-    /// `&self`, so a recorder can never perturb simulation state.
+    /// `&self`, so a recorder can never perturb simulation state.  The
+    /// recorder is taken out and put back so [`Machine::observe`] can
+    /// borrow `&self` for the snapshot itself.
     fn obs_capture(&mut self, remote: &RemoteMemory, cycle: f64) {
-        let id = self.id;
-        let Some(rec) = self.obs.as_mut() else { return };
+        let Some(mut rec) = self.obs.take() else { return };
         if rec.wants_trace() {
             for m in 0..remote.modules() {
-                rec.port_edge(m, remote.fabric.port_state(m, id, cycle), cycle, id);
+                rec.port_edge(m, remote.fabric.port_state(m, self.id, cycle), cycle, self.id);
             }
         }
-        if !rec.wants_telemetry() {
-            return;
+        if rec.wants_telemetry() {
+            rec.push_snapshot(self.observe(remote, cycle));
         }
+        self.obs = Some(rec);
+    }
+
+    /// Build this tenant's telemetry [`Snapshot`] at `cycle` — the
+    /// observation vector shared by the recorder and the closed-loop
+    /// [`AdaptiveController`](crate::system::controller::AdaptiveController).
+    /// Pure observation (`&self` throughout), so sampling can never
+    /// perturb simulation state.
+    pub fn observe(&self, remote: &RemoteMemory, cycle: f64) -> Snapshot {
+        let id = self.id;
         let modules = (0..remote.modules())
             .map(|m| {
                 let egress = remote.engines[m].egress_stats(id);
@@ -624,10 +635,11 @@ impl Machine {
                         + remote.engines[m].reclaimed_bytes(id),
                     aborted: fa + ea,
                     deferred: fd + ed,
+                    link_rate_scale: remote.fabric.down_rate_scale(m, id, cycle),
                 }
             })
             .collect();
-        rec.push_snapshot(Snapshot {
+        Snapshot {
             cycle,
             tenant: id,
             inflight_pages: self.engine.inflight_pages(),
@@ -644,7 +656,7 @@ impl Machine {
             net_bytes_in: self.metrics.net_bytes_in,
             compression_ratio: if self.policy.compress { self.oracle.ratio() } else { 1.0 },
             modules,
-        });
+        }
     }
 
     /// §4.3 dirty-data handling for a dirty line evicted from the LLC.

@@ -3,11 +3,13 @@
 //! multi-workload execution, and parallel experiment sweeps.
 
 pub mod cluster;
+pub mod controller;
 pub mod fault;
 pub mod machine;
 pub mod sweep;
 
 pub use cluster::{run_cluster, Cluster, TenantEvent, TenantInit, TenantState};
+pub use controller::{Action, AdaptiveController};
 pub use fault::{
     FaultCounters, FaultPlan, FaultTarget, FaultTimeline, FaultWindow, PortState, RecoveryPolicy,
 };

@@ -1,10 +1,11 @@
 //! R6: policy-registry/doc drift.
 //!
 //! `rust/src/policy/mod.rs` holds the three policy tables (`REGISTRY`,
-//! `RECOVERY`, `SHARING`), each entry carrying a literal `id: "..."`
-//! field; DESIGN.md's "Policy registry" section documents every id in
-//! its tables' first columns.  R6 keeps the two in sync in both
-//! directions:
+//! `RECOVERY`, `SHARING`) and `rust/src/policy/adaptive.rs` the
+//! closed-loop control-law table (`CONTROL_LAWS`), each entry carrying a
+//! literal `id: "..."` field; DESIGN.md's "Policy registry" section
+//! documents every id in its tables' first columns.  R6 keeps the two
+//! in sync in both directions:
 //!
 //! * every id registered in the policy file appears backticked in the
 //!   first column of a table row under the "Policy registry" heading;
@@ -18,6 +19,9 @@ use super::drift::{backtick_spans, doc_section, registry_ids};
 use super::{Diagnostic, Repo, Rule, R6};
 
 const POLICY_PATH: &str = "rust/src/policy/mod.rs";
+/// Control-law registry; optional (older fixture repos lack it), but
+/// scanned with the same both-direction contract when present.
+const ADAPTIVE_PATH: &str = "rust/src/policy/adaptive.rs";
 const POLICY_HEADING: &str = "## Policy registry";
 
 pub struct PolicyDrift;
@@ -62,17 +66,23 @@ impl Rule for PolicyDrift {
 
     fn explain(&self) -> &'static str {
         "rust/src/policy/mod.rs is the single source of movement / recovery / sharing\n\
-         policies, and DESIGN.md \"Policy registry\" is their user-facing contract.  R6\n\
-         checks both directions: every `id: \"...\"` literal in the policy file must\n\
-         appear backticked in the first column of a table row under the \"Policy\n\
-         registry\" heading, and every id-shaped backticked token in those first\n\
-         columns must name a registered policy.  Fix by adding the missing doc row,\n\
-         registering the policy, or deleting the stale row."
+         policies (and policy/adaptive.rs of the closed-loop control laws), and\n\
+         DESIGN.md \"Policy registry\" is their user-facing contract.  R6 checks both\n\
+         directions: every `id: \"...\"` literal in the policy files must appear\n\
+         backticked in the first column of a table row under the \"Policy registry\"\n\
+         heading, and every id-shaped backticked token in those first columns must\n\
+         name a registered policy or control law.  Fix by adding the missing doc\n\
+         row, registering the policy, or deleting the stale row."
     }
 
     fn check(&self, repo: &Repo, out: &mut Vec<Diagnostic>) {
         let Some(reg) = repo.file(POLICY_PATH) else { return };
-        let ids = registry_ids(reg);
+        // (id, source line, source path) across both registry files.
+        let mut ids: Vec<(String, usize, &'static str)> =
+            registry_ids(reg).into_iter().map(|(id, l)| (id, l, POLICY_PATH)).collect();
+        if let Some(laws) = repo.file(ADAPTIVE_PATH) {
+            ids.extend(registry_ids(laws).into_iter().map(|(id, l)| (id, l, ADAPTIVE_PATH)));
+        }
 
         let Some(design) = repo.doc("DESIGN.md") else {
             let msg = "DESIGN.md is missing".to_string();
@@ -86,16 +96,16 @@ impl Rule for PolicyDrift {
             return;
         }
         let documented = doc_ids(&section);
-        for (id, line) in &ids {
+        for (id, line, path) in &ids {
             if !documented.iter().any(|(d, _)| d == id) {
                 let msg = format!(
                     "policy id `{id}` is not documented in DESIGN.md's policy tables"
                 );
-                out.push(Diagnostic::new(POLICY_PATH, *line, R6, msg));
+                out.push(Diagnostic::new(path, *line, R6, msg));
             }
         }
         for (doc_id, line) in &documented {
-            if !ids.iter().any(|(id, _)| id == doc_id) {
+            if !ids.iter().any(|(id, _, _)| id == doc_id) {
                 let msg = format!(
                     "`{doc_id}` is in a DESIGN.md policy table but not in the policy \
                      registry"
@@ -169,6 +179,42 @@ mod tests {
         // Non-id spans in later columns (prose, `naive` alias notes) and
         // uppercase names are never claimed as ids.
         assert!(!DESIGN_FIXTURE.is_empty());
+    }
+
+    const LAWS_FIXTURE: &str = "pub static CONTROL_LAWS: [ControlLawDef; 1] = [\n\
+        ControlLawDef {\n\
+        id: \"ratio-tune\",\n\
+        },\n\
+        ];\n";
+
+    #[test]
+    fn control_law_ids_are_drift_checked_both_directions() {
+        // Undocumented law → flagged at its line in the adaptive file.
+        let d = check(
+            &[(POLICY_PATH, POLICY_FIXTURE), (ADAPTIVE_PATH, LAWS_FIXTURE)],
+            &[("DESIGN.md", DESIGN_FIXTURE)],
+        );
+        assert_eq!(d.len(), 1, "{d:?}");
+        assert_eq!(d[0].path, ADAPTIVE_PATH);
+        assert_eq!(d[0].line, 3, "`ratio-tune`'s id: line");
+        assert!(d[0].message.contains("`ratio-tune`"), "{d:?}");
+        // A doc row naming the law clears it; a law-only doc row without
+        // the registration would be stale drift.
+        let design = DESIGN_FIXTURE.replace(
+            "\n## Next section",
+            "| `ratio-tune` | closed loop |\n\n## Next section",
+        );
+        let wrong_design = design.replace("ratio-tune", "ratio-tunee");
+        let d = check(
+            &[(POLICY_PATH, POLICY_FIXTURE), (ADAPTIVE_PATH, LAWS_FIXTURE)],
+            &[("DESIGN.md", &design)],
+        );
+        assert!(d.is_empty(), "{d:?}");
+        let d = check(
+            &[(POLICY_PATH, POLICY_FIXTURE), (ADAPTIVE_PATH, LAWS_FIXTURE)],
+            &[("DESIGN.md", &wrong_design)],
+        );
+        assert_eq!(d.len(), 2, "stale doc row + undocumented law: {d:?}");
     }
 
     #[test]

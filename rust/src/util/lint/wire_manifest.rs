@@ -14,11 +14,11 @@
 //! without the others.
 
 /// Must equal `orchestrator::SHARD_FORMAT`.
-pub const WIRE_FORMAT: &str = "daemon-sim-shard-v4";
+pub const WIRE_FORMAT: &str = "daemon-sim-shard-v5";
 
 /// Field names of `Metrics::to_json`, in serialization order.  Every
 /// field must also be read back by `Metrics::from_json`.
-pub const METRICS_FIELDS: [&str; 25] = [
+pub const METRICS_FIELDS: [&str; 26] = [
     "instructions",
     "cycles",
     "stall_cycles",
@@ -37,6 +37,7 @@ pub const METRICS_FIELDS: [&str; 25] = [
     "downtime_cycles",
     "aborted_transfers",
     "deferred_requests",
+    "controller_actuations",
     "net_utilization",
     "net_util_series",
     "compression_ratio",

@@ -272,6 +272,65 @@ mod tests {
     }
 
     #[test]
+    fn log_histogram_percentiles_meet_the_bucketing_error_bound() {
+        // A sample >= 1 in bucket k (holding [2^(k-1), 2^k)) is reported
+        // as the bucket's geometric midpoint 1.5*2^(k-1), so the ratio
+        // estimate/sample lies in (0.75, 1.5].  `value_at` picks the
+        // bucket holding rank ceil(q*n) — the bucket of the rank-based
+        // order statistic — so every quantile estimate inherits exactly
+        // that relative-error bound.
+        crate::util::proptest::check(0x10_6_81, 200, |rng| {
+            let n = 1 + rng.index(400);
+            let mut xs: Vec<f64> = (0..n)
+                .map(|_| (rng.f64() * 40.0).exp2() * (1.0 + rng.f64()))
+                .collect();
+            let mut h = LogHistogram::new();
+            for &x in &xs {
+                h.add(x);
+            }
+            xs.sort_by(f64::total_cmp);
+            for q in [0.5, 0.9, 0.99, 0.999] {
+                let target = ((q * n as f64).ceil().max(1.0) as usize).min(n);
+                let truth = xs[target - 1];
+                let est = h.value_at(q);
+                let ratio = est / truth;
+                assert!(
+                    ratio > 0.75 && ratio <= 1.5,
+                    "q={q} n={n}: estimate {est} vs sample {truth} (ratio {ratio})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn log_histogram_quantile_edge_cases_pin() {
+        // Empty histogram reports 0.0 at every quantile.
+        let h = LogHistogram::new();
+        assert_eq!(h.value_at(0.0), 0.0);
+        assert_eq!(h.value_at(0.999), 0.0);
+        // Single sample: every quantile is that sample's bucket midpoint.
+        let mut one = LogHistogram::new();
+        one.add(100.0); // bucket 7: [64, 128)
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(one.value_at(q), 96.0);
+        }
+        // Duplicate-heavy: 9,999 copies of one value plus one outlier —
+        // p99/p999 stay on the dominant bucket, p100 reaches the tail.
+        let mut dup = LogHistogram::new();
+        for _ in 0..9_999 {
+            dup.add(12.0); // bucket 4: [8, 16), midpoint exactly 12.0
+        }
+        dup.add(1e6);
+        assert_eq!(dup.value_at(0.99), 12.0);
+        assert_eq!(dup.value_at(0.999), 12.0);
+        assert!(dup.value_at(1.0) > 1e5);
+        // Sub-1 samples collapse to bucket 0's 0.5 representative.
+        let mut tiny = LogHistogram::new();
+        tiny.add(0.25);
+        assert_eq!(tiny.value_at(0.99), 0.5);
+    }
+
+    #[test]
     fn pearson_perfect_and_anti() {
         let xs = [1.0, 2.0, 3.0, 4.0];
         let ys = [2.0, 4.0, 6.0, 8.0];

@@ -211,6 +211,67 @@ fn resilience_and_variability_cells_repeat_byte_identically() {
     assert_eq!(a, b, "scenario cells diverged across repeat runs");
 }
 
+/// Closed-loop `adaptive` pins: the controller is a pure function of
+/// state sampled on the deterministic epoch grid, so closed-loop cells
+/// must be byte-identical across repeat runs and `--jobs 1` vs
+/// `--jobs 4`; and an inert controller spec (epoch 0) must be
+/// byte-identical to the corresponding static cell.
+#[test]
+fn adaptive_cells_are_jobs_invariant_and_inert_specs_match_static() {
+    use daemon_sim::config::ControllerSpec;
+    use daemon_sim::experiments::adaptive::{arms, cell, conditions};
+
+    let r = Runner::test();
+    let (_, sched, _) = conditions().remove(1); // bw-burst: the loop actuates
+    let all = arms();
+    let closed = *all.iter().find(|a| a.name == "closed-loop").unwrap();
+    let daemon = *all.iter().find(|a| a.name == "daemon").unwrap();
+    let cells = vec![
+        cell(&closed, sched, None, SimConfig::test_scale()),
+        cell(&daemon, sched, None, SimConfig::test_scale()),
+    ];
+    let run = |jobs: usize| -> Vec<Vec<Metrics>> {
+        run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), jobs)
+            .into_iter()
+            .map(|s| s.expect("unsharded run fills every slot"))
+            .collect()
+    };
+    let fmt = |slots: &[Vec<Metrics>]| -> Vec<String> {
+        slots
+            .iter()
+            .map(|ms| {
+                ms.iter().map(|m| m.to_json().to_string()).collect::<Vec<_>>().join("\n")
+            })
+            .collect()
+    };
+    let serial = run(1);
+    let acts = |ms: &[Metrics]| ms.iter().map(|m| m.controller_actuations).sum::<u64>();
+    assert!(acts(&serial[0]) > 0, "closed-loop cell never actuated — pins nothing");
+    assert_eq!(acts(&serial[1]), 0, "static cell must never actuate");
+    assert_eq!(
+        fmt(&serial),
+        fmt(&run(4)),
+        "adaptive cells diverged across --jobs counts"
+    );
+    assert_eq!(fmt(&serial), fmt(&run(1)), "adaptive cells diverged on repeat");
+
+    let mut inert = cell(&daemon, sched, None, SimConfig::test_scale());
+    inert.cluster.as_mut().unwrap().controller = Some(ControllerSpec::all(0.0));
+    let slots = run_cells_flat(
+        &r,
+        &TraceCache::new(),
+        std::slice::from_ref(&inert),
+        Shard::full(),
+        1,
+    );
+    let inert_ms = slots.into_iter().next().unwrap().expect("slot filled");
+    assert_eq!(
+        fmt(std::slice::from_ref(&inert_ms))[0],
+        fmt(&serial)[1],
+        "inert controller spec perturbed a static cell"
+    );
+}
+
 /// Ring overflow is deterministic: a tiny ring must overflow, count its
 /// drops identically on repeat runs, and retain an identical tail.
 #[test]
