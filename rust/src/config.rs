@@ -183,6 +183,152 @@ impl ControllerSpec {
     }
 }
 
+/// Arrival-rate shape for the request-serving front-end
+/// ([`crate::system::frontend`]): a piecewise-constant rate multiplier
+/// over a base Poisson process, mirroring the `NetSchedule` phase
+/// machinery on the workload side.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrivalPattern {
+    /// Constant nominal rate for the whole run.
+    Steady,
+    /// Square-wave high/low phases (burst first), mean rate ≈ nominal.
+    Bursty,
+    /// A staircase approximating a day/night cycle: ramp up to a peak
+    /// and back down, repeating.
+    Diurnal,
+}
+
+impl ArrivalPattern {
+    pub fn name(self) -> &'static str {
+        match self {
+            ArrivalPattern::Steady => "steady",
+            ArrivalPattern::Bursty => "bursty",
+            ArrivalPattern::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// Plain-data description of one request-serving scenario (ROADMAP
+/// item 2): open-loop arrivals fanned into access bursts, served under
+/// an SLO with an optional robustness stack.  Carried as
+/// `Option<ServiceSpec>` on a cluster cell — `None` keeps the exact
+/// historical trace-driven path, byte for byte.  The robustness knobs
+/// are layered: `timeout_cycles <= 0` disables timeouts *and* retries
+/// (the "naive" stack), `hedge_percentile <= 0` disables hedging,
+/// `shed_watermark_cycles <= 0` disables admission control.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServiceSpec {
+    pub pattern: ArrivalPattern,
+    /// Number of requests in the run.
+    pub requests: usize,
+    /// Accesses per request burst (window of the class's base trace).
+    pub burst_accesses: usize,
+    /// Mean inter-arrival gap in cycles at `load == 1.0`.
+    pub base_gap_cycles: f64,
+    /// Arrival-rate multiplier: the effective mean gap is
+    /// `base_gap_cycles / load`, so `load > 1` overdrives the servers.
+    pub load: f64,
+    /// SLO deadline measured from arrival; completions within it count
+    /// toward goodput-under-SLO.
+    pub slo_cycles: f64,
+    /// Per-attempt timeout measured from issue (<= 0.0 = naive: no
+    /// timeouts, no retries).
+    pub timeout_cycles: f64,
+    /// Retry budget after the first attempt times out.
+    pub max_retries: u32,
+    /// First retry backoff; doubles per retry up to the cap.
+    pub backoff_base_cycles: f64,
+    pub backoff_cap_cycles: f64,
+    /// Deterministic jitter added on top of each backoff, as a fraction
+    /// of the capped deterministic delay (in `[0, jitter_frac)`).
+    pub jitter_frac: f64,
+    /// Hedge a second attempt once the primary is outstanding past this
+    /// percentile of observed attempt latencies (<= 0.0 = off).
+    pub hedge_percentile: f64,
+    /// Shed at admission when even the least-loaded server's busy
+    /// backlog exceeds this many cycles (<= 0.0 = off).
+    pub shed_watermark_cycles: f64,
+    /// Seed for the service-layer splitmix64 stream (arrivals, class
+    /// mix, burst windows, jitter) — independent of the sim PRNG.
+    pub seed: u64,
+}
+
+impl ServiceSpec {
+    /// The naive stack: serve every request, wait forever.
+    pub fn naive(
+        pattern: ArrivalPattern,
+        requests: usize,
+        burst_accesses: usize,
+        base_gap_cycles: f64,
+        load: f64,
+        slo_cycles: f64,
+    ) -> ServiceSpec {
+        ServiceSpec {
+            pattern,
+            requests,
+            burst_accesses,
+            base_gap_cycles,
+            load,
+            slo_cycles,
+            timeout_cycles: 0.0,
+            max_retries: 0,
+            backoff_base_cycles: 0.0,
+            backoff_cap_cycles: 0.0,
+            jitter_frac: 0.0,
+            hedge_percentile: 0.0,
+            shed_watermark_cycles: 0.0,
+            seed: 0xDAE_5,
+        }
+    }
+
+    /// Layer on deadlines + bounded exponential-backoff retries.
+    pub fn with_retry(
+        mut self,
+        timeout_cycles: f64,
+        max_retries: u32,
+        backoff_base_cycles: f64,
+        backoff_cap_cycles: f64,
+        jitter_frac: f64,
+    ) -> ServiceSpec {
+        self.timeout_cycles = timeout_cycles;
+        self.max_retries = max_retries;
+        self.backoff_base_cycles = backoff_base_cycles;
+        self.backoff_cap_cycles = backoff_cap_cycles;
+        self.jitter_frac = jitter_frac;
+        self
+    }
+
+    /// Layer on hedged second issues at the given latency percentile.
+    pub fn with_hedge(mut self, percentile: f64) -> ServiceSpec {
+        self.hedge_percentile = percentile;
+        self
+    }
+
+    /// Layer on admission-control load shedding at the given watermark.
+    pub fn with_shed(mut self, watermark_cycles: f64) -> ServiceSpec {
+        self.shed_watermark_cycles = watermark_cycles;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> ServiceSpec {
+        self.seed = seed;
+        self
+    }
+
+    /// Deadline + retry machinery active?
+    pub fn has_timeouts(&self) -> bool {
+        self.timeout_cycles > 0.0
+    }
+
+    pub fn has_hedge(&self) -> bool {
+        self.hedge_percentile > 0.0
+    }
+
+    pub fn has_shed(&self) -> bool {
+        self.shed_watermark_cycles > 0.0
+    }
+}
+
 /// One tenant's share of every shared memory-module resource (fabric port
 /// + DRAM bus): a bandwidth weight, plus that tenant's own §4.1 class
 /// partitioning applied *within* its share.  Shares are strict (reserved

@@ -21,6 +21,7 @@ pub mod orchestrator;
 pub mod resilience;
 pub mod scaling;
 pub mod table1;
+pub mod tail_latency;
 pub mod variability;
 
 pub use common::Runner;
@@ -43,7 +44,7 @@ pub struct ExperimentDef {
 /// The experiment registry — the single source of truth for experiment
 /// ids (paper figures/tables in paper order, then the scenario
 /// experiments, then aliases/extras).
-pub static REGISTRY: [ExperimentDef; 25] = [
+pub static REGISTRY: [ExperimentDef; 26] = [
     ExperimentDef {
         id: "fig3",
         about: "motivation: IPC normalized to Local, 6 schemes",
@@ -177,6 +178,12 @@ pub static REGISTRY: [ExperimentDef; 25] = [
         build: adaptive::adaptive_plan,
     },
     ExperimentDef {
+        id: "tail_latency",
+        about: "request SLO grid: arrival x load x robustness stack",
+        in_all: true,
+        build: tail_latency::tail_latency_plan,
+    },
+    ExperimentDef {
         id: "fig14",
         about: "alias of fig13 (same plan, requested id kept)",
         in_all: false,
@@ -238,6 +245,7 @@ mod tests {
         assert_eq!(all.len(), REGISTRY.iter().filter(|d| d.in_all).count());
         assert!(all.contains(&"resilience"));
         assert!(all.contains(&"adaptive"));
+        assert!(all.contains(&"tail_latency"));
         assert!(!all.contains(&"fig14"), "aliases stay out of `all`");
         assert!(!all.contains(&"ablation_dirty_threshold"));
     }

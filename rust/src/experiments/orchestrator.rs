@@ -23,7 +23,9 @@
 
 use super::common::Runner;
 use super::plan_for;
-use crate::config::{ClusterConfig, ControllerSpec, ScheduleSpec, SharingMode, SimConfig};
+use crate::config::{
+    ClusterConfig, ControllerSpec, ScheduleSpec, ServiceSpec, SharingMode, SimConfig,
+};
 use crate::metrics::Metrics;
 use crate::net::Disturbance;
 use crate::obs::{ObsSpec, Recorder};
@@ -62,6 +64,13 @@ pub struct ClusterCell {
     /// Closed-loop controller (default none = static policies; inert
     /// specs are equivalent to none, byte for byte).
     pub controller: Option<ControllerSpec>,
+    /// Request-serving front-end (`system::frontend`): `Some` drives
+    /// the tenants burst-by-burst from an open-loop request stream
+    /// instead of one merged trace run; `None` keeps the historical
+    /// trace-driven path, byte for byte.  The tenant workload names
+    /// then pick the servers' labels only — the request classes map to
+    /// their own base workloads.
+    pub service: Option<ServiceSpec>,
 }
 
 /// One simulation cell in the flat job list.
@@ -142,6 +151,7 @@ impl CellSpec {
                 faults: None,
                 recovery: RecoveryPolicy::Stall,
                 controller: None,
+                service: None,
             }),
         }
     }
@@ -216,6 +226,16 @@ pub fn run_cell_spec_obs(
             recovery: cl.recovery,
             controller: cl.controller,
         };
+        if let Some(service) = &cl.service {
+            return crate::system::frontend::run_service_obs(
+                &ccfg,
+                cfg,
+                &cl.tenants,
+                service,
+                |wl| cache.get(wl, r.scale, cfg.seed, r.max_accesses),
+                obs,
+            );
+        }
         return cluster::run_cluster_obs(
             &ccfg,
             cfg,
@@ -364,13 +384,15 @@ pub struct ShardData {
     pub results: Vec<(usize, Vec<Metrics>)>,
 }
 
-/// v5: `Metrics` gained `controller_actuations` for the closed-loop
-/// `adaptive` experiment; v4 added the fault counters
-/// (`downtime_cycles`, `aborted_transfers`, `deferred_requests`); v3
-/// added `reclaimed_bytes` + `net_util_series`; v2 carried per-slot
-/// metrics arrays + `access_hist`.  Older files are rejected with a
-/// clear regenerate message.
-const SHARD_FORMAT: &str = "daemon-sim-shard-v5";
+/// v6: `Metrics` gained the request-serving ledger (`requests_*`,
+/// `request_*`, `request_hist`) for the `tail_latency` experiment; v5
+/// added `controller_actuations` for the closed-loop `adaptive`
+/// experiment; v4 added the fault counters (`downtime_cycles`,
+/// `aborted_transfers`, `deferred_requests`); v3 added
+/// `reclaimed_bytes` + `net_util_series`; v2 carried per-slot metrics
+/// arrays + `access_hist`.  Older files are rejected with a clear
+/// regenerate message.
+const SHARD_FORMAT: &str = "daemon-sim-shard-v6";
 
 fn scale_name(s: Scale) -> &'static str {
     match s {

@@ -105,7 +105,12 @@ requests, and per-tenant slowdown vs the no-fault run; `adaptive` runs
 the closed-loop controller (per-epoch migration-ratio retuning,
 recovery switching, idle-share rebalancing) against every static
 configuration across a disturbance grid and reports goodput plus
-controller actuation counts.  All of them batch/shard like any figure;
+controller actuation counts; `tail_latency` serves an open-loop request
+stream (steady / bursty / diurnal arrivals x load factor) through the
+cluster under layered robustness stacks (naive, deadline+retry,
++hedge+shed) and reports p99/p999 request latency, goodput-under-SLO
+and timeout/retry/hedge/shed counts, with every knob self-calibrated
+from a per-scheme probe run.  All of them batch/shard like any figure;
 `list` prints the full registry.
 ";
 

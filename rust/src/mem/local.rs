@@ -15,13 +15,13 @@
 //!
 //! * LRU: hits on resident pages move the node to the MRU tail; the
 //!   victim is the head (least recently touched).
-//! * FIFO: nothing moves on a hit; list order is insertion order of the
-//!   *current residency* and the victim is the oldest resident install.
-//!   (One deliberate divergence from the lazy queue: a page removed via
-//!   [`LocalMemory::remove`] and later reinstalled re-enters at the back
-//!   — the seed's stale queue entry would have evicted it in its
-//!   original install position.  `remove` has no simulation callers, so
-//!   replay metrics are unaffected.)
+//! * FIFO: nothing moves on a hit; list order is ascending install stamp
+//!   and the victim is the oldest resident install.  A page removed via
+//!   [`LocalMemory::remove`] (invalidation) keeps its stamp: reinstalling
+//!   it re-enters the queue at its original position, matching the seed's
+//!   lazy queue, whose stale entry survived the removal and would have
+//!   evicted the page where it first installed.  Eviction retires the
+//!   stamp, so an evicted page re-enters at the back.
 //!
 //! The equivalence is pinned by `matches_naive_reference_model_property`
 //! against a brute-force model.
@@ -38,6 +38,9 @@ struct Node {
     dirty: bool,
     /// Simulation time at which the page's data is resident.
     installed_at: f64,
+    /// Monotone install stamp; under FIFO the list is kept in ascending
+    /// stamp order and the stamp survives [`LocalMemory::remove`].
+    stamp: u64,
     prev: u32,
     next: u32,
 }
@@ -54,6 +57,12 @@ pub struct LocalMemory {
     head: u32,
     /// Most-recently-used end.
     tail: u32,
+    /// Next fresh install stamp.
+    next_stamp: u64,
+    /// FIFO only: stamps of pages removed via [`LocalMemory::remove`],
+    /// restored if the page is reinstalled (bounded by distinct removed
+    /// pages; `remove` has no hot simulation callers).
+    removed: FxHashMap<u64, u64>,
     policy: Replacement,
     pub hits: u64,
     pub misses: u64,
@@ -76,6 +85,8 @@ impl LocalMemory {
             free: Vec::new(),
             head: NIL,
             tail: NIL,
+            next_stamp: 0,
+            removed: FxHashMap::default(),
             policy,
             hits: 0,
             misses: 0,
@@ -121,6 +132,30 @@ impl LocalMemory {
         self.tail = i;
     }
 
+    /// Link slot `i` into the list in ascending stamp order (FIFO).
+    fn push_sorted(&mut self, i: u32) {
+        let stamp = self.slab[i as usize].stamp;
+        // Fast path: a fresh stamp is the newest and goes to the tail.
+        if self.tail == NIL || self.slab[self.tail as usize].stamp <= stamp {
+            self.push_tail(i);
+            return;
+        }
+        // Reinstall with a preserved (older) stamp: walk from the head to
+        // the first resident with a newer stamp and insert before it.
+        let mut j = self.head;
+        while self.slab[j as usize].stamp < stamp {
+            j = self.slab[j as usize].next;
+        }
+        let prev = self.slab[j as usize].prev;
+        self.slab[i as usize].prev = prev;
+        self.slab[i as usize].next = j;
+        self.slab[j as usize].prev = i;
+        match prev {
+            NIL => self.head = i,
+            p => self.slab[p as usize].next = i,
+        }
+    }
+
     /// Is `page` resident (data arrived) at time `now`?
     pub fn present(&self, page: u64, now: f64) -> bool {
         self.index
@@ -160,7 +195,17 @@ impl LocalMemory {
         if self.index.len() >= self.capacity_pages {
             victim = self.evict();
         }
-        let node = Node { page, dirty: false, installed_at, prev: NIL, next: NIL };
+        let preserved = if self.policy == Replacement::Fifo {
+            self.removed.remove(&page)
+        } else {
+            None
+        };
+        let stamp = preserved.unwrap_or_else(|| {
+            let s = self.next_stamp;
+            self.next_stamp += 1;
+            s
+        });
+        let node = Node { page, dirty: false, installed_at, stamp, prev: NIL, next: NIL };
         let i = match self.free.pop() {
             Some(i) => {
                 self.slab[i as usize] = node;
@@ -172,7 +217,11 @@ impl LocalMemory {
             }
         };
         self.index.insert(page, i);
-        self.push_tail(i);
+        if self.policy == Replacement::Fifo {
+            self.push_sorted(i);
+        } else {
+            self.push_tail(i);
+        }
         victim
     }
 
@@ -184,12 +233,17 @@ impl LocalMemory {
         }
     }
 
-    /// Remove a specific page (invalidate).
+    /// Remove a specific page (invalidate).  Under FIFO the page's install
+    /// stamp is preserved: a later reinstall re-enters the queue at its
+    /// original position rather than at the back.
     pub fn remove(&mut self, page: u64) -> Option<Evicted> {
         let i = self.index.remove(&page)?;
         self.unlink(i);
         self.free.push(i);
         let n = self.slab[i as usize];
+        if self.policy == Replacement::Fifo {
+            self.removed.insert(page, n.stamp);
+        }
         Some(Evicted { page, dirty: n.dirty })
     }
 
@@ -293,6 +347,26 @@ mod tests {
     }
 
     #[test]
+    fn fifo_remove_then_reinstall_keeps_original_position() {
+        let mut m = LocalMemory::new(3, Replacement::Fifo);
+        m.install(1, 0.0);
+        m.install(2, 0.0);
+        m.install(3, 0.0);
+        m.remove(2);
+        m.install(4, 1.0);
+        // Reinstalling 2 restores its stamp: it slots back in ahead of 3
+        // and 4, so it (not 3) is the next victim after 1.
+        assert_eq!(m.install(2, 2.0).unwrap().page, 1);
+        let ev = m.install(5, 3.0).unwrap();
+        assert_eq!(ev.page, 2, "reinstalled page lost its FIFO position");
+        // Eviction retires the stamp: a fresh install of 2 joins the back,
+        // so the next victim is 4, not 2.
+        assert_eq!(m.install(2, 4.0).unwrap().page, 3);
+        let ev = m.install(6, 5.0).unwrap();
+        assert_eq!(ev.page, 4, "evicted page kept a stale stamp");
+    }
+
+    #[test]
     fn capacity_never_exceeded_property() {
         crate::util::proptest::check(0x10CA1, 30, |rng| {
             let cap = 1 + rng.index(8);
@@ -337,8 +411,12 @@ mod tests {
     struct NaiveLocal {
         cap: usize,
         policy: Replacement,
-        /// (page, dirty, installed_at), index 0 = next victim.
-        entries: Vec<(u64, bool, f64)>,
+        /// (page, dirty, installed_at, stamp), index 0 = next victim;
+        /// FIFO keeps ascending stamp order, LRU keeps recency order.
+        entries: Vec<(u64, bool, f64, u64)>,
+        next_stamp: u64,
+        /// FIFO stamps preserved across `remove`.
+        removed: FxHashMap<u64, u64>,
         hits: u64,
         misses: u64,
         evictions: u64,
@@ -346,7 +424,16 @@ mod tests {
 
     impl NaiveLocal {
         fn new(cap: usize, policy: Replacement) -> Self {
-            Self { cap, policy, entries: Vec::new(), hits: 0, misses: 0, evictions: 0 }
+            Self {
+                cap,
+                policy,
+                entries: Vec::new(),
+                next_stamp: 0,
+                removed: FxHashMap::default(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }
         }
 
         fn access(&mut self, page: u64, write: bool, now: f64) -> bool {
@@ -372,17 +459,35 @@ mod tests {
             }
             let mut victim = None;
             if self.entries.len() >= self.cap {
-                let (page, dirty, _) = self.entries.remove(0);
+                let (page, dirty, _, _) = self.entries.remove(0);
                 self.evictions += 1;
                 victim = Some(Evicted { page, dirty });
             }
-            self.entries.push((page, false, at));
+            let preserved = if self.policy == Replacement::Fifo {
+                self.removed.remove(&page)
+            } else {
+                None
+            };
+            let stamp = preserved.unwrap_or_else(|| {
+                let s = self.next_stamp;
+                self.next_stamp += 1;
+                s
+            });
+            let pos = if self.policy == Replacement::Fifo {
+                self.entries.iter().position(|e| e.3 > stamp).unwrap_or(self.entries.len())
+            } else {
+                self.entries.len()
+            };
+            self.entries.insert(pos, (page, false, at, stamp));
             victim
         }
 
         fn remove(&mut self, page: u64) -> Option<Evicted> {
             let i = self.entries.iter().position(|e| e.0 == page)?;
-            let (page, dirty, _) = self.entries.remove(i);
+            let (page, dirty, _, stamp) = self.entries.remove(i);
+            if self.policy == Replacement::Fifo {
+                self.removed.insert(page, stamp);
+            }
             Some(Evicted { page, dirty })
         }
     }

@@ -62,6 +62,24 @@ pub struct Metrics {
     /// Per-interval local-memory hit counts / totals (Fig. 14).
     pub interval_local_hits: Vec<u64>,
     pub interval_local_total: Vec<u64>,
+    /// Request-serving ledger (service cells only; all zero elsewhere).
+    /// The front-end books these on tenant 0 — see
+    /// `system::frontend`.
+    pub requests_completed: u64,
+    /// Requests whose retry budget exhausted past their deadline.
+    pub requests_timed_out: u64,
+    /// Requests refused by admission control at the backlog watermark.
+    pub requests_shed: u64,
+    /// Retry attempts issued (re-issues after a deadline, not firsts).
+    pub request_retries: u64,
+    /// Hedged second attempts issued.
+    pub request_hedges: u64,
+    /// Completions where the hedged attempt reported first.
+    pub request_hedge_wins: u64,
+    /// Completions within the request SLO (`ServiceSpec::slo_cycles`).
+    pub requests_slo_good: u64,
+    /// End-to-end latency (arrival -> completion) of completed requests.
+    pub request_hist: LogHistogram,
 }
 
 impl Metrics {
@@ -117,6 +135,35 @@ impl Metrics {
     /// cycles — the per-tenant tail metric the fairness reports use.
     pub fn p99_access_cost(&self) -> f64 {
         self.access_hist.value_at(0.99)
+    }
+
+    /// Requests offered to the front-end: every arrival reaches exactly
+    /// one terminal state (completed, timed out, or shed).
+    pub fn requests_offered(&self) -> u64 {
+        self.requests_completed + self.requests_timed_out + self.requests_shed
+    }
+
+    /// Goodput under SLO: fraction of *offered* requests that completed
+    /// within the deadline — timeouts and shed requests count against
+    /// it, so partial service is rewarded only when it actually lands
+    /// useful completions.
+    pub fn slo_goodput(&self) -> f64 {
+        let offered = self.requests_offered();
+        if offered == 0 {
+            0.0
+        } else {
+            self.requests_slo_good as f64 / offered as f64
+        }
+    }
+
+    /// Approximate p99 of end-to-end request latency, cycles.
+    pub fn p99_request(&self) -> f64 {
+        self.request_hist.value_at(0.99)
+    }
+
+    /// Approximate p999 of end-to-end request latency, cycles.
+    pub fn p999_request(&self) -> f64 {
+        self.request_hist.value_at(0.999)
     }
 
     /// Record an instruction count into the interval series.
@@ -192,6 +239,14 @@ impl Metrics {
             ("interval_instructions", u64s(&self.interval_instructions)),
             ("interval_local_hits", u64s(&self.interval_local_hits)),
             ("interval_local_total", u64s(&self.interval_local_total)),
+            ("requests_completed", Json::num(self.requests_completed as f64)),
+            ("requests_timed_out", Json::num(self.requests_timed_out as f64)),
+            ("requests_shed", Json::num(self.requests_shed as f64)),
+            ("request_retries", Json::num(self.request_retries as f64)),
+            ("request_hedges", Json::num(self.request_hedges as f64)),
+            ("request_hedge_wins", Json::num(self.request_hedge_wins as f64)),
+            ("requests_slo_good", Json::num(self.requests_slo_good as f64)),
+            ("request_hist", u64s(&self.request_hist.counts)),
         ])
     }
 
@@ -233,6 +288,21 @@ impl Metrics {
         m.interval_instructions = jvec(j, "interval_instructions")?;
         m.interval_local_hits = jvec(j, "interval_local_hits")?;
         m.interval_local_total = jvec(j, "interval_local_total")?;
+        m.requests_completed = jint(j, "requests_completed")?;
+        m.requests_timed_out = jint(j, "requests_timed_out")?;
+        m.requests_shed = jint(j, "requests_shed")?;
+        m.request_retries = jint(j, "request_retries")?;
+        m.request_hedges = jint(j, "request_hedges")?;
+        m.request_hedge_wins = jint(j, "request_hedge_wins")?;
+        m.requests_slo_good = jint(j, "requests_slo_good")?;
+        let rhist = jvec(j, "request_hist")?;
+        if rhist.len() != 64 {
+            return Err(format!(
+                "metrics json: 'request_hist' carries {} buckets, want 64",
+                rhist.len()
+            ));
+        }
+        m.request_hist = LogHistogram::from_counts(&rhist);
         Ok(m)
     }
 }
@@ -351,6 +421,10 @@ mod tests {
         assert_eq!(m.deferred_requests, 0);
         assert_eq!(m.controller_actuations, 0);
         assert!(m.net_util_series.is_empty());
+        assert_eq!(m.requests_offered(), 0);
+        assert_eq!(m.slo_goodput(), 0.0);
+        assert_eq!(m.p99_request(), 0.0);
+        assert_eq!(m.request_hist.total, 0);
     }
 
     #[test]
@@ -378,6 +452,15 @@ mod tests {
         m.compression_ratio = 2.39;
         m.bump_interval(0, 5);
         m.bump_interval_local(2, true);
+        m.requests_completed = 118;
+        m.requests_timed_out = 3;
+        m.requests_shed = 11;
+        m.request_retries = 9;
+        m.request_hedges = 6;
+        m.request_hedge_wins = 2;
+        m.requests_slo_good = 101;
+        m.request_hist.add(150_000.0);
+        m.request_hist.add(90.0);
         let s = m.to_json().to_string();
         let back = Metrics::from_json(&Json::parse(&s).unwrap()).unwrap();
         assert_eq!(s, back.to_json().to_string(), "round-trip must be stable");
@@ -396,6 +479,13 @@ mod tests {
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&back.net_util_series), bits(&m.net_util_series));
         assert_eq!(back.goodput().to_bits(), m.goodput().to_bits());
+        assert_eq!(back.requests_completed, m.requests_completed);
+        assert_eq!(back.requests_offered(), m.requests_offered());
+        assert_eq!(back.requests_slo_good, m.requests_slo_good);
+        assert_eq!(back.request_hedge_wins, m.request_hedge_wins);
+        assert_eq!(back.request_hist, m.request_hist);
+        assert_eq!(back.slo_goodput().to_bits(), m.slo_goodput().to_bits());
+        assert_eq!(back.p99_request().to_bits(), m.p99_request().to_bits());
     }
 
     #[test]

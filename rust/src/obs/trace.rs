@@ -37,6 +37,15 @@ pub enum EventKind {
     /// tenant at an observation-epoch boundary (`detail` carries the
     /// control-law id).
     Actuate,
+    /// The request front-end re-issued a timed-out request attempt
+    /// after its backoff delay (`page` carries the request id).
+    Retry,
+    /// The request front-end issued a hedged second attempt for a
+    /// still-outstanding request (`page` carries the request id).
+    Hedge,
+    /// Admission control shed an arriving request at the backlog
+    /// watermark (`page` carries the request id).
+    Shed,
 }
 
 impl EventKind {
@@ -51,6 +60,9 @@ impl EventKind {
             EventKind::PortEdge => "PortEdge",
             EventKind::TenantKill => "TenantKill",
             EventKind::Actuate => "Actuate",
+            EventKind::Retry => "Retry",
+            EventKind::Hedge => "Hedge",
+            EventKind::Shed => "Shed",
         }
     }
 
@@ -63,7 +75,11 @@ impl EventKind {
             | EventKind::Rerequest => (0, "pages"),
             EventKind::LineFetch | EventKind::Suppress => (1, "lines"),
             EventKind::PortEdge => (2, "port"),
-            EventKind::TenantKill | EventKind::Actuate => (3, "lifecycle"),
+            EventKind::TenantKill
+            | EventKind::Actuate
+            | EventKind::Retry
+            | EventKind::Hedge
+            | EventKind::Shed => (3, "lifecycle"),
         }
     }
 }

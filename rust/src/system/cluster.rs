@@ -364,6 +364,25 @@ impl Cluster {
         self.tenants.iter().map(|t| t.metrics.clone()).collect()
     }
 
+    /// Split borrow for the request front-end
+    /// ([`crate::system::frontend`]): tenant `t`'s machine and the
+    /// shared remote memory, mutable at once — what `step_core` /
+    /// `finish` need when a driver other than [`Cluster::run`] owns the
+    /// event order.
+    pub(crate) fn tenant_remote(&mut self, t: usize) -> (&mut Machine, &mut RemoteMemory) {
+        (&mut self.tenants[t], &mut self.remote)
+    }
+
+    /// Finalize every tenant (drain + aggregate metrics) and return the
+    /// per-tenant metrics in tenant order — the front-end's replacement
+    /// for the tail of [`Cluster::run`].
+    pub(crate) fn finish_all(&mut self) -> Vec<Metrics> {
+        for t in self.tenants.iter_mut() {
+            t.finish(&mut self.remote);
+        }
+        self.tenants.iter().map(|t| t.metrics.clone()).collect()
+    }
+
     /// Memory-side link-compression stats for tenant `t`, aggregated over
     /// all memory modules.
     pub fn egress_stats(&self, t: usize) -> EgressStats {

@@ -1,0 +1,750 @@
+//! Request-serving front-end with an SLO robustness stack: drives the
+//! [`Cluster`]'s tenant machines burst-by-burst from a deterministic
+//! event loop instead of a single merged trace.
+//!
+//! Each generated request ([`crate::workloads::service`]) arrives at its
+//! open-loop cycle, is admitted or shed at a backlog watermark, and is
+//! served as one access burst on the least-loaded server machine via
+//! the stepping API (`begin_burst` / `prepare` / `step_next` /
+//! `drain_outstanding`).  Bursts execute synchronously when an attempt
+//! is issued — the server's clock advances to the burst completion, and
+//! later arrivals queue behind it (FCFS per server) — while the event
+//! heap keeps *decisions* (admission, hedge issue, timeout, retry,
+//! completion bookkeeping) in global time order with a deterministic
+//! `(cycle, sequence)` tie-break.  Fine-grained cross-server access
+//! interleaving is approximated (each burst runs to completion once
+//! issued), which keeps the robustness stack simple and replay-exact;
+//! shared-fabric contention, disturbance schedules and fault windows
+//! still apply per transfer because every burst flows through the same
+//! [`RemoteMemory`](crate::system::machine::RemoteMemory) timelines.
+//!
+//! The robustness stack (all knobs on [`ServiceSpec`], each
+//! independently inert):
+//! - **Deadline + retry**: an attempt outstanding past `timeout_cycles`
+//!   is abandoned at its deadline and re-issued after exponential
+//!   backoff with deterministic jitter, at most `max_retries` times;
+//!   exhaustion marks the request `TimedOut`.
+//! - **Hedging**: once the attempt-latency histogram has enough mass, a
+//!   request still outstanding at the `hedge_percentile` latency is
+//!   issued a second time on another server; the first completion wins.
+//! - **Load shedding**: an arrival is refused outright when even the
+//!   least-loaded server's busy backlog exceeds
+//!   `shed_watermark_cycles` — bounded-latency partial service instead
+//!   of collapse under overload.
+//!
+//! Request-level results (completion/timeout/shed/retry/hedge counters
+//! and the end-to-end latency histogram) are booked on **tenant 0**'s
+//! [`Metrics`] — the front-end's own ledger — while each server keeps
+//! its ordinary per-tenant machine metrics.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::compress::synth::Profile;
+use crate::config::{ClusterConfig, ServiceSpec, SimConfig};
+use crate::lifecycle::{Lifecycle, StateMachine, Transition};
+use crate::metrics::Metrics;
+use crate::obs::{Event, EventKind, ObsSpec, Recorder};
+use crate::schemes::SchemeKind;
+use crate::system::cluster::{Cluster, TenantInit};
+use crate::util::rng::SplitMix;
+use crate::util::stats::LogHistogram;
+use crate::workloads::service::{
+    backoff_delay, burst_trace, class_trace, gen_requests, Request, CLASSES,
+};
+use crate::workloads::Trace;
+
+/// Request lifecycle (see DESIGN.md §"Request serving & SLO model"): a
+/// request is `Admitted` on arrival, then either `Shed` at the
+/// watermark or `Issued` to a server; an issued attempt may be
+/// `Hedged`, complete, or time out into `Retrying`, which re-issues
+/// until the retry budget exhausts into `TimedOut`.  `Completed`,
+/// `TimedOut` and `Shed` are terminal.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestState {
+    Admitted,
+    Issued,
+    Hedged,
+    Retrying,
+    Completed,
+    TimedOut,
+    Shed,
+}
+
+/// Edge labels for the request machine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestEvent {
+    /// An attempt is issued to a server (first issue or retry).
+    Issue,
+    /// Admission control refused the request at the backlog watermark.
+    Shed,
+    /// A hedged second attempt was issued for the outstanding request.
+    Hedge,
+    /// An attempt completed within its deadline.
+    Complete,
+    /// The outstanding attempt crossed its deadline.
+    Timeout,
+    /// The retry budget is spent.
+    Exhaust,
+}
+
+impl Lifecycle for RequestState {
+    type Event = RequestEvent;
+    const NAME: &'static str = "service request";
+    const STATES: &'static [RequestState] = &[
+        RequestState::Admitted,
+        RequestState::Issued,
+        RequestState::Hedged,
+        RequestState::Retrying,
+        RequestState::Completed,
+        RequestState::TimedOut,
+        RequestState::Shed,
+    ];
+    const EVENTS: &'static [RequestEvent] = &[
+        RequestEvent::Issue,
+        RequestEvent::Shed,
+        RequestEvent::Hedge,
+        RequestEvent::Complete,
+        RequestEvent::Timeout,
+        RequestEvent::Exhaust,
+    ];
+    const TABLE: &'static [Transition<RequestState, RequestEvent>] = &[
+        Transition {
+            from: RequestState::Admitted,
+            event: RequestEvent::Issue,
+            to: RequestState::Issued,
+        },
+        Transition {
+            from: RequestState::Admitted,
+            event: RequestEvent::Shed,
+            to: RequestState::Shed,
+        },
+        Transition {
+            from: RequestState::Issued,
+            event: RequestEvent::Hedge,
+            to: RequestState::Hedged,
+        },
+        Transition {
+            from: RequestState::Issued,
+            event: RequestEvent::Complete,
+            to: RequestState::Completed,
+        },
+        Transition {
+            from: RequestState::Issued,
+            event: RequestEvent::Timeout,
+            to: RequestState::Retrying,
+        },
+        Transition {
+            from: RequestState::Hedged,
+            event: RequestEvent::Complete,
+            to: RequestState::Completed,
+        },
+        Transition {
+            from: RequestState::Hedged,
+            event: RequestEvent::Timeout,
+            to: RequestState::Retrying,
+        },
+        Transition {
+            from: RequestState::Retrying,
+            event: RequestEvent::Issue,
+            to: RequestState::Issued,
+        },
+        Transition {
+            from: RequestState::Retrying,
+            event: RequestEvent::Complete,
+            to: RequestState::Completed,
+        },
+        Transition {
+            from: RequestState::Retrying,
+            event: RequestEvent::Exhaust,
+            to: RequestState::TimedOut,
+        },
+    ];
+
+    fn state_name(self) -> &'static str {
+        match self {
+            RequestState::Admitted => "Admitted",
+            RequestState::Issued => "Issued",
+            RequestState::Hedged => "Hedged",
+            RequestState::Retrying => "Retrying",
+            RequestState::Completed => "Completed",
+            RequestState::TimedOut => "TimedOut",
+            RequestState::Shed => "Shed",
+        }
+    }
+
+    fn event_name(event: RequestEvent) -> &'static str {
+        match event {
+            RequestEvent::Issue => "Issue",
+            RequestEvent::Shed => "Shed",
+            RequestEvent::Hedge => "Hedge",
+            RequestEvent::Complete => "Complete",
+            RequestEvent::Timeout => "Timeout",
+            RequestEvent::Exhaust => "Exhaust",
+        }
+    }
+}
+
+/// A scheduled front-end decision.
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    /// Request arrival: admission check, then first issue.
+    Arrive(usize),
+    /// Retry issue after backoff (first issues happen inline at arrive).
+    Issue(usize),
+    /// Hedged second issue for a still-outstanding request.
+    HedgeIssue(usize),
+    /// Deadline of attempt number `.1` (1-based) of request `.0`.
+    Timeout(usize, u32),
+    /// An attempt finished within its deadline; `hedged` marks which
+    /// attempt so hedge wins are counted at completion.
+    Complete { req: usize, hedged: bool },
+}
+
+/// Heap key: cycle with an insertion-sequence tie-break, so identical
+/// timestamps process in scheduling order on every run and job count.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    at: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.at.total_cmp(&other.at).is_eq() && self.seq == other.seq
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at.total_cmp(&other.at).then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Per-request runtime bookkeeping around the lifecycle machine.
+struct ReqCtl {
+    sm: StateMachine<RequestState>,
+    arrive: f64,
+    class_idx: usize,
+    /// Start index of this request's burst window in its class trace.
+    window: usize,
+    /// Attempts issued so far (retries re-issue the same window).
+    attempts: u32,
+    hedged: bool,
+    /// Terminal (Completed / TimedOut / Shed) — stale events skip.
+    done: bool,
+    last_server: usize,
+}
+
+/// The event-loop driver.  Owns the request ledger and the per-server
+/// busy horizon; borrows the cluster per dispatched event.
+struct Driver<'a> {
+    spec: &'a ServiceSpec,
+    class_traces: &'a [Trace],
+    reqs: Vec<ReqCtl>,
+    /// Per-server clock horizon: when its last drained burst completes.
+    busy: Vec<f64>,
+    heap: BinaryHeap<Reverse<Pending>>,
+    seq: u64,
+    jitter: SplitMix,
+    /// Observed per-attempt latencies — the hedge-threshold input.
+    attempt_hist: LogHistogram,
+    /// End-to-end latency of completed requests (arrival → completion).
+    request_hist: LogHistogram,
+    completed: u64,
+    timed_out: u64,
+    shed: u64,
+    retries: u64,
+    hedges: u64,
+    hedge_wins: u64,
+    slo_good: u64,
+}
+
+impl<'a> Driver<'a> {
+    fn new(
+        spec: &'a ServiceSpec,
+        class_traces: &'a [Trace],
+        requests: &[Request],
+        servers: usize,
+    ) -> Driver<'a> {
+        let root = SplitMix::new(spec.seed);
+        let mut windows = root.split(3);
+        let mut d = Driver {
+            spec,
+            class_traces,
+            reqs: Vec::with_capacity(requests.len()),
+            busy: vec![0.0; servers],
+            heap: BinaryHeap::with_capacity(requests.len() * 2),
+            seq: 0,
+            jitter: root.split(4),
+            attempt_hist: LogHistogram::new(),
+            request_hist: LogHistogram::new(),
+            completed: 0,
+            timed_out: 0,
+            shed: 0,
+            retries: 0,
+            hedges: 0,
+            hedge_wins: 0,
+            slo_good: 0,
+        };
+        for r in requests {
+            let class_idx = r.class as usize;
+            d.reqs.push(ReqCtl {
+                sm: StateMachine::new(RequestState::Admitted),
+                arrive: r.at,
+                class_idx,
+                window: windows.index(class_traces[class_idx].accesses.len()),
+                attempts: 0,
+                hedged: false,
+                done: false,
+                last_server: 0,
+            });
+            d.push(r.at, Ev::Arrive(r.id));
+        }
+        d
+    }
+
+    fn push(&mut self, at: f64, ev: Ev) {
+        self.heap.push(Reverse(Pending { at, seq: self.seq, ev }));
+        self.seq += 1;
+    }
+
+    /// Least-loaded server (tie: lowest index), optionally excluding
+    /// one — the hedge goes to a *different* server when there is one.
+    fn pick_server(&self, exclude: Option<usize>) -> usize {
+        let mut best = usize::MAX;
+        let mut best_busy = f64::INFINITY;
+        for (s, &b) in self.busy.iter().enumerate() {
+            if Some(s) == exclude && self.busy.len() > 1 {
+                continue;
+            }
+            if b < best_busy {
+                best = s;
+                best_busy = b;
+            }
+        }
+        best
+    }
+
+    /// Hedge threshold: the configured percentile of observed attempt
+    /// latencies, once the histogram carries enough mass to be a
+    /// threshold at all.
+    fn hedge_delay(&self) -> Option<f64> {
+        (self.spec.has_hedge() && self.attempt_hist.total >= 16)
+            .then(|| self.attempt_hist.value_at(self.spec.hedge_percentile))
+    }
+
+    /// Execute one burst attempt on `server` starting no earlier than
+    /// `now`: rewind the machine's cursors, run the request window
+    /// through the stepping API over the shared remote memory, drain,
+    /// and advance the server's busy horizon to the completion cycle.
+    fn run_burst(&mut self, cluster: &mut Cluster, server: usize, r: usize, now: f64) -> f64 {
+        let req = &self.reqs[r];
+        let burst = burst_trace(
+            &self.class_traces[req.class_idx],
+            req.window,
+            self.spec.burst_accesses,
+        );
+        let start = now.max(self.busy[server]);
+        let (m, remote) = cluster.tenant_remote(server);
+        m.begin_burst(start);
+        let traces = [burst];
+        m.prepare(&traces);
+        while m.step_next(remote, &traces) {}
+        let done = m.drain_outstanding();
+        self.busy[server] = done;
+        done
+    }
+
+    /// Record a request-lifecycle observability event on the front-end
+    /// ledger (tenant 0); `page` carries the request id.
+    fn emit(&mut self, cluster: &mut Cluster, kind: EventKind, r: usize, at: f64) {
+        let (m, _) = cluster.tenant_remote(0);
+        if let Some(rec) = m.obs_mut() {
+            rec.event(Event::instant(kind, 0, None, r as u64, at));
+        }
+    }
+
+    /// Issue one attempt (first or retry) at `now`: run the burst, then
+    /// schedule the outcome — completion within the deadline, or the
+    /// deadline itself — plus a hedge probe when the stack hedges.
+    fn issue_attempt(&mut self, cluster: &mut Cluster, r: usize, now: f64) {
+        self.reqs[r].attempts += 1;
+        let attempt = self.reqs[r].attempts;
+        let server = self.pick_server(None);
+        self.reqs[r].last_server = server;
+        // The hedge threshold is read before this attempt reports, i.e.
+        // from exactly the history available at issue time.
+        let hedge_at = self.hedge_delay().map(|d| now + d);
+        let done_at = self.run_burst(cluster, server, r, now);
+        let lat = done_at - now;
+        self.attempt_hist.add(lat);
+        let t = self.spec.timeout_cycles;
+        if self.spec.has_timeouts() && lat > t {
+            self.push(now + t, Ev::Timeout(r, attempt));
+        } else {
+            self.push(done_at, Ev::Complete { req: r, hedged: false });
+        }
+        if let Some(h) = hedge_at {
+            // Hedge only while the attempt is still outstanding and the
+            // probe would fire before its deadline abandons it anyway.
+            if !self.reqs[r].hedged && done_at > h && (!self.spec.has_timeouts() || h < now + t)
+            {
+                self.push(h, Ev::HedgeIssue(r));
+            }
+        }
+    }
+
+    fn dispatch(&mut self, cluster: &mut Cluster, p: Pending) {
+        match p.ev {
+            Ev::Arrive(r) => {
+                if self.spec.has_shed() {
+                    // Watermark rule: refuse when even the least-loaded
+                    // server is busy past the watermark beyond now.
+                    let least = self.busy[self.pick_server(None)];
+                    if least - p.at > self.spec.shed_watermark_cycles {
+                        self.reqs[r].sm.transition(RequestEvent::Shed);
+                        self.reqs[r].done = true;
+                        self.shed += 1;
+                        self.emit(cluster, EventKind::Shed, r, p.at);
+                        return;
+                    }
+                }
+                self.reqs[r].sm.transition(RequestEvent::Issue);
+                self.issue_attempt(cluster, r, p.at);
+            }
+            Ev::Issue(r) => {
+                if self.reqs[r].done {
+                    return;
+                }
+                self.reqs[r].sm.transition(RequestEvent::Issue);
+                self.retries += 1;
+                self.emit(cluster, EventKind::Retry, r, p.at);
+                self.issue_attempt(cluster, r, p.at);
+            }
+            Ev::HedgeIssue(r) => {
+                if self.reqs[r].done
+                    || self.reqs[r].hedged
+                    || self.reqs[r].sm.state() != RequestState::Issued
+                {
+                    return;
+                }
+                self.reqs[r].sm.transition(RequestEvent::Hedge);
+                self.reqs[r].hedged = true;
+                self.hedges += 1;
+                self.emit(cluster, EventKind::Hedge, r, p.at);
+                let exclude =
+                    (self.busy.len() > 1).then_some(self.reqs[r].last_server);
+                let server = self.pick_server(exclude);
+                let done_at = self.run_burst(cluster, server, r, p.at);
+                let lat = done_at - p.at;
+                self.attempt_hist.add(lat);
+                if !self.spec.has_timeouts() || lat <= self.spec.timeout_cycles {
+                    self.push(done_at, Ev::Complete { req: r, hedged: true });
+                }
+            }
+            Ev::Timeout(r, attempt) => {
+                if self.reqs[r].done || self.reqs[r].attempts != attempt {
+                    return;
+                }
+                self.reqs[r].sm.transition(RequestEvent::Timeout);
+                if self.reqs[r].attempts <= self.spec.max_retries {
+                    let d = backoff_delay(
+                        self.spec.backoff_base_cycles,
+                        self.spec.backoff_cap_cycles,
+                        self.spec.jitter_frac,
+                        self.reqs[r].attempts - 1,
+                        &mut self.jitter,
+                    );
+                    self.push(p.at + d, Ev::Issue(r));
+                } else {
+                    self.reqs[r].sm.transition(RequestEvent::Exhaust);
+                    self.reqs[r].done = true;
+                    self.timed_out += 1;
+                }
+            }
+            Ev::Complete { req: r, hedged } => {
+                if self.reqs[r].done {
+                    return;
+                }
+                self.reqs[r].sm.transition(RequestEvent::Complete);
+                self.reqs[r].done = true;
+                self.completed += 1;
+                let lat = p.at - self.reqs[r].arrive;
+                self.request_hist.add(lat);
+                if lat <= self.spec.slo_cycles {
+                    self.slo_good += 1;
+                }
+                if hedged {
+                    self.hedge_wins += 1;
+                }
+            }
+        }
+    }
+
+    /// Drain the event heap, finalize every server, and fold the
+    /// request ledger into tenant 0's metrics.
+    fn run(mut self, cluster: &mut Cluster) -> Vec<Metrics> {
+        while let Some(Reverse(p)) = self.heap.pop() {
+            self.dispatch(cluster, p);
+        }
+        debug_assert!(self.reqs.iter().all(|r| r.done), "request leaked the event loop");
+        let mut metrics = cluster.finish_all();
+        let front = &mut metrics[0];
+        front.requests_completed = self.completed;
+        front.requests_timed_out = self.timed_out;
+        front.requests_shed = self.shed;
+        front.request_retries = self.retries;
+        front.request_hedges = self.hedges;
+        front.request_hedge_wins = self.hedge_wins;
+        front.requests_slo_good = self.slo_good;
+        front.request_hist = self.request_hist;
+        metrics
+    }
+}
+
+/// Build and run a service cell: one server [`Machine`] per `(name,
+/// scheme)` tenant over the shared fabric described by `ccfg`, serving
+/// `spec`'s request stream.  `fetch` resolves the three request
+/// classes' base workloads; tenant names only label servers.  Returns
+/// per-tenant metrics with the request ledger on tenant 0 — the
+/// orchestrator's service-cell execution path.
+///
+/// [`Machine`]: crate::system::machine::Machine
+pub fn run_service(
+    ccfg: &ClusterConfig,
+    base_cfg: &SimConfig,
+    tenants: &[(String, SchemeKind)],
+    spec: &ServiceSpec,
+    fetch: impl Fn(&str) -> (Arc<Trace>, Profile),
+) -> Vec<Metrics> {
+    run_service_obs(ccfg, base_cfg, tenants, spec, fetch, None).0
+}
+
+/// [`run_service`] with optional observability: every server gets its
+/// own recorder; request-lifecycle events (Retry / Hedge / Shed) land
+/// on tenant 0's.
+pub fn run_service_obs(
+    ccfg: &ClusterConfig,
+    base_cfg: &SimConfig,
+    tenants: &[(String, SchemeKind)],
+    spec: &ServiceSpec,
+    fetch: impl Fn(&str) -> (Arc<Trace>, Profile),
+    obs: Option<&ObsSpec>,
+) -> (Vec<Metrics>, Vec<Recorder>) {
+    assert!(spec.requests > 0, "a service run needs requests");
+    assert!(spec.burst_accesses > 0, "a request burst needs accesses");
+    let mut class_traces = Vec::with_capacity(CLASSES.len());
+    let mut class_profiles = Vec::with_capacity(CLASSES.len());
+    for c in CLASSES {
+        let (base, profile) = fetch(c.base_workload());
+        class_traces.push(class_trace(&base, c));
+        class_profiles.push(profile);
+    }
+    // One address region per class on every server, so the local store
+    // is sized for the union of what the request mix can touch.
+    let footprint: usize = class_traces.iter().map(|t| t.footprint_pages).sum();
+    let cores = base_cfg.cores.max(1);
+    let inits: Vec<TenantInit> = tenants
+        .iter()
+        .map(|(_, kind)| TenantInit {
+            cfg: base_cfg.clone(),
+            kind: *kind,
+            footprint_pages: footprint,
+            profiles: (0..cores).map(|i| class_profiles[i % class_profiles.len()]).collect(),
+            oracle: None,
+        })
+        .collect();
+    let mut cluster = Cluster::new(ccfg, inits);
+    if let Some(s) = obs {
+        for t in 0..cluster.tenants() {
+            cluster.set_obs(t, Recorder::new(*s));
+        }
+    }
+    let requests = gen_requests(spec);
+    let driver = Driver::new(spec, &class_traces, &requests, cluster.tenants());
+    let metrics = driver.run(&mut cluster);
+    let recorders = (0..cluster.tenants()).filter_map(|t| cluster.take_obs(t)).collect();
+    (metrics, recorders)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArrivalPattern;
+    use crate::system::fault::FaultPlan;
+    use crate::workloads::{by_name, Scale};
+
+    fn fetch_test(wl: &str) -> (Arc<Trace>, Profile) {
+        let w = by_name(wl).unwrap();
+        (Arc::new(w.generate(11, Scale::Test).truncated(20_000)), w.profile())
+    }
+
+    fn servers(n: usize, kind: SchemeKind) -> Vec<(String, SchemeKind)> {
+        (0..n).map(|i| (format!("srv{i}"), kind)).collect()
+    }
+
+    fn base_spec() -> ServiceSpec {
+        ServiceSpec::naive(ArrivalPattern::Steady, 120, 150, 40_000.0, 1.0, 400_000.0)
+    }
+
+    fn run_json(spec: &ServiceSpec) -> String {
+        let ccfg = ClusterConfig::new(2);
+        let cfg = SimConfig::test_scale();
+        let ms = run_service(&ccfg, &cfg, &servers(2, SchemeKind::Daemon), spec, fetch_test);
+        ms.iter().map(|m| m.to_json().to_string()).collect::<Vec<_>>().join("\n")
+    }
+
+    #[test]
+    fn service_runs_repeat_byte_identically() {
+        let spec = base_spec().with_retry(120_000.0, 2, 10_000.0, 80_000.0, 0.3);
+        assert_eq!(run_json(&spec), run_json(&spec), "service replay diverged");
+    }
+
+    #[test]
+    fn every_request_reaches_a_terminal_state() {
+        let ccfg = ClusterConfig::new(2);
+        let cfg = SimConfig::test_scale();
+        let spec = base_spec()
+            .with_retry(100_000.0, 1, 10_000.0, 40_000.0, 0.2)
+            .with_hedge(0.95)
+            .with_shed(600_000.0);
+        let ms =
+            run_service(&ccfg, &cfg, &servers(2, SchemeKind::Daemon), &spec, fetch_test);
+        let front = &ms[0];
+        assert_eq!(
+            front.requests_completed + front.requests_timed_out + front.requests_shed,
+            spec.requests as u64,
+            "request ledger does not cover every request"
+        );
+        assert_eq!(front.request_hist.total, front.requests_completed);
+        assert!(front.requests_slo_good <= front.requests_completed);
+        assert!(front.request_hedge_wins <= front.request_hedges);
+        // Servers did real memory work.
+        assert!(ms.iter().all(|m| m.instructions > 0));
+    }
+
+    #[test]
+    fn naive_stack_never_times_out_or_sheds() {
+        let ccfg = ClusterConfig::new(2);
+        let cfg = SimConfig::test_scale();
+        let ms = run_service(
+            &ccfg,
+            &cfg,
+            &servers(2, SchemeKind::Daemon),
+            &base_spec(),
+            fetch_test,
+        );
+        let front = &ms[0];
+        assert_eq!(front.requests_completed, 120);
+        assert_eq!(front.requests_timed_out, 0);
+        assert_eq!(front.requests_shed, 0);
+        assert_eq!(front.request_retries, 0);
+        assert_eq!(front.request_hedges, 0);
+    }
+
+    #[test]
+    fn shedding_bounds_the_backlog_under_a_crash() {
+        // One memory module, crashed for the first 3e5 cycles under
+        // Stall recovery: every early burst stalls to the crash end, so
+        // the backlog watermark is guaranteed to trip — no dependence
+        // on estimated service times.
+        use crate::system::fault::RecoveryPolicy;
+        let ccfg = ClusterConfig::new(1)
+            .with_faults(FaultPlan::new().module_crash(0, 0.0, 3e5))
+            .with_recovery(RecoveryPolicy::Stall);
+        let cfg = SimConfig::test_scale();
+        let mut spec = ServiceSpec::naive(ArrivalPattern::Steady, 120, 150, 8_000.0, 2.0, 200_000.0);
+        spec.seed = 0xDAE_51;
+        let naive =
+            run_service(&ccfg, &cfg, &servers(2, SchemeKind::Daemon), &spec, fetch_test);
+        let shed_spec = spec
+            .with_retry(120_000.0, 2, 10_000.0, 40_000.0, 0.2)
+            .with_shed(60_000.0);
+        let shedding = run_service(
+            &ccfg,
+            &cfg,
+            &servers(2, SchemeKind::Daemon),
+            &shed_spec,
+            fetch_test,
+        );
+        assert!(shedding[0].requests_shed > 0, "crash backlog never hit the watermark");
+        // Naive serving never refuses or abandons anything — it pays
+        // with unbounded queueing instead — while the shed stack keeps
+        // the offered ledger complete.
+        assert_eq!(naive[0].requests_completed, spec.requests as u64);
+        assert_eq!(
+            shedding[0].requests_completed
+                + shedding[0].requests_timed_out
+                + shedding[0].requests_shed,
+            spec.requests as u64
+        );
+        // The shed stack's completions all beat the watermark+timeout
+        // bound, so its observed p99 cannot exceed naive's crash-era
+        // queueing tail.
+        assert!(
+            shedding[0].request_hist.value_at(0.99)
+                <= naive[0].request_hist.value_at(0.99),
+            "bounded stack p99 {} must not exceed naive p99 {}",
+            shedding[0].request_hist.value_at(0.99),
+            naive[0].request_hist.value_at(0.99)
+        );
+    }
+
+    #[test]
+    fn module_crash_with_retries_still_terminates() {
+        // A crash window across the run start: requests during the
+        // outage retry/time out, the run still drains deterministically.
+        let ccfg = ClusterConfig::new(2)
+            .with_faults(FaultPlan::new().module_crash(0, 0.0, 3e5));
+        let cfg = SimConfig::test_scale();
+        let spec = base_spec().with_retry(150_000.0, 2, 20_000.0, 100_000.0, 0.25);
+        let ms =
+            run_service(&ccfg, &cfg, &servers(2, SchemeKind::Daemon), &spec, fetch_test);
+        let front = &ms[0];
+        assert_eq!(
+            front.requests_completed + front.requests_timed_out + front.requests_shed,
+            spec.requests as u64
+        );
+    }
+
+    #[test]
+    fn request_events_land_on_the_front_ledger() {
+        // The crashed window forces early attempts past their deadline,
+        // so at least one Retry (and with the tight watermark, Shed)
+        // event is guaranteed on the ledger.
+        let ccfg = ClusterConfig::new(1)
+            .with_faults(FaultPlan::new().module_crash(0, 0.0, 2e5));
+        let cfg = SimConfig::test_scale();
+        let mut spec = base_spec().with_retry(60_000.0, 2, 10_000.0, 40_000.0, 0.2);
+        spec.load = 5.0;
+        let spec = spec.with_hedge(0.90).with_shed(100_000.0);
+        let (ms, recs) = run_service_obs(
+            &ccfg,
+            &cfg,
+            &servers(2, SchemeKind::Daemon),
+            &spec,
+            fetch_test,
+            Some(&ObsSpec::enabled()),
+        );
+        let lifecycle: Vec<EventKind> = recs[0]
+            .trace
+            .events()
+            .filter(|e| {
+                matches!(e.kind, EventKind::Retry | EventKind::Hedge | EventKind::Shed)
+            })
+            .map(|e| e.kind)
+            .collect();
+        let front = &ms[0];
+        let counted = front.request_retries + front.request_hedges + front.requests_shed;
+        assert_eq!(lifecycle.len() as u64, counted, "events must mirror the counters");
+        assert!(counted > 0, "overload run produced no lifecycle events");
+    }
+}

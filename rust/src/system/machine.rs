@@ -1005,6 +1005,42 @@ impl Machine {
         true
     }
 
+    /// Rewind every core's trace cursor for the next service burst and
+    /// advance idle cores to `at` (clocks are monotone — a core already
+    /// past `at` keeps its time).  Part of the burst-driving API the
+    /// request front-end ([`crate::system::frontend`]) uses between
+    /// [`Machine::prepare`] calls; trace-driven runs never call this,
+    /// so the historical path is untouched.
+    pub fn begin_burst(&mut self, at: f64) {
+        for c in self.cores.iter_mut() {
+            c.pos = 0;
+            if c.time < at {
+                c.time = at;
+            }
+        }
+        self.run_queue = None;
+    }
+
+    /// Drain in-flight misses into stall cycles (the same drain
+    /// [`Machine::finish`] performs at end of run) and return the burst
+    /// completion time — the max core clock after the drain.  Clears
+    /// the outstanding sets so a later `finish` never double-drains.
+    pub fn drain_outstanding(&mut self) -> f64 {
+        for ci in 0..self.cores.len() {
+            let max_out = self.cores[ci]
+                .outstanding
+                .iter()
+                .cloned()
+                .fold(f64::NEG_INFINITY, f64::max);
+            if max_out > self.cores[ci].time {
+                self.metrics.stall_cycles += max_out - self.cores[ci].time;
+                self.cores[ci].time = max_out;
+            }
+            self.cores[ci].outstanding.clear();
+        }
+        self.cores.iter().map(|c| c.time).fold(0.0f64, f64::max)
+    }
+
     /// Drain outstanding misses + arrivals and finalize the metrics.
     pub fn finish(&mut self, remote: &mut RemoteMemory) {
         for ci in 0..self.cores.len() {

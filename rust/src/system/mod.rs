@@ -5,10 +5,12 @@
 pub mod cluster;
 pub mod controller;
 pub mod fault;
+pub mod frontend;
 pub mod machine;
 pub mod sweep;
 
 pub use cluster::{run_cluster, Cluster, TenantEvent, TenantInit, TenantState};
+pub use frontend::{run_service, run_service_obs, RequestEvent, RequestState};
 pub use controller::{Action, AdaptiveController};
 pub use fault::{
     FaultCounters, FaultPlan, FaultTarget, FaultTimeline, FaultWindow, PortState, RecoveryPolicy,

@@ -6,10 +6,10 @@
 //!   is documented in EXPERIMENTS.md, and every id-shaped token in
 //!   DESIGN.md / EXPERIMENTS.md names a registered experiment;
 //! * every lifecycle state enum named in DESIGN.md's "Lifecycles and
-//!   state machines" transition tables exists in the source, and every
-//!   state or event named in any column of those tables appears as a
-//!   source identifier (the `lifecycle::Lifecycle` enums and their
-//!   event types);
+//!   state machines" and "Request serving & SLO model" transition
+//!   tables exists in the source, and every state or event named in any
+//!   column of those tables appears as a source identifier (the
+//!   `lifecycle::Lifecycle` enums and their event types);
 //! * every event kind named in the first column of DESIGN.md's
 //!   "Observability" tables appears as a source identifier (the
 //!   `EventKind` taxonomy in `rust/src/obs/trace.rs`).
@@ -22,6 +22,7 @@ use super::{scan, Diagnostic, Repo, Rule, SourceFile, R4};
 
 const REGISTRY_PATH: &str = "rust/src/experiments/mod.rs";
 const LIFECYCLE_HEADING: &str = "## Lifecycles and state machines";
+const REQUEST_HEADING: &str = "## Request serving & SLO model";
 const OBSERVABILITY_HEADING: &str = "## Observability";
 
 pub struct DocDrift;
@@ -150,9 +151,9 @@ impl Rule for DocDrift {
          R4 checks three things: (a) every id in experiments::REGISTRY is mentioned in\n\
          EXPERIMENTS.md; (b) every id-shaped token (fig<N>, table<N>, cluster_*,\n\
          ablation_*) in DESIGN.md/EXPERIMENTS.md names a registered experiment; (c)\n\
-         every `SomethingState` enum named in the lifecycle section exists in rust/src,\n\
-         and every state and event in a lifecycle transition table (all columns)\n\
-         appears as a source identifier; (d) every event kind in the \"Observability\"\n\
+         every `SomethingState` enum named in the lifecycle or request-serving\n\
+         sections exists in rust/src, and every state and event in a lifecycle\n\
+         transition table (all columns) appears as a source identifier; (d) every event kind in the \"Observability\"\n\
          section's tables (first column)\n\
          appears as a source identifier (the EventKind taxonomy).  Fix by registering\n\
          the experiment, documenting it, or updating the stale doc."
@@ -196,25 +197,30 @@ impl Rule for DocDrift {
             out.push(Diagnostic::new(REGISTRY_PATH, 1, R4, msg));
             return;
         };
-        let section = doc_section(design, LIFECYCLE_HEADING);
+        // The request-serving section carries the `RequestState`
+        // transition table outside the main lifecycle section; both are
+        // held to the same contract.
         let mut checked: Vec<&str> = Vec::new();
-        for (line_no, line) in &section {
-            for span in backtick_spans(line) {
-                let name = span.rsplit("::").next().unwrap_or(span);
-                if enum_shaped(name) && !checked.contains(&name) {
-                    checked.push(name);
-                    let pat = format!("enum {name}");
-                    if !source_has_token(repo, &pat) {
-                        let msg = format!(
-                            "lifecycle enum `{name}` is named in DESIGN.md but `{pat}` \
-                             does not exist in the scanned source"
-                        );
-                        out.push(Diagnostic::new("DESIGN.md", *line_no, R4, msg));
+        for heading in [LIFECYCLE_HEADING, REQUEST_HEADING] {
+            let section = doc_section(design, heading);
+            for (line_no, line) in &section {
+                for span in backtick_spans(line) {
+                    let name = span.rsplit("::").next().unwrap_or(span);
+                    if enum_shaped(name) && !checked.contains(&name) {
+                        checked.push(name);
+                        let pat = format!("enum {name}");
+                        if !source_has_token(repo, &pat) {
+                            let msg = format!(
+                                "lifecycle enum `{name}` is named in DESIGN.md but `{pat}` \
+                                 does not exist in the scanned source"
+                            );
+                            out.push(Diagnostic::new("DESIGN.md", *line_no, R4, msg));
+                        }
                     }
                 }
             }
+            check_table_idents(repo, &section, "lifecycle state/event", true, out);
         }
-        check_table_idents(repo, &section, "lifecycle state/event", true, out);
         check_table_idents(
             repo,
             &doc_section(design, OBSERVABILITY_HEADING),
@@ -333,6 +339,33 @@ mod tests {
         assert_eq!(d.len(), 1, "{msgs:?}");
         assert!(msgs[0].contains("`Zap`"), "{msgs:?}");
         assert!(msgs[0].contains("lifecycle state/event"), "{msgs:?}");
+    }
+
+    #[test]
+    fn request_serving_section_tables_are_checked_too() {
+        let design = "# Doc\n\n\
+            ## Request serving & SLO model\n\n\
+            ### Request lifecycle (`foo::BarState`)\n\n\
+            | from | event | to |\n\
+            |---|---|---|\n\
+            | `Alpha` | `Zap` | `Alpha` |\n\n\
+            ## Next section\n";
+        let d = check(
+            &[(REGISTRY_PATH, REGISTRY_FIXTURE), ("rust/src/e.rs", ENUM_FIXTURE)],
+            &[("DESIGN.md", design), ("EXPERIMENTS.md", "fig1 cluster_a\n")],
+        );
+        let msgs: Vec<String> = d.iter().map(|x| x.to_string()).collect();
+        assert_eq!(d.len(), 1, "{msgs:?}");
+        assert!(msgs[0].contains("`Zap`"), "{msgs:?}");
+
+        let no_enum = check(
+            &[(REGISTRY_PATH, REGISTRY_FIXTURE)],
+            &[("DESIGN.md", design), ("EXPERIMENTS.md", "fig1 cluster_a\n")],
+        );
+        assert!(
+            no_enum.iter().any(|x| x.message.contains("`BarState`")),
+            "enum named only in the request section is still checked: {no_enum:?}"
+        );
     }
 
     #[test]

@@ -14,11 +14,11 @@
 //! without the others.
 
 /// Must equal `orchestrator::SHARD_FORMAT`.
-pub const WIRE_FORMAT: &str = "daemon-sim-shard-v5";
+pub const WIRE_FORMAT: &str = "daemon-sim-shard-v6";
 
 /// Field names of `Metrics::to_json`, in serialization order.  Every
 /// field must also be read back by `Metrics::from_json`.
-pub const METRICS_FIELDS: [&str; 26] = [
+pub const METRICS_FIELDS: [&str; 34] = [
     "instructions",
     "cycles",
     "stall_cycles",
@@ -45,4 +45,12 @@ pub const METRICS_FIELDS: [&str; 26] = [
     "interval_instructions",
     "interval_local_hits",
     "interval_local_total",
+    "requests_completed",
+    "requests_timed_out",
+    "requests_shed",
+    "request_retries",
+    "request_hedges",
+    "request_hedge_wins",
+    "requests_slo_good",
+    "request_hist",
 ];

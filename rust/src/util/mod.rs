@@ -11,5 +11,6 @@ pub mod lint;
 pub mod memo;
 pub mod prng;
 pub mod proptest;
+pub mod rng;
 pub mod stats;
 pub mod table;

@@ -1,0 +1,167 @@
+//! Zero-dependency splitmix64 stream for the request-serving front-end.
+//!
+//! The service layer (arrival times, backoff jitter, request-class choice)
+//! needs a deterministic random stream that is independent of the simulation
+//! PRNG in [`crate::util::prng`]: drawing service randomness from the same
+//! stream as workload generation would make arrival patterns depend on how
+//! many accesses a trace happened to sample. `SplitMix` is the raw splitmix64
+//! generator (the same mixer that seeds `Rng`), seeded purely from config —
+//! never from entropy — so replays are byte-identical (daemon-lint R1/R2).
+
+/// Raw splitmix64 stream. Distinct from [`crate::util::prng::SplitMix64`]
+/// (which is a private seeding detail of `Rng`): this type is the public,
+/// forkable stream used by the service layer.
+#[derive(Clone, Debug)]
+pub struct SplitMix {
+    state: u64,
+}
+
+impl SplitMix {
+    /// Seed from a config-derived value. Zero is perturbed so the first
+    /// output is not the fixed point of the mixer.
+    pub fn new(seed: u64) -> Self {
+        SplitMix {
+            state: seed ^ 0x9E37_79B9_7F4A_7C15,
+        }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform index in `[0, n)`. `n` must be nonzero.
+    pub fn index(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Exponentially distributed sample with the given mean (inter-arrival
+    /// gap for a Poisson process). Clamps the uniform draw away from 0 so
+    /// the log is finite; the result is always strictly positive.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        debug_assert!(mean > 0.0);
+        let u = self.f64().max(1e-12);
+        -mean * u.ln()
+    }
+
+    /// Fork an independent stream keyed by `tag`. Forked streams do not
+    /// perturb the parent, so adding a consumer never shifts existing draws.
+    pub fn split(&self, tag: u64) -> SplitMix {
+        SplitMix::new(
+            self.state
+                .wrapping_mul(0x2545_F491_4F6C_DD1D)
+                .wrapping_add(tag),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_replays_identically() {
+        let mut a = SplitMix::new(0xDAE0);
+        let mut b = SplitMix::new(0xDAE0);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = SplitMix::new(1);
+        let mut b = SplitMix::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_stays_in_unit_interval() {
+        let mut r = SplitMix::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn exp_is_positive_with_roughly_correct_mean() {
+        let mut r = SplitMix::new(42);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.exp(100.0);
+            assert!(x > 0.0);
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((80.0..120.0).contains(&mean), "mean {mean}");
+    }
+
+    #[test]
+    fn split_streams_are_independent_of_parent_position() {
+        let parent = SplitMix::new(9);
+        let mut f1 = parent.split(1);
+        let mut parent2 = parent.clone();
+        parent2.next_u64();
+        let mut f1_again = parent.split(1);
+        for _ in 0..100 {
+            assert_eq!(f1.next_u64(), f1_again.next_u64());
+        }
+        let mut f2 = parent.split(2);
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn any_seed_replays_and_forks_are_position_independent() {
+        // Property form of the pins above, over random seeds: replay
+        // determinism, draw bounds, and fork purity.  `split` seeds the
+        // child from (parent state, tag) and splitmix64's output mixer
+        // is a bijection of its state, so distinct tags guarantee
+        // distinct first draws — asserted exactly, no tolerance.
+        crate::util::proptest::check(0xDAE0_51, 200, |pt| {
+            let seed = pt.next_u64();
+            let mut a = SplitMix::new(seed);
+            let mut b = SplitMix::new(seed);
+            for _ in 0..32 {
+                assert_eq!(a.next_u64(), b.next_u64(), "seed {seed:#x}: replay diverged");
+            }
+            let x = a.f64();
+            assert!((0.0..1.0).contains(&x), "seed {seed:#x}: f64 out of range");
+            let e = a.exp(1.0 + x * 1e6);
+            assert!(e > 0.0 && e.is_finite(), "seed {seed:#x}: exp draw {e}");
+            let parent = SplitMix::new(seed);
+            let tag = b.next_u64();
+            let (mut f1, mut f2) = (parent.split(tag), parent.split(tag));
+            let mut g = parent.split(tag.wrapping_add(1));
+            let (x1, x2, y) = (f1.next_u64(), f2.next_u64(), g.next_u64());
+            assert_eq!(x1, x2, "seed {seed:#x}: fork replay diverged");
+            assert_ne!(x1, y, "seed {seed:#x}: adjacent fork tags collided");
+        });
+    }
+
+    #[test]
+    fn zero_seed_is_usable() {
+        let mut r = SplitMix::new(0);
+        let a = r.next_u64();
+        let b = r.next_u64();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+}

@@ -183,6 +183,24 @@ impl LogHistogram {
         }
         1.5 * (1u64 << 62) as f64 // unreachable: counts sum to total
     }
+
+    /// Approximate mean: bucket-midpoint weighted average (same
+    /// midpoints as [`value_at`](Self::value_at)).  0.0 when empty.
+    /// Midpoints over- or under-shoot the true mean by at most the
+    /// bucket width, so the estimate is within [2/3, 3/2] of truth.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for (k, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                let mid = if k == 0 { 0.5 } else { 1.5 * (1u64 << (k - 1)) as f64 };
+                sum += mid * c as f64;
+            }
+        }
+        sum / self.total as f64
+    }
 }
 
 #[cfg(test)]
@@ -250,6 +268,21 @@ mod tests {
         assert!((h.value_at(0.5) - 3.0).abs() < 1e-9, "midpoint of [2,4)");
         assert!((h.value_at(0.99) - 3.0).abs() < 1e-9);
         assert!((h.value_at(1.0) - 768.0).abs() < 1e-9, "midpoint of [512,1024)");
+    }
+
+    #[test]
+    fn log_histogram_mean_is_midpoint_weighted() {
+        let h = LogHistogram::new();
+        assert_eq!(h.mean(), 0.0, "empty histogram");
+        let mut h = LogHistogram::new();
+        for _ in 0..3 {
+            h.add(3.0); // bucket 2, midpoint 3.0
+        }
+        h.add(1000.0); // bucket 10, midpoint 768.0
+        assert!((h.mean() - (3.0 * 3.0 + 768.0) / 4.0).abs() < 1e-9);
+        // Bucket-midpoint error bound: estimate within [2/3, 3/2] of truth.
+        let truth = (3.0 * 3.0 + 1000.0) / 4.0;
+        assert!(h.mean() > truth * 2.0 / 3.0 && h.mean() < truth * 1.5);
     }
 
     #[test]

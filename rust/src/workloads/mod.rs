@@ -9,6 +9,7 @@ pub mod graph;
 pub mod hpcg;
 pub mod nw;
 pub mod pf;
+pub mod service;
 pub mod sls;
 pub mod spmv;
 pub mod trace;

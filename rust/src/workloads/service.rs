@@ -1,0 +1,382 @@
+//! Request-serving scenario layer (ROADMAP item 2): deterministic
+//! open-loop request arrivals — Poisson with piecewise-constant rate
+//! phases (steady / bursty / diurnal, mirroring the
+//! [`NetSchedule`](crate::net::NetSchedule) machinery on the network
+//! side) — where each request fans out into a cache/graph/dnn access
+//! burst cut from the corresponding base workload trace.  Everything is
+//! a pure function of the [`ServiceSpec`]: arrivals, class mix, burst
+//! windows and retry jitter all come from the zero-dep
+//! [`SplitMix`](crate::util::rng::SplitMix) stream, so replays are
+//! byte-identical and independent of the sim PRNG.
+
+use crate::config::{ArrivalPattern, ServiceSpec};
+use crate::util::rng::SplitMix;
+use crate::workloads::{Access, Trace};
+
+/// What a request asks for, mapped onto the existing workload suite: a
+/// key-value / embedding lookup (`sl`), a graph traversal slice (`pr`),
+/// or a DNN inference slice (`dr`).  Each class's addresses are offset
+/// into a disjoint region so one server machine serves all three
+/// without page collisions (offsets stay far below the per-core tag
+/// shift at bit 40).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestClass {
+    Cache,
+    Graph,
+    Dnn,
+}
+
+/// The fixed class roster, in deterministic draw order.
+pub const CLASSES: [RequestClass; 3] =
+    [RequestClass::Cache, RequestClass::Graph, RequestClass::Dnn];
+
+impl RequestClass {
+    /// Table 3 short name of the base workload this class's bursts are
+    /// cut from.
+    pub fn base_workload(self) -> &'static str {
+        match self {
+            RequestClass::Cache => "sl",
+            RequestClass::Graph => "pr",
+            RequestClass::Dnn => "dr",
+        }
+    }
+
+    /// Per-class address-region offset OR'd onto every burst address.
+    pub fn address_offset(self) -> u64 {
+        (self as u64) << 34
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RequestClass::Cache => "cache",
+            RequestClass::Graph => "graph",
+            RequestClass::Dnn => "dnn",
+        }
+    }
+}
+
+/// One arrival-rate phase: from `from_cycle` (until the next phase) the
+/// base Poisson rate is multiplied by `rate_scale`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArrivalPhase {
+    pub from_cycle: f64,
+    pub rate_scale: f64,
+}
+
+/// Piecewise-constant arrival-rate schedule, the request-side analogue
+/// of [`NetSchedule`](crate::net::NetSchedule): phases sorted by start
+/// cycle, nominal rate (scale 1.0) before the first phase.
+#[derive(Clone, Debug)]
+pub struct ArrivalSchedule {
+    phases: Vec<ArrivalPhase>,
+}
+
+impl ArrivalSchedule {
+    pub fn new(phases: Vec<ArrivalPhase>) -> ArrivalSchedule {
+        assert!(
+            phases.windows(2).all(|w| w[0].from_cycle <= w[1].from_cycle),
+            "arrival phases must be sorted by start cycle"
+        );
+        for p in &phases {
+            assert!(
+                p.rate_scale.is_finite() && p.rate_scale > 0.0,
+                "arrival rate scale must be positive and finite, got {}",
+                p.rate_scale
+            );
+        }
+        ArrivalSchedule { phases }
+    }
+
+    /// Constant nominal rate.
+    pub fn steady() -> ArrivalSchedule {
+        ArrivalSchedule::new(vec![ArrivalPhase { from_cycle: 0.0, rate_scale: 1.0 }])
+    }
+
+    /// Alternating high/low phases of `period_cycles` each (high first),
+    /// until `horizon_cycles`; nominal after.
+    pub fn square_wave(
+        period_cycles: f64,
+        hi: f64,
+        lo: f64,
+        horizon_cycles: f64,
+    ) -> ArrivalSchedule {
+        assert!(period_cycles > 0.0 && horizon_cycles > 0.0);
+        let mut phases = Vec::new();
+        let mut t = 0.0;
+        let mut high = true;
+        while t < horizon_cycles {
+            phases.push(ArrivalPhase {
+                from_cycle: t,
+                rate_scale: if high { hi } else { lo },
+            });
+            high = !high;
+            t += period_cycles;
+        }
+        phases.push(ArrivalPhase { from_cycle: horizon_cycles, rate_scale: 1.0 });
+        ArrivalSchedule::new(phases)
+    }
+
+    /// Repeat the `scales` staircase in steps of `step_cycles` until
+    /// `horizon_cycles`; nominal after.
+    pub fn staircase(
+        step_cycles: f64,
+        scales: &[f64],
+        horizon_cycles: f64,
+    ) -> ArrivalSchedule {
+        assert!(step_cycles > 0.0 && !scales.is_empty());
+        let mut phases = Vec::new();
+        let mut t = 0.0;
+        let mut i = 0;
+        while t < horizon_cycles {
+            phases.push(ArrivalPhase { from_cycle: t, rate_scale: scales[i % scales.len()] });
+            i += 1;
+            t += step_cycles;
+        }
+        phases.push(ArrivalPhase { from_cycle: horizon_cycles, rate_scale: 1.0 });
+        ArrivalSchedule::new(phases)
+    }
+
+    /// Materialize a [`ArrivalPattern`] over the expected run horizon.
+    pub fn from_pattern(pattern: ArrivalPattern, horizon_cycles: f64) -> ArrivalSchedule {
+        match pattern {
+            ArrivalPattern::Steady => ArrivalSchedule::steady(),
+            // Three bursts at 1.6x the nominal rate separated by 0.4x
+            // lulls — mean rate stays ~nominal, pressure concentrates.
+            ArrivalPattern::Bursty => {
+                ArrivalSchedule::square_wave(horizon_cycles / 6.0, 1.6, 0.4, horizon_cycles)
+            }
+            // Eight-step day/night staircase: trough, ramp, peak, ramp.
+            ArrivalPattern::Diurnal => ArrivalSchedule::staircase(
+                horizon_cycles / 8.0,
+                &[0.4, 0.7, 1.0, 1.5, 1.9, 1.5, 1.0, 0.7],
+                horizon_cycles,
+            ),
+        }
+    }
+
+    /// Rate multiplier in effect at cycle `t` (1.0 before any phase).
+    pub fn rate_scale_at(&self, t: f64) -> f64 {
+        let idx = self.phases.partition_point(|p| p.from_cycle <= t);
+        if idx == 0 { 1.0 } else { self.phases[idx - 1].rate_scale }
+    }
+}
+
+/// One generated request: arrival cycle plus the class whose trace its
+/// burst is cut from.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    pub at: f64,
+    pub class: RequestClass,
+}
+
+/// Expected arrival horizon for a spec — what the rate schedule spans.
+pub fn horizon_cycles(spec: &ServiceSpec) -> f64 {
+    (spec.requests as f64 * spec.base_gap_cycles / spec.load).max(1.0)
+}
+
+/// Generate the full open-loop arrival sequence: exponential gaps with
+/// the mean scaled by the phase in effect at the previous arrival, and
+/// a uniform class draw per request — both from forked `SplitMix`
+/// streams, so arrivals and class mix never perturb each other.
+pub fn gen_requests(spec: &ServiceSpec) -> Vec<Request> {
+    assert!(spec.base_gap_cycles > 0.0 && spec.load > 0.0);
+    let sched = ArrivalSchedule::from_pattern(spec.pattern, horizon_cycles(spec));
+    let root = SplitMix::new(spec.seed);
+    let mut gaps = root.split(1);
+    let mut classes = root.split(2);
+    let mut t = 0.0;
+    (0..spec.requests)
+        .map(|id| {
+            let mean = spec.base_gap_cycles / (spec.load * sched.rate_scale_at(t));
+            t += gaps.exp(mean);
+            Request { id, at: t, class: CLASSES[classes.index(CLASSES.len())] }
+        })
+        .collect()
+}
+
+/// A class's full serving trace: the base workload trace with the class
+/// address offset applied (footprint is unchanged — the offset shifts
+/// the region, it does not add pages).
+pub fn class_trace(base: &Trace, class: RequestClass) -> Trace {
+    Trace {
+        accesses: base
+            .accesses
+            .iter()
+            .map(|a| Access {
+                addr: a.addr | class.address_offset(),
+                write: a.write,
+                gap: a.gap,
+            })
+            .collect(),
+        footprint_pages: base.footprint_pages,
+    }
+}
+
+/// One request's access burst: `burst` accesses of the class trace
+/// starting at `start`, wrapping at the end — so every window is the
+/// same length regardless of where it lands.
+pub fn burst_trace(class_tr: &Trace, start: usize, burst: usize) -> Trace {
+    let n = class_tr.accesses.len();
+    assert!(n > 0 && burst > 0);
+    Trace {
+        accesses: (0..burst).map(|i| class_tr.accesses[(start + i) % n]).collect(),
+        footprint_pages: class_tr.footprint_pages,
+    }
+}
+
+/// Retry backoff for 0-based retry `attempt`: deterministic exponential
+/// part `min(base * 2^attempt, cap)` plus jitter drawn from `rng` in
+/// `[0, jitter_frac)` of the capped delay.  Pure in `(args, rng state)`
+/// — the property tests replay it bit-for-bit.
+pub fn backoff_delay(
+    base: f64,
+    cap: f64,
+    jitter_frac: f64,
+    attempt: u32,
+    rng: &mut SplitMix,
+) -> f64 {
+    let det = (base * 2f64.powi(attempt.min(60) as i32)).min(cap);
+    det + det * jitter_frac * rng.f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(pattern: ArrivalPattern) -> ServiceSpec {
+        ServiceSpec::naive(pattern, 400, 100, 1000.0, 1.0, 50_000.0)
+    }
+
+    #[test]
+    fn backoff_schedule_is_monotone_bounded_with_jitter_in_range() {
+        // Properties over random (base, cap, jitter_frac, rng seed):
+        // bit-exact replay, a monotone non-decreasing deterministic part
+        // clamped at the cap, and jitter confined to
+        // [0, jitter_frac) of the capped delay.
+        crate::util::proptest::check(0xDAE0_52, 200, |pt| {
+            let base = 1.0 + pt.f64() * 1e5;
+            let cap = base * (1.0 + pt.f64() * 64.0);
+            let jitter = pt.f64();
+            let seed = pt.next_u64();
+            let (mut ra, mut rb) = (SplitMix::new(seed), SplitMix::new(seed));
+            let mut prev_det = 0.0;
+            for attempt in 0..32u32 {
+                let d = backoff_delay(base, cap, jitter, attempt, &mut ra);
+                let d2 = backoff_delay(base, cap, jitter, attempt, &mut rb);
+                assert_eq!(d.to_bits(), d2.to_bits(), "backoff replay diverged");
+                assert!(d.is_finite(), "delay must stay finite at high attempt counts");
+                let det = (base * 2f64.powi(attempt.min(60) as i32)).min(cap);
+                assert!(det >= prev_det, "deterministic part must be monotone");
+                prev_det = det;
+                let j = d - det;
+                assert!(
+                    j >= 0.0 && j <= det * jitter * (1.0 + 1e-9) + 1e-9,
+                    "jitter {j} outside [0, {jitter} x {det})"
+                );
+                assert!(d <= cap * (1.0 + jitter) * (1.0 + 1e-9), "delay above cap band");
+            }
+        });
+    }
+
+    #[test]
+    fn arrivals_are_strictly_increasing_and_deterministic() {
+        for pattern in
+            [ArrivalPattern::Steady, ArrivalPattern::Bursty, ArrivalPattern::Diurnal]
+        {
+            let s = spec(pattern);
+            let a = gen_requests(&s);
+            let b = gen_requests(&s);
+            assert_eq!(a, b, "{pattern:?}: replay diverged");
+            assert_eq!(a.len(), s.requests);
+            for w in a.windows(2) {
+                assert!(w[0].at < w[1].at, "{pattern:?}: arrivals not increasing");
+            }
+            assert!(a[0].at > 0.0);
+        }
+    }
+
+    #[test]
+    fn class_mix_covers_all_classes() {
+        let a = gen_requests(&spec(ArrivalPattern::Steady));
+        for c in CLASSES {
+            assert!(
+                a.iter().filter(|r| r.class == c).count() > 50,
+                "{c:?} underrepresented"
+            );
+        }
+    }
+
+    #[test]
+    fn bursty_concentrates_arrivals_into_high_phases() {
+        let s = spec(ArrivalPattern::Bursty);
+        let h = horizon_cycles(&s);
+        let sched = ArrivalSchedule::from_pattern(ArrivalPattern::Bursty, h);
+        let a = gen_requests(&s);
+        let in_high =
+            a.iter().filter(|r| r.at < h && sched.rate_scale_at(r.at) > 1.0).count();
+        let in_run = a.iter().filter(|r| r.at < h).count();
+        // High phases cover half the horizon but carry 1.6/(1.6+0.4) =
+        // 80% of the rate mass; leave slack for sampling noise.
+        assert!(
+            in_high as f64 > 0.65 * in_run as f64,
+            "only {in_high}/{in_run} arrivals in high phases"
+        );
+    }
+
+    #[test]
+    fn rate_schedule_lookup_matches_phases() {
+        let s = ArrivalSchedule::square_wave(100.0, 2.0, 0.5, 250.0);
+        assert_eq!(s.rate_scale_at(0.0), 2.0);
+        assert_eq!(s.rate_scale_at(99.9), 2.0);
+        assert_eq!(s.rate_scale_at(100.0), 0.5);
+        assert_eq!(s.rate_scale_at(200.0), 2.0);
+        assert_eq!(s.rate_scale_at(250.0), 1.0, "nominal after horizon");
+        assert_eq!(s.rate_scale_at(-1.0), 1.0, "nominal before first phase");
+    }
+
+    #[test]
+    fn class_traces_are_disjoint_regions() {
+        let base = Trace {
+            accesses: vec![Access { addr: 0x1000_0000, write: false, gap: 1 }],
+            footprint_pages: 1,
+        };
+        let mut pages: Vec<u64> = CLASSES
+            .iter()
+            .map(|&c| class_trace(&base, c).accesses[0].addr >> 12)
+            .collect();
+        pages.dedup();
+        assert_eq!(pages.len(), CLASSES.len(), "class regions collide");
+        // Offsets stay below the per-core tag shift (bit 40).
+        for c in CLASSES {
+            assert!(c.address_offset() < 1 << 40);
+        }
+    }
+
+    #[test]
+    fn burst_windows_wrap_and_have_fixed_length() {
+        let base = Trace {
+            accesses: (0..10)
+                .map(|i| Access { addr: 0x1000_0000 + i * 64, write: false, gap: 1 })
+                .collect(),
+            footprint_pages: 1,
+        };
+        let b = burst_trace(&base, 8, 5);
+        assert_eq!(b.accesses.len(), 5);
+        assert_eq!(b.accesses[0].addr, base.accesses[8].addr);
+        assert_eq!(b.accesses[2].addr, base.accesses[0].addr, "window wraps");
+    }
+
+    #[test]
+    fn backoff_is_monotone_then_capped() {
+        let mut rng = SplitMix::new(3);
+        let mut prev = 0.0;
+        for k in 0..20 {
+            let d = backoff_delay(100.0, 1600.0, 0.0, k, &mut rng);
+            assert!(d >= prev, "deterministic backoff must be monotone");
+            assert!(d <= 1600.0, "backoff exceeded cap: {d}");
+            prev = d;
+        }
+        assert_eq!(prev, 1600.0);
+    }
+}

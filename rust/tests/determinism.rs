@@ -272,6 +272,68 @@ fn adaptive_cells_are_jobs_invariant_and_inert_specs_match_static() {
     );
 }
 
+/// Request-serving pins: service cells (the full robustness stack under
+/// a mid-run module crash) must be byte-identical across repeat runs
+/// and `--jobs 1` vs `--jobs 4` — the front-end orders every decision
+/// by `(sim cycle, sequence)` in one heap, so worker scheduling never
+/// reaches the ledger.  A no-service cluster cell rides along: with
+/// `service: None` the orchestrator takes the exact historical
+/// trace-driven path (a single `Option` check), and its bytes must be
+/// equally invariant.
+#[test]
+fn service_cells_are_jobs_invariant_and_repeat_byte_identically() {
+    use daemon_sim::config::{ArrivalPattern, ServiceSpec};
+    use daemon_sim::experiments::tail_latency;
+    use daemon_sim::system::fault::FaultPlan;
+
+    let r = Runner::test();
+    let spec = ServiceSpec::naive(ArrivalPattern::Bursty, 120, 150, 20_000.0, 4.0, 300_000.0)
+        .with_retry(120_000.0, 2, 10_000.0, 40_000.0, 0.25)
+        .with_hedge(0.9)
+        .with_shed(80_000.0);
+    let cells = vec![
+        tail_latency::cell(
+            SchemeKind::Daemon,
+            spec,
+            Some(FaultPlan::new().module_crash(0, 2e5, 6e5)),
+            SimConfig::test_scale(),
+        ),
+        tail_latency::cell(SchemeKind::Pq, spec, None, SimConfig::test_scale()),
+        // Inert: no service — the historical trace-driven cluster path.
+        CellSpec::cluster(
+            &[("pr", SchemeKind::Daemon), ("sp", SchemeKind::Daemon)],
+            2,
+            SimConfig::test_scale(),
+        ),
+    ];
+    let run = |jobs: usize| -> Vec<Vec<Metrics>> {
+        run_cells_flat(&r, &TraceCache::new(), &cells, Shard::full(), jobs)
+            .into_iter()
+            .map(|s| s.expect("unsharded run fills every slot"))
+            .collect()
+    };
+    let fmt = |slots: &[Vec<Metrics>]| -> Vec<String> {
+        slots
+            .iter()
+            .map(|ms| {
+                ms.iter().map(|m| m.to_json().to_string()).collect::<Vec<_>>().join("\n")
+            })
+            .collect()
+    };
+    let serial = run(1);
+    // The service cells actually exercised the robustness machinery and
+    // the inert cell never touched the ledger.
+    let front = &serial[0][0];
+    assert_eq!(
+        front.requests_completed + front.requests_timed_out + front.requests_shed,
+        spec.requests as u64,
+        "service ledger does not cover every request"
+    );
+    assert_eq!(serial[2][0].requests_offered(), 0, "inert cell has no request ledger");
+    assert_eq!(fmt(&serial), fmt(&run(4)), "service cells diverged across --jobs counts");
+    assert_eq!(fmt(&serial), fmt(&run(1)), "service cells diverged across repeat runs");
+}
+
 /// Ring overflow is deterministic: a tiny ring must overflow, count its
 /// drops identically on repeat runs, and retain an identical tail.
 #[test]

@@ -16,7 +16,7 @@
 use daemon_sim::daemon::{LineLifecycle, PageLifecycle};
 use daemon_sim::lifecycle::{assert_graph_matches_doc, check_declaration, exercise_graph};
 use daemon_sim::system::fault::PortState;
-use daemon_sim::system::TenantState;
+use daemon_sim::system::{RequestState, TenantState};
 
 fn design() -> String {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/DESIGN.md");
@@ -49,4 +49,11 @@ fn cluster_tenant_lifecycle_matches_design_doc() {
     check_declaration::<TenantState>();
     assert_graph_matches_doc::<TenantState>(&design(), "### Cluster tenant lifecycle");
     exercise_graph(0xDAE0_0004, TenantState::Running);
+}
+
+#[test]
+fn service_request_lifecycle_matches_design_doc() {
+    check_declaration::<RequestState>();
+    assert_graph_matches_doc::<RequestState>(&design(), "### Request lifecycle");
+    exercise_graph(0xDAE0_0005, RequestState::Admitted);
 }
